@@ -1,0 +1,55 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! Loads the AOT-compiled JAX/Pallas policy artifacts through the PJRT
+//! runtime, runs the HSDAG REINFORCE search (Algorithm 1) on every
+//! benchmark, logs the learning curve, and reports the final placements
+//! against all baselines — a miniature Table 2. Requires `make artifacts`.
+//!
+//!   cargo run --release --example end_to_end [episodes]
+
+use hsdag::baselines;
+use hsdag::config::Config;
+use hsdag::models::Benchmark;
+use hsdag::rl::{Env, HsdagAgent};
+use hsdag::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let episodes: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(15);
+    let cfg = Config { seed: 1, ..Default::default() };
+    let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
+    println!("PJRT platform: {}", engine.platform());
+
+    for bench in Benchmark::ALL {
+        let env = Env::new(bench, &cfg)?;
+        println!(
+            "\n=== {} ({} working nodes) — {episodes} episodes ===",
+            bench.display(),
+            env.n_nodes
+        );
+        let mut agent = HsdagAgent::new(&env, &mut engine, &cfg)?;
+        let res = agent.search(&env, &mut engine, episodes)?;
+        for p in res.curve.iter().step_by(5.max(episodes / 6)) {
+            println!(
+                "  ep {:>3}: best {:.3} ms, mean reward {:.3}",
+                p.episode,
+                p.best_latency * 1e3,
+                p.mean_reward
+            );
+        }
+        let gpu = baselines::baseline_latency("gpu", &env.graph, &env.testbed).unwrap();
+        println!(
+            "  HSDAG     {:.3} ms  ({:.1}% speedup vs CPU-only)",
+            res.best_latency * 1e3,
+            res.speedup_vs(env.cpu_latency)
+        );
+        println!(
+            "  GPU-only  {:.3} ms  ({:.1}% speedup)",
+            gpu * 1e3,
+            100.0 * (1.0 - gpu / env.cpu_latency)
+        );
+        println!("  CPU-only  {:.3} ms  (reference)", env.cpu_latency * 1e3);
+        println!("  search wall time {:.1}s", res.wall_secs);
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the whole non-neural pipeline in one page.
+//!
+//! Builds a benchmark computation graph, applies the Appendix-G
+//! co-location pass, extracts §2.3 features, runs the Algorithm-2 parser
+//! with random edge scores, and compares the static baselines on the
+//! heterogeneous-execution simulator. No AOT artifacts needed.
+//!
+//!   cargo run --release --example quickstart
+
+use hsdag::baselines;
+use hsdag::coarsen::colocate;
+use hsdag::features::{extract, FeatureConfig};
+use hsdag::models::Benchmark;
+use hsdag::parsing::parse;
+use hsdag::sim::Testbed;
+use hsdag::util::Rng;
+
+fn main() {
+    let bench = Benchmark::InceptionV3;
+    let g = bench.build();
+    println!(
+        "{}: |V|={} |E|={} avg-degree={:.2} total={:.2} GFLOP",
+        bench.display(),
+        g.n(),
+        g.m(),
+        g.avg_degree(),
+        g.total_flops() / 1e9
+    );
+
+    // Co-location (Appendix G): collapse linear chains + fold weights.
+    let colo = colocate(&g);
+    println!("co-location: {} nodes -> {} groups", g.n(), colo.n_sets);
+
+    // Feature extraction (Sec 2.3) on the working graph.
+    let wg = &colo.coarse;
+    let feats = extract(wg, FeatureConfig::default());
+    println!(
+        "features: X0 is [{} x {}] (op one-hot | degrees | shape | fractal | pos-enc)",
+        feats.n, feats.d
+    );
+    let v0 = 1.min(wg.n() - 1);
+    println!(
+        "  e.g. node {v0} '{}': fractal dim {:.3}, topo index {}",
+        wg.nodes[v0].name, feats.fractal_dim[v0], feats.topo_index[v0]
+    );
+
+    // Algorithm 2 with random scores (a trained policy supplies real ones;
+    // see the end_to_end example).
+    let mut rng = Rng::new(0);
+    let scores: Vec<f32> = (0..wg.m()).map(|_| rng.next_f32()).collect();
+    let part = parse(wg, &scores);
+    println!(
+        "parsing: {} groups from {} nodes (cut fraction {:.2})",
+        part.n_groups,
+        wg.n(),
+        part.cut_fraction(wg)
+    );
+
+    // Static baselines on the simulator.
+    let tb = Testbed::paper();
+    println!("\nstatic baselines (simulated inference latency):");
+    for m in ["cpu", "gpu", "openvino-cpu", "openvino-gpu"] {
+        let lat = baselines::baseline_latency(m, &g, &tb).unwrap();
+        println!("  {m:<13} {:.3} ms", lat * 1e3);
+    }
+    println!("\nnext: cargo run --release --example end_to_end");
+}

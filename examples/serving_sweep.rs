@@ -1,0 +1,73 @@
+//! Serving scenario: use a learned placement to serve a stream of
+//! inference requests and report the latency/throughput profile against
+//! single-device deployments — the "heterogeneous execution" use case the
+//! paper's introduction motivates.
+//!
+//! The request stream is served back-to-back per deployment (OpenVINO
+//! streams=1); the simulator's measurement noise models run-to-run jitter,
+//! and the reported percentiles follow standard serving practice.
+//!
+//!   cargo run --release --example serving_sweep [n_requests]
+
+use hsdag::baselines;
+use hsdag::config::Config;
+use hsdag::models::Benchmark;
+use hsdag::rl::{Env, HsdagAgent};
+use hsdag::runtime::Engine;
+use hsdag::sim::{measure, Placement};
+use hsdag::util::stats;
+use hsdag::util::Rng;
+
+fn serve(
+    env: &Env,
+    placement: &Placement,
+    n_requests: usize,
+    rng: &mut Rng,
+) -> (f64, f64, f64, f64) {
+    let lats: Vec<f64> = (0..n_requests)
+        .map(|_| measure(&env.graph, placement, &env.testbed, 0.03, rng))
+        .collect();
+    let p50 = stats::percentile(&lats, 50.0);
+    let p99 = stats::percentile(&lats, 99.0);
+    let mean = stats::mean(&lats);
+    let throughput = 1.0 / mean;
+    (p50, p99, mean, throughput)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let cfg = Config { seed: 9, ..Default::default() };
+    let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
+    let mut rng = Rng::new(123);
+
+    for bench in [Benchmark::BertBase, Benchmark::ResNet50] {
+        let env = Env::new(bench, &cfg)?;
+        println!("\n=== serving {} x{} requests ===", bench.display(), n_requests);
+
+        // Learn a placement (short budget — this is a demo driver).
+        let mut agent = HsdagAgent::new(&env, &mut engine, &cfg)?;
+        let res = agent.search(&env, &mut engine, 10)?;
+        let learned = env.expand(&res.best_actions);
+
+        println!(
+            "{:<12} {:>9} {:>9} {:>9} {:>11}",
+            "deployment", "p50 ms", "p99 ms", "mean ms", "req/s"
+        );
+        for (name, placement) in [
+            ("CPU-only", baselines::cpu_only(&env.graph)),
+            ("GPU-only", baselines::gpu_only(&env.graph)),
+            ("HSDAG", learned),
+        ] {
+            let (p50, p99, mean, tput) = serve(&env, &placement, n_requests, &mut rng);
+            println!(
+                "{name:<12} {:>9.3} {:>9.3} {:>9.3} {:>11.1}",
+                p50 * 1e3,
+                p99 * 1e3,
+                mean * 1e3,
+                tput
+            );
+        }
+    }
+    Ok(())
+}

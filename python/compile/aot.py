@@ -1,0 +1,246 @@
+"""AOT compiler: lower every policy function to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); the rust coordinator loads the
+text via `HloModuleProto::from_text_file` and never touches python again.
+
+HLO text — NOT `lowered.compile()` / serialized protos — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the pinned xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside each `<name>.hlo.txt` we emit `<name>.spec.txt` describing the
+flat input/output signature (name, dtype, shape per line) so the rust
+runtime can assemble literals and verify the contract at load time.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--bench NAME]
+        [--policy NAME] [--check]
+"""
+
+import argparse
+import functools
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+F32 = jnp.float32
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def _struct(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_structs(spec):
+    return [_struct(s) for _, s in spec]
+
+
+def _signature(bench, policy, fn):
+    """Flat (name, ShapeDtypeStruct) input list + output names for one
+    artifact. The order here is the HLO parameter order."""
+    dims = shapes.BENCHMARKS[bench]
+    v, e = dims["v"], dims["e"]
+    h, d, nd, t = shapes.HIDDEN, shapes.FEAT_DIM, shapes.N_DEVICES, shapes.BUFFER
+
+    if policy == "hsdag":
+        pspec = model.hsdag_param_spec()
+    elif policy == "placeto":
+        pspec = model.placeto_param_spec()
+    elif policy == "rnn":
+        pspec = model.rnn_param_spec()
+    else:
+        raise ValueError(policy)
+    params = [(n, _struct(s)) for n, s in pspec]
+    np = len(params)
+
+    if policy == "hsdag" and fn == "fwd":
+        ins = params + [
+            ("x0", _struct((v, d))),
+            ("a_norm", _struct((v, v))),
+            ("fb", _struct((v, h))),
+            ("edge_src", _struct((e,), I32)),
+            ("edge_dst", _struct((e,), I32)),
+            ("node_mask", _struct((v,))),
+        ]
+        outs = ["z", "scores"]
+        def call(*a):
+            return model.hsdag_fwd(tuple(a[:np]), *a[np:])
+    elif policy == "hsdag" and fn == "placer":
+        ins = params + [
+            ("z", _struct((v, h))),
+            ("cluster_ids", _struct((v,), I32)),
+            ("group_mask", _struct((v,))),
+        ]
+        outs = ["logits"]
+        def call(*a):
+            return (model.hsdag_placer(tuple(a[:np]), *a[np:]),)
+    elif policy == "hsdag" and fn == "train":
+        opt = [(f"m_{n}", s) for n, s in params] + [(f"v_{n}", s) for n, s in params]
+        ins = (
+            params
+            + opt
+            + [
+                ("step", _struct(())),
+                ("x0", _struct((v, d))),
+                ("a_norm", _struct((v, v))),
+                ("edge_src", _struct((e,), I32)),
+                ("edge_dst", _struct((e,), I32)),
+                ("node_mask", _struct((v,))),
+                ("edge_mask", _struct((e,))),
+                ("fb_buf", _struct((t, v, h))),
+                ("cids_buf", _struct((t, v), I32)),
+                ("actions_buf", _struct((t, v), I32)),
+                ("gmask_buf", _struct((t, v))),
+                ("retained_buf", _struct((t, e))),
+                ("coeff", _struct((t,))),
+                ("key", _struct((2,), U32)),
+            ]
+        )
+        outs = (
+            [n for n, _ in params]
+            + [f"m_{n}" for n, _ in params]
+            + [f"v_{n}" for n, _ in params]
+            + ["step", "loss"]
+        )
+        call = model.make_train_fn(model.hsdag_loss, np)
+    elif policy == "placeto" and fn == "fwd":
+        ins = params + [
+            ("x0", _struct((v, d))),
+            ("a_norm", _struct((v, v))),
+            ("node_mask", _struct((v,))),
+        ]
+        outs = ["logits"]
+        def call(*a):
+            return (model.placeto_fwd(tuple(a[:np]), *a[np:]),)
+    elif policy == "placeto" and fn == "train":
+        opt = [(f"m_{n}", s) for n, s in params] + [(f"v_{n}", s) for n, s in params]
+        ins = params + opt + [
+            ("step", _struct(())),
+            ("x0", _struct((v, d))),
+            ("a_norm", _struct((v, v))),
+            ("node_mask", _struct((v,))),
+            ("actions_buf", _struct((t, v), I32)),
+            ("coeff", _struct((t,))),
+        ]
+        outs = (
+            [n for n, _ in params]
+            + [f"m_{n}" for n, _ in params]
+            + [f"v_{n}" for n, _ in params]
+            + ["step", "loss"]
+        )
+        call = model.make_train_fn(model.placeto_loss, np)
+    elif policy == "rnn" and fn == "fwd":
+        ins = params + [
+            ("x0_topo", _struct((v, d))),
+            ("node_mask", _struct((v,))),
+        ]
+        outs = ["logits"]
+        def call(*a):
+            return (model.rnn_fwd(tuple(a[:np]), *a[np:]),)
+    elif policy == "rnn" and fn == "train":
+        opt = [(f"m_{n}", s) for n, s in params] + [(f"v_{n}", s) for n, s in params]
+        ins = params + opt + [
+            ("step", _struct(())),
+            ("x0_topo", _struct((v, d))),
+            ("node_mask", _struct((v,))),
+            ("actions_buf", _struct((t, v), I32)),
+            ("coeff", _struct((t,))),
+        ]
+        outs = (
+            [n for n, _ in params]
+            + [f"m_{n}" for n, _ in params]
+            + [f"v_{n}" for n, _ in params]
+            + ["step", "loss"]
+        )
+        call = model.make_train_fn(model.rnn_loss, np)
+    else:
+        raise ValueError(f"{policy}/{fn}")
+
+    return ins, outs, call
+
+
+def to_hlo_text(lowered):
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(s):
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(s.dtype)]
+
+
+def write_spec(path, name, ins, outs, bench):
+    dims = shapes.BENCHMARKS[bench]
+    with open(path, "w") as f:
+        f.write("# hsdag artifact spec v1\n")
+        f.write(f"fn {name}\n")
+        f.write(f"bench {bench} v={dims['v']} e={dims['e']} "
+                f"d={shapes.FEAT_DIM} h={shapes.HIDDEN} nd={shapes.N_DEVICES} "
+                f"t={shapes.BUFFER}\n")
+        for n, s in ins:
+            dimstr = ",".join(str(x) for x in s.shape) if s.shape else "scalar"
+            f.write(f"in {n} {_dtype_tag(s)} {dimstr}\n")
+        for n in outs:
+            f.write(f"out {n}\n")
+
+
+FUNCTIONS = [
+    ("hsdag", "fwd"),
+    ("hsdag", "placer"),
+    ("hsdag", "train"),
+    ("placeto", "fwd"),
+    ("placeto", "train"),
+    ("rnn", "fwd"),
+    ("rnn", "train"),
+]
+
+
+def build(out_dir, benches, policies, check=False):
+    os.makedirs(out_dir, exist_ok=True)
+    for bench in benches:
+        for policy, fn in FUNCTIONS:
+            if policy not in policies:
+                continue
+            name = f"{bench}_{policy}_{fn}"
+            t0 = time.time()
+            ins, outs, call = _signature(bench, policy, fn)
+            lowered = jax.jit(call, keep_unused=True).lower(*[s for _, s in ins])
+            text = to_hlo_text(lowered)
+            hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(hlo_path, "w") as f:
+                f.write(text)
+            write_spec(os.path.join(out_dir, f"{name}.spec.txt"), name, ins, outs, bench)
+            print(f"  {name}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s",
+                  flush=True)
+            if check:
+                # Numerically execute the jitted fn on zeros to ensure the
+                # lowering is runnable (catches shape bugs early).
+                import numpy as np
+                args = [np.zeros(s.shape, s.dtype) for _, s in ins]
+                out = jax.jit(call)(*args)
+                del out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--bench", default=None, help="only this benchmark")
+    ap.add_argument("--policy", default=None, help="only this policy")
+    ap.add_argument("--check", action="store_true")
+    args = ap.parse_args()
+    benches = [args.bench] if args.bench else list(shapes.BENCHMARKS)
+    policies = [args.policy] if args.policy else ["hsdag", "placeto", "rnn"]
+    build(os.path.abspath(args.out_dir), benches, policies, check=args.check)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

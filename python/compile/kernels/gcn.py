@@ -1,0 +1,91 @@
+"""Pallas GCN-layer kernel (Eq. 6): the aggregation hot-spot of the policy.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the layer is tiled over
+128-row node blocks. Each grid step stages one [128, V] slab of the
+normalized adjacency plus the full [V, F] feature matrix and [F, H]
+weights into VMEM, runs two MXU matmuls ((A_blk @ X) @ W), adds the bias
+and applies ReLU — the schedule a CUDA implementation would express with
+threadblocks + shared memory is expressed here with BlockSpec index maps.
+
+VMEM budget at the largest benchmark (V=1024, F=128, H=128), f32:
+  A block 128x1024 (512 KiB) + X 1024x128 (512 KiB) + W 64 KiB + out
+  64 KiB ~= 1.2 MiB << 16 MiB VMEM, leaving room for double buffering.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the same kernel to portable HLO so the
+rust runtime can run it (see /opt/xla-example/README.md). The backward
+pass is a pure-jnp custom_vjp so the AOT'd train step stays portable too.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import gcn_layer_ref
+
+BLOCK = 128
+
+
+def _gcn_kernel(a_blk_ref, x_ref, w_ref, b_ref, o_ref, *, relu):
+    """One node-block: o = act(a_blk @ x @ w + b)."""
+    agg = jnp.dot(a_blk_ref[...], x_ref[...])  # [B, V] @ [V, F] on the MXU
+    out = jnp.dot(agg, w_ref[...]) + b_ref[...]  # [B, F] @ [F, H]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out
+
+
+def _gcn_forward(a_norm, x, w, b, relu):
+    v, f = x.shape
+    h = w.shape[1]
+    assert a_norm.shape == (v, v), (a_norm.shape, v)
+    assert v % BLOCK == 0, f"V={v} must be a multiple of {BLOCK}"
+    grid = (v // BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_gcn_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK, v), lambda i: (i, 0)),  # A slab per block
+            pl.BlockSpec((v, f), lambda i: (0, 0)),  # X broadcast
+            pl.BlockSpec((f, h), lambda i: (0, 0)),  # W broadcast
+            pl.BlockSpec((h,), lambda i: (0,)),  # b broadcast
+        ],
+        out_specs=pl.BlockSpec((BLOCK, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, h), x.dtype),
+        interpret=True,
+    )(a_norm, x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def gcn_layer(a_norm, x, w, b, relu=True):
+    """Pallas GCN layer: act(A_norm @ X @ W + b). See module docstring."""
+    return _gcn_forward(a_norm, x, w, b, relu)
+
+
+def _gcn_fwd(a_norm, x, w, b, relu):
+    out = _gcn_forward(a_norm, x, w, b, relu)
+    return out, (a_norm, x, w, out)
+
+
+def _gcn_bwd(relu, res, g):
+    a_norm, x, w, out = res
+    if relu:
+        g = g * (out > 0.0).astype(g.dtype)
+    # out = A (X W) + b  (A symmetric by construction, but don't rely on it)
+    agg = x @ w  # recompute [V, H]
+    d_agg = a_norm.T @ g  # [V, H]
+    d_x = d_agg @ w.T
+    d_w = x.T @ d_agg
+    d_b = g.sum(axis=0)
+    d_a = g @ agg.T  # [V, V]
+    return d_a, d_x, d_w, d_b
+
+
+gcn_layer.defvjp(_gcn_fwd, _gcn_bwd)
+
+
+def gcn_layer_reference(a_norm, x, w, b, relu=True):
+    """Oracle passthrough (re-exported for tests)."""
+    return gcn_layer_ref(a_norm, x, w, b, relu=relu)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain jax.numpy ops; pytest (and hypothesis sweeps) assert
+allclose between kernel and oracle across shapes/dtypes. The training-step
+backward passes also reuse these (custom_vjp bwd is defined against the
+same math).
+"""
+
+import jax.numpy as jnp
+
+
+def gcn_layer_ref(a_norm, x, w, b, *, relu=True):
+    """GCN layer (Eq. 6): relu(A_norm @ X @ W + b).
+
+    Args:
+      a_norm: [V, V] symmetric-normalized adjacency with self-loops.
+      x:      [V, F] node features.
+      w:      [F, H] weights.
+      b:      [H] bias.
+      relu:   apply the ReLU nonlinearity.
+
+    Returns: [V, H].
+    """
+    out = a_norm @ (x @ w) + b
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def edge_score_ref(z_src, z_dst, w0, b0, w1, b1):
+    """GPN edge scorer (Eq. 7): sigmoid(MLP(z_v * z_u)) (Hadamard).
+
+    Args:
+      z_src: [E, H] embeddings of edge sources.
+      z_dst: [E, H] embeddings of edge destinations.
+      w0, b0: first MLP layer [H, H], [H].
+      w1, b1: second MLP layer [H, 1], [1].
+
+    Returns: [E] scores in (0, 1).
+    """
+    h = jnp.maximum((z_src * z_dst) @ w0 + b0, 0.0)
+    logit = (h @ w1 + b1).squeeze(-1)
+    return 1.0 / (1.0 + jnp.exp(-logit))
+
+
+def segment_mean_ref(z, cluster_ids, num_segments):
+    """Mean-pool node embeddings into cluster features (the F_c of Alg. 1).
+
+    Args:
+      z:           [V, H] node embeddings.
+      cluster_ids: [V] int32 cluster id per node.
+      num_segments: static upper bound on cluster count (V).
+
+    Returns: [num_segments, H] mean embedding per cluster (0 for empty).
+    """
+    one_hot = jnp.equal(
+        cluster_ids[:, None], jnp.arange(num_segments)[None, :]
+    ).astype(z.dtype)  # [V, C]
+    sums = one_hot.T @ z  # [C, H]
+    counts = one_hot.sum(axis=0)[:, None]  # [C, 1]
+    return sums / jnp.maximum(counts, 1.0)

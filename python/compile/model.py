@@ -1,0 +1,285 @@
+"""L2 policy graphs: HSDAG (the paper's model) plus the Placeto and
+RNN-based baselines, all written as pure-jax functions over positional
+parameter tuples so they AOT-lower to HLO with a stable input ordering the
+rust runtime can rely on (see `spec()` / aot.py).
+
+Three function families per policy:
+  *_fwd    — forward pass used on the search path every RL step;
+  *_placer — group pooling + device head (HSDAG only: the placer runs
+             after rust's discrete graph parsing);
+  *_train  — the whole Eq. 14 REINFORCE update (re-forward over the
+             buffered states, loss, grads, Adam) in ONE HLO module so the
+             rust side never differentiates anything.
+
+The reward-side coefficients coeff[t] = gamma^t * (r_t - baseline) are
+precomputed by the rust RL loop; the partition log-likelihood (GPN) term
+keeps the edge scorer trainable through the discrete parse.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import shapes
+from .kernels.edge_score import edge_scores
+from .kernels.gcn import gcn_layer
+from .kernels.ref import segment_mean_ref
+
+H = shapes.HIDDEN
+D = shapes.FEAT_DIM
+ND = shapes.N_DEVICES
+LAMBDA = shapes.PARTITION_LOSS_WEIGHT
+
+
+# --------------------------------------------------------------------------
+# Parameter specs: ordered (name, shape) lists. The tuple order here IS the
+# HLO input order; rust/src/runtime parses the emitted spec files.
+# --------------------------------------------------------------------------
+
+def hsdag_param_spec():
+    return [
+        ("trans_w0", (D, H)), ("trans_b0", (H,)),
+        ("trans_w1", (H, H)), ("trans_b1", (H,)),
+        ("gcn_w0", (H, H)), ("gcn_b0", (H,)),
+        ("gcn_w1", (H, H)), ("gcn_b1", (H,)),
+        ("edge_w0", (H, H)), ("edge_b0", (H,)),
+        ("edge_w1", (H, 1)), ("edge_b1", (1,)),
+        ("place_w0", (H, H)), ("place_b0", (H,)),
+        ("place_w1", (H, ND)), ("place_b1", (ND,)),
+    ]
+
+
+def placeto_param_spec():
+    return [
+        ("trans_w0", (D, H)), ("trans_b0", (H,)),
+        ("trans_w1", (H, H)), ("trans_b1", (H,)),
+        ("gcn_w0", (H, H)), ("gcn_b0", (H,)),
+        ("gcn_w1", (H, H)), ("gcn_b1", (H,)),
+        ("place_w0", (H, H)), ("place_b0", (H,)),
+        ("place_w1", (H, ND)), ("place_b1", (ND,)),
+    ]
+
+
+def rnn_param_spec():
+    return [
+        ("emb_w", (D, H)), ("emb_b", (H,)),
+        ("lstm_wih", (H, 4 * H)), ("lstm_whh", (H, 4 * H)), ("lstm_b", (4 * H,)),
+        ("attn_w", (H, H)),
+        ("place_w0", (H, H)), ("place_b0", (H,)),
+        ("place_w1", (H, ND)), ("place_b1", (ND,)),
+    ]
+
+
+def init_params(spec, key):
+    """Glorot-uniform init matched by the rust-side initializer."""
+    out = []
+    for i, (_, shp) in enumerate(spec):
+        k = jax.random.fold_in(key, i)
+        if len(shp) == 1:
+            out.append(jnp.zeros(shp, jnp.float32))
+        else:
+            fan_in, fan_out = shp[0], shp[-1]
+            lim = (6.0 / (fan_in + fan_out)) ** 0.5
+            out.append(jax.random.uniform(k, shp, jnp.float32, -lim, lim))
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# HSDAG policy
+# --------------------------------------------------------------------------
+
+def _hsdag_encode(p, x0, a_norm, fb, node_mask, dropout_key=None):
+    """Input MLP (layer_trans=2) -> feedback add -> 2 GCN layers (Pallas)."""
+    (tw0, tb0, tw1, tb1, gw0, gb0, gw1, gb1) = p[:8]
+    h0 = jnp.maximum(x0 @ tw0 + tb0, 0.0)
+    h1 = jnp.maximum(h0 @ tw1 + tb1, 0.0)
+    if dropout_key is not None and shapes.DROPOUT > 0.0:
+        keep = jax.random.bernoulli(dropout_key, 1.0 - shapes.DROPOUT, h1.shape)
+        h1 = h1 * keep / (1.0 - shapes.DROPOUT)
+    h1 = h1 + fb  # Alg. 1 line 10: accumulated cluster embeddings
+    z1 = gcn_layer(a_norm, h1, gw0, gb0, True)
+    z = gcn_layer(a_norm, z1, gw1, gb1, True)
+    return z * node_mask[:, None]
+
+
+def hsdag_fwd(p, x0, a_norm, fb, edge_src, edge_dst, node_mask):
+    """Search-path forward: node embeddings Z and GPN edge scores S.
+
+    Shapes: x0 [V,d], a_norm [V,V], fb [V,H], edge_src/dst [E] i32,
+    node_mask [V]. Returns (z [V,H], scores [E]).
+    """
+    z = _hsdag_encode(p, x0, a_norm, fb, node_mask)
+    (ew0, eb0, ew1, eb1) = p[8:12]
+    zs = jnp.take(z, edge_src, axis=0)
+    zd = jnp.take(z, edge_dst, axis=0)
+    s = edge_scores(zs, zd, ew0, eb0, ew1, eb1)
+    return z, s
+
+
+def hsdag_placer(p, z, cluster_ids, group_mask):
+    """Pool nodes into their parsed groups and emit device logits.
+
+    cluster_ids [V] i32 (group of each node), group_mask [V] (1 for valid
+    group slots). Returns logits [V, ND] over group slots; invalid slots
+    get -1e9 so softmax mass stays on valid groups.
+    """
+    (pw0, pb0, pw1, pb1) = p[12:16]
+    v = z.shape[0]
+    pooled = segment_mean_ref(z, cluster_ids, v)
+    hid = jnp.maximum(pooled @ pw0 + pb0, 0.0)
+    logits = hid @ pw1 + pb1
+    return jnp.where(group_mask[:, None] > 0, logits, -1e9)
+
+
+def _hsdag_step_logp(p, x0, a_norm, edge_src, edge_dst, node_mask, edge_mask,
+                     fb, cids, actions, gmask, retained, dropout_key):
+    """log p(P | G'; theta) for one buffered step (Eq. 13)."""
+    z = _hsdag_encode(p, x0, a_norm, fb, node_mask, dropout_key)
+    (ew0, eb0, ew1, eb1) = p[8:12]
+    zs = jnp.take(z, edge_src, axis=0)
+    zd = jnp.take(z, edge_dst, axis=0)
+    s = edge_scores(zs, zd, ew0, eb0, ew1, eb1)
+
+    logits = hsdag_placer(p, z, cids, gmask)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    v = z.shape[0]
+    lp_place = jnp.sum(
+        gmask * jnp.take_along_axis(logp, actions[:, None], axis=1).squeeze(-1)
+    )
+    # GPN partition log-likelihood: retained edges' scores up, dropped down.
+    eps = 1e-6
+    s = jnp.clip(s, eps, 1.0 - eps)
+    lp_part = jnp.sum(
+        edge_mask * (retained * jnp.log(s) + (1.0 - retained) * jnp.log(1.0 - s))
+    ) / jnp.maximum(edge_mask.sum(), 1.0)
+    del v
+    return lp_place + LAMBDA * lp_part
+
+
+def hsdag_loss(p, x0, a_norm, edge_src, edge_dst, node_mask, edge_mask,
+               fb_buf, cids_buf, actions_buf, gmask_buf, retained_buf,
+               coeff, key):
+    """Eq. 14: -sum_t coeff[t] * log p(P_t | G'; theta)."""
+    t = fb_buf.shape[0]
+    keys = jax.random.split(key, t)
+
+    def one(i):
+        return _hsdag_step_logp(
+            p, x0, a_norm, edge_src, edge_dst, node_mask, edge_mask,
+            fb_buf[i], cids_buf[i], actions_buf[i], gmask_buf[i],
+            retained_buf[i], keys[i])
+
+    logps = jax.vmap(one)(jnp.arange(t))
+    return -jnp.sum(coeff * logps)
+
+
+# --------------------------------------------------------------------------
+# Placeto baseline (encoder-placer: GNN -> per-node device logits)
+# --------------------------------------------------------------------------
+
+def placeto_fwd(p, x0, a_norm, node_mask):
+    (tw0, tb0, tw1, tb1, gw0, gb0, gw1, gb1, pw0, pb0, pw1, pb1) = p
+    h0 = jnp.maximum(x0 @ tw0 + tb0, 0.0)
+    h1 = jnp.maximum(h0 @ tw1 + tb1, 0.0)
+    z1 = gcn_layer(a_norm, h1, gw0, gb0, True)
+    z = gcn_layer(a_norm, z1, gw1, gb1, True)
+    z = z * node_mask[:, None]
+    hid = jnp.maximum(z @ pw0 + pb0, 0.0)
+    return hid @ pw1 + pb1  # [V, ND]
+
+
+def placeto_loss(p, x0, a_norm, node_mask, actions_buf, coeff):
+    def one(actions):
+        logits = placeto_fwd(p, x0, a_norm, node_mask)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        sel = jnp.take_along_axis(logp, actions[:, None], axis=1).squeeze(-1)
+        return jnp.sum(node_mask * sel)
+
+    logps = jax.vmap(one)(actions_buf)
+    return -jnp.sum(coeff * logps)
+
+
+# --------------------------------------------------------------------------
+# RNN baseline (grouper-placer ancestor: seq2seq LSTM + attention readout)
+# --------------------------------------------------------------------------
+
+def rnn_fwd(p, x0_topo, node_mask):
+    """LSTM over the topological node sequence -> per-node device logits.
+
+    x0_topo must be permuted into topological order by the caller (rust);
+    logits come back in the same order.
+    """
+    (ew, eb, wih, whh, b, attn_w, pw0, pb0, pw1, pb1) = p
+    x = jnp.maximum(x0_topo @ ew + eb, 0.0)  # [V, H]
+
+    def cell(carry, xt):
+        h, c = carry
+        gates = xt @ wih + h @ whh + b
+        i, f, g, o = jnp.split(gates, 4)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+        g = jnp.tanh(g)
+        c = f * c + i * g
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((H,), x.dtype)
+    (_, _), hs = jax.lax.scan(cell, (h0, h0), x)  # [V, H]
+    # Content-based attention over encoder states (Mirhoseini et al. '17).
+    scores = (hs @ attn_w) @ hs.T / jnp.sqrt(float(H))  # [V, V]
+    scores = jnp.where(node_mask[None, :] > 0, scores, -1e9)
+    ctx = jax.nn.softmax(scores, axis=-1) @ hs  # [V, H]
+    hid = jnp.maximum((hs + ctx) @ pw0 + pb0, 0.0)
+    return hid @ pw1 + pb1  # [V, ND]
+
+
+def rnn_loss(p, x0_topo, node_mask, actions_buf, coeff):
+    def one(actions):
+        logits = rnn_fwd(p, x0_topo, node_mask)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        sel = jnp.take_along_axis(logp, actions[:, None], axis=1).squeeze(-1)
+        return jnp.sum(node_mask * sel)
+
+    logps = jax.vmap(one)(actions_buf)
+    return -jnp.sum(coeff * logps)
+
+
+# --------------------------------------------------------------------------
+# Adam + generic train step
+# --------------------------------------------------------------------------
+
+def adam_update(params, grads, m, v, step):
+    """One Adam step (Table 6: lr 1e-4). step is a float32 scalar counting
+    completed updates; returns (params', m', v', step')."""
+    b1, b2, eps, lr = shapes.ADAM_B1, shapes.ADAM_B2, shapes.ADAM_EPS, shapes.LEARNING_RATE
+    step = step + 1.0
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    new_p, new_m, new_v = [], [], []
+    for pi, gi, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1.0 - b1) * gi
+        vi = b2 * vi + (1.0 - b2) * gi * gi
+        mhat = mi / bc1
+        vhat = vi / bc2
+        new_p.append(pi - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return tuple(new_p), tuple(new_m), tuple(new_v), step
+
+
+def make_train_fn(loss_fn, n_params):
+    """Wrap a loss into a full REINFORCE+Adam train step over positional
+    args: (params..., m..., v..., step, *loss_inputs) ->
+    (params'..., m'..., v'..., step', loss)."""
+
+    def train(*args):
+        params = tuple(args[:n_params])
+        m = tuple(args[n_params:2 * n_params])
+        v = tuple(args[2 * n_params:3 * n_params])
+        step = args[3 * n_params]
+        rest = args[3 * n_params + 1:]
+        loss, grads = jax.value_and_grad(loss_fn)(params, *rest)
+        new_p, new_m, new_v, new_step = adam_update(params, grads, m, v, step)
+        return (*new_p, *new_m, *new_v, new_step, loss)
+
+    return train

@@ -1,0 +1,45 @@
+"""Static shape contract between the rust coordinator (L3) and the AOT
+policy artifacts (L2/L1).
+
+Every policy function is lowered once per benchmark at these *padded*
+capacities; the rust side masks the padding. The numbers here MUST match
+`Benchmark::padded_nodes/padded_edges` in `rust/src/models/mod.rs` and
+`FeatureConfig::dim()` in `rust/src/features/mod.rs` — the artifact spec
+files emitted by `aot.py` carry them so the rust runtime can verify at
+load time.
+"""
+
+# Padded (node, edge) capacities per benchmark.
+BENCHMARKS = {
+    "inception_v3": {"v": 768, "e": 896},
+    "resnet50": {"v": 512, "e": 512},
+    "bert_base": {"v": 1024, "e": 1152},
+}
+
+# Feature width d (rust FeatureConfig::dim()): 32 one-hot op types,
+# 2x8 degree buckets, 4 shape slots, 1 fractal dim, 16 positional enc.
+FEAT_DIM = 69
+
+# hidden_channel (Table 6).
+HIDDEN = 128
+
+# Placeable devices |D| (CPU, dGPU — the paper excludes the iGPU).
+N_DEVICES = 2
+
+# update_timestep (Table 6): buffered steps per policy update.
+BUFFER = 20
+
+# GPN partition log-likelihood weight in the REINFORCE objective.
+PARTITION_LOSS_WEIGHT = 0.1
+
+# Adam (Table 6: learning_rate 1e-4).
+LEARNING_RATE = 1e-4
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+# dropout_network (Table 6), applied inside the train-step forward.
+DROPOUT = 0.2
+
+# Pallas tile size along the node/edge dimension (MXU-aligned).
+BLOCK = 128

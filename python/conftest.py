@@ -1,0 +1,6 @@
+"""Make `pytest python/tests/` work from the repo root: the tests import
+the `compile` package that lives beside this file."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,60 @@
+"""AOT pipeline: artifacts lower to parseable HLO text with correct specs."""
+
+import os
+
+import pytest
+
+from compile import aot, shapes
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build(out, ["resnet50"], ["hsdag"])
+    return out
+
+
+def test_hlo_text_emitted(artifacts):
+    path = os.path.join(artifacts, "resnet50_hsdag_fwd.hlo.txt")
+    assert os.path.exists(path)
+    text = open(path).read()
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+
+
+def test_spec_lists_all_inputs(artifacts):
+    spec = open(os.path.join(artifacts, "resnet50_hsdag_fwd.spec.txt")).read()
+    lines = spec.splitlines()
+    assert lines[0].startswith("# hsdag artifact spec")
+    ins = [l for l in lines if l.startswith("in ")]
+    outs = [l for l in lines if l.startswith("out ")]
+    # 16 params + 6 runtime inputs.
+    assert len(ins) == 22, ins
+    assert outs == ["out z", "out scores"]
+    v = shapes.BENCHMARKS["resnet50"]["v"]
+    assert f"in x0 f32 {v},{shapes.FEAT_DIM}" in lines
+    assert f"in a_norm f32 {v},{v}" in lines
+
+
+def test_spec_header_carries_dims(artifacts):
+    spec = open(os.path.join(artifacts, "resnet50_hsdag_train.spec.txt")).read()
+    assert "bench resnet50 v=512 e=512" in spec
+    assert f"h={shapes.HIDDEN}" in spec
+    assert f"t={shapes.BUFFER}" in spec
+
+
+def test_train_spec_roundtrip_params(artifacts):
+    spec = open(os.path.join(artifacts, "resnet50_hsdag_train.spec.txt")).read()
+    # params + m_ + v_ on both sides.
+    ins = [l.split()[1] for l in spec.splitlines() if l.startswith("in ")]
+    outs = [l.split()[1] for l in spec.splitlines() if l.startswith("out ")]
+    n_params = 16
+    assert ins[:n_params] == outs[:n_params]
+    assert all(o.startswith("m_") for o in outs[n_params:2 * n_params])
+    assert outs[-2:] == ["step", "loss"]
+
+
+def test_padded_dims_are_block_aligned():
+    for b, dims in shapes.BENCHMARKS.items():
+        assert dims["v"] % shapes.BLOCK == 0, b
+        assert dims["e"] % shapes.BLOCK == 0, b

@@ -1,0 +1,176 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; every property asserts
+allclose between the interpret-mode Pallas kernel and ref.py, for both
+the forward values and the custom_vjp gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.edge_score import edge_scores, edge_scores_reference
+from compile.kernels.gcn import BLOCK, gcn_layer, gcn_layer_reference
+from compile.kernels.ref import segment_mean_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# GCN layer kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    vb=st.integers(min_value=1, max_value=4),  # V = vb * BLOCK
+    f=st.integers(min_value=1, max_value=96),
+    h=st.integers(min_value=1, max_value=160),
+    relu=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gcn_matches_ref(vb, f, h, relu, seed):
+    v = vb * BLOCK
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    a = jax.random.uniform(ks[0], (v, v), jnp.float32)
+    x = _rand(ks[1], (v, f))
+    w = _rand(ks[2], (f, h), 0.2)
+    b = _rand(ks[3], (h,), 0.2)
+    out = gcn_layer(a, x, w, b, relu)
+    ref = gcn_layer_reference(a, x, w, b, relu)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_gcn_grads_match_ref(seed):
+    v, f, h = BLOCK, 33, 47
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    a = jax.random.uniform(ks[0], (v, v), jnp.float32)
+    x = _rand(ks[1], (v, f))
+    w = _rand(ks[2], (f, h), 0.2)
+    b = _rand(ks[3], (h,), 0.2)
+
+    def lk(w, b, x, a):
+        return (gcn_layer(a, x, w, b, True) ** 2).sum()
+
+    def lr(w, b, x, a):
+        return (gcn_layer_reference(a, x, w, b, True) ** 2).sum()
+
+    gk = jax.grad(lk, argnums=(0, 1, 2, 3))(w, b, x, a)
+    gr = jax.grad(lr, argnums=(0, 1, 2, 3))(w, b, x, a)
+    # f32 accumulation-order noise on large-magnitude adjacency grads
+    # (values reach ~1e4): tolerate ~0.5% relative.
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(got, want, rtol=5e-3, atol=1e-2)
+
+
+def test_gcn_zero_adjacency_gives_bias():
+    v, f, h = BLOCK, 8, 8
+    a = jnp.zeros((v, v))
+    x = jnp.ones((v, f))
+    w = jnp.ones((f, h))
+    b = jnp.full((h,), 3.0)
+    out = gcn_layer(a, x, w, b, False)
+    np.testing.assert_allclose(out, jnp.full((v, h), 3.0))
+
+
+def test_gcn_rejects_unaligned_v():
+    with pytest.raises(AssertionError):
+        gcn_layer(jnp.zeros((100, 100)), jnp.zeros((100, 8)), jnp.zeros((8, 8)),
+                  jnp.zeros(8), True)
+
+
+def test_gcn_under_jit_and_vmap():
+    v, f, h = BLOCK, 12, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    a = jax.random.uniform(ks[0], (v, v))
+    xs = _rand(ks[1], (3, v, f))
+    w = _rand(ks[2], (f, h), 0.2)
+    b = _rand(ks[3], (h,), 0.2)
+    f_jit = jax.jit(lambda x: gcn_layer(a, x, w, b, True))
+    batched = jax.vmap(f_jit)(xs)
+    for i in range(3):
+        np.testing.assert_allclose(
+            batched[i], gcn_layer_reference(a, xs[i], w, b, relu=True),
+            rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Edge-scorer kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    eb=st.integers(min_value=1, max_value=6),  # E = eb * BLOCK
+    h=st.integers(min_value=1, max_value=160),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_edge_scores_match_ref(eb, h, seed):
+    e = eb * BLOCK
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    zs = _rand(ks[0], (e, h))
+    zd = _rand(ks[1], (e, h))
+    w0 = _rand(ks[2], (h, h), 0.2)
+    b0 = _rand(ks[3], (h,), 0.2)
+    w1 = _rand(ks[4], (h, 1), 0.2)
+    b1 = _rand(ks[5], (1,), 0.2)
+    out = edge_scores(zs, zd, w0, b0, w1, b1)
+    ref = edge_scores_reference(zs, zd, w0, b0, w1, b1)
+    assert out.shape == (e,)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-5)
+    assert bool(jnp.all((out > 0.0) & (out < 1.0)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_edge_grads_match_ref(seed):
+    e, h = BLOCK, 24
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    args = (
+        _rand(ks[0], (e, h)), _rand(ks[1], (e, h)),
+        _rand(ks[2], (h, h), 0.2), _rand(ks[3], (h,), 0.2),
+        _rand(ks[4], (h, 1), 0.2), _rand(ks[5], (1,), 0.2),
+    )
+    gk = jax.grad(lambda *a: edge_scores(*a).sum(), argnums=tuple(range(6)))(*args)
+    gr = jax.grad(lambda *a: edge_scores_reference(*a).sum(), argnums=tuple(range(6)))(*args)
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_edge_scores_symmetric_in_endpoints():
+    # Hadamard product is commutative: swapping src/dst changes nothing.
+    e, h = BLOCK, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    zs, zd = _rand(ks[0], (e, h)), _rand(ks[1], (e, h))
+    w0, b0 = _rand(ks[2], (h, h), 0.2), _rand(ks[3], (h,), 0.2)
+    w1, b1 = _rand(ks[4], (h, 1), 0.2), _rand(ks[5], (1,), 0.2)
+    np.testing.assert_allclose(
+        edge_scores(zs, zd, w0, b0, w1, b1),
+        edge_scores(zd, zs, w0, b0, w1, b1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Segment mean (pooling oracle used by the placer)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    v=st.integers(min_value=2, max_value=80),
+    h=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_segment_mean_against_numpy(v, h, seed):
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(v, h)).astype(np.float32)
+    cids = rng.integers(0, v, size=v).astype(np.int32)
+    got = np.asarray(segment_mean_ref(jnp.asarray(z), jnp.asarray(cids), v))
+    for c in range(v):
+        mem = z[cids == c]
+        want = mem.mean(axis=0) if len(mem) else np.zeros(h, np.float32)
+        np.testing.assert_allclose(got[c], want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,166 @@
+"""L2 correctness: policy forward shapes, masking semantics, REINFORCE
+loss behaviour and the fused Adam train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, shapes
+
+jax.config.update("jax_platform_name", "cpu")
+
+V, E, T = 128, 128, 4
+D, H, ND = shapes.FEAT_DIM, shapes.HIDDEN, shapes.N_DEVICES
+
+
+def _inputs(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    x0 = jax.random.normal(ks[0], (V, D), jnp.float32)
+    a = jax.random.uniform(ks[1], (V, V), jnp.float32) / V
+    fb = jnp.zeros((V, H), jnp.float32)
+    esrc = jax.random.randint(ks[2], (E,), 0, V, jnp.int32)
+    edst = jax.random.randint(ks[3], (E,), 0, V, jnp.int32)
+    nmask = jnp.ones((V,), jnp.float32)
+    return x0, a, fb, esrc, edst, nmask
+
+
+def test_hsdag_fwd_shapes():
+    p = model.init_params(model.hsdag_param_spec(), jax.random.PRNGKey(1))
+    x0, a, fb, esrc, edst, nmask = _inputs()
+    z, s = model.hsdag_fwd(p, x0, a, fb, esrc, edst, nmask)
+    assert z.shape == (V, H)
+    assert s.shape == (E,)
+    assert bool(jnp.all((s > 0) & (s < 1)))
+
+
+def test_hsdag_node_mask_zeroes_padding():
+    p = model.init_params(model.hsdag_param_spec(), jax.random.PRNGKey(1))
+    x0, a, fb, esrc, edst, nmask = _inputs()
+    nmask = nmask.at[V // 2:].set(0.0)
+    z, _ = model.hsdag_fwd(p, x0, a, fb, esrc, edst, nmask)
+    assert bool(jnp.all(z[V // 2:] == 0.0))
+
+
+def test_placer_masks_invalid_groups():
+    p = model.init_params(model.hsdag_param_spec(), jax.random.PRNGKey(2))
+    z = jax.random.normal(jax.random.PRNGKey(3), (V, H))
+    cids = jnp.zeros((V,), jnp.int32)  # everything in group 0
+    gmask = jnp.zeros((V,), jnp.float32).at[0].set(1.0)
+    logits = model.hsdag_placer(p, z, cids, gmask)
+    assert logits.shape == (V, ND)
+    assert bool(jnp.all(logits[1:] <= -1e8))
+    assert bool(jnp.all(logits[0] > -1e8))
+
+
+def test_feedback_changes_embeddings():
+    p = model.init_params(model.hsdag_param_spec(), jax.random.PRNGKey(4))
+    x0, a, fb, esrc, edst, nmask = _inputs()
+    z0, _ = model.hsdag_fwd(p, x0, a, fb, esrc, edst, nmask)
+    z1, _ = model.hsdag_fwd(p, x0, a, fb + 1.0, esrc, edst, nmask)
+    assert float(jnp.abs(z0 - z1).max()) > 0.0
+
+
+def _train_args(p, seed=0):
+    x0, a, fb, esrc, edst, nmask = _inputs(seed)
+    emask = jnp.ones((E,), jnp.float32)
+    ks = jax.random.split(jax.random.PRNGKey(seed + 10), 6)
+    fb_buf = jnp.zeros((T, V, H), jnp.float32)
+    cids = jax.random.randint(ks[0], (T, V), 0, 8, jnp.int32)
+    actions = jax.random.randint(ks[1], (T, V), 0, ND, jnp.int32)
+    gmask = jnp.zeros((T, V), jnp.float32).at[:, :8].set(1.0)
+    retained = (jax.random.uniform(ks[2], (T, E)) > 0.5).astype(jnp.float32)
+    coeff = jnp.ones((T,), jnp.float32)
+    key = jnp.zeros((2,), jnp.uint32)
+    return (x0, a, esrc, edst, nmask, emask, fb_buf, cids, actions, gmask,
+            retained, coeff, key)
+
+
+def test_hsdag_train_step_reduces_loss_on_repeated_updates():
+    spec = model.hsdag_param_spec()
+    p = model.init_params(spec, jax.random.PRNGKey(5))
+    n = len(p)
+    m = tuple(jnp.zeros_like(t) for t in p)
+    v = tuple(jnp.zeros_like(t) for t in p)
+    step = jnp.float32(0.0)
+    args = _train_args(p)
+    train = jax.jit(model.make_train_fn(model.hsdag_loss, n))
+    losses = []
+    for _ in range(6):
+        out = train(*p, *m, *v, step, *args)
+        p = tuple(out[:n])
+        m = tuple(out[n:2 * n])
+        v = tuple(out[2 * n:3 * n])
+        step = out[3 * n]
+        losses.append(float(out[-1]))
+    # With positive coefficients the loss (-logp) must decrease as the
+    # policy moves toward the buffered actions.
+    assert losses[-1] < losses[0], losses
+
+
+def test_adam_step_counter_increments():
+    spec = model.hsdag_param_spec()
+    p = model.init_params(spec, jax.random.PRNGKey(6))
+    g = tuple(jnp.ones_like(t) for t in p)
+    m = tuple(jnp.zeros_like(t) for t in p)
+    v = tuple(jnp.zeros_like(t) for t in p)
+    p2, m2, v2, s2 = model.adam_update(p, g, m, v, jnp.float32(0.0))
+    assert float(s2) == 1.0
+    # First Adam step moves every weight by ~lr.
+    delta = float(jnp.abs(p2[0] - p[0]).max())
+    assert abs(delta - shapes.LEARNING_RATE) < 0.2 * shapes.LEARNING_RATE
+
+
+def test_placeto_fwd_and_loss():
+    p = model.init_params(model.placeto_param_spec(), jax.random.PRNGKey(7))
+    x0, a, _, _, _, nmask = _inputs()
+    logits = model.placeto_fwd(p, x0, a, nmask)
+    assert logits.shape == (V, ND)
+    actions = jnp.zeros((T, V), jnp.int32)
+    coeff = jnp.ones((T,), jnp.float32)
+    loss = model.placeto_loss(p, x0, a, nmask, actions, coeff)
+    assert np.isfinite(float(loss))
+
+
+def test_rnn_fwd_and_loss():
+    p = model.init_params(model.rnn_param_spec(), jax.random.PRNGKey(8))
+    x0, _, _, _, _, nmask = _inputs()
+    logits = model.rnn_fwd(p, x0, nmask)
+    assert logits.shape == (V, ND)
+    actions = jnp.ones((T, V), jnp.int32)
+    coeff = jnp.ones((T,), jnp.float32)
+    loss = model.rnn_loss(p, x0, nmask, actions, coeff)
+    assert np.isfinite(float(loss))
+
+
+def test_rnn_is_sequence_sensitive():
+    # Unlike the GNN policies, the LSTM must care about node order.
+    p = model.init_params(model.rnn_param_spec(), jax.random.PRNGKey(9))
+    x0, _, _, _, _, nmask = _inputs()
+    l0 = model.rnn_fwd(p, x0, nmask)
+    l1 = model.rnn_fwd(p, x0[::-1], nmask)
+    assert float(jnp.abs(l0 - l1[::-1]).max()) > 1e-4
+
+
+def test_partition_loglik_pushes_scores_toward_retention():
+    """The GPN term must raise retained-edge scores under training."""
+    spec = model.hsdag_param_spec()
+    p = model.init_params(spec, jax.random.PRNGKey(10))
+    n = len(p)
+    args = list(_train_args(p))
+    retained = jnp.ones((T, E), jnp.float32)  # everything retained
+    args[10] = retained
+    m = tuple(jnp.zeros_like(t) for t in p)
+    v = tuple(jnp.zeros_like(t) for t in p)
+    step = jnp.float32(0.0)
+    train = jax.jit(model.make_train_fn(model.hsdag_loss, n))
+    x0, a, _, esrc, edst, nmask = _inputs()
+    fb = jnp.zeros((V, H), jnp.float32)
+    _, s_before = model.hsdag_fwd(p, x0, a, fb, esrc, edst, nmask)
+    for _ in range(20):
+        out = train(*p, *m, *v, step, *args)
+        p = tuple(out[:n])
+        m = tuple(out[n:2 * n])
+        v = tuple(out[2 * n:3 * n])
+        step = out[3 * n]
+    _, s_after = model.hsdag_fwd(p, x0, a, fb, esrc, edst, nmask)
+    assert float(s_after.mean()) > float(s_before.mean())

@@ -1,0 +1,63 @@
+//! `cargo bench` target for the system hot paths (the §Perf targets):
+//!
+//!   L3: simulator executes/sec, Algorithm-2 parsing, feature extraction,
+//!       normalized adjacency, co-location — everything on the per-step
+//!       critical path of the search loop.
+//!   L2/L1 (via PJRT): policy fwd, placer, and train-step execution
+//!       latency of the AOT artifacts — the compute the rust loop calls.
+
+use hsdag::config::Config;
+use hsdag::features::{extract, normalized_adjacency, FeatureConfig};
+use hsdag::models::Benchmark;
+use hsdag::parsing::parse;
+use hsdag::rl::{Env, HsdagAgent};
+use hsdag::runtime::Engine;
+use hsdag::sim::{execute, Placement, Testbed, CPU, DGPU};
+use hsdag::util::bench::bench_fn;
+use hsdag::util::Rng;
+
+fn main() {
+    println!("== L3 hot paths ==");
+    let tb = Testbed::paper();
+    for b in Benchmark::ALL {
+        let g = b.build();
+        let mut rng = Rng::new(7);
+        let placement =
+            Placement((0..g.n()).map(|_| [CPU, DGPU][rng.below(2)]).collect());
+        bench_fn(&format!("sim/execute/{}", b.id()), 3, 30, || {
+            execute(&g, &placement, &tb).makespan
+        });
+    }
+
+    let wg = hsdag::coarsen::colocate(&Benchmark::BertBase.build()).coarse;
+    let mut rng = Rng::new(9);
+    let scores: Vec<f32> = (0..wg.m()).map(|_| rng.next_f32()).collect();
+    bench_fn("parsing/parse/bert_coarse", 3, 100, || parse(&wg, &scores));
+    bench_fn("features/extract/bert_coarse", 1, 10, || {
+        extract(&wg, FeatureConfig::default())
+    });
+    bench_fn("features/a_norm/bert_coarse", 1, 10, || normalized_adjacency(&wg));
+
+    println!("\n== L2/L1 artifact execution (PJRT) ==");
+    let cfg = Config { seed: 2, ..Default::default() };
+    let Ok(mut engine) = Engine::cpu(&cfg.artifacts_dir) else {
+        println!("  (artifacts missing: run `make artifacts` first)");
+        return;
+    };
+    for b in Benchmark::ALL {
+        let env = Env::new(b, &cfg).unwrap();
+        let mut agent = HsdagAgent::new(&env, &mut engine, &cfg).unwrap();
+        // One full step = fwd + parse + placer + sample + simulate.
+        bench_fn(&format!("step/full/{}", b.id()), 1, 10, || {
+            agent.step(&env, &mut engine, true).unwrap().latency
+        });
+        bench_fn(&format!("train/update/{}", b.id()), 0, 3, || {
+            // Re-prime and update (measures the train-artifact call + the
+            // host round-trip of all parameters).
+            for _ in 0..cfg.update_timestep {
+                agent.step(&env, &mut engine, true).unwrap();
+            }
+            agent.update(&env, &mut engine).unwrap()
+        });
+    }
+}

@@ -1,0 +1,90 @@
+//! `cargo bench` target covering the paper-table harnesses.
+//!
+//! One section per table/figure (DESIGN.md §6): Table 1 (graph pipeline),
+//! Table 2 (baseline placements + a short HSDAG search), Table 3 (ablation
+//! feature extraction), Table 4 (numerics drift), Table 5 (per-episode
+//! search cost per method), Figure 2 (parsing + DOT emission). Learned
+//! searches run with a tiny episode budget — these benches measure the
+//! machinery; the full-budget numbers live in EXPERIMENTS.md.
+
+use hsdag::config::Config;
+use hsdag::features::{extract, FeatureConfig};
+use hsdag::harness::{figure2, table1, table4};
+use hsdag::models::Benchmark;
+use hsdag::rl::{BaselineAgent, BaselineKind, Env, HsdagAgent};
+use hsdag::runtime::Engine;
+use hsdag::sim::{numerics, Placement, CPU, DGPU};
+use hsdag::util::bench::bench_fn;
+use hsdag::{baselines, coarsen};
+
+fn main() {
+    println!("== Table 1: graph construction pipeline ==");
+    for b in Benchmark::ALL {
+        bench_fn(&format!("table1/build/{}", b.id()), 1, 10, || b.build());
+    }
+    let g = Benchmark::BertBase.build();
+    bench_fn("table1/colocate/bert", 1, 10, || coarsen::colocate(&g));
+    bench_fn("table1/render", 1, 20, || table1::run().render());
+
+    println!("\n== Table 2: baseline placements + short HSDAG search ==");
+    for b in Benchmark::ALL {
+        let g = b.build();
+        let tb = hsdag::sim::Testbed::paper();
+        bench_fn(&format!("table2/static_baselines/{}", b.id()), 1, 10, || {
+            ["cpu", "gpu", "openvino-cpu", "openvino-gpu"]
+                .map(|m| baselines::baseline_latency(m, &g, &tb).unwrap())
+        });
+    }
+    let cfg = Config { seed: 1, ..Default::default() };
+    if let Ok(mut engine) = Engine::cpu(&cfg.artifacts_dir) {
+        let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
+        bench_fn("table2/hsdag_search_1ep/resnet50", 0, 3, || {
+            let mut agent = HsdagAgent::new(&env, &mut engine, &cfg).unwrap();
+            agent.search(&env, &mut engine, 1).unwrap().best_latency
+        });
+    } else {
+        println!("  (artifacts missing: skipping learned-search benches)");
+    }
+
+    println!("\n== Table 3: ablation feature extraction ==");
+    let wg = coarsen::colocate(&Benchmark::BertBase.build()).coarse;
+    for (name, fcfg) in [
+        ("full", FeatureConfig::default()),
+        ("no_shape", FeatureConfig { no_shape: true, ..Default::default() }),
+        ("no_node_id", FeatureConfig { no_node_id: true, ..Default::default() }),
+        ("no_structural", FeatureConfig { no_structural: true, ..Default::default() }),
+    ] {
+        bench_fn(&format!("table3/features/{name}"), 1, 10, || extract(&wg, fcfg));
+    }
+
+    println!("\n== Table 4: downstream numerics ==");
+    let bert = Benchmark::BertBase.build();
+    bench_fn("table4/output_embedding/gpu", 1, 10, || {
+        numerics::output_embedding(&bert, &Placement::all(bert.n(), DGPU))
+    });
+    let a = numerics::output_embedding(&bert, &Placement::all(bert.n(), CPU));
+    let b = numerics::output_embedding(&bert, &Placement::all(bert.n(), DGPU));
+    bench_fn("table4/drift_metrics", 10, 100, || numerics::drift(&a, &b));
+    bench_fn("table4/full", 1, 5, || table4::run(&cfg, None).unwrap());
+
+    println!("\n== Table 5: per-episode search cost by method ==");
+    if let Ok(mut engine) = Engine::cpu(&cfg.artifacts_dir) {
+        let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
+        bench_fn("table5/episode/hsdag/resnet50", 0, 3, || {
+            let mut agent = HsdagAgent::new(&env, &mut engine, &cfg).unwrap();
+            agent.search(&env, &mut engine, 1).unwrap().wall_secs
+        });
+        for kind in [BaselineKind::Placeto, BaselineKind::Rnn] {
+            bench_fn(&format!("table5/episode/{}/resnet50", kind.id()), 0, 3, || {
+                let mut agent = BaselineAgent::new(&env, &mut engine, &cfg, kind).unwrap();
+                agent.search(&env, &mut engine, 1).unwrap().wall_secs
+            });
+        }
+    }
+
+    println!("\n== Figure 2: parsing + DOT emission ==");
+    let dir = std::env::temp_dir().join("hsdag_bench_fig2");
+    bench_fn("figure2/untrained_all", 0, 3, || {
+        figure2::run_untrained(dir.to_str().unwrap()).unwrap()
+    });
+}

@@ -1,0 +1,134 @@
+//! Non-learned placement baselines (§3.3): CPU-only, GPU-only, and the
+//! OpenVINO-CPU / OpenVINO-GPU heuristics.
+//!
+//! OpenVINO's HETERO mode assigns each op to the first device in the
+//! priority list that *supports* it; unsupported ops fall through to the
+//! next device, and the affinity pass never accounts for the transfer
+//! cost of the resulting subgraph cuts. We model the two published
+//! behaviours of Table 2:
+//!
+//! - HETERO:CPU — everything on CPU, except wide convolutions (out
+//!   channels >= 512), which the CPU plugin punts to the GPU. Inception
+//!   has none (-> 0% vs CPU-only, as the paper reports), BERT has no
+//!   convolutions at all (-> ~0%), but ResNet's stage-3/4 bottlenecks are
+//!   full of them: each offloaded conv pays two PCIe hops mid-chain, and
+//!   the placement regresses *below* CPU-only (the paper's -46.3%).
+//! - HETERO:GPU — everything on dGPU, except host-side data-movement ops
+//!   (Gather / StridedSlice / Pad / EmbeddingLookup) that the GPU plugin
+//!   executes on CPU; the extra hops make it slightly worse than
+//!   GPU-only, again matching Table 2's shape.
+
+use crate::graph::{CompGraph, OpKind};
+use crate::sim::{execute, DeviceId, Placement, Testbed, CPU, DGPU, IGPU};
+
+/// All-CPU placement (the speedup reference).
+pub fn cpu_only(g: &CompGraph) -> Placement {
+    Placement::all(g.n(), CPU)
+}
+
+/// All-dGPU placement.
+pub fn gpu_only(g: &CompGraph) -> Placement {
+    Placement::all(g.n(), DGPU)
+}
+
+/// OpenVINO HETERO affinity with the given priority device. See the
+/// module docs for the per-op support rules this models.
+pub fn openvino_greedy(g: &CompGraph, _tb: &Testbed, preferred: DeviceId) -> Placement {
+    let mut out = Vec::with_capacity(g.n());
+    for node in &g.nodes {
+        let d = match preferred {
+            CPU => {
+                // CPU priority: wide convs are "unsupported" and fall to
+                // the dGPU.
+                let wide_conv = node.kind == OpKind::Convolution
+                    && node.output_shape.get(1).copied().unwrap_or(0) >= 512;
+                if wide_conv {
+                    DGPU
+                } else {
+                    CPU
+                }
+            }
+            _ => {
+                // GPU priority: host-side data movement falls back to CPU.
+                let host_op = matches!(
+                    node.kind,
+                    OpKind::Gather
+                        | OpKind::StridedSlice
+                        | OpKind::Pad
+                        | OpKind::EmbeddingLookup
+                );
+                if host_op {
+                    CPU
+                } else {
+                    preferred
+                }
+            }
+        };
+        out.push(d);
+    }
+    let _ = IGPU; // iGPU modeled but never preferred (paper limitation note)
+    Placement(out)
+}
+
+/// Latency of a named baseline on graph `g`.
+pub fn baseline_latency(name: &str, g: &CompGraph, tb: &Testbed) -> Option<f64> {
+    let p = match name {
+        "cpu" => cpu_only(g),
+        "gpu" => gpu_only(g),
+        "openvino-cpu" => openvino_greedy(g, tb, CPU),
+        "openvino-gpu" => openvino_greedy(g, tb, DGPU),
+        _ => return None,
+    };
+    Some(execute(g, &p, tb).makespan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Benchmark;
+
+    #[test]
+    fn single_device_placements_uniform() {
+        let g = Benchmark::ResNet50.build();
+        assert!(cpu_only(&g).0.iter().all(|&d| d == CPU));
+        assert!(gpu_only(&g).0.iter().all(|&d| d == DGPU));
+    }
+
+    #[test]
+    fn greedy_mixes_devices() {
+        let g = Benchmark::ResNet50.build();
+        let tb = Testbed::paper();
+        let p = openvino_greedy(&g, &tb, CPU);
+        let n_cpu = p.0.iter().filter(|&&d| d == CPU).count();
+        let n_gpu = p.0.iter().filter(|&&d| d == DGPU).count();
+        assert!(n_cpu > 0 && n_gpu > 0, "cpu {n_cpu} gpu {n_gpu}");
+    }
+
+    #[test]
+    fn greedy_cpu_regresses_on_resnet() {
+        // The Table 2 shape: OpenVINO-CPU below CPU-only on ResNet because
+        // greedy offloading ignores the PCIe cost of every hop.
+        let g = Benchmark::ResNet50.build();
+        let tb = Testbed::paper();
+        let cpu = baseline_latency("cpu", &g, &tb).unwrap();
+        let ov_cpu = baseline_latency("openvino-cpu", &g, &tb).unwrap();
+        assert!(ov_cpu > cpu, "ov {ov_cpu} vs cpu {cpu}");
+    }
+
+    #[test]
+    fn greedy_gpu_between_cpu_and_gpu_on_resnet() {
+        let g = Benchmark::ResNet50.build();
+        let tb = Testbed::paper();
+        let gpu = baseline_latency("gpu", &g, &tb).unwrap();
+        let ov_gpu = baseline_latency("openvino-gpu", &g, &tb).unwrap();
+        let cpu = baseline_latency("cpu", &g, &tb).unwrap();
+        assert!(ov_gpu < cpu, "ov-gpu {ov_gpu} must beat cpu {cpu}");
+        assert!(ov_gpu >= gpu * 0.95, "ov-gpu {ov_gpu} suspiciously beats gpu {gpu}");
+    }
+
+    #[test]
+    fn unknown_baseline_is_none() {
+        let g = Benchmark::ResNet50.build();
+        assert!(baseline_latency("magic", &g, &Testbed::paper()).is_none());
+    }
+}

@@ -1,0 +1,161 @@
+//! Hand-rolled CLI (the offline crate set has no clap).
+//!
+//! `hsdag <command> [--flag value]...` — see `usage()` for the command
+//! list. Flags are parsed into a key/value map; each command pulls what it
+//! needs and falls back to the Table 6 defaults.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::features::FeatureConfig;
+use crate::models::Benchmark;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+}
+
+pub fn usage() -> &'static str {
+    "hsdag — structure-aware learned device placement (NeurIPS'24 reproduction)
+
+USAGE: hsdag <command> [--flag value]...
+
+COMMANDS
+  table1                 graph statistics (Table 1)
+  table2                 baseline comparison (Table 2)     [--episodes N]
+  table3                 feature ablations (Table 3)       [--episodes N]
+  table4                 BERT downstream drift (Table 4)
+  table5                 search runtime (Table 5)          [--episodes N]
+  figure2                partition DOT dumps (Figure 2)    [--out-dir D] [--episodes N]
+  train                  run one HSDAG search              [--bench B] [--episodes N]
+  place                  evaluate a fixed placement        [--bench B] [--method M]
+  graph-stats            validate + describe the graphs
+  config                 print the Table 6 hyper-parameters
+
+COMMON FLAGS
+  --bench inception|resnet|bert     benchmark (default resnet)
+  --episodes N                      RL search episodes (default 30)
+  --seed N                          RNG seed (default 0)
+  --artifacts DIR                   artifacts directory (default artifacts)
+  --no-baseline                     disable the EMA reward baseline (paper-literal Eq. 14)
+  --no-shape | --no-node-id | --no-structural   feature ablations
+  --out-dir DIR                     output directory (default results)
+"
+}
+
+/// Parse `args` (excluding argv[0]).
+pub fn parse(args: &[String]) -> Result<Cli> {
+    if args.is_empty() {
+        bail!("no command given\n\n{}", usage());
+    }
+    let command = args[0].clone();
+    let mut flags = HashMap::new();
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            // Boolean flags take no value; everything else takes one.
+            let boolean = matches!(
+                key,
+                "no-baseline" | "no-shape" | "no-node-id" | "no-structural" | "help"
+            );
+            if boolean {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                if i + 1 >= args.len() {
+                    bail!("flag --{key} needs a value");
+                }
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            }
+        } else {
+            bail!("unexpected argument '{a}'\n\n{}", usage());
+        }
+    }
+    Ok(Cli { command, flags })
+}
+
+impl Cli {
+    pub fn usize_flag(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn str_flag(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn bench(&self) -> Result<Benchmark> {
+        let name = self.str_flag("bench", "resnet");
+        Benchmark::parse(&name).ok_or_else(|| anyhow::anyhow!("unknown benchmark '{name}'"))
+    }
+
+    /// Assemble the run Config from flags.
+    pub fn config(&self) -> Result<Config> {
+        let mut cfg = Config::default();
+        cfg.seed = self.usize_flag("seed", 0)? as u64;
+        cfg.artifacts_dir = self.str_flag("artifacts", "artifacts");
+        cfg.max_episodes = self.usize_flag("episodes", 30)?;
+        if self.flags.contains_key("no-baseline") {
+            cfg.use_baseline = false;
+        }
+        cfg.features = FeatureConfig {
+            no_shape: self.flags.contains_key("no-shape"),
+            no_node_id: self.flags.contains_key("no-node-id"),
+            no_structural: self.flags.contains_key("no-structural"),
+        };
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let c = parse(&argv("train --bench bert --episodes 5 --no-baseline")).unwrap();
+        assert_eq!(c.command, "train");
+        assert_eq!(c.bench().unwrap(), Benchmark::BertBase);
+        assert_eq!(c.usize_flag("episodes", 30).unwrap(), 5);
+        let cfg = c.config().unwrap();
+        assert!(!cfg.use_baseline);
+        assert_eq!(cfg.max_episodes, 5);
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(parse(&argv("train --episodes")).is_err());
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(parse(&argv("train boom")).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = parse(&argv("table2")).unwrap();
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.seed, 0);
+        assert!(cfg.use_baseline);
+        assert_eq!(c.bench().unwrap(), Benchmark::ResNet50);
+    }
+
+    #[test]
+    fn ablation_flags_set_features() {
+        let c = parse(&argv("train --no-shape")).unwrap();
+        assert!(c.config().unwrap().features.no_shape);
+    }
+}

@@ -1,0 +1,248 @@
+//! Co-location coarsening heuristic (Appendix G).
+//!
+//! For each vertex v_i in topological order: if v_j is the sole child of
+//! v_i and v_i is the sole parent of v_j, they join the same co-location
+//! set C_s. The coarsened graph CG has one node per co-location set; the
+//! set's operation kind is the member whose kind index equals the rounded
+//! mean of member kind indices ("the operation type of each co-location
+//! set determined by the mean of the operation types", Appendix G), its
+//! output shape/attrs come from the set's terminal member (the tensor that
+//! actually crosses the set boundary), and its FLOPs are the members' sum.
+//!
+//! In addition to the paper's rule we fold `Constant` producers into their
+//! consumer's set: OpenVINO never schedules a weight on a different device
+//! from its op, and folding removes placement-rule violations by
+//! construction (§2.2 "co-locating heuristics eliminate certain execution
+//! failures").
+
+use crate::graph::{CompGraph, OpKind, OpNode};
+
+/// Result of the co-location pass.
+#[derive(Debug, Clone)]
+pub struct Coarsening {
+    /// Co-location set id for every original node.
+    pub set_of: Vec<usize>,
+    /// Number of sets (== coarse graph node count).
+    pub n_sets: usize,
+    /// The coarsened graph.
+    pub coarse: CompGraph,
+    /// For each set, the member ids in the original graph.
+    pub members: Vec<Vec<usize>>,
+}
+
+impl Coarsening {
+    /// Expand a placement over coarse nodes to a placement over original
+    /// nodes.
+    pub fn expand_placement(&self, coarse_placement: &[usize]) -> Vec<usize> {
+        assert_eq!(coarse_placement.len(), self.n_sets);
+        self.set_of.iter().map(|&s| coarse_placement[s]).collect()
+    }
+}
+
+/// Apply the Appendix-G co-location heuristic to `g`.
+pub fn colocate(g: &CompGraph) -> Coarsening {
+    let n = g.n();
+    // Union-find over original nodes.
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut Vec<usize>, x: usize) -> usize {
+        let mut r = x;
+        while parent[r] != r {
+            r = parent[r];
+        }
+        // Path compression.
+        let mut c = x;
+        while parent[c] != r {
+            let nxt = parent[c];
+            parent[c] = r;
+            c = nxt;
+        }
+        r
+    }
+
+    // 1. Fold constants into their (unique) consumer.
+    for v in 0..n {
+        if g.nodes[v].kind == OpKind::Constant && g.out_degree(v) >= 1 {
+            let c = g.out_neighbors(v)[0];
+            let (rv, rc) = (find(&mut parent, v), find(&mut parent, c));
+            if rv != rc {
+                parent[rv] = rc;
+            }
+        }
+    }
+
+    // 2. The paper's rule, in topological order. Constant edges are
+    // ignored when counting parents (the weight is already folded in).
+    let order = g.topo_order().expect("DAG");
+    for &vi in &order {
+        if g.nodes[vi].kind == OpKind::Constant {
+            continue;
+        }
+        let children: Vec<usize> = g.out_neighbors(vi).to_vec();
+        if children.len() != 1 {
+            continue;
+        }
+        let vj = children[0];
+        let real_parents: Vec<usize> = g
+            .in_neighbors(vj)
+            .iter()
+            .copied()
+            .filter(|&p| g.nodes[p].kind != OpKind::Constant)
+            .collect();
+        if real_parents.len() == 1 && real_parents[0] == vi {
+            let (ri, rj) = (find(&mut parent, vi), find(&mut parent, vj));
+            if ri != rj {
+                parent[ri] = rj;
+            }
+        }
+    }
+
+    // Dense set ids in topological order of each set's first member.
+    let mut set_of = vec![usize::MAX; n];
+    let mut members: Vec<Vec<usize>> = Vec::new();
+    for &v in &order {
+        let r = find(&mut parent, v);
+        if set_of[r] == usize::MAX {
+            set_of[r] = members.len();
+            members.push(Vec::new());
+        }
+        set_of[v] = set_of[r];
+        members[set_of[v]].push(v);
+    }
+    let n_sets = members.len();
+
+    // Build the coarse graph.
+    let mut coarse = CompGraph::new(format!("{}_coarse", g.name));
+    for (s, mem) in members.iter().enumerate() {
+        // Mean-of-kind-indices rule for the set's kind.
+        let mean_idx = mem.iter().map(|&v| g.nodes[v].kind.index()).sum::<usize>() as f64
+            / mem.len() as f64;
+        let kind = OpKind::ALL[(mean_idx.round() as usize).min(OpKind::COUNT - 1)];
+        // Terminal member: last in topo order within the set.
+        let term = *mem.last().unwrap();
+        let mut node = OpNode::new(
+            format!("set{s}_{}", g.nodes[term].name),
+            kind,
+            g.nodes[term].output_shape.clone(),
+        );
+        node.attrs = g.nodes[term].attrs;
+        coarse.add_node(node);
+    }
+    for &(a, b) in &g.edges {
+        let (sa, sb) = (set_of[a], set_of[b]);
+        if sa != sb {
+            coarse.add_edge(sa, sb);
+        }
+    }
+
+    Coarsening { set_of, n_sets, coarse, members }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CompGraph, OpNode};
+    use crate::models::Benchmark;
+    use crate::util::prop::{check, PropConfig};
+
+    fn chain(n: usize) -> CompGraph {
+        let mut g = CompGraph::new("chain");
+        let mut prev = g.add_node(OpNode::new("in", OpKind::Parameter, vec![1, 4]));
+        for i in 0..n {
+            let v = g.add_node(OpNode::new(format!("r{i}"), OpKind::Relu, vec![1, 4]));
+            g.add_edge(prev, v);
+            prev = v;
+        }
+        let out = g.add_node(OpNode::new("out", OpKind::Result, vec![1, 4]));
+        g.add_edge(prev, out);
+        g
+    }
+
+    #[test]
+    fn pure_chain_collapses_to_one_set() {
+        let c = colocate(&chain(10));
+        assert_eq!(c.n_sets, 1);
+        assert_eq!(c.coarse.n(), 1);
+        assert_eq!(c.coarse.m(), 0);
+    }
+
+    #[test]
+    fn diamond_keeps_branches_separate() {
+        let mut g = CompGraph::new("d");
+        let i = g.add_node(OpNode::new("in", OpKind::Parameter, vec![1]));
+        let a = g.add_node(OpNode::new("a", OpKind::Relu, vec![1]));
+        let b = g.add_node(OpNode::new("b", OpKind::Sigmoid, vec![1]));
+        let o = g.add_node(OpNode::new("out", OpKind::Result, vec![1]));
+        g.add_edge(i, a);
+        g.add_edge(i, b);
+        g.add_edge(a, o);
+        g.add_edge(b, o);
+        let c = colocate(&g);
+        // in has 2 children (no merge); a,b each have sole child `out`, but
+        // out has 2 parents -> no merge anywhere.
+        assert_eq!(c.n_sets, 4);
+    }
+
+    #[test]
+    fn constants_fold_into_consumer() {
+        let mut g = CompGraph::new("c");
+        let i = g.add_node(OpNode::new("in", OpKind::Parameter, vec![1]));
+        let w = g.add_node(OpNode::new("w", OpKind::Constant, vec![1]));
+        let m = g.add_node(OpNode::new("mm", OpKind::MatMul, vec![1]));
+        let o = g.add_node(OpNode::new("out", OpKind::Result, vec![1]));
+        g.add_edge(i, m);
+        g.add_edge(w, m);
+        g.add_edge(m, o);
+        let c = colocate(&g);
+        assert_eq!(c.set_of[w], c.set_of[m], "weight folded into its consumer");
+    }
+
+    #[test]
+    fn expand_placement_roundtrip() {
+        let c = colocate(&chain(5));
+        let p = c.expand_placement(&vec![1; c.n_sets]);
+        assert!(p.iter().all(|&d| d == 1));
+        assert_eq!(p.len(), 7);
+    }
+
+    #[test]
+    fn benchmarks_coarsen_substantially() {
+        for b in Benchmark::ALL {
+            let g = b.build();
+            let c = colocate(&g);
+            assert!(
+                c.n_sets * 2 < g.n(),
+                "{}: {} sets from {} nodes",
+                b.id(),
+                c.n_sets,
+                g.n()
+            );
+            assert!(c.coarse.is_dag(), "{}: coarse graph must stay a DAG", b.id());
+        }
+    }
+
+    #[test]
+    fn coarse_graph_is_dag_prop() {
+        check("coarsen-dag", PropConfig { cases: 48, max_size: 100, ..Default::default() }, |rng, size| {
+            let g = CompGraph::random(rng, size, size / 3);
+            let c = colocate(&g);
+            if !c.coarse.is_dag() {
+                return Err("coarse graph has a cycle".into());
+            }
+            if c.set_of.iter().any(|&s| s >= c.n_sets) {
+                return Err("set id out of range".into());
+            }
+            // Every set non-empty and members consistent.
+            for (s, mem) in c.members.iter().enumerate() {
+                if mem.is_empty() {
+                    return Err(format!("empty set {s}"));
+                }
+                for &v in mem {
+                    if c.set_of[v] != s {
+                        return Err("member/set mismatch".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

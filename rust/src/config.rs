@@ -1,0 +1,118 @@
+//! Hyper-parameters (Table 6) and run configuration.
+//!
+//! Every knob defaults to the paper's published value; the CLI can
+//! override any of them (`hsdag train --episodes 50 --seed 7 ...`).
+
+use crate::features::FeatureConfig;
+
+/// Table 6 hyper-parameters plus coordinator knobs.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// num_devices: placeable devices (CPU, dGPU).
+    pub num_devices: usize,
+    /// hidden_channel.
+    pub hidden: usize,
+    /// learning_rate (lives in the AOT'd train step; recorded here for
+    /// reporting only).
+    pub learning_rate: f64,
+    /// max_episodes.
+    pub max_episodes: usize,
+    /// update_timestep: steps buffered per policy update. Must equal the
+    /// BUFFER constant baked into the train artifacts.
+    pub update_timestep: usize,
+    /// K_epochs: policy updates per buffered batch.
+    pub k_epochs: usize,
+    /// Reward discount rate gamma (Eq. 14).
+    pub gamma: f64,
+    /// dropout_network: exploration edge-dropout in the parsing stage.
+    pub dropout_network: f64,
+    /// Measurement noise sigma for the simulated latency protocol.
+    pub measure_sigma: f64,
+    /// Subtract an EMA baseline from rewards (variance reduction; the
+    /// paper's Eq. 14 is baseline-free — flag for the ablation).
+    pub use_baseline: bool,
+    /// Softmax temperature for device sampling.
+    pub temperature: f64,
+    /// RNG seed.
+    pub seed: u64,
+    /// Feature ablation switches (Table 3).
+    pub features: FeatureConfig,
+    /// Directory with AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            num_devices: 2,
+            hidden: 128,
+            learning_rate: 1e-4,
+            max_episodes: 100,
+            update_timestep: 20,
+            k_epochs: 1,
+            gamma: 0.99,
+            dropout_network: 0.2,
+            measure_sigma: 0.02,
+            use_baseline: true,
+            temperature: 1.0,
+            seed: 0,
+            features: FeatureConfig::default(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl Config {
+    /// Render as the Table 6 parameter block.
+    pub fn table6(&self) -> String {
+        format!(
+            "num_devices          {}\n\
+             hidden_channel       {}\n\
+             layer_trans          2\n\
+             layer_gnn            2\n\
+             layer_parsingnet     2\n\
+             gnn_model            GCN\n\
+             dropout_network      {}\n\
+             dropout_parsing      0.0\n\
+             link_ignore_self_loop true\n\
+             activation_final     true\n\
+             learning_rate        {}\n\
+             max_episodes         {}\n\
+             update_timestep      {}\n\
+             K_epochs             {}\n\
+             gamma                {}\n",
+            self.num_devices,
+            self.hidden,
+            self.dropout_network,
+            self.learning_rate,
+            self.max_episodes,
+            self.update_timestep,
+            self.k_epochs,
+            self.gamma,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table6() {
+        let c = Config::default();
+        assert_eq!(c.num_devices, 2);
+        assert_eq!(c.hidden, 128);
+        assert_eq!(c.learning_rate, 1e-4);
+        assert_eq!(c.max_episodes, 100);
+        assert_eq!(c.update_timestep, 20);
+        assert_eq!(c.dropout_network, 0.2);
+    }
+
+    #[test]
+    fn table6_renders_all_rows() {
+        let t = Config::default().table6();
+        for key in ["num_devices", "hidden_channel", "learning_rate", "update_timestep", "K_epochs"] {
+            assert!(t.contains(key), "{key}");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Node fractal dimension (Eq. 4): the mass-distribution exponent.
+//!
+//! For node v with BFS distances {r_k} and box masses N(v, r_k) = #nodes
+//! within distance r_k, D(v) is the least-squares slope of
+//! log N(v, r) against log r:
+//!
+//!   D(v) = Σ_k (log r_k - mean(log r)) (log N_k - mean(log N))
+//!          ───────────────────────────────────────────────────
+//!                       Σ_k (log r_k - mean(log r))²
+//!
+//! Degenerate cases (isolated nodes, eccentricity < 2) get D(v) = 0 — no
+//! multi-scale structure to measure.
+
+use crate::graph::CompGraph;
+
+/// Fractal dimension of a single node given its undirected BFS distances.
+pub fn fractal_dimension_from_dists(dists: &[usize]) -> f64 {
+    // Mass at each radius r >= 1 (cumulative node count within distance r).
+    let max_r = dists.iter().filter(|&&d| d != usize::MAX).max().copied().unwrap_or(0);
+    if max_r < 2 {
+        return 0.0;
+    }
+    let mut mass = vec![0usize; max_r + 1];
+    for &d in dists {
+        if d != usize::MAX {
+            mass[d] += 1;
+        }
+    }
+    // Cumulative.
+    for r in 1..=max_r {
+        mass[r] += mass[r - 1];
+    }
+    let pts: Vec<(f64, f64)> =
+        (1..=max_r).map(|r| ((r as f64).ln(), (mass[r] as f64).ln())).collect();
+    let n = pts.len() as f64;
+    let mx = pts.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = pts.iter().map(|p| p.1).sum::<f64>() / n;
+    let num: f64 = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let den: f64 = pts.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+    if den <= 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Fractal dimension for every node of `g` (Eq. 4), via per-node BFS.
+pub fn fractal_dimensions(g: &CompGraph) -> Vec<f64> {
+    (0..g.n()).map(|v| fractal_dimension_from_dists(&g.bfs_undirected(v))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CompGraph, OpNode, OpKind};
+
+    fn path(n: usize) -> CompGraph {
+        let mut g = CompGraph::new("path");
+        let mut prev = g.add_node(OpNode::new("n0", OpKind::Parameter, vec![1]));
+        for i in 1..n {
+            let v = g.add_node(OpNode::new(format!("n{i}"), OpKind::Relu, vec![1]));
+            g.add_edge(prev, v);
+            prev = v;
+        }
+        g
+    }
+
+    #[test]
+    fn path_endpoint_dimension_near_one() {
+        // From the end of a long path, N(r) = r + 1: slope -> ~1.
+        let g = path(64);
+        let d = fractal_dimension_from_dists(&g.bfs_undirected(0));
+        assert!((d - 1.0).abs() < 0.15, "got {d}");
+    }
+
+    #[test]
+    fn star_center_dimension_small() {
+        // Star: everything at distance 1 from the hub; from a leaf, mass
+        // saturates at r=2 -> slope well below 1.
+        let mut g = CompGraph::new("star");
+        let hub = g.add_node(OpNode::new("hub", OpKind::Parameter, vec![1]));
+        for i in 0..32 {
+            let v = g.add_node(OpNode::new(format!("leaf{i}"), OpKind::Relu, vec![1]));
+            g.add_edge(hub, v);
+        }
+        let d_leaf = fractal_dimension_from_dists(&g.bfs_undirected(1));
+        // Leaf: N(1)=2, N(2)=33 -> slope = ln(33/2)/ln(2) ~ 4; hub has
+        // eccentricity 1 -> 0 by convention.
+        let d_hub = fractal_dimension_from_dists(&g.bfs_undirected(0));
+        assert_eq!(d_hub, 0.0);
+        assert!(d_leaf > 2.0, "leaf {d_leaf}");
+    }
+
+    #[test]
+    fn grid_like_higher_than_path() {
+        // Binary in-tree has higher mass growth than a path.
+        let mut g = CompGraph::new("tree");
+        let root = g.add_node(OpNode::new("r", OpKind::Parameter, vec![1]));
+        let mut frontier = vec![root];
+        let mut idx = 0;
+        for _ in 0..5 {
+            let mut next = Vec::new();
+            for &p in &frontier {
+                for _ in 0..2 {
+                    idx += 1;
+                    let v = g.add_node(OpNode::new(format!("t{idx}"), OpKind::Relu, vec![1]));
+                    g.add_edge(p, v);
+                    next.push(v);
+                }
+            }
+            frontier = next;
+        }
+        let d_tree = fractal_dimension_from_dists(&g.bfs_undirected(0));
+        let p = path(g.n());
+        let d_path = fractal_dimension_from_dists(&p.bfs_undirected(0));
+        assert!(d_tree > d_path, "tree {d_tree} vs path {d_path}");
+    }
+
+    #[test]
+    fn isolated_node_zero() {
+        let mut g = CompGraph::new("iso");
+        g.add_node(OpNode::new("x", OpKind::Parameter, vec![1]));
+        assert_eq!(fractal_dimensions(&g), vec![0.0]);
+    }
+
+    #[test]
+    fn all_values_finite_on_random_graphs() {
+        use crate::util::prop::{check, PropConfig};
+        check("fractal-finite", PropConfig { cases: 24, max_size: 80, ..Default::default() }, |rng, size| {
+            let g = CompGraph::random(rng, size, size / 4);
+            for d in fractal_dimensions(&g) {
+                if !d.is_finite() {
+                    return Err("non-finite fractal dimension".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

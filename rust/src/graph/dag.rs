@@ -1,0 +1,418 @@
+//! The computation-graph substrate (Definition 2.1).
+//!
+//! `CompGraph` is a labeled, unweighted, directed acyclic graph whose nodes
+//! are operations (`OpNode`) and whose edges are data dependencies. It is
+//! the object every other subsystem consumes: feature extraction (§2.3),
+//! co-location coarsening (Appendix G), graph parsing (Algorithm 2) and the
+//! heterogeneous execution simulator.
+
+use super::ops::{flops, numel, out_bytes, OpAttrs, OpKind};
+use crate::util::Rng;
+
+/// One operation in a computation graph.
+#[derive(Debug, Clone)]
+pub struct OpNode {
+    /// Human-readable name (layer path), unique within a graph.
+    pub name: String,
+    /// Operation type (one-hot feature + cost-model class).
+    pub kind: OpKind,
+    /// Output tensor shape (NCHW for vision, [batch, seq, hidden] for BERT).
+    pub output_shape: Vec<usize>,
+    /// Cost-model attributes (kernel size, reduction length, groups).
+    pub attrs: OpAttrs,
+}
+
+impl OpNode {
+    pub fn new(name: impl Into<String>, kind: OpKind, output_shape: Vec<usize>) -> Self {
+        OpNode { name: name.into(), kind, output_shape, attrs: OpAttrs::default() }
+    }
+
+    pub fn with_attrs(mut self, attrs: OpAttrs) -> Self {
+        self.attrs = attrs;
+        self
+    }
+
+    /// FLOPs to execute this op once.
+    pub fn flops(&self) -> f64 {
+        flops(self.kind, &self.output_shape, &self.attrs)
+    }
+
+    /// Bytes of the produced output tensor (f32).
+    pub fn out_bytes(&self) -> f64 {
+        out_bytes(&self.output_shape)
+    }
+
+    /// Element count of the output.
+    pub fn out_elems(&self) -> usize {
+        numel(&self.output_shape)
+    }
+}
+
+/// A labeled DAG of operations. Node ids are dense `0..n`.
+#[derive(Debug, Clone, Default)]
+pub struct CompGraph {
+    /// Benchmark name ("inception_v3", "resnet50", "bert_base", ...).
+    pub name: String,
+    pub nodes: Vec<OpNode>,
+    /// Edge list (src, dst); deduplicated, src != dst.
+    pub edges: Vec<(usize, usize)>,
+    adj_out: Vec<Vec<usize>>,
+    adj_in: Vec<Vec<usize>>,
+}
+
+impl CompGraph {
+    pub fn new(name: impl Into<String>) -> Self {
+        CompGraph { name: name.into(), ..Default::default() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Average degree |E| / |V| as reported in Table 1.
+    pub fn avg_degree(&self) -> f64 {
+        if self.nodes.is_empty() {
+            0.0
+        } else {
+            self.m() as f64 / self.n() as f64
+        }
+    }
+
+    /// Append a node, returning its id.
+    pub fn add_node(&mut self, node: OpNode) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(node);
+        self.adj_out.push(Vec::new());
+        self.adj_in.push(Vec::new());
+        id
+    }
+
+    /// Add a dependency edge src -> dst. Duplicate edges and self-loops are
+    /// ignored (OpenVINO IR has neither).
+    pub fn add_edge(&mut self, src: usize, dst: usize) {
+        assert!(src < self.n() && dst < self.n(), "edge endpoint out of range");
+        if src == dst || self.adj_out[src].contains(&dst) {
+            return;
+        }
+        self.edges.push((src, dst));
+        self.adj_out[src].push(dst);
+        self.adj_in[dst].push(src);
+    }
+
+    pub fn out_neighbors(&self, v: usize) -> &[usize] {
+        &self.adj_out[v]
+    }
+
+    pub fn in_neighbors(&self, v: usize) -> &[usize] {
+        &self.adj_in[v]
+    }
+
+    pub fn out_degree(&self, v: usize) -> usize {
+        self.adj_out[v].len()
+    }
+
+    pub fn in_degree(&self, v: usize) -> usize {
+        self.adj_in[v].len()
+    }
+
+    /// Kahn topological order. Returns `None` if the graph has a cycle.
+    pub fn topo_order(&self) -> Option<Vec<usize>> {
+        let n = self.n();
+        let mut indeg: Vec<usize> = (0..n).map(|v| self.in_degree(v)).collect();
+        // Stable queue: lower id first, which makes orders deterministic.
+        let mut queue: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+        queue.sort_unstable();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let v = queue[head];
+            head += 1;
+            order.push(v);
+            for &w in &self.adj_out[v] {
+                indeg[w] -= 1;
+                if indeg[w] == 0 {
+                    queue.push(w);
+                }
+            }
+        }
+        if order.len() == n {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    /// True iff the graph is acyclic.
+    pub fn is_dag(&self) -> bool {
+        self.topo_order().is_some()
+    }
+
+    /// Validate structural invariants; returns an error description if any
+    /// is violated. Used by the model builders' tests and the CLI.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.is_dag() {
+            return Err("graph has a cycle".into());
+        }
+        let mut names = std::collections::HashSet::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            if !names.insert(node.name.as_str()) {
+                return Err(format!("duplicate node name '{}'", node.name));
+            }
+            if node.output_shape.iter().any(|&d| d == 0) {
+                return Err(format!("node {i} '{}' has a zero dim", node.name));
+            }
+        }
+        for &(s, d) in &self.edges {
+            if s >= self.n() || d >= self.n() {
+                return Err(format!("edge ({s},{d}) out of range"));
+            }
+        }
+        // Every non-Parameter/Constant node must have an input; every
+        // non-Result node must have a consumer (OpenVINO prunes dead ops).
+        for v in 0..self.n() {
+            let k = self.nodes[v].kind;
+            if self.in_degree(v) == 0 && !matches!(k, OpKind::Parameter | OpKind::Constant) {
+                return Err(format!("node {v} '{}' ({:?}) has no inputs", self.nodes[v].name, k));
+            }
+            if self.out_degree(v) == 0 && k != OpKind::Result {
+                return Err(format!("node {v} '{}' ({:?}) has no consumers", self.nodes[v].name, k));
+            }
+        }
+        Ok(())
+    }
+
+    /// Longest path length (critical path in hops). Graph must be a DAG.
+    pub fn critical_path_len(&self) -> usize {
+        let order = self.topo_order().expect("DAG");
+        let mut depth = vec![0usize; self.n()];
+        let mut best = 0;
+        for &v in &order {
+            for &w in &self.adj_out[v] {
+                depth[w] = depth[w].max(depth[v] + 1);
+                best = best.max(depth[w]);
+            }
+        }
+        best
+    }
+
+    /// Undirected BFS distances from `v` (usize::MAX = unreachable).
+    /// Used by the fractal-dimension feature (Eq. 4).
+    pub fn bfs_undirected(&self, v: usize) -> Vec<usize> {
+        let mut dist = vec![usize::MAX; self.n()];
+        dist[v] = 0;
+        let mut queue = std::collections::VecDeque::from([v]);
+        while let Some(u) = queue.pop_front() {
+            for &w in self.adj_out[u].iter().chain(self.adj_in[u].iter()) {
+                if dist[w] == usize::MAX {
+                    dist[w] = dist[u] + 1;
+                    queue.push_back(w);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Total FLOPs over all nodes (simulator sanity metric).
+    pub fn total_flops(&self) -> f64 {
+        self.nodes.iter().map(|n| n.flops()).sum()
+    }
+
+    /// Insert a pass-through node in the middle of edge `(src, dst)`
+    /// (+1 node, +1 edge, surplus |E|-|V| unchanged). Used by the model
+    /// builders' exact-fit pass to land on the paper's Table 1 sizes.
+    pub fn split_edge(&mut self, edge_idx: usize, node: OpNode) -> usize {
+        let (src, dst) = self.edges[edge_idx];
+        let mid = self.add_node(node);
+        // Rewrite the edge in place to src -> mid, then append mid -> dst.
+        self.edges[edge_idx] = (src, mid);
+        let pos = self.adj_out[src].iter().position(|&x| x == dst).expect("edge in adj");
+        self.adj_out[src][pos] = mid;
+        let pos_in = self.adj_in[dst].iter().position(|&x| x == src).expect("edge in adj_in");
+        self.adj_in[dst].remove(pos_in);
+        self.adj_in[mid].push(src);
+        self.edges.push((mid, dst));
+        self.adj_out[mid].push(dst);
+        self.adj_in[dst].push(mid);
+        mid
+    }
+
+    /// Generate a random layered DAG (for property tests and fuzzing the
+    /// parsing/simulator stack). Guaranteed valid per `validate()`.
+    pub fn random(rng: &mut Rng, n_nodes: usize, extra_edges: usize) -> CompGraph {
+        assert!(n_nodes >= 2);
+        let mut g = CompGraph::new("random");
+        let src = g.add_node(OpNode::new("input", OpKind::Parameter, vec![1, 8, 8, 8]));
+        for i in 1..n_nodes - 1 {
+            let kind = *rng.choose(&[
+                OpKind::Convolution,
+                OpKind::Relu,
+                OpKind::Add,
+                OpKind::MatMul,
+                OpKind::Concat,
+                OpKind::MaxPool,
+            ]);
+            let id = g.add_node(
+                OpNode::new(format!("op{i}"), kind, vec![1, 8, 8, 8])
+                    .with_attrs(OpAttrs { taps: 9, reduce_dim: 8, groups: 1 }),
+            );
+            // Connect from a random earlier node: keeps it acyclic + rooted.
+            let p = rng.below(id);
+            g.add_edge(p, id);
+        }
+        let sink = g.add_node(OpNode::new("output", OpKind::Result, vec![1, 8, 8, 8]));
+        // Tie all current leaves (other than the sink) into the sink.
+        for v in 0..sink {
+            if g.out_degree(v) == 0 {
+                g.add_edge(v, sink);
+            }
+        }
+        let _ = src;
+        // Extra forward edges for branching structure.
+        for _ in 0..extra_edges {
+            let a = rng.below(n_nodes - 1);
+            let b = a + 1 + rng.below(n_nodes - 1 - a);
+            if b < sink || (b == sink && a > 0) {
+                g.add_edge(a, b);
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+
+    fn diamond() -> CompGraph {
+        // in -> a -> out, in -> b -> out
+        let mut g = CompGraph::new("diamond");
+        let i = g.add_node(OpNode::new("in", OpKind::Parameter, vec![1, 4]));
+        let a = g.add_node(OpNode::new("a", OpKind::Relu, vec![1, 4]));
+        let b = g.add_node(OpNode::new("b", OpKind::Sigmoid, vec![1, 4]));
+        let o = g.add_node(OpNode::new("out", OpKind::Result, vec![1, 4]));
+        g.add_edge(i, a);
+        g.add_edge(i, b);
+        g.add_edge(a, o);
+        g.add_edge(b, o);
+        g
+    }
+
+    #[test]
+    fn diamond_is_valid_dag() {
+        let g = diamond();
+        assert!(g.is_dag());
+        g.validate().unwrap();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.critical_path_len(), 2);
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.n()];
+            for (i, &v) in order.iter().enumerate() {
+                p[v] = i;
+            }
+            p
+        };
+        for &(s, d) in &g.edges {
+            assert!(pos[s] < pos[d]);
+        }
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = CompGraph::new("cyc");
+        let a = g.add_node(OpNode::new("a", OpKind::Parameter, vec![1]));
+        let b = g.add_node(OpNode::new("b", OpKind::Relu, vec![1]));
+        g.add_edge(a, b);
+        // Force a back edge, bypassing add_edge's (absent) cycle check.
+        g.edges.push((b, a));
+        g.adj_out[b].push(a);
+        g.adj_in[a].push(b);
+        assert!(!g.is_dag());
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut g = diamond();
+        let m = g.m();
+        g.add_edge(0, 1);
+        assert_eq!(g.m(), m);
+    }
+
+    #[test]
+    fn self_loop_ignored() {
+        let mut g = diamond();
+        let m = g.m();
+        g.add_edge(1, 1);
+        assert_eq!(g.m(), m);
+    }
+
+    #[test]
+    fn validate_rejects_orphan() {
+        let mut g = diamond();
+        g.add_node(OpNode::new("orphan", OpKind::Relu, vec![1]));
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_names() {
+        let mut g = diamond();
+        let d = g.add_node(OpNode::new("a", OpKind::Relu, vec![1, 4]));
+        g.add_edge(0, d);
+        g.add_edge(d, 3);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn bfs_undirected_distances() {
+        let g = diamond();
+        let d = g.bfs_undirected(0);
+        assert_eq!(d, vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn split_edge_preserves_surplus_and_validity() {
+        let mut g = diamond();
+        let surplus = g.m() as isize - g.n() as isize;
+        g.split_edge(0, OpNode::new("mid", OpKind::Relu, vec![1, 4]));
+        assert_eq!(g.m() as isize - g.n() as isize, surplus);
+        g.validate().unwrap();
+        assert!(g.is_dag());
+    }
+
+    #[test]
+    fn random_graphs_are_valid() {
+        check("random-graph-valid", PropConfig { cases: 48, max_size: 120, ..Default::default() }, |rng, size| {
+            let extra = rng.below(size / 2 + 1);
+            let g = CompGraph::random(rng, size, extra);
+            g.validate().map_err(|e| format!("{e} (n={size}, extra={extra})"))
+        });
+    }
+
+    #[test]
+    fn random_graph_split_edge_fuzz() {
+        check("split-edge-valid", PropConfig { cases: 32, max_size: 80, ..Default::default() }, |rng, size| {
+            let mut g = CompGraph::random(rng, size, 3);
+            for i in 0..4 {
+                let e = rng.below(g.m());
+                g.split_edge(e, OpNode::new(format!("mid{i}"), OpKind::Relu, vec![1, 4]));
+            }
+            g.validate()?;
+            if !g.is_dag() {
+                return Err("cycle after split".into());
+            }
+            Ok(())
+        });
+    }
+}

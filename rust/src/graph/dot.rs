@@ -1,0 +1,130 @@
+//! Graphviz DOT export for computation graphs and their partitions.
+//!
+//! Regenerates the paper's Figure 2 (benchmark graphs before/after graph
+//! partitioning + pooling): `to_dot` renders the raw graph, and
+//! `to_dot_partitioned` colors nodes by their learned group and renders the
+//! pooled graph next to it.
+
+use super::dag::CompGraph;
+
+/// Palette for partition coloring (cycled when there are more groups).
+const COLORS: [&str; 12] = [
+    "#a6cee3", "#1f78b4", "#b2df8a", "#33a02c", "#fb9a99", "#e31a1c", "#fdbf6f", "#ff7f00",
+    "#cab2d6", "#6a3d9a", "#ffff99", "#b15928",
+];
+
+fn esc(s: &str) -> String {
+    s.replace('"', "\\\"")
+}
+
+/// Render the graph as DOT, labeling nodes with `name\nkind`.
+pub fn to_dot(g: &CompGraph) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("digraph \"{}\" {{\n", esc(&g.name)));
+    out.push_str("  rankdir=TB;\n  node [shape=box, fontsize=9];\n");
+    for (i, n) in g.nodes.iter().enumerate() {
+        out.push_str(&format!(
+            "  n{i} [label=\"{}\\n{}\"];\n",
+            esc(&n.name),
+            n.kind.name()
+        ));
+    }
+    for &(s, d) in &g.edges {
+        out.push_str(&format!("  n{s} -> n{d};\n"));
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Render the graph with nodes colored by partition id (Figure 2 "after").
+pub fn to_dot_partitioned(g: &CompGraph, cluster_of: &[usize]) -> String {
+    assert_eq!(cluster_of.len(), g.n());
+    let mut out = String::new();
+    out.push_str(&format!("digraph \"{}_partitioned\" {{\n", esc(&g.name)));
+    out.push_str("  rankdir=TB;\n  node [shape=box, style=filled, fontsize=9];\n");
+    for (i, n) in g.nodes.iter().enumerate() {
+        let c = COLORS[cluster_of[i] % COLORS.len()];
+        out.push_str(&format!(
+            "  n{i} [label=\"{}\\ng{}\", fillcolor=\"{}\"];\n",
+            esc(&n.name),
+            cluster_of[i],
+            c
+        ));
+    }
+    for &(s, d) in &g.edges {
+        let style = if cluster_of[s] == cluster_of[d] { "solid" } else { "dashed" };
+        out.push_str(&format!("  n{s} -> n{d} [style={style}];\n"));
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Render the pooled graph G' = (V', E') given the pooled adjacency as an
+/// edge list over cluster ids.
+pub fn to_dot_pooled(name: &str, n_clusters: usize, pooled_edges: &[(usize, usize)]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("digraph \"{}_pooled\" {{\n", esc(name)));
+    out.push_str("  rankdir=TB;\n  node [shape=ellipse, style=filled, fontsize=10];\n");
+    for c in 0..n_clusters {
+        out.push_str(&format!(
+            "  c{c} [label=\"group {c}\", fillcolor=\"{}\"];\n",
+            COLORS[c % COLORS.len()]
+        ));
+    }
+    for &(s, d) in pooled_edges {
+        out.push_str(&format!("  c{s} -> c{d};\n"));
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dag::OpNode;
+    use crate::graph::ops::OpKind;
+
+    fn tiny() -> CompGraph {
+        let mut g = CompGraph::new("tiny");
+        let a = g.add_node(OpNode::new("in", OpKind::Parameter, vec![1]));
+        let b = g.add_node(OpNode::new("relu", OpKind::Relu, vec![1]));
+        let c = g.add_node(OpNode::new("out", OpKind::Result, vec![1]));
+        g.add_edge(a, b);
+        g.add_edge(b, c);
+        g
+    }
+
+    #[test]
+    fn dot_contains_all_nodes_and_edges() {
+        let g = tiny();
+        let dot = to_dot(&g);
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("n0 -> n1"));
+        assert!(dot.contains("n1 -> n2"));
+        assert!(dot.contains("ReLU"));
+    }
+
+    #[test]
+    fn partitioned_dot_marks_cross_edges_dashed() {
+        let g = tiny();
+        let dot = to_dot_partitioned(&g, &[0, 0, 1]);
+        assert!(dot.contains("n0 -> n1 [style=solid]"));
+        assert!(dot.contains("n1 -> n2 [style=dashed]"));
+    }
+
+    #[test]
+    fn pooled_dot_lists_groups() {
+        let dot = to_dot_pooled("tiny", 2, &[(0, 1)]);
+        assert!(dot.contains("c0 ["));
+        assert!(dot.contains("c1 ["));
+        assert!(dot.contains("c0 -> c1"));
+    }
+
+    #[test]
+    fn quotes_escaped() {
+        let mut g = tiny();
+        g.nodes[1].name = "we\"ird".into();
+        let dot = to_dot(&g);
+        assert!(dot.contains("we\\\"ird"));
+    }
+}

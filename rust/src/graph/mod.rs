@@ -1,0 +1,9 @@
+//! Computation-graph substrate: DAG structure, operation vocabulary,
+//! topological utilities, and DOT export (Figure 2 support).
+
+pub mod dag;
+pub mod dot;
+pub mod ops;
+
+pub use dag::{CompGraph, OpNode};
+pub use ops::{OpAttrs, OpKind};

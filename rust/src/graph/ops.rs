@@ -1,0 +1,301 @@
+//! Operation vocabulary for OpenVINO-style computation graphs.
+//!
+//! The paper's graphs come from the OpenVINO Model Optimizer (Appendix F):
+//! a coarse IR where framework-level ops are folded/fused (batch-norm
+//! folding, constant folding, activation fusion into convolutions where
+//! profitable). `OpKind` is the subset of the OpenVINO opset that the three
+//! benchmarks (Inception-V3, ResNet-50, BERT-base) exercise, plus the
+//! FLOP / byte accounting the execution simulator needs.
+
+/// OpenVINO-style operation type. `|T|` (the one-hot width in §2.3) is
+/// `OpKind::COUNT`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    /// Graph input placeholder.
+    Parameter,
+    /// Graph output sink.
+    Result,
+    /// Weight/constant producer that survived constant folding.
+    Constant,
+    Convolution,
+    GroupConvolution,
+    MatMul,
+    /// Bias/residual elementwise add.
+    Add,
+    Subtract,
+    Multiply,
+    Divide,
+    Power,
+    Sqrt,
+    Erf,
+    Relu,
+    Gelu,
+    Sigmoid,
+    Tanh,
+    Softmax,
+    MaxPool,
+    AvgPool,
+    ReduceMean,
+    /// Mean-variance normalization (OpenVINO's decomposition of LayerNorm).
+    Mvn,
+    Concat,
+    Split,
+    Reshape,
+    Transpose,
+    Gather,
+    StridedSlice,
+    Pad,
+    Clamp,
+    /// Embedding-style lookup.
+    EmbeddingLookup,
+    Interpolate,
+}
+
+impl OpKind {
+    /// Number of distinct operation types (the one-hot width `|T|`).
+    pub const COUNT: usize = 32;
+
+    /// All kinds, in one-hot index order.
+    pub const ALL: [OpKind; OpKind::COUNT] = [
+        OpKind::Parameter,
+        OpKind::Result,
+        OpKind::Constant,
+        OpKind::Convolution,
+        OpKind::GroupConvolution,
+        OpKind::MatMul,
+        OpKind::Add,
+        OpKind::Subtract,
+        OpKind::Multiply,
+        OpKind::Divide,
+        OpKind::Power,
+        OpKind::Sqrt,
+        OpKind::Erf,
+        OpKind::Relu,
+        OpKind::Gelu,
+        OpKind::Sigmoid,
+        OpKind::Tanh,
+        OpKind::Softmax,
+        OpKind::MaxPool,
+        OpKind::AvgPool,
+        OpKind::ReduceMean,
+        OpKind::Mvn,
+        OpKind::Concat,
+        OpKind::Split,
+        OpKind::Reshape,
+        OpKind::Transpose,
+        OpKind::Gather,
+        OpKind::StridedSlice,
+        OpKind::Pad,
+        OpKind::Clamp,
+        OpKind::EmbeddingLookup,
+        OpKind::Interpolate,
+    ];
+
+    /// Stable one-hot index of this kind.
+    pub fn index(self) -> usize {
+        OpKind::ALL.iter().position(|&k| k == self).expect("kind in ALL")
+    }
+
+    /// Short OpenVINO-style name (used in DOT dumps and logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Parameter => "Parameter",
+            OpKind::Result => "Result",
+            OpKind::Constant => "Constant",
+            OpKind::Convolution => "Convolution",
+            OpKind::GroupConvolution => "GroupConvolution",
+            OpKind::MatMul => "MatMul",
+            OpKind::Add => "Add",
+            OpKind::Subtract => "Subtract",
+            OpKind::Multiply => "Multiply",
+            OpKind::Divide => "Divide",
+            OpKind::Power => "Power",
+            OpKind::Sqrt => "Sqrt",
+            OpKind::Erf => "Erf",
+            OpKind::Relu => "ReLU",
+            OpKind::Gelu => "Gelu",
+            OpKind::Sigmoid => "Sigmoid",
+            OpKind::Tanh => "Tanh",
+            OpKind::Softmax => "Softmax",
+            OpKind::MaxPool => "MaxPool",
+            OpKind::AvgPool => "AvgPool",
+            OpKind::ReduceMean => "ReduceMean",
+            OpKind::Mvn => "MVN",
+            OpKind::Concat => "Concat",
+            OpKind::Split => "Split",
+            OpKind::Reshape => "Reshape",
+            OpKind::Transpose => "Transpose",
+            OpKind::Gather => "Gather",
+            OpKind::StridedSlice => "StridedSlice",
+            OpKind::Pad => "Pad",
+            OpKind::Clamp => "Clamp",
+            OpKind::EmbeddingLookup => "EmbeddingLookup",
+            OpKind::Interpolate => "Interpolate",
+        }
+    }
+
+    /// Whether the op is pure data movement / reshaping (near-zero FLOPs,
+    /// cost dominated by bytes moved).
+    pub fn is_data_movement(self) -> bool {
+        matches!(
+            self,
+            OpKind::Reshape
+                | OpKind::Transpose
+                | OpKind::Gather
+                | OpKind::StridedSlice
+                | OpKind::Pad
+                | OpKind::Concat
+                | OpKind::Split
+                | OpKind::EmbeddingLookup
+        )
+    }
+
+    /// Whether the op is a dense tensor contraction (conv / matmul class):
+    /// the class GPUs accelerate most.
+    pub fn is_contraction(self) -> bool {
+        matches!(self, OpKind::Convolution | OpKind::GroupConvolution | OpKind::MatMul)
+    }
+
+    /// Whether placement rules pin this op: Parameter/Result/Constant must
+    /// stay with their consumer/producer device group (used by the
+    /// co-location pass and the simulator's validity checks).
+    pub fn is_boundary(self) -> bool {
+        matches!(self, OpKind::Parameter | OpKind::Result | OpKind::Constant)
+    }
+}
+
+/// Extra per-op attributes the FLOP model needs beyond the output shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpAttrs {
+    /// Spatial kernel taps (k*k for a square kernel, k for a factorized
+    /// 1xk / kx1 kernel); 1 otherwise.
+    pub taps: usize,
+    /// Input channel count for convolutions; reduction length for matmuls.
+    pub reduce_dim: usize,
+    /// Group count for group convolutions.
+    pub groups: usize,
+}
+
+impl Default for OpAttrs {
+    fn default() -> Self {
+        OpAttrs { taps: 1, reduce_dim: 1, groups: 1 }
+    }
+}
+
+/// Number of elements in a shape (empty shape = scalar = 1 element).
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(1)
+}
+
+/// FLOPs to produce one output of `kind` with `out_shape`, given `attrs`.
+///
+/// Conventions follow the usual inference-cost accounting: a MAC counts as
+/// 2 FLOPs; elementwise ops are 1 FLOP/element (a few transcendental ops
+/// are weighted heavier); data movement is 0 FLOPs (captured by bytes).
+pub fn flops(kind: OpKind, out_shape: &[usize], attrs: &OpAttrs) -> f64 {
+    let n = numel(out_shape) as f64;
+    match kind {
+        OpKind::Convolution => 2.0 * n * (attrs.taps * attrs.reduce_dim) as f64,
+        OpKind::GroupConvolution => {
+            2.0 * n * (attrs.taps * attrs.reduce_dim) as f64 / attrs.groups.max(1) as f64
+        }
+        OpKind::MatMul => 2.0 * n * attrs.reduce_dim as f64,
+        OpKind::MaxPool | OpKind::AvgPool => n * attrs.taps as f64,
+        OpKind::ReduceMean => n * attrs.reduce_dim.max(1) as f64,
+        OpKind::Mvn => 8.0 * n,
+        OpKind::Softmax => 5.0 * n,
+        OpKind::Gelu | OpKind::Erf | OpKind::Tanh | OpKind::Sigmoid => 4.0 * n,
+        OpKind::Add
+        | OpKind::Subtract
+        | OpKind::Multiply
+        | OpKind::Divide
+        | OpKind::Power
+        | OpKind::Sqrt
+        | OpKind::Relu
+        | OpKind::Clamp => n,
+        OpKind::Parameter | OpKind::Result | OpKind::Constant => 0.0,
+        k if k.is_data_movement() => 0.0,
+        OpKind::Interpolate => 4.0 * n,
+        _ => n,
+    }
+}
+
+/// Bytes written for the output tensor (f32 elements).
+pub fn out_bytes(out_shape: &[usize]) -> f64 {
+    4.0 * numel(out_shape) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_have_unique_indices() {
+        let mut seen = [false; OpKind::COUNT];
+        for k in OpKind::ALL {
+            let i = k.index();
+            assert!(!seen[i], "duplicate index {i}");
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn count_matches_all_len() {
+        assert_eq!(OpKind::ALL.len(), OpKind::COUNT);
+    }
+
+    #[test]
+    fn conv_flops_match_hand_count() {
+        // 1x64x56x56 output, 3x3 kernel over 64 input channels:
+        // 2 * 64*56*56 * 9 * 64 FLOPs.
+        let attrs = OpAttrs { taps: 9, reduce_dim: 64, groups: 1 };
+        let f = flops(OpKind::Convolution, &[1, 64, 56, 56], &attrs);
+        assert_eq!(f, 2.0 * (64 * 56 * 56) as f64 * 9.0 * 64.0);
+    }
+
+    #[test]
+    fn matmul_flops_match_hand_count() {
+        // [8, 128] x [128, 256] -> out [8, 256], reduce 128: 2*8*256*128.
+        let attrs = OpAttrs { reduce_dim: 128, ..Default::default() };
+        assert_eq!(flops(OpKind::MatMul, &[8, 256], &attrs), 2.0 * 8.0 * 256.0 * 128.0);
+    }
+
+    #[test]
+    fn group_conv_divides_by_groups() {
+        let a1 = OpAttrs { taps: 9, reduce_dim: 64, groups: 1 };
+        let a4 = OpAttrs { taps: 9, reduce_dim: 64, groups: 4 };
+        let shape = [1, 64, 28, 28];
+        assert_eq!(
+            flops(OpKind::GroupConvolution, &shape, &a4) * 4.0,
+            flops(OpKind::GroupConvolution, &shape, &a1)
+        );
+    }
+
+    #[test]
+    fn data_movement_is_zero_flops() {
+        for k in OpKind::ALL {
+            if k.is_data_movement() {
+                assert_eq!(flops(k, &[4, 4], &OpAttrs::default()), 0.0, "{k:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_kinds() {
+        assert!(OpKind::Parameter.is_boundary());
+        assert!(OpKind::Result.is_boundary());
+        assert!(!OpKind::Convolution.is_boundary());
+    }
+
+    #[test]
+    fn numel_scalar_is_one() {
+        assert_eq!(numel(&[]), 1);
+        assert_eq!(numel(&[3, 5]), 15);
+    }
+
+    #[test]
+    fn out_bytes_f32() {
+        assert_eq!(out_bytes(&[2, 3]), 24.0);
+    }
+}

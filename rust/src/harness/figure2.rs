@@ -1,0 +1,106 @@
+//! Figure 2: the benchmark computation graphs before and after graph
+//! partitioning + pooling. Emits DOT files (raw, partition-colored, and
+//! pooled) plus a statistics table.
+
+use anyhow::Result;
+
+use super::report::Table;
+use crate::config::Config;
+use crate::graph::dot;
+use crate::models::Benchmark;
+use crate::parsing::parse;
+use crate::rl::{Env, HsdagAgent};
+use crate::runtime::Engine;
+
+/// Generate Figure 2 assets into `out_dir`. Uses a short policy warm-up so
+/// the partition reflects learned edge scores rather than initialization.
+pub fn run(cfg: &Config, out_dir: &str, episodes: usize) -> Result<Table> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
+    let mut t = Table::new(
+        "Figure 2: graphs before/after partitioning + pooling",
+        &["Benchmark", "|V|", "coarse |V|", "groups |V'|", "cut fraction", "files"],
+    );
+    for b in Benchmark::ALL {
+        let env = Env::new(b, cfg)?;
+        let mut agent = HsdagAgent::new(&env, &mut engine, cfg)?;
+        if episodes > 0 {
+            agent.search(&env, &mut engine, episodes)?;
+        }
+        // Greedy step to obtain the current partition.
+        agent.reset_episode();
+        agent.step(&env, &mut engine, false)?;
+        let part = agent.last_partition.clone().expect("partition after step");
+        let wg = env.working_graph();
+
+        let raw = dot::to_dot(wg);
+        let colored = dot::to_dot_partitioned(wg, &part.cluster_of);
+        let pooled = dot::to_dot_pooled(b.id(), part.n_groups, &part.pooled_edges);
+        std::fs::write(format!("{out_dir}/{}_before.dot", b.id()), raw)?;
+        std::fs::write(format!("{out_dir}/{}_partitioned.dot", b.id()), colored)?;
+        std::fs::write(format!("{out_dir}/{}_pooled.dot", b.id()), pooled)?;
+
+        t.row(vec![
+            b.display().to_string(),
+            env.graph.n().to_string(),
+            wg.n().to_string(),
+            part.n_groups.to_string(),
+            format!("{:.3}", part.cut_fraction(wg)),
+            format!("{out_dir}/{}_*.dot", b.id()),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Figure 2 without a trained policy (random scores): used by tests and
+/// the quickstart to avoid artifact dependencies.
+pub fn run_untrained(out_dir: &str) -> Result<Table> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut rng = crate::util::Rng::new(2);
+    let mut t = Table::new(
+        "Figure 2 (untrained scores)",
+        &["Benchmark", "|V|", "coarse |V|", "groups |V'|", "cut fraction", "files"],
+    );
+    for b in Benchmark::ALL {
+        let g = b.build();
+        let colo = crate::coarsen::colocate(&g);
+        let wg = &colo.coarse;
+        let scores: Vec<f32> = (0..wg.m()).map(|_| rng.next_f32()).collect();
+        let part = parse(wg, &scores);
+        std::fs::write(format!("{out_dir}/{}_before.dot", b.id()), dot::to_dot(wg))?;
+        std::fs::write(
+            format!("{out_dir}/{}_partitioned.dot", b.id()),
+            dot::to_dot_partitioned(wg, &part.cluster_of),
+        )?;
+        std::fs::write(
+            format!("{out_dir}/{}_pooled.dot", b.id()),
+            dot::to_dot_pooled(b.id(), part.n_groups, &part.pooled_edges),
+        )?;
+        t.row(vec![
+            b.display().to_string(),
+            g.n().to_string(),
+            wg.n().to_string(),
+            part.n_groups.to_string(),
+            format!("{:.3}", part.cut_fraction(wg)),
+            format!("{out_dir}/{}_*.dot", b.id()),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn untrained_figure2_emits_dots() {
+        let dir = std::env::temp_dir().join("hsdag_fig2_test");
+        let t = super::run_untrained(dir.to_str().unwrap()).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        for b in crate::models::Benchmark::ALL {
+            for suffix in ["before", "partitioned", "pooled"] {
+                let p = dir.join(format!("{}_{suffix}.dot", b.id()));
+                let text = std::fs::read_to_string(&p).unwrap();
+                assert!(text.starts_with("digraph"), "{p:?}");
+            }
+        }
+    }
+}

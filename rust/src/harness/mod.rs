@@ -1,0 +1,14 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (DESIGN.md §6 maps each to its module). Each `table*`
+//! function returns the formatted table; the CLI and the bench suite both
+//! call through here.
+
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod figure2;
+
+pub use report::Table;

@@ -1,0 +1,100 @@
+//! Plain-text table rendering shared by all harness targets (the offline
+//! crate set has no table/serde crates; this covers what we need).
+
+/// A simple left-aligned text table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Render with column widths fitted to content.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("# {}\n", self.title));
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$}", c, w = width[i] + 2));
+            }
+            line.trim_end().to_string() + "\n"
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push_str(&format!("{}\n", "-".repeat(width.iter().sum::<usize>() + 2 * (ncol - 1))));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// Write to `dir/<name>.txt` and also return the rendered text.
+    pub fn save(&self, dir: &str, name: &str) -> std::io::Result<String> {
+        let text = self.render();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(format!("{dir}/{name}.txt"), &text)?;
+        Ok(text)
+    }
+}
+
+/// Format seconds with the paper's precision (3 significant digits).
+pub fn fmt_latency(secs: f64) -> String {
+    format!("{secs:.3e}").replace('e', "e")
+}
+
+/// Format a speedup percentage vs a reference latency.
+pub fn fmt_speedup(latency: f64, reference: f64) -> String {
+    format!("{:.2}", 100.0 * (1.0 - latency / reference))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["xxx".into(), "y".into()]);
+        let r = t.render();
+        assert!(r.contains("# T"));
+        assert!(r.contains("a    bb"));
+        assert!(r.contains("xxx  y"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(fmt_speedup(0.5, 1.0), "50.00");
+        assert_eq!(fmt_speedup(1.5, 1.0), "-50.00");
+    }
+}

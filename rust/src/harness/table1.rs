@@ -1,0 +1,39 @@
+//! Table 1: statistics of the benchmark computation graphs.
+
+use super::report::Table;
+use crate::models::Benchmark;
+
+pub fn run() -> Table {
+    let mut t = Table::new(
+        "Table 1: Statistics of computation graphs (paper: 728/764, 396/411, 1009/1071)",
+        &["BENCHMARK", "|V|", "|E|", "avg degree", "critical path", "coarse |V|"],
+    );
+    for b in Benchmark::ALL {
+        let g = b.build();
+        let coarse = crate::coarsen::colocate(&g);
+        t.row(vec![
+            b.display().to_string(),
+            g.n().to_string(),
+            g.m().to_string(),
+            format!("{:.2}", g.avg_degree()),
+            g.critical_path_len().to_string(),
+            coarse.n_sets.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn matches_paper_counts() {
+        let t = super::run();
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0][1], "728");
+        assert_eq!(t.rows[0][2], "764");
+        assert_eq!(t.rows[1][1], "396");
+        assert_eq!(t.rows[1][2], "411");
+        assert_eq!(t.rows[2][1], "1009");
+        assert_eq!(t.rows[2][2], "1071");
+    }
+}

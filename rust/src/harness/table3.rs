@@ -1,0 +1,73 @@
+//! Table 3: feature-ablation study — HSDAG with feature families removed
+//! (w/o output shape, w/o node ID, w/o graph structural features).
+
+use anyhow::Result;
+
+use super::report::{fmt_speedup, Table};
+use crate::config::Config;
+use crate::features::FeatureConfig;
+use crate::models::Benchmark;
+use crate::rl::{Env, HsdagAgent};
+use crate::runtime::Engine;
+
+pub const VARIANTS: [FeatureConfig; 4] = [
+    FeatureConfig { no_shape: false, no_node_id: false, no_structural: false },
+    FeatureConfig { no_shape: true, no_node_id: false, no_structural: false },
+    FeatureConfig { no_shape: false, no_node_id: true, no_structural: false },
+    FeatureConfig { no_shape: false, no_node_id: false, no_structural: true },
+];
+
+pub fn run(cfg: &Config, episodes: usize) -> Result<Table> {
+    let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
+    let mut t = Table::new(
+        "Table 3: Feature ablations (speedup % vs CPU-only)",
+        &[
+            "Variant",
+            "Incep l_P(G)", "Incep Speedup %",
+            "ResNet l_P(G)", "ResNet Speedup %",
+            "BERT l_P(G)", "BERT Speedup %",
+        ],
+    );
+    // CPU-only reference row first (as in the paper).
+    let mut cpu_row = vec!["CPU-only".to_string()];
+    let mut cpu_ref = Vec::new();
+    for b in Benchmark::ALL {
+        let env = Env::new(b, cfg)?;
+        cpu_ref.push(env.cpu_latency);
+        cpu_row.push(format!("{:.5}", env.cpu_latency));
+        cpu_row.push("0".into());
+    }
+    t.row(cpu_row);
+
+    for fcfg in VARIANTS {
+        let mut cells = vec![fcfg.ablation_name().to_string()];
+        for (bi, b) in Benchmark::ALL.iter().enumerate() {
+            let env = Env::with_features(*b, cfg, fcfg)?;
+            let mut agent = HsdagAgent::new(&env, &mut engine, cfg)?;
+            let res = agent.search(&env, &mut engine, episodes)?;
+            cells.push(format!("{:.5}", res.best_latency));
+            cells.push(fmt_speedup(res.best_latency, cpu_ref[bi]));
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_cover_paper_rows() {
+        let names: Vec<&str> = VARIANTS.iter().map(|v| v.ablation_name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "Original",
+                "w/o output shape",
+                "w/o node ID",
+                "w/o graph structural features"
+            ]
+        );
+    }
+}

@@ -1,0 +1,103 @@
+//! Table 4 + §3.5: downstream-task sanity checks. BERT output-embedding
+//! drift (MSE / cosine / L2) between CPU-only, GPU-only and the HSDAG
+//! placement, plus the Inception/ResNet classification-accuracy check.
+
+use anyhow::Result;
+
+use super::report::Table;
+use crate::config::Config;
+use crate::models::Benchmark;
+use crate::sim::numerics::{classification_accuracy, drift, output_embedding};
+use crate::sim::Placement;
+
+/// Build Table 4 given a concrete HSDAG placement for BERT (from a search
+/// or a cached result). Falls back to a representative mixed placement if
+/// `hsdag_placement` is None (embeddings/tail on CPU, encoder on GPU —
+/// the shape HSDAG converges to).
+pub fn run(_cfg: &Config, hsdag_placement: Option<Placement>) -> Result<(Table, Table)> {
+    let g = Benchmark::BertBase.build();
+    let hsdag = hsdag_placement.unwrap_or_else(|| representative_hsdag_placement(&g));
+
+    let cpu = output_embedding(&g, &Placement::all(g.n(), crate::sim::CPU));
+    let gpu = output_embedding(&g, &Placement::all(g.n(), crate::sim::DGPU));
+    let hs = output_embedding(&g, &hsdag);
+
+    let mut t = Table::new(
+        "Table 4: BERT downstream performance (embedding drift)",
+        &["Comparison", "MSE", "CS", "L2 norm"],
+    );
+    for (name, a, b) in
+        [("CPU vs GPU", &cpu, &gpu), ("CPU vs HSDAG", &cpu, &hs), ("GPU vs HSDAG", &gpu, &hs)]
+    {
+        let m = drift(a, b);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.3e}", m.mse),
+            format!("{:.3}", m.cosine),
+            format!("{:.3}", m.l2),
+        ]);
+    }
+
+    // §3.5 classification-accuracy sanity check.
+    let mut acc = Table::new(
+        "Sec 3.5: classification accuracy under placements (paper base: 82.77 / 45.37)",
+        &["Model", "CPU-only", "GPU-only", "HSDAG"],
+    );
+    for (b, base) in [(Benchmark::InceptionV3, 82.77), (Benchmark::ResNet50, 45.37)] {
+        let g = b.build();
+        let hp = representative_hsdag_placement(&g);
+        acc.row(vec![
+            b.display().to_string(),
+            format!("{:.2}", classification_accuracy(&g, &Placement::all(g.n(), crate::sim::CPU), base)),
+            format!("{:.2}", classification_accuracy(&g, &Placement::all(g.n(), crate::sim::DGPU), base)),
+            format!("{:.2}", classification_accuracy(&g, &hp, base)),
+        ]);
+    }
+    Ok((t, acc))
+}
+
+/// A representative HSDAG-style mixed placement: cheap head/tail ops on
+/// CPU, heavy middle on dGPU (what the search converges to).
+pub fn representative_hsdag_placement(g: &crate::graph::CompGraph) -> Placement {
+    let n = g.n();
+    let head = n / 10;
+    let tail = n - n / 20;
+    Placement(
+        (0..n)
+            .map(|v| if v < head || v >= tail { crate::sim::CPU } else { crate::sim::DGPU })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_shape_matches_paper() {
+        let (t, acc) = run(&Config::default(), None).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(acc.rows.len(), 2);
+        // Paper's key qualitative claim: all cosine similarities ~0.999+.
+        for row in &t.rows {
+            let cs: f64 = row[2].parse().unwrap();
+            assert!(cs > 0.99, "{row:?}");
+        }
+        // CPU vs HSDAG closer than CPU vs GPU (bold row of Table 4).
+        let mse_cpu_gpu: f64 = t.rows[0][1].parse().unwrap();
+        let mse_cpu_hs: f64 = t.rows[1][1].parse().unwrap();
+        assert!(mse_cpu_hs < mse_cpu_gpu);
+    }
+
+    #[test]
+    fn accuracy_wobble_small() {
+        let (_, acc) = run(&Config::default(), None).unwrap();
+        for row in &acc.rows {
+            let base: f64 = row[1].parse().unwrap();
+            for cell in &row[2..] {
+                let v: f64 = cell.parse().unwrap();
+                assert!((v - base).abs() < 1.0, "{row:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Table 5: empirical search runtime comparison (Placeto / RNN-based /
+//! HSDAG wall-clock per benchmark, plus peak working set — the paper's
+//! RNN column OOMs on BERT).
+
+use anyhow::Result;
+
+use super::report::Table;
+use super::table2::Table2Results;
+use crate::models::Benchmark;
+
+/// Render the search-cost table from a completed Table-2 run (the searches
+/// are shared; Table 5 is their cost view).
+pub fn render(results: &Table2Results) -> Table {
+    let mut t = Table::new(
+        "Table 5: Empirical search runtime (seconds; peak working set in parentheses)",
+        &["Model", "Inception-V3", "ResNet", "BERT"],
+    );
+    for method in ["Placeto", "RNN-based", "HSDAG"] {
+        let mut cells = vec![method.to_string()];
+        for b in Benchmark::ALL {
+            let entry = results
+                .search_cost
+                .iter()
+                .find(|(m, bid, _, _)| m == method && bid == b.id());
+            match entry {
+                Some(&(_, _, secs, bytes)) => {
+                    cells.push(format!("{secs:.1}s ({:.0} MB)", bytes as f64 / 1e6))
+                }
+                None => cells.push("-".into()),
+            }
+        }
+        t.row(cells);
+    }
+    t
+}
+
+/// Standalone Table 5 (re-runs the searches with a small budget).
+pub fn run(cfg: &crate::config::Config, episodes: usize) -> Result<Table> {
+    let (_, results) = super::table2::run(cfg, episodes)?;
+    Ok(render(&results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_three_methods() {
+        let mut r = Table2Results::default();
+        r.search_cost.push(("HSDAG".into(), "bert_base".into(), 12.5, 64_000_000));
+        let t = render(&r);
+        assert_eq!(t.rows.len(), 3);
+        assert!(t.rows[2][3].contains("12.5s"));
+        assert_eq!(t.rows[0][1], "-");
+    }
+}

@@ -1,0 +1,25 @@
+//! # HSDAG — structure-aware learned device placement
+//!
+//! A rust + JAX + Pallas reproduction of *"A Structure-Aware Framework for
+//! Learning Device Placements on Computation Graphs"* (NeurIPS 2024).
+//!
+//! The crate is the Layer-3 coordinator: it owns the computation-graph
+//! substrate, feature extraction, graph-parsing partitioner, heterogeneous
+//! execution simulator, PJRT runtime (loading AOT-compiled JAX/Pallas
+//! policies from `artifacts/`), the REINFORCE search loop, the baselines,
+//! and the experiment harness that regenerates every table and figure of
+//! the paper. See DESIGN.md for the system inventory.
+
+pub mod baselines;
+pub mod coarsen;
+pub mod cli;
+pub mod config;
+pub mod features;
+pub mod graph;
+pub mod harness;
+pub mod models;
+pub mod parsing;
+pub mod rl;
+pub mod runtime;
+pub mod sim;
+pub mod util;

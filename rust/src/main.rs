@@ -1,0 +1,123 @@
+//! hsdag — the L3 coordinator binary.
+//!
+//! Reproduces "A Structure-Aware Framework for Learning Device Placements
+//! on Computation Graphs" (NeurIPS 2024). See `hsdag --help` / README.md.
+
+use anyhow::Result;
+use hsdag::baselines;
+use hsdag::cli::{self, Cli};
+use hsdag::harness::{figure2, table1, table2, table3, table4, table5};
+use hsdag::models::Benchmark;
+use hsdag::rl::{Env, HsdagAgent};
+use hsdag::runtime::Engine;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") || args.is_empty() {
+        println!("{}", cli::usage());
+        return;
+    }
+    match cli::parse(&args).and_then(run) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(c: Cli) -> Result<()> {
+    let cfg = c.config()?;
+    match c.command.as_str() {
+        "table1" => println!("{}", table1::run().render()),
+        "table2" => {
+            let episodes = c.usize_flag("episodes", 30)?;
+            let (t, results) = table2::run(&cfg, episodes)?;
+            println!("{}", t.render());
+            println!("{}", table5::render(&results).render());
+        }
+        "table3" => {
+            let episodes = c.usize_flag("episodes", 30)?;
+            println!("{}", table3::run(&cfg, episodes)?.render());
+        }
+        "table4" => {
+            let (t, acc) = table4::run(&cfg, None)?;
+            println!("{}", t.render());
+            println!("{}", acc.render());
+        }
+        "table5" => {
+            let episodes = c.usize_flag("episodes", 30)?;
+            println!("{}", table5::run(&cfg, episodes)?.render());
+        }
+        "figure2" => {
+            let out = c.str_flag("out-dir", "results");
+            let episodes = c.usize_flag("episodes", 5)?;
+            println!("{}", figure2::run(&cfg, &out, episodes)?.render());
+        }
+        "train" => {
+            let bench = c.bench()?;
+            let episodes = c.usize_flag("episodes", 30)?;
+            let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
+            let env = Env::new(bench, &cfg)?;
+            println!(
+                "searching {} ({} working nodes, {} edges) for {episodes} episodes on {}",
+                bench.display(),
+                env.n_nodes,
+                env.n_edges,
+                engine.platform(),
+            );
+            let mut agent = HsdagAgent::new(&env, &mut engine, &cfg)?;
+            let res = agent.search(&env, &mut engine, episodes)?;
+            for p in &res.curve {
+                println!(
+                    "  episode {:>3}  best {:.5}s  mean-reward {:.3}  loss {:+.4}",
+                    p.episode, p.best_latency, p.mean_reward, p.loss
+                );
+            }
+            println!(
+                "best latency {:.5}s  (speedup {:.1}% vs CPU-only {:.5}s)  wall {:.1}s",
+                res.best_latency,
+                res.speedup_vs(env.cpu_latency),
+                env.cpu_latency,
+                res.wall_secs
+            );
+        }
+        "place" => {
+            let bench = c.bench()?;
+            let method = c.str_flag("method", "gpu");
+            let g = bench.build();
+            let tb = hsdag::sim::Testbed::paper();
+            match baselines::baseline_latency(&method, &g, &tb) {
+                Some(lat) => {
+                    let cpu = baselines::baseline_latency("cpu", &g, &tb).unwrap();
+                    println!(
+                        "{} under {method}: {lat:.5}s ({:+.1}% vs CPU-only)",
+                        bench.display(),
+                        100.0 * (1.0 - lat / cpu)
+                    );
+                }
+                None => anyhow::bail!(
+                    "unknown method '{method}' (cpu|gpu|openvino-cpu|openvino-gpu)"
+                ),
+            }
+        }
+        "graph-stats" => {
+            for b in Benchmark::ALL {
+                let g = b.build();
+                g.validate().map_err(|e| anyhow::anyhow!("{}: {e}", b.id()))?;
+                println!(
+                    "{:<14} |V|={:<5} |E|={:<5} d̄={:.2}  critical-path={}  GFLOP={:.2}",
+                    b.display(),
+                    g.n(),
+                    g.m(),
+                    g.avg_degree(),
+                    g.critical_path_len(),
+                    g.total_flops() / 1e9
+                );
+            }
+        }
+        "config" => print!("{}", cfg.table6()),
+        other => anyhow::bail!("unknown command '{other}'\n\n{}", cli::usage()),
+    }
+    Ok(())
+}

@@ -1,0 +1,317 @@
+//! Shared construction helpers for the benchmark graph builders, plus the
+//! deterministic exact-fit pass that lands each graph on the paper's
+//! Table 1 node/edge counts.
+
+use crate::graph::{CompGraph, OpAttrs, OpKind, OpNode};
+use crate::util::Rng;
+
+/// Thin wrapper over `CompGraph` with NN-layer-level helpers. Each helper
+/// returns the id of the unit's output node.
+pub struct GraphBuilder {
+    pub g: CompGraph,
+    counter: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> Self {
+        GraphBuilder { g: CompGraph::new(name), counter: 0 }
+    }
+
+    fn uniq(&mut self, stem: &str) -> String {
+        self.counter += 1;
+        format!("{stem}_{}", self.counter)
+    }
+
+    /// Add a node with a unique name; no edges.
+    pub fn node(&mut self, stem: &str, kind: OpKind, shape: Vec<usize>) -> usize {
+        let name = self.uniq(stem);
+        self.g.add_node(OpNode::new(name, kind, shape))
+    }
+
+    /// Add a node consuming `inputs`.
+    pub fn op(&mut self, stem: &str, kind: OpKind, shape: Vec<usize>, inputs: &[usize]) -> usize {
+        let id = self.node(stem, kind, shape);
+        for &i in inputs {
+            self.g.add_edge(i, id);
+        }
+        id
+    }
+
+    /// Like `op` but with cost-model attributes.
+    pub fn op_attrs(
+        &mut self,
+        stem: &str,
+        kind: OpKind,
+        shape: Vec<usize>,
+        inputs: &[usize],
+        attrs: OpAttrs,
+    ) -> usize {
+        let id = self.op(stem, kind, shape, inputs);
+        self.g.nodes[id].attrs = attrs;
+        id
+    }
+
+    /// Weight `Constant` node feeding nothing yet.
+    pub fn constant(&mut self, stem: &str, shape: Vec<usize>) -> usize {
+        self.node(stem, OpKind::Constant, shape)
+    }
+
+    /// OpenVINO-style convolution unit: Const(W) + Conv + Const(b) + Add
+    /// (+ ReLU unless `act` is None). `in_ch` is the producer's channel
+    /// count, `k` the spatial kernel, `out` the output NCHW shape.
+    /// 5-6 nodes / 5-6 edges per unit.
+    pub fn conv_unit(
+        &mut self,
+        stem: &str,
+        input: usize,
+        in_ch: usize,
+        k: usize,
+        out: Vec<usize>,
+        act: Option<OpKind>,
+    ) -> usize {
+        let out_ch = out[1];
+        let w = self.constant(&format!("{stem}_w"), vec![out_ch, in_ch, k, k]);
+        let conv = self.op_attrs(
+            &format!("{stem}_conv"),
+            OpKind::Convolution,
+            out.clone(),
+            &[input, w],
+            OpAttrs { taps: k * k, reduce_dim: in_ch, groups: 1 },
+        );
+        let b = self.constant(&format!("{stem}_b"), vec![out_ch]);
+        let add = self.op(&format!("{stem}_bias"), OpKind::Add, out.clone(), &[conv, b]);
+        match act {
+            Some(kind) => self.op(&format!("{stem}_act"), kind, out, &[add]),
+            None => add,
+        }
+    }
+
+    /// Fully-connected unit: Const(W) + MatMul + Const(b) + Add.
+    pub fn fc_unit(&mut self, stem: &str, input: usize, in_dim: usize, out: Vec<usize>) -> usize {
+        let out_dim = *out.last().unwrap();
+        let w = self.constant(&format!("{stem}_w"), vec![in_dim, out_dim]);
+        let mm = self.op_attrs(
+            &format!("{stem}_mm"),
+            OpKind::MatMul,
+            out.clone(),
+            &[input, w],
+            OpAttrs { reduce_dim: in_dim, ..Default::default() },
+        );
+        let b = self.constant(&format!("{stem}_b"), vec![out_dim]);
+        self.op(&format!("{stem}_bias"), OpKind::Add, out, &[mm, b])
+    }
+
+    /// OpenVINO LayerNorm decomposition: MVN + Mul(Const γ) + Add(Const β).
+    pub fn layernorm(&mut self, stem: &str, input: usize, shape: Vec<usize>) -> usize {
+        let h = *shape.last().unwrap();
+        let mvn = self.op_attrs(
+            &format!("{stem}_mvn"),
+            OpKind::Mvn,
+            shape.clone(),
+            &[input],
+            OpAttrs { reduce_dim: h, ..Default::default() },
+        );
+        let gamma = self.constant(&format!("{stem}_gamma"), vec![h]);
+        let mul = self.op(&format!("{stem}_scale"), OpKind::Multiply, shape.clone(), &[mvn, gamma]);
+        let beta = self.constant(&format!("{stem}_beta"), vec![h]);
+        self.op(&format!("{stem}_shift"), OpKind::Add, shape, &[mul, beta])
+    }
+
+    pub fn finish(self) -> CompGraph {
+        self.g
+    }
+}
+
+/// Deterministically pad `g` to exactly (`target_v`, `target_e`).
+///
+/// Invariants used:
+/// - inserting a pass-through node on an edge adds (+1 node, +1 edge),
+///   keeping the surplus |E|-|V| constant;
+/// - adding a skip edge between a node and one of its descendants adds
+///   (+0 nodes, +1 edge), raising the surplus by one.
+///
+/// The builders always construct slightly *lean* graphs (surplus and sizes
+/// at or below target), so this pass only ever grows the graph. Inserted
+/// ops are contextual pass-throughs (ReLU/Clamp/Reshape/StridedSlice) so
+/// the op-type mix stays plausible; skip edges land on existing `Add` /
+/// `Concat` merge nodes so merge semantics stay sensible.
+pub fn exact_fit(g: &mut CompGraph, target_v: usize, target_e: usize, seed: u64) {
+    assert!(g.n() <= target_v, "{}: built {} nodes > target {}", g.name, g.n(), target_v);
+    let surplus = g.m() as isize - g.n() as isize;
+    let target_surplus = target_e as isize - target_v as isize;
+    assert!(
+        surplus <= target_surplus,
+        "{}: built surplus {} > target {}",
+        g.name,
+        surplus,
+        target_surplus
+    );
+    let mut rng = Rng::new(seed ^ 0x51AB1E);
+
+    // Phase 1: raise surplus with skip edges into merge nodes.
+    let mut guard = 0usize;
+    while (g.m() as isize - g.n() as isize) < target_surplus {
+        guard += 1;
+        assert!(guard < 200_000, "exact_fit: cannot reach target surplus");
+        // Candidate merge targets: existing Add/Concat nodes.
+        let dst = rng.below(g.n());
+        if !matches!(g.nodes[dst].kind, OpKind::Add | OpKind::Concat) {
+            continue;
+        }
+        // Pick an ancestor at distance >= 2 so the new edge is a genuine
+        // skip (distance 1 would duplicate an existing edge).
+        let Some(src) = random_ancestor(g, dst, &mut rng) else { continue };
+        if g.out_neighbors(src).contains(&dst) {
+            continue;
+        }
+        g.add_edge(src, dst);
+    }
+
+    // Phase 2: grow node count with contextual pass-through insertions.
+    while g.n() < target_v {
+        let e = rng.below(g.m());
+        let (src, _) = g.edges[e];
+        let srck = g.nodes[src].kind;
+        // Never split a Constant->consumer edge: a pass-through between a
+        // weight and its op would be nonsense in an IR.
+        if srck == OpKind::Constant {
+            continue;
+        }
+        let shape = g.nodes[src].output_shape.clone();
+        let kind = match srck {
+            OpKind::Convolution | OpKind::Add => OpKind::Clamp,
+            OpKind::MatMul => OpKind::StridedSlice,
+            OpKind::Concat | OpKind::Split => OpKind::Reshape,
+            _ => *rng.choose(&[OpKind::Reshape, OpKind::Clamp, OpKind::StridedSlice]),
+        };
+        let name = format!("fit_{}_{}", kind.name().to_ascii_lowercase(), g.n());
+        g.split_edge(e, OpNode::new(name, kind, shape));
+    }
+
+    assert_eq!(g.n(), target_v, "{}: node fit failed", g.name);
+    assert_eq!(g.m(), target_e, "{}: edge fit failed", g.name);
+}
+
+/// Walk backwards from `dst` a random number of hops (2..=4) and return the
+/// node reached, if any.
+fn random_ancestor(g: &CompGraph, dst: usize, rng: &mut Rng) -> Option<usize> {
+    let hops = 2 + rng.below(3);
+    let mut cur = dst;
+    for _ in 0..hops {
+        // Avoid Constant ancestors: skip edges should carry activations.
+        let preds: Vec<usize> = g
+            .in_neighbors(cur)
+            .iter()
+            .copied()
+            .filter(|&p| g.nodes[p].kind != OpKind::Constant)
+            .collect();
+        if preds.is_empty() {
+            return if cur == dst { None } else { Some(cur) };
+        }
+        cur = *rng.choose(&preds);
+    }
+    if cur == dst {
+        None
+    } else {
+        Some(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(n: usize) -> CompGraph {
+        let mut b = GraphBuilder::new("chain");
+        let mut prev = b.node("in", OpKind::Parameter, vec![1, 8]);
+        for i in 0..n {
+            prev = b.op(&format!("relu{i}"), OpKind::Relu, vec![1, 8], &[prev]);
+        }
+        // A merge node so exact_fit has a skip-edge target.
+        let side = b.op("side", OpKind::Relu, vec![1, 8], &[0]);
+        let merge = b.op("merge", OpKind::Add, vec![1, 8], &[prev, side]);
+        b.op("out", OpKind::Result, vec![1, 8], &[merge]);
+        b.finish()
+    }
+
+    #[test]
+    fn conv_unit_shape() {
+        let mut b = GraphBuilder::new("t");
+        let input = b.node("in", OpKind::Parameter, vec![1, 3, 32, 32]);
+        let out = b.conv_unit("c1", input, 3, 3, vec![1, 16, 32, 32], Some(OpKind::Relu));
+        let g = b.finish();
+        assert_eq!(g.nodes[out].kind, OpKind::Relu);
+        // Const W, Conv, Const b, Add, ReLU = 5 nodes + input.
+        assert_eq!(g.n(), 6);
+        assert_eq!(g.m(), 5);
+        // FLOPs: 2 * 16*32*32 * 9 * 3
+        let conv = g.nodes.iter().find(|n| n.kind == OpKind::Convolution).unwrap();
+        assert_eq!(conv.flops(), 2.0 * (16 * 32 * 32) as f64 * 9.0 * 3.0);
+    }
+
+    #[test]
+    fn layernorm_decomposition() {
+        let mut b = GraphBuilder::new("t");
+        let input = b.node("in", OpKind::Parameter, vec![1, 4, 64]);
+        let out = b.layernorm("ln", input, vec![1, 4, 64]);
+        let g = b.finish();
+        assert_eq!(g.nodes[out].kind, OpKind::Add);
+        assert!(g.nodes.iter().any(|n| n.kind == OpKind::Mvn));
+        assert_eq!(g.n(), 6); // in, MVN, gamma, Mul, beta, Add
+    }
+
+    #[test]
+    fn exact_fit_hits_targets() {
+        let mut g = chain(20);
+        let (v0, e0) = (g.n(), g.m());
+        exact_fit(&mut g, v0 + 13, e0 + 17, 7);
+        assert_eq!(g.n(), v0 + 13);
+        assert_eq!(g.m(), e0 + 17);
+        g.validate().unwrap();
+        assert!(g.is_dag());
+    }
+
+    #[test]
+    fn exact_fit_is_deterministic() {
+        let mut a = chain(15);
+        let mut b = chain(15);
+        let (av, am) = (a.n(), a.m());
+        let (bv, bm) = (b.n(), b.m());
+        exact_fit(&mut a, av + 9, am + 11, 99);
+        exact_fit(&mut b, bv + 9, bm + 11, 99);
+        assert_eq!(a.edges, b.edges);
+        let names_a: Vec<&str> = a.nodes.iter().map(|n| n.name.as_str()).collect();
+        let names_b: Vec<&str> = b.nodes.iter().map(|n| n.name.as_str()).collect();
+        assert_eq!(names_a, names_b);
+    }
+
+    #[test]
+    #[should_panic(expected = "target")]
+    fn exact_fit_rejects_oversized_input() {
+        let mut g = chain(20);
+        let v = g.n();
+        exact_fit(&mut g, v - 5, v + 5, 1);
+    }
+
+    #[test]
+    fn exact_fit_never_splits_constant_edges() {
+        let mut b = GraphBuilder::new("t");
+        let input = b.node("in", OpKind::Parameter, vec![1, 3, 8, 8]);
+        let c = b.conv_unit("c", input, 3, 3, vec![1, 4, 8, 8], Some(OpKind::Relu));
+        let c2 = b.op("merge", OpKind::Add, vec![1, 4, 8, 8], &[c, input]);
+        b.op("out", OpKind::Result, vec![1, 4, 8, 8], &[c2]);
+        let mut g = b.finish();
+        let (v0, e0) = (g.n(), g.m());
+        exact_fit(&mut g, v0 + 6, e0 + 7, 3);
+        // Every Constant still feeds its op directly.
+        for &(s, d) in &g.edges {
+            if g.nodes[s].kind == OpKind::Constant {
+                assert!(
+                    matches!(g.nodes[d].kind, OpKind::Convolution | OpKind::Add | OpKind::MatMul | OpKind::Multiply),
+                    "constant feeds {:?}",
+                    g.nodes[d].kind
+                );
+            }
+        }
+    }
+}

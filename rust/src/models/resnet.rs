@@ -1,0 +1,160 @@
+//! ResNet-50 computation graph at OpenVINO granularity (Table 1 row 2:
+//! |V| = 396, |E| = 411).
+//!
+//! Torchvision topology: 7x7 stem + maxpool, four stages of [3, 4, 6, 3]
+//! bottleneck blocks (1x1 -> 3x3 -> 1x1 conv units with a residual Add and
+//! post-add ReLU; the first block of each stage carries a projection
+//! shortcut), global average pool and classifier — 53 convolutions. The 16
+//! residual Adds give the graph its merge structure (surplus |E|-|V| = 15,
+//! which is exactly Table 1's 411 - 396 — the skeleton needs no extra skip
+//! edges, only pass-through padding to size).
+
+use super::builder::{exact_fit, GraphBuilder};
+use crate::graph::{CompGraph, OpAttrs, OpKind};
+
+const N: usize = 1;
+
+fn conv(
+    b: &mut GraphBuilder,
+    stem: &str,
+    input: usize,
+    in_ch: usize,
+    out_ch: usize,
+    k: usize,
+    hw: usize,
+    act: bool,
+) -> usize {
+    b.conv_unit(
+        stem,
+        input,
+        in_ch,
+        k,
+        vec![N, out_ch, hw, hw],
+        if act { Some(OpKind::Relu) } else { None },
+    )
+}
+
+/// One bottleneck block. `proj` adds the 1x1 projection shortcut (used in
+/// the first block of each stage, where channels/stride change).
+fn bottleneck(
+    b: &mut GraphBuilder,
+    tag: &str,
+    input: usize,
+    in_ch: usize,
+    mid_ch: usize,
+    out_ch: usize,
+    hw: usize,
+    proj: bool,
+) -> usize {
+    let x = conv(b, &format!("{tag}_conv1"), input, in_ch, mid_ch, 1, hw, true);
+    let x = conv(b, &format!("{tag}_conv2"), x, mid_ch, mid_ch, 3, hw, true);
+    let x = conv(b, &format!("{tag}_conv3"), x, mid_ch, out_ch, 1, hw, false);
+    let shortcut = if proj {
+        conv(b, &format!("{tag}_proj"), input, in_ch, out_ch, 1, hw, false)
+    } else {
+        input
+    };
+    let add = b.op(&format!("{tag}_add"), OpKind::Add, vec![N, out_ch, hw, hw], &[x, shortcut]);
+    b.op(&format!("{tag}_relu"), OpKind::Relu, vec![N, out_ch, hw, hw], &[add])
+}
+
+/// Build ResNet-50 at exactly Table 1 size (396 nodes, 411 edges).
+pub fn build() -> CompGraph {
+    let mut b = GraphBuilder::new("resnet50");
+    let input = b.node("input", OpKind::Parameter, vec![N, 3, 224, 224]);
+
+    // Stem: 7x7/2 conv + 3x3/2 maxpool.
+    let x = conv(&mut b, "stem_conv", input, 3, 64, 7, 112, true);
+    let x = b.op_attrs(
+        "stem_pool",
+        OpKind::MaxPool,
+        vec![N, 64, 56, 56],
+        &[x],
+        OpAttrs { taps: 9, ..Default::default() },
+    );
+
+    // Stage configuration: (blocks, mid, out, hw).
+    let stages: [(usize, usize, usize, usize); 4] =
+        [(3, 64, 256, 56), (4, 128, 512, 28), (6, 256, 1024, 14), (3, 512, 2048, 7)];
+
+    let mut x = x;
+    let mut in_ch = 64;
+    for (si, &(blocks, mid, out, hw)) in stages.iter().enumerate() {
+        for bi in 0..blocks {
+            let tag = format!("layer{}_block{}", si + 1, bi);
+            x = bottleneck(&mut b, &tag, x, in_ch, mid, out, hw, bi == 0);
+            in_ch = out;
+        }
+    }
+
+    // Head.
+    let x = b.op_attrs(
+        "global_pool",
+        OpKind::AvgPool,
+        vec![N, 2048, 1, 1],
+        &[x],
+        OpAttrs { taps: 49, ..Default::default() },
+    );
+    let x = b.op("flatten", OpKind::Reshape, vec![N, 2048], &[x]);
+    let x = b.fc_unit("fc", x, 2048, vec![N, 1000]);
+    let x = b.op("prob", OpKind::Softmax, vec![N, 1000], &[x]);
+    b.op("output", OpKind::Result, vec![N, 1000], &[x]);
+
+    let mut g = b.finish();
+    exact_fit(&mut g, 396, 411, 0x2E5);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn matches_table1() {
+        let g = build();
+        assert_eq!(g.n(), 396);
+        assert_eq!(g.m(), 411);
+        assert!((g.avg_degree() - 1.04).abs() < 0.01);
+    }
+
+    #[test]
+    fn is_valid_dag() {
+        build().validate().unwrap();
+    }
+
+    #[test]
+    fn has_53_convolutions() {
+        let g = build();
+        let convs = g.nodes.iter().filter(|n| n.kind == OpKind::Convolution).count();
+        assert_eq!(convs, 53);
+    }
+
+    #[test]
+    fn has_16_residual_adds() {
+        let g = build();
+        let res_adds = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, n)| {
+                n.kind == OpKind::Add
+                    && n.name.contains("_add")
+                    && g.in_neighbors(*i).iter().all(|&p| g.nodes[p].kind != OpKind::Constant)
+            })
+            .count();
+        assert_eq!(res_adds, 16);
+    }
+
+    #[test]
+    fn total_flops_in_plausible_range() {
+        // ResNet-50 inference ~8.2 GFLOPs (2x MACs) at 224x224.
+        let gf = build().total_flops() / 1e9;
+        assert!(gf > 4.0 && gf < 16.0, "total {gf} GFLOP");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(build().edges, build().edges);
+    }
+}

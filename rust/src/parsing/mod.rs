@@ -1,0 +1,281 @@
+//! Graph parsing / partitioning (§2.4 "Graph partitioning and pooling",
+//! Algorithm 2).
+//!
+//! Given the learned edge-score matrix S (produced by the policy's edge
+//! scorer, Eq. 7), retain for every node the single incident edge with the
+//! highest score (Eq. 9); the connected components of the retained edge set
+//! ε are the groups. The node assignment matrix 𝒳 maps original nodes to
+//! pooled nodes, and A' = 𝒳ᵀ·A·𝒳 gives the pooled adjacency (Eq. 11).
+//!
+//! This is the piece that lets the framework learn partitions with an
+//! *unspecified number of groups*: nothing fixes |V'| in advance — it falls
+//! out of the scores.
+
+use crate::graph::CompGraph;
+
+/// A partition of a graph's nodes into groups, plus the pooled graph
+/// structure needed by the placer.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Group id per original node (dense 0..n_groups).
+    pub cluster_of: Vec<usize>,
+    /// Number of groups |V'|.
+    pub n_groups: usize,
+    /// Retained-edge mask aligned with `g.edges` (the ε of Eq. 9).
+    pub retained: Vec<bool>,
+    /// Pooled edge list over group ids (deduplicated, no self-edges):
+    /// the sparse form of A' = 𝒳ᵀ A 𝒳 (Eq. 11).
+    pub pooled_edges: Vec<(usize, usize)>,
+    /// Members per group.
+    pub members: Vec<Vec<usize>>,
+}
+
+/// Union-find with path compression.
+struct Dsu {
+    parent: Vec<usize>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Dsu { parent: (0..n).collect() }
+    }
+
+    fn find(&mut self, x: usize) -> usize {
+        let mut r = x;
+        while self.parent[r] != r {
+            r = self.parent[r];
+        }
+        let mut c = x;
+        while self.parent[c] != r {
+            let nxt = self.parent[c];
+            self.parent[c] = r;
+            c = nxt;
+        }
+        r
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra] = rb;
+        }
+    }
+}
+
+/// Run Algorithm 2 on graph `g` with per-edge scores `scores` (aligned with
+/// `g.edges`). Scores are treated undirected: an edge is incident to both
+/// endpoints. Edges with a *negative* score are treated as dropped
+/// (dropout_network exploration, Table 6) — they can never be retained.
+pub fn parse(g: &CompGraph, scores: &[f32]) -> Partition {
+    assert_eq!(scores.len(), g.m(), "one score per edge");
+    let n = g.n();
+
+    // Eq. 9: for each node, the incident edge with the highest score.
+    // Ties break toward the lower edge index (deterministic).
+    let mut best_edge = vec![usize::MAX; n];
+    let mut best_score = vec![f32::NEG_INFINITY; n];
+    for (ei, &(s, d)) in g.edges.iter().enumerate() {
+        if scores[ei] < 0.0 {
+            continue; // dropped by exploration dropout
+        }
+        for v in [s, d] {
+            if scores[ei] > best_score[v] {
+                best_score[v] = scores[ei];
+                best_edge[v] = ei;
+            }
+        }
+    }
+
+    let mut retained = vec![false; g.m()];
+    for v in 0..n {
+        if best_edge[v] != usize::MAX {
+            retained[best_edge[v]] = true;
+        }
+    }
+
+    // Connected components over retained edges.
+    let mut dsu = Dsu::new(n);
+    for (ei, &(s, d)) in g.edges.iter().enumerate() {
+        if retained[ei] {
+            dsu.union(s, d);
+        }
+    }
+
+    // Dense group ids, ordered by first occurrence (node id order).
+    let mut cluster_of = vec![usize::MAX; n];
+    let mut members: Vec<Vec<usize>> = Vec::new();
+    for v in 0..n {
+        let r = dsu.find(v);
+        if cluster_of[r] == usize::MAX {
+            cluster_of[r] = members.len();
+            members.push(Vec::new());
+        }
+        cluster_of[v] = cluster_of[r];
+        members[cluster_of[v]].push(v);
+    }
+    let n_groups = members.len();
+
+    // Pooled adjacency (Eq. 11), deduplicated, self-edges dropped.
+    let mut pooled = std::collections::HashSet::new();
+    for &(s, d) in &g.edges {
+        let (cs, cd) = (cluster_of[s], cluster_of[d]);
+        if cs != cd {
+            pooled.insert((cs, cd));
+        }
+    }
+    let mut pooled_edges: Vec<(usize, usize)> = pooled.into_iter().collect();
+    pooled_edges.sort_unstable();
+
+    Partition { cluster_of, n_groups, retained, pooled_edges, members }
+}
+
+impl Partition {
+    /// Expand a per-group device assignment to a per-node placement.
+    pub fn expand(&self, group_devices: &[usize]) -> Vec<usize> {
+        assert!(group_devices.len() >= self.n_groups);
+        self.cluster_of.iter().map(|&c| group_devices[c]).collect()
+    }
+
+    /// Fraction of original edges that cross groups (communication proxy).
+    pub fn cut_fraction(&self, g: &CompGraph) -> f64 {
+        if g.m() == 0 {
+            return 0.0;
+        }
+        let cut = g
+            .edges
+            .iter()
+            .filter(|&&(s, d)| self.cluster_of[s] != self.cluster_of[d])
+            .count();
+        cut as f64 / g.m() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CompGraph, OpKind, OpNode};
+    use crate::models::Benchmark;
+    use crate::util::prop::{check, PropConfig};
+    use crate::util::Rng;
+
+    fn path(n: usize) -> CompGraph {
+        let mut g = CompGraph::new("p");
+        let mut prev = g.add_node(OpNode::new("n0", OpKind::Parameter, vec![1]));
+        for i in 1..n {
+            let v = g.add_node(OpNode::new(format!("n{i}"), OpKind::Relu, vec![1]));
+            g.add_edge(prev, v);
+            prev = v;
+        }
+        g
+    }
+
+    #[test]
+    fn uniform_scores_merge_path() {
+        // Every node keeps its best edge; on a path with equal scores the
+        // first incident edge wins, chaining everything into few groups.
+        let g = path(6);
+        let p = parse(&g, &[0.5; 5]);
+        // All retained edges connect consecutive nodes; group count must be
+        // far below n.
+        assert!(p.n_groups <= 3, "groups {}", p.n_groups);
+    }
+
+    #[test]
+    fn low_score_edge_cuts() {
+        // Path of 4: scores high, low, high -> middle edge dropped by both
+        // its endpoints (they prefer their other edge) -> 2 groups.
+        let g = path(4);
+        let p = parse(&g, &[0.9, 0.1, 0.9]);
+        assert_eq!(p.n_groups, 2);
+        assert!(!p.retained[1]);
+        assert_eq!(p.cluster_of[0], p.cluster_of[1]);
+        assert_eq!(p.cluster_of[2], p.cluster_of[3]);
+        assert_ne!(p.cluster_of[1], p.cluster_of[2]);
+        assert_eq!(p.pooled_edges, vec![(p.cluster_of[0], p.cluster_of[2])]);
+    }
+
+    #[test]
+    fn eq9_every_node_keeps_its_argmax_edge() {
+        let mut rng = Rng::new(3);
+        let g = CompGraph::random(&mut rng, 40, 10);
+        let scores: Vec<f32> = (0..g.m()).map(|_| rng.next_f32()).collect();
+        let p = parse(&g, &scores);
+        for v in 0..g.n() {
+            // Find v's best incident edge; it must be retained.
+            let mut best = None;
+            let mut best_s = f32::NEG_INFINITY;
+            for (ei, &(s, d)) in g.edges.iter().enumerate() {
+                if (s == v || d == v) && scores[ei] > best_s {
+                    best_s = scores[ei];
+                    best = Some(ei);
+                }
+            }
+            if let Some(ei) = best {
+                assert!(p.retained[ei], "node {v}'s argmax edge {ei} dropped");
+                // And both endpoints of a retained edge share a group.
+                let (s, d) = g.edges[ei];
+                assert_eq!(p.cluster_of[s], p.cluster_of[d]);
+            }
+        }
+    }
+
+    #[test]
+    fn negative_scores_drop_edges() {
+        // Dropping the middle edge of a path by dropout splits the graph
+        // even when its score would otherwise win.
+        let g = path(4);
+        let p = parse(&g, &[0.2, -1.0, 0.2]);
+        assert!(!p.retained[1]);
+        assert_ne!(p.cluster_of[1], p.cluster_of[2]);
+        // Fully dropped graph: every node its own group.
+        let p2 = parse(&g, &[-1.0, -1.0, -1.0]);
+        assert_eq!(p2.n_groups, 4);
+    }
+
+    #[test]
+    fn expand_maps_groups_to_nodes() {
+        let g = path(4);
+        let p = parse(&g, &[0.9, 0.1, 0.9]);
+        let placement = p.expand(&[0, 1]);
+        assert_eq!(placement, vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn partition_is_valid_prop() {
+        check("parse-valid", PropConfig { cases: 48, max_size: 120, ..Default::default() }, |rng, size| {
+            let g = CompGraph::random(rng, size, size / 3);
+            let scores: Vec<f32> = (0..g.m()).map(|_| rng.next_f32()).collect();
+            let p = parse(&g, &scores);
+            if p.cluster_of.iter().any(|&c| c >= p.n_groups) {
+                return Err("group id out of range".into());
+            }
+            if p.members.iter().map(|m| m.len()).sum::<usize>() != g.n() {
+                return Err("members don't cover all nodes".into());
+            }
+            // Group count bounded by node count; pooled edges never
+            // self-referential.
+            if p.pooled_edges.iter().any(|&(a, b)| a == b) {
+                return Err("self pooled edge".into());
+            }
+            // Retained edges' endpoints co-grouped.
+            for (ei, &(s, d)) in g.edges.iter().enumerate() {
+                if p.retained[ei] && p.cluster_of[s] != p.cluster_of[d] {
+                    return Err("retained edge crosses groups".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn benchmark_graphs_give_nontrivial_partitions() {
+        let mut rng = Rng::new(11);
+        for b in Benchmark::ALL {
+            let g = b.build();
+            let scores: Vec<f32> = (0..g.m()).map(|_| rng.next_f32()).collect();
+            let p = parse(&g, &scores);
+            assert!(p.n_groups > 1, "{}", b.id());
+            assert!(p.n_groups < g.n() / 2, "{}: {} groups", b.id(), p.n_groups);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Learned baseline agents: Placeto (GNN encoder-placer) and the
+//! RNN-based grouper-placer of Mirhoseini et al. — both re-implemented (as
+//! the paper itself did, §4 Limitations) and driven by the same rust RL
+//! loop and simulator, with their own AOT'd fwd/train artifacts.
+
+use anyhow::{Context, Result};
+
+use super::env::Env;
+use super::hsdag::{argmax, sample_softmax};
+use super::search::{reinforce_coefficients, SearchResult, Tracker};
+use crate::config::Config;
+use crate::runtime::{Engine, ParamStore, Tensor};
+use crate::util::stats::Ema;
+use crate::util::Rng;
+
+/// Which baseline policy this agent runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// GNN encoder-placer (Placeto-like): per-node device logits.
+    Placeto,
+    /// Attentional seq2seq LSTM (RNN-based): per-node logits over the
+    /// topological order.
+    Rnn,
+}
+
+impl BaselineKind {
+    pub fn id(self) -> &'static str {
+        match self {
+            BaselineKind::Placeto => "placeto",
+            BaselineKind::Rnn => "rnn",
+        }
+    }
+}
+
+/// A per-node-policy agent (covers both baselines; they differ only in
+/// artifacts and input assembly).
+pub struct BaselineAgent {
+    pub kind: BaselineKind,
+    pub cfg: Config,
+    pub params: ParamStore,
+    actions_buf: Vec<i32>, // [T, V]
+    rewards: Vec<f64>,
+    baseline: Ema,
+    rng: Rng,
+    fwd_name: String,
+    train_name: String,
+    /// RNN only: features permuted into topological order.
+    x0_topo: Option<Tensor>,
+    /// RNN only: topo position -> working-graph node id.
+    topo_to_node: Vec<usize>,
+}
+
+impl BaselineAgent {
+    pub fn new(env: &Env, engine: &mut Engine, cfg: &Config, kind: BaselineKind) -> Result<BaselineAgent> {
+        let bench = env.bench.id();
+        let train_name = format!("{bench}_{}_train", kind.id());
+        let train = engine.load(&train_name).context("loading baseline train artifact")?;
+        anyhow::ensure!(train.spec.v == env.v_pad, "artifact V mismatch");
+        let mut rng = Rng::new(cfg.seed ^ 0xBA5E);
+        let params = ParamStore::init_from_spec(&train.spec, &mut rng)?;
+
+        // RNN wants the feature rows in topological order.
+        let (x0_topo, topo_to_node) = if kind == BaselineKind::Rnn {
+            let wg = env.working_graph();
+            let order = wg.topo_order().expect("DAG");
+            let d = env.x0.dims()[1];
+            let src = env.x0.as_f32();
+            let mut x = vec![0f32; env.v_pad * d];
+            for (pos, &node) in order.iter().enumerate() {
+                x[pos * d..(pos + 1) * d].copy_from_slice(&src[node * d..(node + 1) * d]);
+            }
+            (Some(Tensor::f32(&[env.v_pad, d], x)), order)
+        } else {
+            (None, Vec::new())
+        };
+
+        Ok(BaselineAgent {
+            kind,
+            cfg: cfg.clone(),
+            params,
+            actions_buf: vec![0; cfg.update_timestep * env.v_pad],
+            rewards: Vec::new(),
+            baseline: Ema::new(0.1),
+            rng,
+            fwd_name: format!("{bench}_{}_fwd", kind.id()),
+            train_name,
+            x0_topo,
+            topo_to_node,
+        })
+    }
+
+    fn fwd_inputs(&self, env: &Env) -> Vec<Tensor> {
+        let mut inputs = self.params.params.clone();
+        match self.kind {
+            BaselineKind::Placeto => {
+                inputs.push(env.x0.clone());
+                inputs.push(env.a_norm.clone());
+                inputs.push(env.node_mask.clone());
+            }
+            BaselineKind::Rnn => {
+                inputs.push(self.x0_topo.clone().expect("rnn x0"));
+                inputs.push(env.node_mask.clone());
+            }
+        }
+        inputs
+    }
+
+    /// One step: sample a device per node, simulate, buffer.
+    pub fn step(&mut self, env: &Env, engine: &mut Engine, explore: bool) -> Result<(Vec<usize>, f64, f64)> {
+        let fwd = engine.load(&self.fwd_name)?;
+        let outs = fwd.run(&self.fwd_inputs(env))?;
+        let logits: Vec<f32> = outs[0].to_vec()?;
+        let nd = self.cfg.num_devices;
+
+        // Sample per-node actions in the policy's own node order.
+        let mut policy_actions = vec![0usize; env.n_nodes];
+        for slot in 0..env.n_nodes {
+            let row = &logits[slot * nd..(slot + 1) * nd];
+            policy_actions[slot] = if explore {
+                sample_softmax(row, self.cfg.temperature, &mut self.rng)
+            } else {
+                argmax(row)
+            };
+        }
+        // Map to working-graph node order (RNN logits are topo-ordered).
+        let actions: Vec<usize> = match self.kind {
+            BaselineKind::Placeto => policy_actions.clone(),
+            BaselineKind::Rnn => {
+                let mut a = vec![0usize; env.n_nodes];
+                for (pos, &node) in self.topo_to_node.iter().enumerate().take(env.n_nodes) {
+                    a[node] = policy_actions[pos];
+                }
+                a
+            }
+        };
+
+        let latency = if explore && self.cfg.measure_sigma > 0.0 {
+            env.measured_latency(&actions, self.cfg.measure_sigma, &mut self.rng)
+        } else {
+            env.latency(&actions)
+        };
+        let reward = env.reward(latency);
+
+        if explore {
+            let t = self.rewards.len();
+            let v = env.v_pad;
+            for (slot, &a) in policy_actions.iter().enumerate() {
+                self.actions_buf[t * v + slot] = a as i32;
+            }
+            self.rewards.push(reward);
+        }
+        Ok((actions, latency, reward))
+    }
+
+    /// REINFORCE update through the train artifact.
+    pub fn update(&mut self, env: &Env, engine: &mut Engine) -> Result<Option<f32>> {
+        if self.rewards.is_empty() {
+            return Ok(None);
+        }
+        let t_cap = self.cfg.update_timestep;
+        let used = self.rewards.len();
+        let mut rewards = self.rewards.clone();
+        rewards.resize(t_cap, 0.0);
+        let mut coeff = reinforce_coefficients(
+            &rewards,
+            self.cfg.gamma,
+            if self.cfg.use_baseline { Some(&mut self.baseline) } else { None },
+        );
+        for c in coeff.iter_mut().skip(used) {
+            *c = 0.0;
+        }
+
+        let v = env.v_pad;
+        let mut inputs = self.params.train_prefix();
+        match self.kind {
+            BaselineKind::Placeto => {
+                inputs.push(env.x0.clone());
+                inputs.push(env.a_norm.clone());
+                inputs.push(env.node_mask.clone());
+            }
+            BaselineKind::Rnn => {
+                inputs.push(self.x0_topo.clone().expect("rnn x0"));
+                inputs.push(env.node_mask.clone());
+            }
+        }
+        inputs.push(Tensor::i32(&[t_cap, v], self.actions_buf.clone()));
+        inputs.push(Tensor::f32(&[t_cap], coeff));
+        let train = engine.load(&self.train_name)?;
+        let outs = train.run(&inputs)?;
+        let loss = self.params.apply_train_outputs(&outs)?;
+        self.rewards.clear();
+        self.actions_buf.iter_mut().for_each(|a| *a = 0);
+        Ok(Some(loss))
+    }
+
+    /// Full search loop (same protocol as the HSDAG agent).
+    pub fn search(&mut self, env: &Env, engine: &mut Engine, episodes: usize) -> Result<SearchResult> {
+        let start = std::time::Instant::now();
+        let mut tracker = Tracker::new();
+        for ep in 0..episodes {
+            for _ in 0..self.cfg.update_timestep {
+                let (actions, _lat, reward) = self.step(env, engine, true)?;
+                let det = env.latency(&actions);
+                tracker.observe(&actions, det, reward);
+            }
+            if let Some(loss) = self.update(env, engine)? {
+                tracker.record_loss(loss as f64);
+            }
+            tracker.end_episode(ep);
+        }
+        let (actions, _lat, reward) = self.step(env, engine, false)?;
+        let det = env.latency(&actions);
+        tracker.observe(&actions, det, reward);
+
+        // The RNN's attention matrix is the memory hog the paper's Table 5
+        // reports as OOM on BERT: [V, V] attention + LSTM states per
+        // buffered step.
+        let attn_bytes = if self.kind == BaselineKind::Rnn {
+            env.v_pad * env.v_pad * 4 * self.cfg.update_timestep * 3
+        } else {
+            0
+        };
+        let peak = self.actions_buf.len() * 4
+            + env.v_pad * env.v_pad * 4
+            + self.params.n_scalars() * 12
+            + attn_bytes;
+        Ok(tracker.finish(start.elapsed().as_secs_f64(), peak))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_ids() {
+        assert_eq!(BaselineKind::Placeto.id(), "placeto");
+        assert_eq!(BaselineKind::Rnn.id(), "rnn");
+    }
+}

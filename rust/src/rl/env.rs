@@ -1,0 +1,239 @@
+//! Placement environment: one benchmark prepared for the search loop.
+//!
+//! Pipeline (§2.2-2.3): build the OpenVINO-style graph -> apply the
+//! Appendix-G co-location heuristic -> extract §2.3 features and the
+//! normalized adjacency on the *co-located* graph -> pad everything to the
+//! artifact's static capacities. The policy then works on the co-located
+//! graph; placements are expanded back to original nodes for simulation.
+
+use anyhow::{bail, Result};
+
+use crate::coarsen::{colocate, Coarsening};
+use crate::config::Config;
+use crate::features::{extract, normalized_adjacency, FeatureConfig, Features};
+use crate::graph::CompGraph;
+use crate::models::Benchmark;
+use crate::runtime::Tensor;
+use crate::sim::{execute, measure, Placement, Testbed, CPU, DGPU};
+use crate::util::Rng;
+
+/// Device list the policy chooses from (action index -> simulator device).
+pub const ACTION_DEVICES: [usize; 2] = [CPU, DGPU];
+
+/// A fully-prepared placement environment.
+pub struct Env {
+    pub bench: Benchmark,
+    /// Original computation graph (Table 1 size).
+    pub graph: CompGraph,
+    /// Co-location coarsening original -> working graph.
+    pub colo: Coarsening,
+    /// Feature extraction output on the working (co-located) graph.
+    pub features: Features,
+    pub testbed: Testbed,
+    /// Padded capacities (artifact contract).
+    pub v_pad: usize,
+    pub e_pad: usize,
+    /// Real sizes of the working graph.
+    pub n_nodes: usize,
+    pub n_edges: usize,
+    // Padded, artifact-ready tensors (constant across the whole search).
+    pub x0: Tensor,
+    pub a_norm: Tensor,
+    pub edge_src: Tensor,
+    pub edge_dst: Tensor,
+    pub node_mask: Tensor,
+    pub edge_mask: Tensor,
+    /// CPU-only reference latency (deterministic), the speedup denominator.
+    pub cpu_latency: f64,
+    /// Pre-converted PJRT literals for the constant tensors (perf: avoids
+    /// re-serializing ~8 MB of features/adjacency on every policy call).
+    pub lit: EnvLiterals,
+}
+
+/// Cached literal forms of the environment's constant tensors.
+pub struct EnvLiterals {
+    pub x0: xla::Literal,
+    pub a_norm: xla::Literal,
+    pub edge_src: xla::Literal,
+    pub edge_dst: xla::Literal,
+    pub node_mask: xla::Literal,
+    pub edge_mask: xla::Literal,
+}
+
+impl Env {
+    pub fn new(bench: Benchmark, cfg: &Config) -> Result<Env> {
+        Self::with_features(bench, cfg, cfg.features)
+    }
+
+    /// Build with explicit feature ablation switches (Table 3).
+    pub fn with_features(bench: Benchmark, _cfg: &Config, fcfg: FeatureConfig) -> Result<Env> {
+        Self::from_graph(bench, bench.build(), fcfg)
+    }
+
+    /// Build an environment for an arbitrary computation graph, reusing the
+    /// AOT artifacts of `bench` (the graph's co-located form must fit that
+    /// benchmark's padded capacities). This is how downstream users place
+    /// their own models without re-lowering artifacts.
+    pub fn from_graph(bench: Benchmark, graph: CompGraph, fcfg: FeatureConfig) -> Result<Env> {
+        let colo = colocate(&graph);
+        let wg = &colo.coarse;
+        let (v_pad, e_pad) = (bench.padded_nodes(), bench.padded_edges());
+        if wg.n() > v_pad || wg.m() > e_pad {
+            bail!(
+                "{}: co-located graph ({} nodes, {} edges) exceeds padded capacity ({v_pad}, {e_pad})",
+                bench.id(),
+                wg.n(),
+                wg.m()
+            );
+        }
+        let features = extract(wg, fcfg);
+        let d = FeatureConfig::dim();
+
+        // Pad X0 [v_pad, d].
+        let mut x0 = vec![0f32; v_pad * d];
+        x0[..wg.n() * d].copy_from_slice(&features.x);
+
+        // Pad A_norm [v_pad, v_pad] (block copy row by row).
+        let a_small = normalized_adjacency(wg);
+        let mut a_norm = vec![0f32; v_pad * v_pad];
+        for r in 0..wg.n() {
+            a_norm[r * v_pad..r * v_pad + wg.n()]
+                .copy_from_slice(&a_small[r * wg.n()..(r + 1) * wg.n()]);
+        }
+
+        // Edge index tensors; padded slots point at node 0 and are masked.
+        let mut esrc = vec![0i32; e_pad];
+        let mut edst = vec![0i32; e_pad];
+        let mut emask = vec![0f32; e_pad];
+        for (i, &(s, t)) in wg.edges.iter().enumerate() {
+            esrc[i] = s as i32;
+            edst[i] = t as i32;
+            emask[i] = 1.0;
+        }
+        let mut nmask = vec![0f32; v_pad];
+        for m in nmask.iter_mut().take(wg.n()) {
+            *m = 1.0;
+        }
+
+        let testbed = Testbed::paper();
+        let cpu_latency =
+            execute(&graph, &Placement::all(graph.n(), CPU), &testbed).makespan;
+
+        let x0_t = Tensor::f32(&[v_pad, d], x0);
+        let a_norm_t = Tensor::f32(&[v_pad, v_pad], a_norm);
+        let esrc_t = Tensor::i32(&[e_pad], esrc);
+        let edst_t = Tensor::i32(&[e_pad], edst);
+        let nmask_t = Tensor::f32(&[v_pad], nmask);
+        let emask_t = Tensor::f32(&[e_pad], emask);
+        let lit = EnvLiterals {
+            x0: x0_t.to_literal()?,
+            a_norm: a_norm_t.to_literal()?,
+            edge_src: esrc_t.to_literal()?,
+            edge_dst: edst_t.to_literal()?,
+            node_mask: nmask_t.to_literal()?,
+            edge_mask: emask_t.to_literal()?,
+        };
+
+        Ok(Env {
+            bench,
+            n_nodes: wg.n(),
+            n_edges: wg.m(),
+            features,
+            colo,
+            graph,
+            testbed,
+            v_pad,
+            e_pad,
+            x0: x0_t,
+            a_norm: a_norm_t,
+            edge_src: esrc_t,
+            edge_dst: edst_t,
+            node_mask: nmask_t,
+            edge_mask: emask_t,
+            cpu_latency,
+            lit,
+        })
+    }
+
+    /// The working graph the policy sees.
+    pub fn working_graph(&self) -> &CompGraph {
+        &self.colo.coarse
+    }
+
+    /// Expand a working-graph placement (action indices) to a full
+    /// original-node placement (simulator device ids).
+    pub fn expand(&self, working_actions: &[usize]) -> Placement {
+        let devices: Vec<usize> =
+            working_actions.iter().map(|&a| ACTION_DEVICES[a]).collect();
+        Placement(self.colo.expand_placement(&devices))
+    }
+
+    /// Deterministic latency of a working-graph placement.
+    pub fn latency(&self, working_actions: &[usize]) -> f64 {
+        execute(&self.graph, &self.expand(working_actions), &self.testbed).makespan
+    }
+
+    /// Measured latency (paper's 10-run protocol with noise).
+    pub fn measured_latency(&self, working_actions: &[usize], sigma: f64, rng: &mut Rng) -> f64 {
+        measure(&self.graph, &self.expand(working_actions), &self.testbed, sigma, rng)
+    }
+
+    /// Reward (the paper's r = 1/l, normalized by the CPU reference so
+    /// rewards sit in a sane range: r = l_cpu / l = speedup factor).
+    pub fn reward(&self, latency: f64) -> f64 {
+        self.cpu_latency / latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(bench: Benchmark) -> Env {
+        Env::new(bench, &Config::default()).unwrap()
+    }
+
+    #[test]
+    fn all_benchmarks_fit_padding() {
+        for b in Benchmark::ALL {
+            let e = env(b);
+            assert!(e.n_nodes <= e.v_pad, "{}", b.id());
+            assert!(e.n_edges <= e.e_pad, "{}", b.id());
+            assert!(e.n_nodes > 16, "{}: coarsening degenerate", b.id());
+        }
+    }
+
+    #[test]
+    fn masks_match_sizes() {
+        let e = env(Benchmark::ResNet50);
+        let nm = e.node_mask.as_f32();
+        assert_eq!(nm.iter().filter(|&&x| x == 1.0).count(), e.n_nodes);
+        let em = e.edge_mask.as_f32();
+        assert_eq!(em.iter().filter(|&&x| x == 1.0).count(), e.n_edges);
+    }
+
+    #[test]
+    fn expand_roundtrip_covers_all_nodes() {
+        let e = env(Benchmark::ResNet50);
+        let actions = vec![1usize; e.n_nodes];
+        let p = e.expand(&actions);
+        assert_eq!(p.0.len(), e.graph.n());
+        assert!(p.0.iter().all(|&d| d == DGPU));
+    }
+
+    #[test]
+    fn all_cpu_actions_reproduce_reference_latency() {
+        let e = env(Benchmark::InceptionV3);
+        let lat = e.latency(&vec![0; e.n_nodes]);
+        assert!((lat - e.cpu_latency).abs() / e.cpu_latency < 1e-9);
+        assert!((e.reward(lat) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpu_actions_beat_cpu_on_bert() {
+        let e = env(Benchmark::BertBase);
+        let lat = e.latency(&vec![1; e.n_nodes]);
+        assert!(lat < e.cpu_latency);
+        assert!(e.reward(lat) > 1.5);
+    }
+}

@@ -1,0 +1,382 @@
+//! The HSDAG agent: Algorithm 1's end-to-end loop, driven from rust with
+//! all neural compute in AOT-compiled HLO (fwd / placer / train).
+//!
+//! Per step:
+//!   1. `*_hsdag_fwd`    -> node embeddings Z, GPN edge scores S
+//!   2. rust parsing     -> groups (Eq. 9 + union-find), exploration edge
+//!                          dropout (dropout_network)
+//!   3. `*_hsdag_placer` -> per-group device logits
+//!   4. rust sampling    -> placement, simulator -> latency -> reward
+//!   5. feedback update  -> fb_v += mean Z of v's group (Alg. 1 line 10)
+//!   6. buffer; every `update_timestep` steps one `*_hsdag_train` call
+//!      applies the Eq. 14 REINFORCE update (Adam inside the artifact).
+
+use anyhow::{Context, Result};
+
+use super::env::Env;
+use super::search::{reinforce_coefficients, SearchResult, Tracker};
+use crate::config::Config;
+use crate::parsing::{parse, Partition};
+use crate::runtime::{Engine, ParamStore, Tensor};
+use crate::util::stats::Ema;
+use crate::util::Rng;
+
+const H: usize = 128; // hidden_channel; verified against the spec at init
+
+/// Replay buffer for one update window (T steps).
+struct Buffer {
+    fb: Vec<f32>,       // [T, V, H]
+    cids: Vec<i32>,     // [T, V]
+    actions: Vec<i32>,  // [T, V]
+    gmask: Vec<f32>,    // [T, V]
+    retained: Vec<f32>, // [T, E]
+    rewards: Vec<f64>,
+    len: usize,
+    t_cap: usize,
+    v: usize,
+    e: usize,
+}
+
+impl Buffer {
+    fn new(t_cap: usize, v: usize, e: usize) -> Buffer {
+        Buffer {
+            fb: vec![0.0; t_cap * v * H],
+            cids: vec![0; t_cap * v],
+            actions: vec![0; t_cap * v],
+            gmask: vec![0.0; t_cap * v],
+            retained: vec![0.0; t_cap * e],
+            rewards: Vec::with_capacity(t_cap),
+            len: 0,
+            t_cap,
+            v,
+            e,
+        }
+    }
+
+    fn clear(&mut self) {
+        // Only `len` gates reads; zero the mask-like planes for safety.
+        self.gmask.iter_mut().for_each(|x| *x = 0.0);
+        self.retained.iter_mut().for_each(|x| *x = 0.0);
+        self.rewards.clear();
+        self.len = 0;
+    }
+
+    fn full(&self) -> bool {
+        self.len == self.t_cap
+    }
+
+    fn bytes(&self) -> usize {
+        4 * (self.fb.len() + self.cids.len() + self.actions.len() + self.gmask.len() + self.retained.len())
+    }
+}
+
+/// One step's outcome (also used by the figure2 / quickstart paths).
+pub struct StepOutcome {
+    pub actions: Vec<usize>,
+    pub latency: f64,
+    pub reward: f64,
+    pub n_groups: usize,
+}
+
+/// The HSDAG policy agent.
+pub struct HsdagAgent {
+    pub cfg: Config,
+    pub params: ParamStore,
+    fb: Vec<f32>, // [V, H] evolving feedback state
+    buffer: Buffer,
+    baseline: Ema,
+    rng: Rng,
+    fwd_name: String,
+    placer_name: String,
+    train_name: String,
+    /// Cached literal forms of the parameters (invalidated on update).
+    param_lits: Vec<xla::Literal>,
+    /// Last partition (exposed for Figure 2 dumps).
+    pub last_partition: Option<Partition>,
+}
+
+impl HsdagAgent {
+    pub fn new(env: &Env, engine: &mut Engine, cfg: &Config) -> Result<HsdagAgent> {
+        let bench = env.bench.id();
+        let train_name = format!("{bench}_hsdag_train");
+        let train = engine.load(&train_name).context("loading train artifact")?;
+        anyhow::ensure!(train.spec.v == env.v_pad, "artifact V mismatch");
+        anyhow::ensure!(train.spec.e == env.e_pad, "artifact E mismatch");
+        anyhow::ensure!(train.spec.t == cfg.update_timestep, "artifact T mismatch");
+        let mut rng = Rng::new(cfg.seed ^ 0x45DA6);
+        let params = ParamStore::init_from_spec(&train.spec, &mut rng)?;
+        let param_lits = params
+            .params
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(HsdagAgent {
+            cfg: cfg.clone(),
+            params,
+            fb: vec![0.0; env.v_pad * H],
+            buffer: Buffer::new(cfg.update_timestep, env.v_pad, env.e_pad),
+            baseline: Ema::new(0.1),
+            rng,
+            fwd_name: format!("{bench}_hsdag_fwd"),
+            placer_name: format!("{bench}_hsdag_placer"),
+            train_name,
+            param_lits,
+            last_partition: None,
+        })
+    }
+
+    /// Reset episode state (fb persists across steps within an episode;
+    /// Alg. 1 renews it per outer iteration).
+    pub fn reset_episode(&mut self) {
+        self.fb.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// One Alg. 1 step. `explore` enables sampling + edge dropout;
+    /// greedy argmax otherwise.
+    pub fn step(&mut self, env: &Env, engine: &mut Engine, explore: bool) -> Result<StepOutcome> {
+        let v_pad = env.v_pad;
+
+        // (1) Forward: Z + edge scores. Constant tensors (params between
+        // updates, features, adjacency) go in as cached literals; only the
+        // evolving feedback state is serialized per step.
+        let fb_used = self.fb.clone();
+        let fb_lit = Tensor::f32(&[v_pad, H], self.fb.clone()).to_literal()?;
+        let mut refs: Vec<&xla::Literal> = self.param_lits.iter().collect();
+        refs.push(&env.lit.x0);
+        refs.push(&env.lit.a_norm);
+        refs.push(&fb_lit);
+        refs.push(&env.lit.edge_src);
+        refs.push(&env.lit.edge_dst);
+        refs.push(&env.lit.node_mask);
+        let fwd = engine.load(&self.fwd_name)?;
+        let outs = fwd.run_refs(&refs)?;
+        let z: Vec<f32> = outs[0].to_vec()?;
+        let scores_padded: Vec<f32> = outs[1].to_vec()?;
+
+        // (2) Parse on real edges, with exploration dropout.
+        let mut scores: Vec<f32> = scores_padded[..env.n_edges].to_vec();
+        if explore && self.cfg.dropout_network > 0.0 {
+            for s in scores.iter_mut() {
+                if self.rng.next_f64() < self.cfg.dropout_network {
+                    *s = -1.0;
+                }
+            }
+        }
+        let part = parse(env.working_graph(), &scores);
+
+        // (3) Placer: group logits.
+        let mut cids = vec![0i32; v_pad];
+        let mut gmask = vec![0f32; v_pad];
+        for (node, &c) in part.cluster_of.iter().enumerate() {
+            cids[node] = c as i32;
+        }
+        for m in gmask.iter_mut().take(part.n_groups) {
+            *m = 1.0;
+        }
+        let cids_lit = Tensor::i32(&[v_pad], cids.clone()).to_literal()?;
+        let gmask_lit = Tensor::f32(&[v_pad], gmask.clone()).to_literal()?;
+        let mut prefs: Vec<&xla::Literal> = self.param_lits.iter().collect();
+        prefs.push(&outs[0]); // Z straight from the fwd output, no copy
+        prefs.push(&cids_lit);
+        prefs.push(&gmask_lit);
+        let placer = engine.load(&self.placer_name)?;
+        let pouts = placer.run_refs(&prefs)?;
+        let logits: Vec<f32> = pouts[0].to_vec()?;
+        let nd = self.cfg.num_devices;
+
+        // (4) Sample (or argmax) a device per group; expand; simulate.
+        let mut group_devices = vec![0usize; part.n_groups];
+        for g in 0..part.n_groups {
+            let row = &logits[g * nd..(g + 1) * nd];
+            group_devices[g] = if explore {
+                sample_softmax(row, self.cfg.temperature, &mut self.rng)
+            } else {
+                argmax(row)
+            };
+        }
+        let actions: Vec<usize> = part.cluster_of.iter().map(|&c| group_devices[c]).collect();
+        let latency = if explore && self.cfg.measure_sigma > 0.0 {
+            env.measured_latency(&actions, self.cfg.measure_sigma, &mut self.rng)
+        } else {
+            env.latency(&actions)
+        };
+        let reward = env.reward(latency);
+
+        // (5) Feedback update: fb_v += mean Z of v's group.
+        let mut gsum = vec![0f32; part.n_groups * H];
+        let mut gcount = vec![0f32; part.n_groups];
+        for (node, &c) in part.cluster_of.iter().enumerate() {
+            gcount[c] += 1.0;
+            for k in 0..H {
+                gsum[c * H + k] += z[node * H + k];
+            }
+        }
+        for (node, &c) in part.cluster_of.iter().enumerate() {
+            let cnt = gcount[c].max(1.0);
+            for k in 0..H {
+                self.fb[node * H + k] += gsum[c * H + k] / cnt;
+            }
+        }
+
+        // (6) Buffer (skip when full: the caller decides when to flush
+        // via `update`; extra exploration steps are still valid rollouts).
+        if explore && !self.buffer.full() {
+            let t = self.buffer.len;
+            let (v, e) = (self.buffer.v, self.buffer.e);
+            // Store the fb that THIS forward actually saw (pre-update).
+            self.buffer.fb[t * v * H..(t + 1) * v * H].copy_from_slice(&fb_used);
+            self.buffer.cids[t * v..(t + 1) * v].copy_from_slice(&cids);
+            for (node, &a) in actions.iter().enumerate() {
+                // Store per-group actions in group-slot order (the loss
+                // indexes logits by group id).
+                let g = part.cluster_of[node];
+                self.buffer.actions[t * v + g] = group_devices[g] as i32;
+                let _ = (node, a);
+            }
+            self.buffer.gmask[t * v..(t + 1) * v].copy_from_slice(&gmask);
+            for (ei, &r) in part.retained.iter().enumerate() {
+                self.buffer.retained[t * e + ei] = if r { 1.0 } else { 0.0 };
+            }
+            self.buffer.rewards.push(reward);
+            self.buffer.len += 1;
+        }
+
+        self.last_partition = Some(part.clone());
+        Ok(StepOutcome { actions, latency, reward, n_groups: part.n_groups })
+    }
+
+    /// Flush the buffer through the train artifact (Eq. 14). Returns the
+    /// loss, or None if the buffer was empty.
+    pub fn update(&mut self, env: &Env, engine: &mut Engine) -> Result<Option<f32>> {
+        if self.buffer.len == 0 {
+            return Ok(None);
+        }
+        // Pad the reward tail with zero-coefficients if the episode ended
+        // short of a full window.
+        let mut rewards = self.buffer.rewards.clone();
+        rewards.resize(self.buffer.t_cap, 0.0);
+        let mut coeff = reinforce_coefficients(
+            &rewards,
+            self.cfg.gamma,
+            if self.cfg.use_baseline { Some(&mut self.baseline) } else { None },
+        );
+        for c in coeff.iter_mut().skip(self.buffer.len) {
+            *c = 0.0;
+        }
+
+        let (v, e, t) = (self.buffer.v, self.buffer.e, self.buffer.t_cap);
+        let mut loss = 0.0;
+        for _ in 0..self.cfg.k_epochs {
+            let mut inputs = self.params.train_prefix();
+            inputs.push(env.x0.clone());
+            inputs.push(env.a_norm.clone());
+            inputs.push(env.edge_src.clone());
+            inputs.push(env.edge_dst.clone());
+            inputs.push(env.node_mask.clone());
+            inputs.push(env.edge_mask.clone());
+            inputs.push(Tensor::f32(&[t, v, H], self.buffer.fb.clone()));
+            inputs.push(Tensor::i32(&[t, v], self.buffer.cids.clone()));
+            inputs.push(Tensor::i32(&[t, v], self.buffer.actions.clone()));
+            inputs.push(Tensor::f32(&[t, v], self.buffer.gmask.clone()));
+            inputs.push(Tensor::f32(&[t, e], self.buffer.retained.clone()));
+            inputs.push(Tensor::f32(&[t], coeff.clone()));
+            inputs.push(Tensor::u32(&[2], vec![self.rng.next_u64() as u32, self.rng.next_u64() as u32]));
+            let train = engine.load(&self.train_name)?;
+            let outs = train.run(&inputs)?;
+            loss = self.params.apply_train_outputs(&outs)?;
+        }
+        // Refresh the cached parameter literals for the next steps.
+        self.param_lits = self
+            .params
+            .params
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        self.buffer.clear();
+        Ok(Some(loss))
+    }
+
+    /// Full search: `episodes` episodes of `update_timestep` steps each,
+    /// followed by one greedy evaluation step.
+    pub fn search(&mut self, env: &Env, engine: &mut Engine, episodes: usize) -> Result<SearchResult> {
+        let start = std::time::Instant::now();
+        let mut tracker = Tracker::new();
+        for ep in 0..episodes {
+            self.reset_episode();
+            for _ in 0..self.cfg.update_timestep {
+                let o = self.step(env, engine, true)?;
+                // Track with the *deterministic* latency of the sampled
+                // placement so "best" is noise-free.
+                let det = env.latency(&o.actions);
+                tracker.observe(&o.actions, det, o.reward);
+            }
+            if self.buffer.full() {
+                if let Some(loss) = self.update(env, engine)? {
+                    tracker.record_loss(loss as f64);
+                }
+            }
+            tracker.end_episode(ep);
+        }
+        // Greedy final placement under the trained policy.
+        self.reset_episode();
+        let greedy = self.step(env, engine, false)?;
+        let det = env.latency(&greedy.actions);
+        tracker.observe(&greedy.actions, det, greedy.reward);
+
+        let peak = self.buffer.bytes() + env.v_pad * env.v_pad * 4 + self.params.n_scalars() * 12;
+        Ok(tracker.finish(start.elapsed().as_secs_f64(), peak))
+    }
+}
+
+/// Sample an index from softmax(logits / temperature).
+pub fn sample_softmax(logits: &[f32], temperature: f64, rng: &mut Rng) -> usize {
+    let t = temperature.max(1e-6) as f32;
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = logits.iter().map(|&l| (((l - mx) / t) as f64).exp()).collect();
+    rng.categorical(&weights)
+}
+
+/// Argmax index (ties to the first).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sampling_respects_logits() {
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 2];
+        for _ in 0..2000 {
+            counts[sample_softmax(&[0.0, 2.0], 1.0, &mut rng)] += 1;
+        }
+        // softmax(0,2) ~ (0.12, 0.88)
+        let frac = counts[1] as f64 / 2000.0;
+        assert!((frac - 0.88).abs() < 0.04, "{frac}");
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+
+    #[test]
+    fn buffer_layout() {
+        let mut b = Buffer::new(2, 4, 3);
+        assert!(!b.full());
+        b.len = 2;
+        assert!(b.full());
+        b.clear();
+        assert_eq!(b.len, 0);
+        assert!(b.bytes() > 0);
+    }
+}

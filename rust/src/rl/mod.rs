@@ -1,0 +1,14 @@
+//! Reinforcement-learning coordinator (Algorithm 1): the placement
+//! environment, the HSDAG agent, the learned baselines, and search
+//! bookkeeping. All neural compute happens in AOT-compiled HLO artifacts
+//! executed via the PJRT runtime; this module owns everything else.
+
+pub mod baseline_agents;
+pub mod env;
+pub mod hsdag;
+pub mod search;
+
+pub use baseline_agents::{BaselineAgent, BaselineKind};
+pub use env::Env;
+pub use hsdag::HsdagAgent;
+pub use search::{CurvePoint, SearchResult};

@@ -1,0 +1,173 @@
+//! Search-result bookkeeping shared by the HSDAG agent and the learned
+//! baselines: reward curves, best-placement tracking, Eq. 14 coefficients.
+
+use crate::util::stats::Ema;
+
+/// One point on the learning curve.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub episode: usize,
+    /// Best (lowest) latency seen so far, seconds.
+    pub best_latency: f64,
+    /// Mean reward over the episode.
+    pub mean_reward: f64,
+    /// Last training loss in this episode (NaN if no update yet).
+    pub loss: f64,
+}
+
+/// Outcome of a policy search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// Working-graph action per node group/node for the best placement.
+    pub best_actions: Vec<usize>,
+    /// Deterministic latency of the best placement, seconds.
+    pub best_latency: f64,
+    /// Learning curve, one point per episode.
+    pub curve: Vec<CurvePoint>,
+    /// Wall-clock search time, seconds (Table 5).
+    pub wall_secs: f64,
+    /// Peak approximate working-set bytes of the search (Table 5 OOM col).
+    pub peak_bytes: usize,
+}
+
+impl SearchResult {
+    pub fn speedup_vs(&self, cpu_latency: f64) -> f64 {
+        100.0 * (1.0 - self.best_latency / cpu_latency)
+    }
+}
+
+/// Tracks best placement + curve during a search.
+pub struct Tracker {
+    pub best_actions: Vec<usize>,
+    pub best_latency: f64,
+    pub curve: Vec<CurvePoint>,
+    episode_rewards: Vec<f64>,
+    last_loss: f64,
+}
+
+impl Tracker {
+    pub fn new() -> Tracker {
+        Tracker {
+            best_actions: Vec::new(),
+            best_latency: f64::INFINITY,
+            curve: Vec::new(),
+            episode_rewards: Vec::new(),
+            last_loss: f64::NAN,
+        }
+    }
+
+    pub fn observe(&mut self, actions: &[usize], latency: f64, reward: f64) {
+        if latency < self.best_latency {
+            self.best_latency = latency;
+            self.best_actions = actions.to_vec();
+        }
+        self.episode_rewards.push(reward);
+    }
+
+    pub fn record_loss(&mut self, loss: f64) {
+        self.last_loss = loss;
+    }
+
+    pub fn end_episode(&mut self, episode: usize) {
+        let mean_reward = if self.episode_rewards.is_empty() {
+            0.0
+        } else {
+            self.episode_rewards.iter().sum::<f64>() / self.episode_rewards.len() as f64
+        };
+        self.curve.push(CurvePoint {
+            episode,
+            best_latency: self.best_latency,
+            mean_reward,
+            loss: self.last_loss,
+        });
+        self.episode_rewards.clear();
+    }
+
+    pub fn finish(self, wall_secs: f64, peak_bytes: usize) -> SearchResult {
+        SearchResult {
+            best_actions: self.best_actions,
+            best_latency: self.best_latency,
+            curve: self.curve,
+            wall_secs,
+            peak_bytes,
+        }
+    }
+}
+
+impl Default for Tracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Eq. 14 coefficients: coeff[i] = gamma^i * (r_i - baseline_i). The
+/// baseline (EMA of rewards) is the standard REINFORCE variance reduction;
+/// pass `None` for the paper's literal baseline-free form.
+pub fn reinforce_coefficients(
+    rewards: &[f64],
+    gamma: f64,
+    baseline: Option<&mut Ema>,
+) -> Vec<f32> {
+    let mut coeff = Vec::with_capacity(rewards.len());
+    match baseline {
+        Some(ema) => {
+            for (i, &r) in rewards.iter().enumerate() {
+                let b = ema.get().unwrap_or(r);
+                coeff.push((gamma.powi(i as i32) * (r - b)) as f32);
+                ema.update(r);
+            }
+        }
+        None => {
+            for (i, &r) in rewards.iter().enumerate() {
+                coeff.push((gamma.powi(i as i32) * r) as f32);
+            }
+        }
+    }
+    coeff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_keeps_best() {
+        let mut t = Tracker::new();
+        t.observe(&[0, 0], 2.0, 0.5);
+        t.observe(&[1, 1], 1.0, 1.0);
+        t.observe(&[0, 1], 1.5, 0.7);
+        t.end_episode(0);
+        assert_eq!(t.best_latency, 1.0);
+        assert_eq!(t.best_actions, vec![1, 1]);
+        assert!((t.curve[0].mean_reward - (0.5 + 1.0 + 0.7) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coefficients_discount() {
+        let c = reinforce_coefficients(&[1.0, 1.0, 1.0], 0.9, None);
+        assert!((c[0] - 1.0).abs() < 1e-6);
+        assert!((c[1] - 0.9).abs() < 1e-6);
+        assert!((c[2] - 0.81).abs() < 1e-6);
+    }
+
+    #[test]
+    fn baseline_centers_rewards() {
+        let mut ema = Ema::new(0.5);
+        let c = reinforce_coefficients(&[1.0, 2.0, 2.0], 1.0, Some(&mut ema));
+        assert_eq!(c[0], 0.0); // first reward is its own baseline
+        assert!(c[1] > 0.0); // better than baseline -> positive
+        assert!(c[2] > 0.0 && c[2] < c[1]); // baseline catching up
+    }
+
+    #[test]
+    fn speedup_formula() {
+        let r = SearchResult {
+            best_actions: vec![],
+            best_latency: 0.5,
+            curve: vec![],
+            wall_secs: 0.0,
+            peak_bytes: 0,
+        };
+        assert!((r.speedup_vs(1.0) - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,128 @@
+//! PJRT engine: loads AOT HLO-text artifacts, compiles them once on the
+//! CPU client, and executes them from the search loop.
+//!
+//! Pattern follows /opt/xla-example/load_hlo/: HLO *text* in (the
+//! xla_extension 0.5.1 proto parser reassigns jax's 64-bit instruction
+//! ids), `return_tuple=True` out, so every execution returns one tuple
+//! literal we decompose.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::spec::ArtifactSpec;
+use super::tensor::Tensor;
+
+/// One compiled artifact.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; validates against the spec and returns
+    /// the decomposed output tuple.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: {} inputs given, spec wants {}",
+                self.spec.fn_name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            t.check_against(s).with_context(|| self.spec.fn_name.clone())?;
+            literals.push(t.to_literal()?);
+        }
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals (hot path: lets the caller reuse
+    /// buffers that don't change between steps).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute with borrowed literals — the zero-copy hot path: constant
+    /// tensors (features, adjacency, cached parameters) are converted to
+    /// literals once and reused across every step (see EXPERIMENTS.md
+    /// §Perf for the before/after).
+    pub fn run_refs(&self, literals: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if literals.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: {} inputs given, spec wants {}",
+                self.spec.fn_name,
+                literals.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let result = self.exe.execute::<&xla::Literal>(literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// Loads and caches compiled artifacts for one benchmark+policy family.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, Executable>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            bail!(
+                "artifacts directory '{}' missing — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        Ok(Engine { client: xla::PjRtClient::cpu()?, dir, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and memoize) the artifact `<name>.hlo.txt` + `.spec.txt`.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let hlo = self.dir.join(format!("{name}.hlo.txt"));
+            let spec_path = self.dir.join(format!("{name}.spec.txt"));
+            let spec_text = std::fs::read_to_string(&spec_path)
+                .with_context(|| format!("reading {}", spec_path.display()))?;
+            let spec = ArtifactSpec::parse(&spec_text)
+                .with_context(|| format!("parsing {}", spec_path.display()))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), Executable { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine integration tests live in rust/tests/runtime_integration.rs
+    //! (they need built artifacts); here we only check error paths that
+    //! don't require a PJRT client.
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_an_error() {
+        let e = Engine::cpu("/nonexistent/artifacts");
+        assert!(e.is_err());
+        let msg = format!("{:#}", e.err().unwrap());
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

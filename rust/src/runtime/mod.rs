@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled policy artifacts (HLO text) and execute
+//! them from the rust search loop. Python never runs here — `make
+//! artifacts` is the only python invocation in the whole system.
+
+pub mod engine;
+pub mod params;
+pub mod spec;
+pub mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use params::ParamStore;
+pub use spec::{ArtifactSpec, DType, InputSpec};
+pub use tensor::Tensor;

@@ -1,0 +1,157 @@
+//! Parameter store: host-side policy parameters + Adam state, kept in the
+//! exact order of the artifact spec so train-step round-trips are
+//! positional.
+//!
+//! The train artifacts take (params..., m..., v..., step, ...) and return
+//! (params'..., m'..., v'..., step', loss); `apply_train_outputs` writes
+//! the returned literals straight back into the store.
+
+use anyhow::{bail, Result};
+
+use super::spec::{ArtifactSpec, DType};
+use super::tensor::{glorot_init, Tensor};
+use crate::util::Rng;
+
+/// Policy parameters + optimizer state.
+pub struct ParamStore {
+    /// Learnable tensors, spec order.
+    pub params: Vec<Tensor>,
+    /// Adam first / second moments, aligned with `params`.
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    /// Adam step counter (float32 scalar, as the artifact expects).
+    pub step: f32,
+    /// Names, for diagnostics.
+    pub names: Vec<String>,
+}
+
+impl ParamStore {
+    /// Initialize from the *train* spec of a policy: the first n inputs up
+    /// to the one named `m_<first>` are the learnable parameters.
+    pub fn init_from_spec(spec: &ArtifactSpec, rng: &mut Rng) -> Result<ParamStore> {
+        let mut n_params = 0;
+        for inp in &spec.inputs {
+            if inp.name.starts_with("m_") {
+                break;
+            }
+            n_params += 1;
+        }
+        if n_params == 0 || n_params == spec.inputs.len() {
+            bail!("{}: could not locate the m_* optimizer block", spec.fn_name);
+        }
+        let mut params = Vec::with_capacity(n_params);
+        let mut names = Vec::with_capacity(n_params);
+        for inp in &spec.inputs[..n_params] {
+            if inp.dtype != DType::F32 {
+                bail!("param '{}' is not f32", inp.name);
+            }
+            params.push(glorot_init(&inp.dims, rng));
+            names.push(inp.name.clone());
+        }
+        let m = params.iter().map(|p| Tensor::zeros(DType::F32, p.dims())).collect();
+        let v = params.iter().map(|p| Tensor::zeros(DType::F32, p.dims())).collect();
+        Ok(ParamStore { params, m, v, step: 0.0, names })
+    }
+
+    pub fn n(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Total learnable scalar count.
+    pub fn n_scalars(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Assemble the (params..., m..., v..., step) prefix of a train call.
+    pub fn train_prefix(&self) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(3 * self.n() + 1);
+        out.extend(self.params.iter().cloned());
+        out.extend(self.m.iter().cloned());
+        out.extend(self.v.iter().cloned());
+        out.push(Tensor::scalar_f32(self.step));
+        out
+    }
+
+    /// Write back the (params'..., m'..., v'..., step', loss) outputs of a
+    /// train call. Returns the loss.
+    pub fn apply_train_outputs(&mut self, outs: &[xla::Literal]) -> Result<f32> {
+        let n = self.n();
+        if outs.len() != 3 * n + 2 {
+            bail!("train returned {} outputs, expected {}", outs.len(), 3 * n + 2);
+        }
+        for i in 0..n {
+            self.params[i] =
+                Tensor::from_literal(&outs[i], DType::F32, &self.params[i].dims().to_vec())?;
+            self.m[i] =
+                Tensor::from_literal(&outs[n + i], DType::F32, &self.m[i].dims().to_vec())?;
+            self.v[i] =
+                Tensor::from_literal(&outs[2 * n + i], DType::F32, &self.v[i].dims().to_vec())?;
+        }
+        self.step = outs[3 * n].to_vec::<f32>()?[0];
+        let loss = outs[3 * n + 1].to_vec::<f32>()?[0];
+        if !loss.is_finite() {
+            bail!("non-finite training loss {loss}");
+        }
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::spec::ArtifactSpec;
+
+    const SPEC: &str = "\
+fn toy_train
+bench toy v=128 e=128 t=4
+in w0 f32 4,8
+in b0 f32 8
+in m_w0 f32 4,8
+in m_b0 f32 8
+in v_w0 f32 4,8
+in v_b0 f32 8
+in step f32 scalar
+in x f32 128,4
+out w0
+out b0
+out m_w0
+out m_b0
+out v_w0
+out v_b0
+out step
+out loss
+";
+
+    #[test]
+    fn init_locates_param_block() {
+        let spec = ArtifactSpec::parse(SPEC).unwrap();
+        let mut rng = Rng::new(3);
+        let ps = ParamStore::init_from_spec(&spec, &mut rng).unwrap();
+        assert_eq!(ps.n(), 2);
+        assert_eq!(ps.names, vec!["w0", "b0"]);
+        assert_eq!(ps.n_scalars(), 32 + 8);
+        // Weights random, biases zero.
+        assert!(ps.params[0].as_f32().iter().any(|&x| x != 0.0));
+        assert!(ps.params[1].as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn train_prefix_layout() {
+        let spec = ArtifactSpec::parse(SPEC).unwrap();
+        let mut rng = Rng::new(4);
+        let ps = ParamStore::init_from_spec(&spec, &mut rng).unwrap();
+        let prefix = ps.train_prefix();
+        assert_eq!(prefix.len(), 7);
+        assert_eq!(prefix[6].numel(), 1);
+        // Moments zeroed.
+        assert!(prefix[2].as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn apply_rejects_wrong_arity() {
+        let spec = ArtifactSpec::parse(SPEC).unwrap();
+        let mut rng = Rng::new(5);
+        let mut ps = ParamStore::init_from_spec(&spec, &mut rng).unwrap();
+        assert!(ps.apply_train_outputs(&[]).is_err());
+    }
+}

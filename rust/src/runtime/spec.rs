@@ -1,0 +1,168 @@
+//! Artifact spec parser.
+//!
+//! `python -m compile.aot` emits a `<name>.spec.txt` beside every
+//! `<name>.hlo.txt` describing the flat input signature (name, dtype,
+//! shape per line) and output names. The runtime parses these to assemble
+//! input literals in the right order and to verify the shape contract
+//! between the rust graph pipeline and the AOT'd policies at load time.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of a tensor in the artifact signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "u32" => Ok(DType::U32),
+            _ => bail!("unknown dtype '{s}'"),
+        }
+    }
+}
+
+/// One input slot of an artifact.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: DType,
+    /// Empty = scalar.
+    pub dims: Vec<usize>,
+}
+
+impl InputSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// Parsed `.spec.txt`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub fn_name: String,
+    pub bench: String,
+    /// Padded nodes / edges the artifact was lowered at.
+    pub v: usize,
+    pub e: usize,
+    /// Buffered steps T for train artifacts.
+    pub t: usize,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactSpec {
+    /// Parse the spec text format emitted by `aot.write_spec`.
+    pub fn parse(text: &str) -> Result<ArtifactSpec> {
+        let mut fn_name = String::new();
+        let mut bench = String::new();
+        let (mut v, mut e, mut t) = (0usize, 0usize, 0usize);
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            let ctx = || format!("spec line {}: '{line}'", ln + 1);
+            match tag {
+                "fn" => fn_name = parts.next().with_context(ctx)?.to_string(),
+                "bench" => {
+                    bench = parts.next().with_context(ctx)?.to_string();
+                    for kv in parts {
+                        let (k, val) = kv.split_once('=').with_context(ctx)?;
+                        let val: usize = val.parse().with_context(ctx)?;
+                        match k {
+                            "v" => v = val,
+                            "e" => e = val,
+                            "t" => t = val,
+                            _ => {}
+                        }
+                    }
+                }
+                "in" => {
+                    let name = parts.next().with_context(ctx)?.to_string();
+                    let dtype = DType::parse(parts.next().with_context(ctx)?)?;
+                    let dimstr = parts.next().with_context(ctx)?;
+                    let dims = if dimstr == "scalar" {
+                        vec![]
+                    } else {
+                        dimstr
+                            .split(',')
+                            .map(|d| d.parse::<usize>().map_err(|e| anyhow!("{e}")))
+                            .collect::<Result<Vec<_>>>()
+                            .with_context(ctx)?
+                    };
+                    inputs.push(InputSpec { name, dtype, dims });
+                }
+                "out" => outputs.push(parts.next().with_context(ctx)?.to_string()),
+                _ => bail!("unknown spec tag '{tag}' at line {}", ln + 1),
+            }
+        }
+        if fn_name.is_empty() || inputs.is_empty() {
+            bail!("incomplete spec (fn='{fn_name}', {} inputs)", inputs.len());
+        }
+        Ok(ArtifactSpec { fn_name, bench, v, e, t, inputs, outputs })
+    }
+
+    /// Index of the input named `name`.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|i| i.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# hsdag artifact spec v1
+fn resnet50_hsdag_fwd
+bench resnet50 v=512 e=512 d=69 h=128 nd=2 t=20
+in trans_w0 f32 69,128
+in trans_b0 f32 128
+in x0 f32 512,69
+in edge_src i32 512
+in step f32 scalar
+out z
+out scores
+";
+
+    #[test]
+    fn parses_sample() {
+        let s = ArtifactSpec::parse(SAMPLE).unwrap();
+        assert_eq!(s.fn_name, "resnet50_hsdag_fwd");
+        assert_eq!(s.bench, "resnet50");
+        assert_eq!((s.v, s.e, s.t), (512, 512, 20));
+        assert_eq!(s.inputs.len(), 5);
+        assert_eq!(s.inputs[0].dims, vec![69, 128]);
+        assert_eq!(s.inputs[3].dtype, DType::I32);
+        assert_eq!(s.inputs[4].dims, Vec::<usize>::new());
+        assert_eq!(s.inputs[4].numel(), 1);
+        assert_eq!(s.outputs, vec!["z", "scores"]);
+    }
+
+    #[test]
+    fn input_index_lookup() {
+        let s = ArtifactSpec::parse(SAMPLE).unwrap();
+        assert_eq!(s.input_index("x0"), Some(2));
+        assert_eq!(s.input_index("nope"), None);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        assert!(ArtifactSpec::parse("fn f\nin a f64 3\nout y\n").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(ArtifactSpec::parse("# nothing\n").is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! Host-side tensors: the coordinator's own buffers, converted to/from
+//! PJRT literals at the executable boundary.
+
+use anyhow::{bail, Result};
+
+use super::spec::{DType, InputSpec};
+use crate::util::Rng;
+
+/// A host tensor (row-major).
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    U32 { dims: Vec<usize>, data: Vec<u32> },
+}
+
+impl Tensor {
+    pub fn zeros(dtype: DType, dims: &[usize]) -> Tensor {
+        let n = dims.iter().product::<usize>().max(1);
+        match dtype {
+            DType::F32 => Tensor::F32 { dims: dims.to_vec(), data: vec![0.0; n] },
+            DType::I32 => Tensor::I32 { dims: dims.to_vec(), data: vec![0; n] },
+            DType::U32 => Tensor::U32 { dims: dims.to_vec(), data: vec![0; n] },
+        }
+    }
+
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+        Tensor::F32 { dims: dims.to_vec(), data }
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+        Tensor::I32 { dims: dims.to_vec(), data }
+    }
+
+    pub fn u32(dims: &[usize], data: Vec<u32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+        Tensor::U32 { dims: dims.to_vec(), data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32 { dims: vec![], data: vec![x] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } | Tensor::U32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+            Tensor::U32 { .. } => DType::U32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims().iter().product::<usize>().max(1)
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut Vec<f32> {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Tensor::I32 { data, .. } => data,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    /// Verify this tensor matches an input slot of a spec.
+    pub fn check_against(&self, spec: &InputSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!("input '{}': dtype {:?} != spec {:?}", spec.name, self.dtype(), spec.dtype);
+        }
+        if self.dims() != spec.dims.as_slice() {
+            bail!("input '{}': dims {:?} != spec {:?}", spec.name, self.dims(), spec.dims);
+        }
+        Ok(())
+    }
+
+    /// Convert to a PJRT literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::U32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read a literal back into a host tensor of the same dtype/shape as
+    /// `self` (used to round-trip params through the train step).
+    pub fn from_literal(lit: &xla::Literal, dtype: DType, dims: &[usize]) -> Result<Tensor> {
+        Ok(match dtype {
+            DType::F32 => Tensor::f32(dims, lit.to_vec::<f32>()?),
+            DType::I32 => Tensor::i32(dims, lit.to_vec::<i32>()?),
+            DType::U32 => Tensor::u32(dims, lit.to_vec::<u32>()?),
+        })
+    }
+}
+
+/// Glorot-uniform matrix / zero vector initialization matching
+/// `model.init_params` on the python side (distribution match; the exact
+/// draws differ, which is fine — training starts from scratch in rust).
+pub fn glorot_init(dims: &[usize], rng: &mut Rng) -> Tensor {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    if dims.len() <= 1 {
+        return Tensor::f32(dims, vec![0.0; n]);
+    }
+    let fan_in = dims[0] as f64;
+    let fan_out = dims[dims.len() - 1] as f64;
+    let lim = (6.0 / (fan_in + fan_out)).sqrt();
+    let data = (0..n).map(|_| rng.range_f64(-lim, lim) as f32).collect();
+    Tensor::f32(dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_accessors() {
+        let t = Tensor::zeros(DType::F32, &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.as_f32(), &[0.0; 6]);
+        let s = Tensor::scalar_f32(5.0);
+        assert_eq!(s.numel(), 1);
+        assert_eq!(s.dims(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn check_against_spec() {
+        let spec = InputSpec { name: "x".into(), dtype: DType::F32, dims: vec![2, 2] };
+        assert!(Tensor::zeros(DType::F32, &[2, 2]).check_against(&spec).is_ok());
+        assert!(Tensor::zeros(DType::I32, &[2, 2]).check_against(&spec).is_err());
+        assert!(Tensor::zeros(DType::F32, &[4]).check_against(&spec).is_err());
+    }
+
+    #[test]
+    fn glorot_bounds_and_zero_bias() {
+        let mut rng = Rng::new(1);
+        let w = glorot_init(&[64, 32], &mut rng);
+        let lim = (6.0f64 / 96.0).sqrt() as f32;
+        assert!(w.as_f32().iter().all(|&x| x.abs() <= lim));
+        assert!(w.as_f32().iter().any(|&x| x != 0.0));
+        let b = glorot_init(&[32], &mut rng);
+        assert!(b.as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, DType::F32, &[2, 2]).unwrap();
+        assert_eq!(back.as_f32(), t.as_f32());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(&[3], vec![7, -1, 2]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, DType::I32, &[3]).unwrap();
+        assert_eq!(back.as_i32(), t.as_i32());
+    }
+}

@@ -1,0 +1,228 @@
+//! Device cost models for the heterogeneous execution simulator.
+//!
+//! Substitutes for the paper's testbed (§3.2): a 12th-gen Intel i9-12900K
+//! CPU, UHD 770 iGPU and Data Center GPU Flex 170 dGPU running OpenVINO.
+//! Each device is a roofline-style model: per-op launch overhead plus
+//! max(compute time, memory time), with separate effective throughputs for
+//! contraction ops (conv/matmul — what GPUs accelerate) and everything
+//! else. Constants are calibrated (see `calibration` tests in
+//! `harness::table2`) so the single-device latency *ratios* land near
+//! Table 2: GPU ≈ 1.07x CPU on Inception-V3, ≈ 2.05x on ResNet-50,
+//! ≈ 2.30x on BERT.
+
+use crate::graph::{OpKind, OpNode};
+
+/// Device identifier: index into the device list `D` (Definition 2.2).
+pub type DeviceId = usize;
+
+/// Device class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    IntegratedGpu,
+    DiscreteGpu,
+}
+
+/// A roofline cost model for one device.
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    pub kind: DeviceKind,
+    /// Effective FLOP/s on convolution ops at full occupancy.
+    pub flops_conv: f64,
+    /// Effective FLOP/s on matmul ops at full occupancy.
+    pub flops_matmul: f64,
+    /// Effective FLOP/s on all other compute ops.
+    pub flops_other: f64,
+    /// Effective memory bandwidth, bytes/s (drives data-movement ops).
+    pub mem_bw: f64,
+    /// Fixed per-op dispatch overhead, seconds. This is what makes deep
+    /// sequential graphs (Inception) GPU-unfriendly in the paper.
+    pub launch_overhead: f64,
+    /// Occupancy-saturation half point in *output elements*, applied to
+    /// contraction ops only: effective throughput is
+    /// peak * e / (e + sat_half_elems) for an op producing e elements.
+    /// A conv with a small spatial output cannot fill a wide GPU (few
+    /// parallel work items); elementwise ops are bandwidth-bound and
+    /// unaffected. 0 disables the term.
+    pub sat_half_elems: f64,
+    /// Independent execution lanes. A 16-core CPU runs independent branches
+    /// of the graph concurrently (OpenVINO CPU streams); GPU queues
+    /// serialize. This is what makes Inception-V3's wide blocks
+    /// CPU-friendly in Table 2.
+    pub lanes: usize,
+}
+
+impl DeviceModel {
+    /// Execution time of `op` on this device, seconds.
+    pub fn op_time(&self, op: &OpNode) -> f64 {
+        match op.kind {
+            // Graph boundary pseudo-ops cost nothing to "execute".
+            OpKind::Parameter | OpKind::Result | OpKind::Constant => 0.0,
+            _ => {
+                let fl = op.flops();
+                let peak = match op.kind {
+                    OpKind::Convolution | OpKind::GroupConvolution => self.flops_conv,
+                    OpKind::MatMul => self.flops_matmul,
+                    _ => self.flops_other,
+                };
+                // Occupancy saturation: contractions with few output
+                // elements see a fraction of peak.
+                let eff = if op.kind.is_contraction() && self.sat_half_elems > 0.0 && fl > 0.0 {
+                    let e = op.out_elems() as f64;
+                    peak * e / (e + self.sat_half_elems)
+                } else {
+                    peak
+                };
+                let compute = if fl > 0.0 { fl / eff } else { 0.0 };
+                let memory = op.out_bytes() / self.mem_bw;
+                self.launch_overhead + compute.max(memory)
+            }
+        }
+    }
+}
+
+/// The interconnect between two devices (PCIe-like for the dGPU; shared
+/// memory for CPU<->iGPU).
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Per-transfer latency, seconds.
+    pub latency: f64,
+    /// Bandwidth, bytes/s.
+    pub bandwidth: f64,
+}
+
+impl LinkModel {
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.bandwidth
+    }
+}
+
+/// The full testbed: device list + link matrix.
+#[derive(Debug, Clone)]
+pub struct Testbed {
+    pub devices: Vec<DeviceModel>,
+    /// links[a][b] = cost model for moving a tensor from device a to b.
+    pub links: Vec<Vec<LinkModel>>,
+}
+
+/// Devices the *placer* chooses between (the paper excludes the iGPU from
+/// placement — §4 Limitations — but OpenVINO baselines may still pick it).
+pub const PLACEABLE: [DeviceId; 2] = [CPU, DGPU];
+
+pub const CPU: DeviceId = 0;
+pub const IGPU: DeviceId = 1;
+pub const DGPU: DeviceId = 2;
+
+impl Testbed {
+    /// The calibrated default testbed (see module docs).
+    pub fn paper() -> Testbed {
+        let cpu = DeviceModel {
+            name: "CPU (i9-12900K)",
+            kind: DeviceKind::Cpu,
+            flops_conv: 1.15e12,
+            flops_matmul: 1.05e12,
+            flops_other: 2.4e11,
+            mem_bw: 6.0e10,
+            launch_overhead: 1.2e-6,
+            sat_half_elems: 2.0e3,
+            lanes: 2,
+        };
+        let igpu = DeviceModel {
+            name: "GPU.0 (UHD 770)",
+            kind: DeviceKind::IntegratedGpu,
+            flops_conv: 7.0e11,
+            flops_matmul: 6.0e11,
+            flops_other: 1.5e11,
+            mem_bw: 5.0e10,
+            launch_overhead: 9.0e-6,
+            sat_half_elems: 2.0e5,
+            lanes: 1,
+        };
+        let dgpu = DeviceModel {
+            name: "GPU.1 (Flex 170)",
+            kind: DeviceKind::DiscreteGpu,
+            flops_conv: 5.5e12,
+            flops_matmul: 1.2e13,
+            flops_other: 1.5e12,
+            mem_bw: 4.5e11,
+            launch_overhead: 3.5e-6,
+            sat_half_elems: 1.0e5,
+            lanes: 1,
+        };
+        let same = LinkModel { latency: 0.0, bandwidth: f64::INFINITY };
+        let shared = LinkModel { latency: 4.0e-6, bandwidth: 2.5e10 };
+        let pcie = LinkModel { latency: 1.1e-5, bandwidth: 1.1e10 };
+        let links = vec![
+            vec![same, shared, pcie],
+            vec![shared, same, pcie],
+            vec![pcie, pcie, same],
+        ];
+        Testbed { devices: vec![cpu, igpu, dgpu], links }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpAttrs, OpNode};
+
+    fn big_conv() -> OpNode {
+        OpNode::new("c", OpKind::Convolution, vec![1, 256, 56, 56])
+            .with_attrs(OpAttrs { taps: 9, reduce_dim: 256, groups: 1 })
+    }
+
+    fn tiny_relu() -> OpNode {
+        OpNode::new("r", OpKind::Relu, vec![1, 16])
+    }
+
+    #[test]
+    fn dgpu_faster_on_big_contractions() {
+        let tb = Testbed::paper();
+        let op = big_conv();
+        assert!(tb.devices[DGPU].op_time(&op) < tb.devices[CPU].op_time(&op));
+    }
+
+    #[test]
+    fn cpu_faster_on_tiny_ops() {
+        // Launch overhead dominates tiny ops: CPU wins.
+        let tb = Testbed::paper();
+        let op = tiny_relu();
+        assert!(tb.devices[CPU].op_time(&op) < tb.devices[DGPU].op_time(&op));
+    }
+
+    #[test]
+    fn igpu_never_best_on_either_class() {
+        // Matches the paper's limitation note: iGPU always dominated.
+        let tb = Testbed::paper();
+        for op in [big_conv(), tiny_relu()] {
+            let t = [CPU, IGPU, DGPU].map(|d| tb.devices[d].op_time(&op));
+            assert!(t[1] > t[0].min(t[2]), "iGPU best on {:?}", op.kind);
+        }
+    }
+
+    #[test]
+    fn boundary_ops_free() {
+        let tb = Testbed::paper();
+        let p = OpNode::new("p", OpKind::Parameter, vec![1, 3, 299, 299]);
+        assert_eq!(tb.devices[CPU].op_time(&p), 0.0);
+    }
+
+    #[test]
+    fn transfer_monotone_in_bytes() {
+        let tb = Testbed::paper();
+        let l = tb.links[CPU][DGPU];
+        assert!(l.transfer_time(1e6) < l.transfer_time(1e7));
+        assert!(l.transfer_time(0.0) >= l.latency);
+    }
+
+    #[test]
+    fn same_device_transfer_free() {
+        let tb = Testbed::paper();
+        assert_eq!(tb.links[CPU][CPU].transfer_time(1e9), 0.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Minimal benchmark harness (the offline crate set has no criterion).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that calls
+//! `bench_fn` per measured case: warmup, then N timed iterations, then a
+//! median/mean/min report line. Output is stable, grep-able text the
+//! EXPERIMENTS.md perf log quotes directly.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} iters {:>5}  median {:>12}  mean {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs; prints and returns
+/// the result. `f` should return something observable to keep the
+/// optimizer honest (its value is black-boxed here).
+pub fn bench_fn<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: stats::median(&samples),
+        mean_ns: stats::mean(&samples),
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    };
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench_fn("noop-ish", 2, 16, || (0..1000).sum::<usize>());
+        assert_eq!(r.iters, 16);
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.median_ns > 0.0);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert!(fmt_ns(1.5e9).contains("s"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.0e3).contains("us"));
+        assert!(fmt_ns(42.0).contains("ns"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Shared utilities: deterministic PRNG, statistics helpers, and a small
+//! property-testing harness (the offline crate set has no `proptest`).
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,98 @@
+//! Minimal property-testing harness.
+//!
+//! The offline crate set has no `proptest`, so invariant tests use this:
+//! a seeded case generator plus a runner that reports the failing seed for
+//! reproduction. Shrinking is by retry-with-smaller-size rather than
+//! structural shrinking — enough to localize failures in practice.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Max "size" hint passed to the generator (e.g. node count).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` cases with growing size. The
+/// property returns `Err(msg)` on violation; on failure we retry smaller
+/// sizes with the same case seed to report a minimal-ish reproduction.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // Ramp size up over the run so early cases are small.
+        let size = 2 + (cfg.max_size - 2) * case / cfg.cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size.max(2)) {
+            // Attempt to reproduce at smaller sizes for a tighter report.
+            let mut min_size = size.max(2);
+            let mut min_msg = msg;
+            let mut s = 2;
+            while s < min_size {
+                let mut r2 = Rng::new(case_seed);
+                if let Err(m2) = prop(&mut r2, s) {
+                    min_size = s;
+                    min_msg = m2;
+                    break;
+                }
+                s += 1;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, size {min_size}): {min_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", PropConfig::default(), |rng, _| {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            if (a + b - (b + a)).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", PropConfig { cases: 4, ..Default::default() }, |_, _| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn sizes_ramp_within_bounds() {
+        let cfg = PropConfig { cases: 32, max_size: 40, ..Default::default() };
+        let mut max_seen = 0usize;
+        check("size-bounds", cfg, |_, size| {
+            if size < 2 || size > 40 {
+                return Err(format!("size {size} out of bounds"));
+            }
+            if size > 2 {
+                max_seen = max_seen.max(size);
+            }
+            Ok(())
+        });
+        assert!(max_seen > 10, "sizes should ramp up, max {max_seen}");
+    }
+}

@@ -1,0 +1,108 @@
+//! Calibration harness: single-device latency ratios vs Table 2.
+use hsdag::models::Benchmark;
+use hsdag::sim::{execute, Placement, Testbed, CPU, DGPU, IGPU};
+
+#[test]
+fn single_device_ratios_match_table2_shape() {
+    // Paper Table 2 single-device ratios: Inception 1.07, ResNet 2.05,
+    // BERT 2.30 (CPU latency / dGPU latency). The calibrated simulator
+    // must land in the right ordering with each ratio within ~25%.
+    let targets = [1.067, 2.048, 2.303];
+    let tb = Testbed::paper();
+    for b in Benchmark::ALL {
+        let g = b.build();
+        let cpu = execute(&g, &Placement::all(g.n(), CPU), &tb).makespan;
+        let igpu = execute(&g, &Placement::all(g.n(), IGPU), &tb).makespan;
+        let dgpu = execute(&g, &Placement::all(g.n(), DGPU), &tb).makespan;
+        println!(
+            "{:<14} cpu={:.5}s igpu={:.5}s dgpu={:.5}s  cpu/dgpu={:.3}",
+            b.display(), cpu, igpu, dgpu, cpu / dgpu
+        );
+        let target = targets[Benchmark::ALL.iter().position(|&x| x == b).unwrap()];
+        let ratio = cpu / dgpu;
+        assert!(
+            (ratio - target).abs() / target < 0.25,
+            "{}: ratio {ratio:.3} vs paper {target:.3}",
+            b.display()
+        );
+        assert!(igpu > cpu && igpu > dgpu, "{}: iGPU must be dominated", b.display());
+    }
+}
+
+#[test]
+fn print_op_size_distribution() {
+    for b in Benchmark::ALL {
+        let g = b.build();
+        let mut contraction: Vec<f64> = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind.is_contraction())
+            .map(|n| n.flops())
+            .collect();
+        contraction.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total: f64 = contraction.iter().sum();
+        let other: f64 = g
+            .nodes
+            .iter()
+            .filter(|n| !n.kind.is_contraction())
+            .map(|n| n.flops())
+            .sum();
+        let n_real = g.nodes.iter().filter(|n| !n.kind.is_boundary()).count();
+        println!(
+            "{:<14} ncontr={} total_c={:.2}G other={:.2}G real_ops={} median_c={:.1}M p10={:.1}M p90={:.1}M",
+            b.display(),
+            contraction.len(),
+            total / 1e9,
+            other / 1e9,
+            n_real,
+            contraction[contraction.len() / 2] / 1e6,
+            contraction[contraction.len() / 10] / 1e6,
+            contraction[contraction.len() * 9 / 10] / 1e6,
+        );
+    }
+}
+
+/// Calibration *tool*, not a correctness test: sweeps dGPU model
+/// constants against the Table 2 ratio targets. Run explicitly with
+/// `cargo test --release --test calibration grid -- --ignored --nocapture`.
+#[test]
+#[ignore]
+fn grid_search_dgpu() {
+    let graphs: Vec<_> = Benchmark::ALL.iter().map(|b| b.build()).collect();
+    let targets = [1.067, 2.048, 2.303];
+    let mut best = (f64::INFINITY, 0.0, 0.0, 0.0, 0.0);
+    for &pc in &[5.0e12, 5.5e12, 6.0e12, 6.5e12, 7.0e12] {
+        for &pm in &[9.0e12, 10.0e12, 11.0e12, 12.0e12] {
+            for &sat in &[1.0e5, 1.4e5, 1.8e5, 2.4e5, 3.0e5] {
+                for &launch in &[3.0e-6, 3.5e-6, 4.0e-6, 4.5e-6] {
+                    let mut tb = Testbed::paper();
+                    tb.devices[DGPU].flops_conv = pc;
+                    tb.devices[DGPU].flops_matmul = pm;
+                    tb.devices[DGPU].sat_half_elems = sat;
+                    tb.devices[DGPU].launch_overhead = launch;
+                    let mut err = 0.0;
+                    for (g, t) in graphs.iter().zip(targets) {
+                        let cpu = execute(g, &Placement::all(g.n(), CPU), &tb).makespan;
+                        let gpu = execute(g, &Placement::all(g.n(), DGPU), &tb).makespan;
+                        let r = cpu / gpu;
+                        err += ((r - t) / t).powi(2);
+                    }
+                    if err < best.0 {
+                        best = (err, pc, pm, sat, launch);
+                    }
+                }
+            }
+        }
+    }
+    println!("best err={:.4} pc={:.1e} pm={:.1e} sat={:.1e} launch={:.1e}", best.0, best.1, best.2, best.3, best.4);
+    let mut tb = Testbed::paper();
+    tb.devices[DGPU].flops_conv = best.1;
+    tb.devices[DGPU].flops_matmul = best.2;
+    tb.devices[DGPU].sat_half_elems = best.3;
+    tb.devices[DGPU].launch_overhead = best.4;
+    for (g, b) in graphs.iter().zip(Benchmark::ALL) {
+        let cpu = execute(g, &Placement::all(g.n(), CPU), &tb).makespan;
+        let gpu = execute(g, &Placement::all(g.n(), DGPU), &tb).makespan;
+        println!("  {:<14} ratio={:.3}", b.display(), cpu / gpu);
+    }
+}
