@@ -71,12 +71,12 @@ fn main() -> anyhow::Result<()> {
     let res = agent.search(&env, &mut engine, 12)?;
 
     let gpu = env.latency(&vec![1; env.n_nodes]);
-    println!("CPU-only  {:.3} ms", env.cpu_latency * 1e3);
+    println!("CPU-only  {:.3} ms", env.ref_latency * 1e3);
     println!("GPU-only  {:.3} ms", gpu * 1e3);
     println!(
         "HSDAG     {:.3} ms  ({:.1}% vs CPU-only) in {:.1}s of search",
         res.best_latency * 1e3,
-        res.speedup_vs(env.cpu_latency),
+        res.speedup_vs(env.ref_latency),
         res.wall_secs
     );
     // Show where the groups landed.

@@ -56,12 +56,18 @@ fn main() {
         part.cut_fraction(wg)
     );
 
-    // Static baselines on the simulator.
-    let tb = Testbed::paper();
-    println!("\nstatic baselines (simulated inference latency):");
-    for m in ["cpu", "gpu", "openvino-cpu", "openvino-gpu"] {
-        let lat = baselines::baseline_latency(m, &g, &tb).unwrap();
-        println!("  {m:<13} {:.3} ms", lat * 1e3);
+    // Static baselines on the simulator, on the default testbed and the
+    // 3-device paper testbed (same hardware, wider action space).
+    for tb in [Testbed::cpu_gpu(), Testbed::paper3()] {
+        println!(
+            "\nstatic baselines on testbed {} ({} placement targets):",
+            tb.id,
+            tb.n_actions()
+        );
+        for m in baselines::BASELINE_NAMES {
+            let lat = baselines::baseline_latency(m, &g, &tb).unwrap();
+            println!("  {m:<13} {:.3} ms", lat * 1e3);
+        }
     }
     println!("\nnext: cargo run --release --example end_to_end");
 }

@@ -23,8 +23,24 @@ FEAT_DIM = 69
 # hidden_channel (Table 6).
 HIDDEN = 128
 
-# Placeable devices |D| (CPU, dGPU — the paper excludes the iGPU).
-N_DEVICES = 2
+# Placeable devices |D|. Default 2 (the paper's `cpu_gpu` testbed: CPU +
+# dGPU, iGPU excluded). Override with the ND environment variable to lower
+# policy heads for a wider testbed (e.g. ND=3 for `paper3`, ND=1+k for
+# `multi_gpu:<k>`); the rust runtime checks the spec's nd against the
+# selected testbed at agent construction.
+import os as _os
+
+try:
+    N_DEVICES = int(_os.environ.get("ND", "2"))
+except ValueError:
+    raise ValueError(
+        f"ND environment variable must be an integer number of placement "
+        f"targets, got {_os.environ.get('ND')!r}"
+    ) from None
+if N_DEVICES < 1:
+    # nd=0 is the rust runtime's "legacy spec" sentinel (read back as 2),
+    # so a zero/negative-width head must never be lowered.
+    raise ValueError(f"ND must be >= 1, got {N_DEVICES}")
 
 # update_timestep (Table 6): buffered steps per policy update.
 BUFFER = 20

@@ -12,7 +12,8 @@ use hsdag::models::Benchmark;
 use hsdag::parsing::parse;
 use hsdag::rl::{Env, HsdagAgent};
 use hsdag::runtime::Engine;
-use hsdag::sim::{execute, Placement, Testbed, CPU, DGPU};
+use hsdag::baselines::random_placement;
+use hsdag::sim::{execute, Testbed};
 use hsdag::util::bench::bench_fn;
 use hsdag::util::Rng;
 
@@ -22,8 +23,7 @@ fn main() {
     for b in Benchmark::ALL {
         let g = b.build();
         let mut rng = Rng::new(7);
-        let placement =
-            Placement((0..g.n()).map(|_| [CPU, DGPU][rng.below(2)]).collect());
+        let placement = random_placement(&g, &tb, &mut rng);
         bench_fn(&format!("sim/execute/{}", b.id()), 3, 30, || {
             execute(&g, &placement, &tb).makespan
         });

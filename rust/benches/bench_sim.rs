@@ -1,0 +1,60 @@
+//! Scheduler micro-bench: the lazy-BinaryHeap list scheduler (`execute`)
+//! against the retained linear re-scan reference (`execute_reference`),
+//! on the three paper benchmarks across every registered testbed plus a
+//! wide synthetic DAG where the ready set actually gets large (the
+//! re-scan is O(|ready|) per scheduled op, so wide graphs are where the
+//! heap pays off).
+//!
+//!   cargo bench --bench bench_sim
+//!
+//! Quote the heap/ vs scan/ lines as the before/after in perf notes.
+
+use hsdag::baselines::random_placement;
+use hsdag::graph::CompGraph;
+use hsdag::models::Benchmark;
+use hsdag::sim::{execute, execute_reference, Testbed};
+use hsdag::util::bench::bench_fn;
+use hsdag::util::Rng;
+
+fn main() {
+    println!("== benchmark graphs ==");
+    for tb in Testbed::registered() {
+        for b in Benchmark::ALL {
+            let g = b.build();
+            let mut rng = Rng::new(11);
+            let p = random_placement(&g, &tb, &mut rng);
+            let heap = bench_fn(&format!("sim/heap/{}/{}", tb.id, b.id()), 3, 30, || {
+                execute(&g, &p, &tb).makespan
+            });
+            let scan = bench_fn(&format!("sim/scan/{}/{}", tb.id, b.id()), 3, 30, || {
+                execute_reference(&g, &p, &tb).makespan
+            });
+            println!(
+                "  -> heap/scan median ratio {:.2}x",
+                scan.median_ns / heap.median_ns.max(1.0)
+            );
+            // The two schedulers must agree exactly (also enforced by the
+            // differential tests in sim::scheduler).
+            assert_eq!(
+                execute(&g, &p, &tb).makespan,
+                execute_reference(&g, &p, &tb).makespan
+            );
+        }
+    }
+
+    println!("\n== wide synthetic DAG (large ready set) ==");
+    let mut rng = Rng::new(5);
+    let g = CompGraph::random(&mut rng, 3000, 1500);
+    let tb = Testbed::multi_gpu(8);
+    let p = random_placement(&g, &tb, &mut rng);
+    let heap = bench_fn("sim/heap/random3k/multi_gpu:8", 2, 15, || {
+        execute(&g, &p, &tb).makespan
+    });
+    let scan = bench_fn("sim/scan/random3k/multi_gpu:8", 2, 15, || {
+        execute_reference(&g, &p, &tb).makespan
+    });
+    println!(
+        "  -> heap/scan median ratio {:.2}x",
+        scan.median_ns / heap.median_ns.max(1.0)
+    );
+}

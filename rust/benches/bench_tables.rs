@@ -31,8 +31,7 @@ fn main() {
         let g = b.build();
         let tb = hsdag::sim::Testbed::paper();
         bench_fn(&format!("table2/static_baselines/{}", b.id()), 1, 10, || {
-            ["cpu", "gpu", "openvino-cpu", "openvino-gpu"]
-                .map(|m| baselines::baseline_latency(m, &g, &tb).unwrap())
+            baselines::BASELINE_NAMES.map(|m| baselines::baseline_latency(m, &g, &tb).unwrap())
         });
     }
     let cfg = Config { seed: 1, ..Default::default() };

@@ -38,6 +38,8 @@ COMMANDS
 
 COMMON FLAGS
   --bench inception|resnet|bert     benchmark (default resnet)
+  --testbed ID                      device set: cpu_gpu | paper3 | multi_gpu:<k>
+                                    (default cpu_gpu — the paper's 2-way CPU/dGPU setup)
   --episodes N                      RL search episodes (default 30)
   --seed N                          RNG seed (default 0)
   --artifacts DIR                   artifacts directory (default artifacts)
@@ -99,18 +101,21 @@ impl Cli {
 
     /// Assemble the run Config from flags.
     pub fn config(&self) -> Result<Config> {
-        let mut cfg = Config::default();
-        cfg.seed = self.usize_flag("seed", 0)? as u64;
-        cfg.artifacts_dir = self.str_flag("artifacts", "artifacts");
-        cfg.max_episodes = self.usize_flag("episodes", 30)?;
-        if self.flags.contains_key("no-baseline") {
-            cfg.use_baseline = false;
-        }
-        cfg.features = FeatureConfig {
-            no_shape: self.flags.contains_key("no-shape"),
-            no_node_id: self.flags.contains_key("no-node-id"),
-            no_structural: self.flags.contains_key("no-structural"),
+        let cfg = Config {
+            seed: self.usize_flag("seed", 0)? as u64,
+            artifacts_dir: self.str_flag("artifacts", "artifacts"),
+            max_episodes: self.usize_flag("episodes", 30)?,
+            testbed: self.str_flag("testbed", "cpu_gpu"),
+            use_baseline: !self.flags.contains_key("no-baseline"),
+            features: FeatureConfig {
+                no_shape: self.flags.contains_key("no-shape"),
+                no_node_id: self.flags.contains_key("no-node-id"),
+                no_structural: self.flags.contains_key("no-structural"),
+            },
+            ..Config::default()
         };
+        // Fail fast on typos (the registry error names the known ids).
+        cfg.resolve_testbed()?;
         Ok(cfg)
     }
 }
@@ -150,6 +155,7 @@ mod tests {
         let cfg = c.config().unwrap();
         assert_eq!(cfg.seed, 0);
         assert!(cfg.use_baseline);
+        assert_eq!(cfg.testbed, "cpu_gpu");
         assert_eq!(c.bench().unwrap(), Benchmark::ResNet50);
     }
 
@@ -157,5 +163,25 @@ mod tests {
     fn ablation_flags_set_features() {
         let c = parse(&argv("train --no-shape")).unwrap();
         assert!(c.config().unwrap().features.no_shape);
+    }
+
+    #[test]
+    fn testbed_flag_selects_device_set() {
+        let c = parse(&argv("train --testbed paper3")).unwrap();
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.testbed, "paper3");
+        assert_eq!(cfg.num_devices(), 3);
+
+        let c = parse(&argv("train --testbed multi_gpu:4")).unwrap();
+        assert_eq!(c.config().unwrap().num_devices(), 5);
+    }
+
+    #[test]
+    fn unknown_testbed_rejected_early() {
+        let c = parse(&argv("train --testbed warehouse")).unwrap();
+        let err = c.config();
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("warehouse") && msg.contains("multi_gpu"), "{msg}");
     }
 }

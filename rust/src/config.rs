@@ -2,14 +2,22 @@
 //!
 //! Every knob defaults to the paper's published value; the CLI can
 //! override any of them (`hsdag train --episodes 50 --seed 7 ...`).
+//! The placement device set is selected by `testbed` (a `Testbed`
+//! registry id) — `num_devices` is no longer a free knob but derived from
+//! the resolved testbed, so the policy head, the baselines and the
+//! simulator can never disagree about the action space.
+
+use anyhow::Result;
 
 use crate::features::FeatureConfig;
+use crate::sim::Testbed;
 
 /// Table 6 hyper-parameters plus coordinator knobs.
 #[derive(Debug, Clone)]
 pub struct Config {
-    /// num_devices: placeable devices (CPU, dGPU).
-    pub num_devices: usize,
+    /// Testbed registry id (`cpu_gpu`, `paper3`, `multi_gpu:<k>`); decides
+    /// the number and identity of placement targets.
+    pub testbed: String,
     /// hidden_channel.
     pub hidden: usize,
     /// learning_rate (lives in the AOT'd train step; recorded here for
@@ -44,7 +52,7 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Self {
         Config {
-            num_devices: 2,
+            testbed: "cpu_gpu".to_string(),
             hidden: 128,
             learning_rate: 1e-4,
             max_episodes: 100,
@@ -63,10 +71,29 @@ impl Default for Config {
 }
 
 impl Config {
+    /// Resolve the configured testbed id against the registry.
+    pub fn resolve_testbed(&self) -> Result<Testbed> {
+        Testbed::by_id(&self.testbed).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown testbed '{}' (known: {})",
+                self.testbed,
+                Testbed::registry_help()
+            )
+        })
+    }
+
+    /// num_devices as Table 6 reports it: the action-space size of the
+    /// resolved testbed (0 if the id is unknown — surfaced as an error at
+    /// `Env` construction).
+    pub fn num_devices(&self) -> usize {
+        Testbed::by_id(&self.testbed).map(|t| t.n_actions()).unwrap_or(0)
+    }
+
     /// Render as the Table 6 parameter block.
     pub fn table6(&self) -> String {
         format!(
-            "num_devices          {}\n\
+            "testbed              {}\n\
+             num_devices          {}\n\
              hidden_channel       {}\n\
              layer_trans          2\n\
              layer_gnn            2\n\
@@ -81,7 +108,8 @@ impl Config {
              update_timestep      {}\n\
              K_epochs             {}\n\
              gamma                {}\n",
-            self.num_devices,
+            self.testbed,
+            self.num_devices(),
             self.hidden,
             self.dropout_network,
             self.learning_rate,
@@ -100,7 +128,8 @@ mod tests {
     #[test]
     fn defaults_match_table6() {
         let c = Config::default();
-        assert_eq!(c.num_devices, 2);
+        assert_eq!(c.testbed, "cpu_gpu");
+        assert_eq!(c.num_devices(), 2);
         assert_eq!(c.hidden, 128);
         assert_eq!(c.learning_rate, 1e-4);
         assert_eq!(c.max_episodes, 100);
@@ -111,8 +140,27 @@ mod tests {
     #[test]
     fn table6_renders_all_rows() {
         let t = Config::default().table6();
-        for key in ["num_devices", "hidden_channel", "learning_rate", "update_timestep", "K_epochs"] {
+        for key in [
+            "testbed",
+            "num_devices",
+            "hidden_channel",
+            "learning_rate",
+            "update_timestep",
+            "K_epochs",
+        ] {
             assert!(t.contains(key), "{key}");
         }
+        assert!(t.contains("num_devices          2"), "{t}");
+    }
+
+    #[test]
+    fn num_devices_follows_testbed() {
+        let c = Config { testbed: "paper3".to_string(), ..Config::default() };
+        assert_eq!(c.num_devices(), 3);
+        let c = Config { testbed: "multi_gpu:6".to_string(), ..Config::default() };
+        assert_eq!(c.num_devices(), 7);
+        let c = Config { testbed: "nope".to_string(), ..Config::default() };
+        assert_eq!(c.num_devices(), 0);
+        assert!(c.resolve_testbed().is_err());
     }
 }

@@ -20,7 +20,7 @@ pub const VARIANTS: [FeatureConfig; 4] = [
 pub fn run(cfg: &Config, episodes: usize) -> Result<Table> {
     let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
     let mut t = Table::new(
-        "Table 3: Feature ablations (speedup % vs CPU-only)",
+        &format!("Table 3: Feature ablations (speedup % vs reference; testbed {})", cfg.testbed),
         &[
             "Variant",
             "Incep l_P(G)", "Incep Speedup %",
@@ -33,8 +33,8 @@ pub fn run(cfg: &Config, episodes: usize) -> Result<Table> {
     let mut cpu_ref = Vec::new();
     for b in Benchmark::ALL {
         let env = Env::new(b, cfg)?;
-        cpu_ref.push(env.cpu_latency);
-        cpu_row.push(format!("{:.5}", env.cpu_latency));
+        cpu_ref.push(env.ref_latency);
+        cpu_row.push(format!("{:.5}", env.ref_latency));
         cpu_row.push("0".into());
     }
     t.row(cpu_row);

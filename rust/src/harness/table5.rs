@@ -11,8 +11,13 @@ use crate::models::Benchmark;
 /// Render the search-cost table from a completed Table-2 run (the searches
 /// are shared; Table 5 is their cost view).
 pub fn render(results: &Table2Results) -> Table {
+    let tb_label =
+        if results.testbed.is_empty() { "cpu_gpu" } else { results.testbed.as_str() };
     let mut t = Table::new(
-        "Table 5: Empirical search runtime (seconds; peak working set in parentheses)",
+        &format!(
+            "Table 5: Empirical search runtime (seconds; peak working set in parentheses; \
+             testbed {tb_label})"
+        ),
         &["Model", "Inception-V3", "ResNet", "BERT"],
     );
     for method in ["Placeto", "RNN-based", "HSDAG"] {

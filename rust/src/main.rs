@@ -60,10 +60,13 @@ fn run(c: Cli) -> Result<()> {
             let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
             let env = Env::new(bench, &cfg)?;
             println!(
-                "searching {} ({} working nodes, {} edges) for {episodes} episodes on {}",
+                "searching {} ({} working nodes, {} edges) on testbed {} ({} placement targets) \
+                 for {episodes} episodes on {}",
                 bench.display(),
                 env.n_nodes,
                 env.n_edges,
+                env.testbed.id,
+                env.n_actions(),
                 engine.platform(),
             );
             let mut agent = HsdagAgent::new(&env, &mut engine, &cfg)?;
@@ -75,10 +78,10 @@ fn run(c: Cli) -> Result<()> {
                 );
             }
             println!(
-                "best latency {:.5}s  (speedup {:.1}% vs CPU-only {:.5}s)  wall {:.1}s",
+                "best latency {:.5}s  (speedup {:.1}% vs reference {:.5}s)  wall {:.1}s",
                 res.best_latency,
-                res.speedup_vs(env.cpu_latency),
-                env.cpu_latency,
+                res.speedup_vs(env.ref_latency),
+                env.ref_latency,
                 res.wall_secs
             );
         }
@@ -86,18 +89,20 @@ fn run(c: Cli) -> Result<()> {
             let bench = c.bench()?;
             let method = c.str_flag("method", "gpu");
             let g = bench.build();
-            let tb = hsdag::sim::Testbed::paper();
+            let tb = cfg.resolve_testbed()?;
             match baselines::baseline_latency(&method, &g, &tb) {
                 Some(lat) => {
                     let cpu = baselines::baseline_latency("cpu", &g, &tb).unwrap();
                     println!(
-                        "{} under {method}: {lat:.5}s ({:+.1}% vs CPU-only)",
+                        "{} under {method} on testbed {}: {lat:.5}s ({:+.1}% vs reference)",
                         bench.display(),
+                        tb.id,
                         100.0 * (1.0 - lat / cpu)
                     );
                 }
                 None => anyhow::bail!(
-                    "unknown method '{method}' (cpu|gpu|openvino-cpu|openvino-gpu)"
+                    "unknown method '{method}' ({})",
+                    baselines::BASELINE_NAMES.join("|")
                 ),
             }
         }

@@ -56,6 +56,16 @@ impl BaselineAgent {
         let train_name = format!("{bench}_{}_train", kind.id());
         let train = engine.load(&train_name).context("loading baseline train artifact")?;
         anyhow::ensure!(train.spec.v == env.v_pad, "artifact V mismatch");
+        let artifact_nd = train.spec.nd_or_legacy();
+        anyhow::ensure!(
+            artifact_nd == env.n_actions(),
+            "artifact lowered for {} devices but testbed '{}' exposes {} placement targets \
+             (re-run `make artifacts` with ND={})",
+            artifact_nd,
+            env.testbed.id,
+            env.n_actions(),
+            env.n_actions()
+        );
         let mut rng = Rng::new(cfg.seed ^ 0xBA5E);
         let params = ParamStore::init_from_spec(&train.spec, &mut rng)?;
 
@@ -110,7 +120,8 @@ impl BaselineAgent {
         let fwd = engine.load(&self.fwd_name)?;
         let outs = fwd.run(&self.fwd_inputs(env))?;
         let logits: Vec<f32> = outs[0].to_vec()?;
-        let nd = self.cfg.num_devices;
+        // K-device generalization: row stride follows the env's testbed.
+        let nd = env.n_actions();
 
         // Sample per-node actions in the policy's own node order.
         let mut policy_actions = vec![0usize; env.n_nodes];

@@ -5,6 +5,13 @@
 //! normalized adjacency on the *co-located* graph -> pad everything to the
 //! artifact's static capacities. The policy then works on the co-located
 //! graph; placements are expanded back to original nodes for simulation.
+//!
+//! The action space is owned by the injected `Testbed`: action index `a`
+//! means "place this group on `testbed.placeable[a]`", and the reward is
+//! normalized by the latency of the testbed's reference device. The
+//! default `cpu_gpu` testbed reproduces the paper's 2-way CPU/dGPU
+//! placement exactly; `paper3` / `multi_gpu:<k>` widen the action space
+//! without touching any other layer.
 
 use anyhow::{bail, Result};
 
@@ -14,11 +21,8 @@ use crate::features::{extract, normalized_adjacency, FeatureConfig, Features};
 use crate::graph::CompGraph;
 use crate::models::Benchmark;
 use crate::runtime::Tensor;
-use crate::sim::{execute, measure, Placement, Testbed, CPU, DGPU};
+use crate::sim::{execute, measure, Placement, Testbed};
 use crate::util::Rng;
-
-/// Device list the policy chooses from (action index -> simulator device).
-pub const ACTION_DEVICES: [usize; 2] = [CPU, DGPU];
 
 /// A fully-prepared placement environment.
 pub struct Env {
@@ -29,6 +33,7 @@ pub struct Env {
     pub colo: Coarsening,
     /// Feature extraction output on the working (co-located) graph.
     pub features: Features,
+    /// The device set this environment places onto (action space + links).
     pub testbed: Testbed,
     /// Padded capacities (artifact contract).
     pub v_pad: usize,
@@ -43,8 +48,9 @@ pub struct Env {
     pub edge_dst: Tensor,
     pub node_mask: Tensor,
     pub edge_mask: Tensor,
-    /// CPU-only reference latency (deterministic), the speedup denominator.
-    pub cpu_latency: f64,
+    /// Reference-device latency (deterministic), the speedup denominator.
+    /// On the paper testbeds the reference device is the CPU.
+    pub ref_latency: f64,
     /// Pre-converted PJRT literals for the constant tensors (perf: avoids
     /// re-serializing ~8 MB of features/adjacency on every policy call).
     pub lit: EnvLiterals,
@@ -65,16 +71,28 @@ impl Env {
         Self::with_features(bench, cfg, cfg.features)
     }
 
-    /// Build with explicit feature ablation switches (Table 3).
-    pub fn with_features(bench: Benchmark, _cfg: &Config, fcfg: FeatureConfig) -> Result<Env> {
-        Self::from_graph(bench, bench.build(), fcfg)
+    /// Build with explicit feature ablation switches (Table 3). The
+    /// testbed is taken from `cfg.testbed` (registry id).
+    pub fn with_features(bench: Benchmark, cfg: &Config, fcfg: FeatureConfig) -> Result<Env> {
+        Self::from_graph_on(bench, bench.build(), fcfg, cfg.resolve_testbed()?)
     }
 
-    /// Build an environment for an arbitrary computation graph, reusing the
-    /// AOT artifacts of `bench` (the graph's co-located form must fit that
-    /// benchmark's padded capacities). This is how downstream users place
-    /// their own models without re-lowering artifacts.
+    /// Build an environment for an arbitrary computation graph on the
+    /// default `cpu_gpu` testbed, reusing the AOT artifacts of `bench`
+    /// (the graph's co-located form must fit that benchmark's padded
+    /// capacities). This is how downstream users place their own models
+    /// without re-lowering artifacts.
     pub fn from_graph(bench: Benchmark, graph: CompGraph, fcfg: FeatureConfig) -> Result<Env> {
+        Self::from_graph_on(bench, graph, fcfg, Testbed::cpu_gpu())
+    }
+
+    /// Fully-injected construction: arbitrary graph *and* testbed.
+    pub fn from_graph_on(
+        bench: Benchmark,
+        graph: CompGraph,
+        fcfg: FeatureConfig,
+        testbed: Testbed,
+    ) -> Result<Env> {
         let colo = colocate(&graph);
         let wg = &colo.coarse;
         let (v_pad, e_pad) = (bench.padded_nodes(), bench.padded_edges());
@@ -115,9 +133,9 @@ impl Env {
             *m = 1.0;
         }
 
-        let testbed = Testbed::paper();
-        let cpu_latency =
-            execute(&graph, &Placement::all(graph.n(), CPU), &testbed).makespan;
+        // Reward denominator: the testbed's designated reference device.
+        let ref_latency =
+            execute(&graph, &Placement::all(graph.n(), testbed.reference), &testbed).makespan;
 
         let x0_t = Tensor::f32(&[v_pad, d], x0);
         let a_norm_t = Tensor::f32(&[v_pad, v_pad], a_norm);
@@ -150,7 +168,7 @@ impl Env {
             edge_dst: edst_t,
             node_mask: nmask_t,
             edge_mask: emask_t,
-            cpu_latency,
+            ref_latency,
             lit,
         })
     }
@@ -160,11 +178,18 @@ impl Env {
         &self.colo.coarse
     }
 
+    /// Size of the per-group action space (number of placement targets).
+    pub fn n_actions(&self) -> usize {
+        self.testbed.n_actions()
+    }
+
     /// Expand a working-graph placement (action indices) to a full
     /// original-node placement (simulator device ids).
     pub fn expand(&self, working_actions: &[usize]) -> Placement {
-        let devices: Vec<usize> =
-            working_actions.iter().map(|&a| ACTION_DEVICES[a]).collect();
+        let devices: Vec<usize> = working_actions
+            .iter()
+            .map(|&a| self.testbed.action_device(a))
+            .collect();
         Placement(self.colo.expand_placement(&devices))
     }
 
@@ -178,19 +203,25 @@ impl Env {
         measure(&self.graph, &self.expand(working_actions), &self.testbed, sigma, rng)
     }
 
-    /// Reward (the paper's r = 1/l, normalized by the CPU reference so
-    /// rewards sit in a sane range: r = l_cpu / l = speedup factor).
+    /// Reward (the paper's r = 1/l, normalized by the reference device so
+    /// rewards sit in a sane range: r = l_ref / l = speedup factor).
     pub fn reward(&self, latency: f64) -> f64 {
-        self.cpu_latency / latency
+        self.ref_latency / latency
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::DGPU;
 
     fn env(bench: Benchmark) -> Env {
         Env::new(bench, &Config::default()).unwrap()
+    }
+
+    fn env_on(bench: Benchmark, testbed_id: &str) -> Env {
+        let cfg = Config { testbed: testbed_id.to_string(), ..Config::default() };
+        Env::new(bench, &cfg).unwrap()
     }
 
     #[test]
@@ -222,10 +253,10 @@ mod tests {
     }
 
     #[test]
-    fn all_cpu_actions_reproduce_reference_latency() {
+    fn all_reference_actions_reproduce_reference_latency() {
         let e = env(Benchmark::InceptionV3);
         let lat = e.latency(&vec![0; e.n_nodes]);
-        assert!((lat - e.cpu_latency).abs() / e.cpu_latency < 1e-9);
+        assert!((lat - e.ref_latency).abs() / e.ref_latency < 1e-9);
         assert!((e.reward(lat) - 1.0).abs() < 1e-9);
     }
 
@@ -233,7 +264,47 @@ mod tests {
     fn gpu_actions_beat_cpu_on_bert() {
         let e = env(Benchmark::BertBase);
         let lat = e.latency(&vec![1; e.n_nodes]);
-        assert!(lat < e.cpu_latency);
+        assert!(lat < e.ref_latency);
         assert!(e.reward(lat) > 1.5);
+    }
+
+    #[test]
+    fn default_env_uses_two_actions() {
+        let e = env(Benchmark::ResNet50);
+        assert_eq!(e.n_actions(), 2);
+        assert_eq!(e.testbed.id, "cpu_gpu");
+    }
+
+    #[test]
+    fn paper3_env_widens_action_space() {
+        let e = env_on(Benchmark::ResNet50, "paper3");
+        assert_eq!(e.n_actions(), 3);
+        // Action 1 is the iGPU on paper3; every expanded device must be a
+        // valid testbed device.
+        let actions: Vec<usize> = (0..e.n_nodes).map(|v| v % 3).collect();
+        let p = e.expand(&actions);
+        assert!(p.0.iter().all(|&d| d < e.testbed.n_devices()));
+        assert!(e.latency(&actions).is_finite());
+    }
+
+    #[test]
+    fn multi_gpu_env_places_on_k_devices() {
+        let e = env_on(Benchmark::ResNet50, "multi_gpu:3");
+        assert_eq!(e.n_actions(), 4); // CPU + 3 GPUs
+        let actions: Vec<usize> = (0..e.n_nodes).map(|v| v % e.n_actions()).collect();
+        let lat = e.latency(&actions);
+        assert!(lat.is_finite() && lat > 0.0);
+        // Reference is still the CPU.
+        let cpu = e.latency(&vec![0; e.n_nodes]);
+        assert!((cpu - e.ref_latency).abs() / e.ref_latency < 1e-9);
+    }
+
+    #[test]
+    fn unknown_testbed_id_is_an_error() {
+        let cfg = Config { testbed: "tpu_pod".to_string(), ..Config::default() };
+        let err = Env::new(Benchmark::ResNet50, &cfg);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("tpu_pod"), "{msg}");
     }
 }

@@ -103,6 +103,18 @@ impl HsdagAgent {
         anyhow::ensure!(train.spec.v == env.v_pad, "artifact V mismatch");
         anyhow::ensure!(train.spec.e == env.e_pad, "artifact E mismatch");
         anyhow::ensure!(train.spec.t == cfg.update_timestep, "artifact T mismatch");
+        // The placer head's logit width must match the testbed's action
+        // space.
+        let artifact_nd = train.spec.nd_or_legacy();
+        anyhow::ensure!(
+            artifact_nd == env.n_actions(),
+            "artifact lowered for {} devices but testbed '{}' exposes {} placement targets \
+             (re-run `make artifacts` with ND={})",
+            artifact_nd,
+            env.testbed.id,
+            env.n_actions(),
+            env.n_actions()
+        );
         let mut rng = Rng::new(cfg.seed ^ 0x45DA6);
         let params = ParamStore::init_from_spec(&train.spec, &mut rng)?;
         let param_lits = params
@@ -182,7 +194,9 @@ impl HsdagAgent {
         let placer = engine.load(&self.placer_name)?;
         let pouts = placer.run_refs(&prefs)?;
         let logits: Vec<f32> = pouts[0].to_vec()?;
-        let nd = self.cfg.num_devices;
+        // Action-space width comes from the env's testbed, not the config:
+        // the artifact contract was validated against it at construction.
+        let nd = env.n_actions();
 
         // (4) Sample (or argmax) a device per group; expand; simulate.
         let mut group_devices = vec![0usize; part.n_groups];

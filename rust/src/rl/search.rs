@@ -31,8 +31,8 @@ pub struct SearchResult {
 }
 
 impl SearchResult {
-    pub fn speedup_vs(&self, cpu_latency: f64) -> f64 {
-        100.0 * (1.0 - self.best_latency / cpu_latency)
+    pub fn speedup_vs(&self, ref_latency: f64) -> f64 {
+        100.0 * (1.0 - self.best_latency / ref_latency)
     }
 }
 

@@ -52,6 +52,9 @@ pub struct ArtifactSpec {
     pub e: usize,
     /// Buffered steps T for train artifacts.
     pub t: usize,
+    /// Placement targets (action-space width) the policy head was lowered
+    /// at; 0 when the spec predates the field (treated as 2 downstream).
+    pub nd: usize,
     pub inputs: Vec<InputSpec>,
     pub outputs: Vec<String>,
 }
@@ -61,7 +64,7 @@ impl ArtifactSpec {
     pub fn parse(text: &str) -> Result<ArtifactSpec> {
         let mut fn_name = String::new();
         let mut bench = String::new();
-        let (mut v, mut e, mut t) = (0usize, 0usize, 0usize);
+        let (mut v, mut e, mut t, mut nd) = (0usize, 0usize, 0usize, 0usize);
         let mut inputs = Vec::new();
         let mut outputs = Vec::new();
         for (ln, line) in text.lines().enumerate() {
@@ -83,6 +86,7 @@ impl ArtifactSpec {
                             "v" => v = val,
                             "e" => e = val,
                             "t" => t = val,
+                            "nd" => nd = val,
                             _ => {}
                         }
                     }
@@ -109,12 +113,22 @@ impl ArtifactSpec {
         if fn_name.is_empty() || inputs.is_empty() {
             bail!("incomplete spec (fn='{fn_name}', {} inputs)", inputs.len());
         }
-        Ok(ArtifactSpec { fn_name, bench, v, e, t, inputs, outputs })
+        Ok(ArtifactSpec { fn_name, bench, v, e, t, nd, inputs, outputs })
     }
 
     /// Index of the input named `name`.
     pub fn input_index(&self, name: &str) -> Option<usize> {
         self.inputs.iter().position(|i| i.name == name)
+    }
+
+    /// Action-space width for testbed compatibility checks: specs
+    /// predating the `nd` field (nd=0) were all lowered at 2 devices.
+    pub fn nd_or_legacy(&self) -> usize {
+        if self.nd == 0 {
+            2
+        } else {
+            self.nd
+        }
     }
 }
 
@@ -141,6 +155,7 @@ out scores
         assert_eq!(s.fn_name, "resnet50_hsdag_fwd");
         assert_eq!(s.bench, "resnet50");
         assert_eq!((s.v, s.e, s.t), (512, 512, 20));
+        assert_eq!(s.nd, 2);
         assert_eq!(s.inputs.len(), 5);
         assert_eq!(s.inputs[0].dims, vec![69, 128]);
         assert_eq!(s.inputs[3].dtype, DType::I32);
@@ -154,6 +169,12 @@ out scores
         let s = ArtifactSpec::parse(SAMPLE).unwrap();
         assert_eq!(s.input_index("x0"), Some(2));
         assert_eq!(s.input_index("nope"), None);
+    }
+
+    #[test]
+    fn nd_defaults_to_zero_for_legacy_specs() {
+        let s = ArtifactSpec::parse("fn f\nbench b v=4 e=4 t=1\nin a f32 4\nout y\n").unwrap();
+        assert_eq!(s.nd, 0);
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //! `harness::table2`) so the single-device latency *ratios* land near
 //! Table 2: GPU ≈ 1.07x CPU on Inception-V3, ≈ 2.05x on ResNet-50,
 //! ≈ 2.30x on BERT.
+//!
+//! A `Testbed` is the full Definition-2.2 device set `D`: cost models,
+//! link matrix, the subset of devices a placer may target (`placeable`,
+//! one action per entry) and the reference device the reward is
+//! normalized against. Testbeds are addressable by string id through
+//! `Testbed::by_id` (`cpu_gpu`, `paper3`, `multi_gpu:<k>`), so the number
+//! of placement targets is a runtime parameter of the whole pipeline.
 
 use crate::graph::{OpKind, OpNode};
 
@@ -26,7 +33,7 @@ pub enum DeviceKind {
 /// A roofline cost model for one device.
 #[derive(Debug, Clone)]
 pub struct DeviceModel {
-    pub name: &'static str,
+    pub name: String,
     pub kind: DeviceKind,
     /// Effective FLOP/s on convolution ops at full occupancy.
     pub flops_conv: f64,
@@ -98,71 +105,193 @@ impl LinkModel {
     }
 }
 
-/// The full testbed: device list + link matrix.
+/// The full testbed: device list + link matrix + placement contract.
 #[derive(Debug, Clone)]
 pub struct Testbed {
+    /// Registry id (`cpu_gpu`, `paper3`, `multi_gpu:<k>`, ...).
+    pub id: String,
     pub devices: Vec<DeviceModel>,
     /// links[a][b] = cost model for moving a tensor from device a to b.
     pub links: Vec<Vec<LinkModel>>,
+    /// Devices the placer chooses between: action index -> device id.
+    /// The paper excludes the iGPU from placement (§4 Limitations), which
+    /// is why `cpu_gpu` models three devices but exposes two actions.
+    pub placeable: Vec<DeviceId>,
+    /// Reference device the reward denominator is computed on (the
+    /// "CPU-only" row of Table 2).
+    pub reference: DeviceId,
 }
 
-/// Devices the *placer* chooses between (the paper excludes the iGPU from
-/// placement — §4 Limitations — but OpenVINO baselines may still pick it).
-pub const PLACEABLE: [DeviceId; 2] = [CPU, DGPU];
-
+/// Device ids of the *paper* testbeds (`cpu_gpu` / `paper3`). Other
+/// testbeds (e.g. `multi_gpu:<k>`) define their own indexing; only
+/// device 0 is guaranteed to be the host CPU everywhere.
 pub const CPU: DeviceId = 0;
 pub const IGPU: DeviceId = 1;
 pub const DGPU: DeviceId = 2;
 
+/// The calibrated i9-12900K / UHD 770 / Flex 170 roofline models (see
+/// module docs) shared by the paper testbeds.
+fn paper_hardware() -> (Vec<DeviceModel>, Vec<Vec<LinkModel>>) {
+    let cpu = DeviceModel {
+        name: "CPU (i9-12900K)".to_string(),
+        kind: DeviceKind::Cpu,
+        flops_conv: 1.15e12,
+        flops_matmul: 1.05e12,
+        flops_other: 2.4e11,
+        mem_bw: 6.0e10,
+        launch_overhead: 1.2e-6,
+        sat_half_elems: 2.0e3,
+        lanes: 2,
+    };
+    let igpu = DeviceModel {
+        name: "GPU.0 (UHD 770)".to_string(),
+        kind: DeviceKind::IntegratedGpu,
+        flops_conv: 7.0e11,
+        flops_matmul: 6.0e11,
+        flops_other: 1.5e11,
+        mem_bw: 5.0e10,
+        launch_overhead: 9.0e-6,
+        sat_half_elems: 2.0e5,
+        lanes: 1,
+    };
+    let dgpu = DeviceModel {
+        name: "GPU.1 (Flex 170)".to_string(),
+        kind: DeviceKind::DiscreteGpu,
+        flops_conv: 5.5e12,
+        flops_matmul: 1.2e13,
+        flops_other: 1.5e12,
+        mem_bw: 4.5e11,
+        launch_overhead: 3.5e-6,
+        sat_half_elems: 1.0e5,
+        lanes: 1,
+    };
+    let same = LinkModel { latency: 0.0, bandwidth: f64::INFINITY };
+    let shared = LinkModel { latency: 4.0e-6, bandwidth: 2.5e10 };
+    let pcie = LinkModel { latency: 1.1e-5, bandwidth: 1.1e10 };
+    let links = vec![
+        vec![same, shared, pcie],
+        vec![shared, same, pcie],
+        vec![pcie, pcie, same],
+    ];
+    (vec![cpu, igpu, dgpu], links)
+}
+
 impl Testbed {
-    /// The calibrated default testbed (see module docs).
+    /// The default testbed: the paper's hardware with the paper's 2-way
+    /// CPU/dGPU action space (the iGPU is simulated but not placeable).
+    pub fn cpu_gpu() -> Testbed {
+        let (devices, links) = paper_hardware();
+        Testbed {
+            id: "cpu_gpu".to_string(),
+            devices,
+            links,
+            placeable: vec![CPU, DGPU],
+            reference: CPU,
+        }
+    }
+
+    /// Backwards-compatible alias for the calibrated default testbed.
     pub fn paper() -> Testbed {
-        let cpu = DeviceModel {
-            name: "CPU (i9-12900K)",
-            kind: DeviceKind::Cpu,
-            flops_conv: 1.15e12,
-            flops_matmul: 1.05e12,
-            flops_other: 2.4e11,
-            mem_bw: 6.0e10,
-            launch_overhead: 1.2e-6,
-            sat_half_elems: 2.0e3,
-            lanes: 2,
-        };
-        let igpu = DeviceModel {
-            name: "GPU.0 (UHD 770)",
-            kind: DeviceKind::IntegratedGpu,
-            flops_conv: 7.0e11,
-            flops_matmul: 6.0e11,
-            flops_other: 1.5e11,
-            mem_bw: 5.0e10,
-            launch_overhead: 9.0e-6,
-            sat_half_elems: 2.0e5,
-            lanes: 1,
-        };
-        let dgpu = DeviceModel {
-            name: "GPU.1 (Flex 170)",
-            kind: DeviceKind::DiscreteGpu,
-            flops_conv: 5.5e12,
-            flops_matmul: 1.2e13,
-            flops_other: 1.5e12,
-            mem_bw: 4.5e11,
-            launch_overhead: 3.5e-6,
-            sat_half_elems: 1.0e5,
-            lanes: 1,
-        };
+        Self::cpu_gpu()
+    }
+
+    /// The paper's hardware with all three devices placeable — the
+    /// configuration §4 calls out as future work.
+    pub fn paper3() -> Testbed {
+        let (devices, links) = paper_hardware();
+        Testbed {
+            id: "paper3".to_string(),
+            devices,
+            links,
+            placeable: vec![CPU, IGPU, DGPU],
+            reference: CPU,
+        }
+    }
+
+    /// A serving-style homogeneous cluster: one host CPU plus `k` dGPUs
+    /// behind PCIe, every device placeable, CPU as the reference.
+    pub fn multi_gpu(k: usize) -> Testbed {
+        let k = k.max(1);
+        let (paper_devices, _) = paper_hardware();
+        let cpu = paper_devices[CPU].clone();
+        let gpu_proto = paper_devices[DGPU].clone();
+        let mut devices = vec![cpu];
+        for i in 0..k {
+            let mut g = gpu_proto.clone();
+            g.name = format!("GPU.{i} (Flex 170)");
+            devices.push(g);
+        }
+        let n = devices.len();
         let same = LinkModel { latency: 0.0, bandwidth: f64::INFINITY };
-        let shared = LinkModel { latency: 4.0e-6, bandwidth: 2.5e10 };
         let pcie = LinkModel { latency: 1.1e-5, bandwidth: 1.1e10 };
-        let links = vec![
-            vec![same, shared, pcie],
-            vec![shared, same, pcie],
-            vec![pcie, pcie, same],
-        ];
-        Testbed { devices: vec![cpu, igpu, dgpu], links }
+        // Peer-to-peer GPU copies still cross the PCIe switch.
+        let links: Vec<Vec<LinkModel>> = (0..n)
+            .map(|a| (0..n).map(|b| if a == b { same } else { pcie }).collect())
+            .collect();
+        Testbed {
+            id: format!("multi_gpu:{k}"),
+            devices,
+            links,
+            placeable: (0..n).collect(),
+            reference: CPU,
+        }
+    }
+
+    /// Resolve a testbed from its registry id: `cpu_gpu` (alias `paper`),
+    /// `paper3`, or `multi_gpu:<k>` (bare `multi_gpu` defaults to k=4).
+    pub fn by_id(id: &str) -> Option<Testbed> {
+        match id {
+            "cpu_gpu" | "paper" => Some(Self::cpu_gpu()),
+            "paper3" => Some(Self::paper3()),
+            _ => {
+                let rest = id.strip_prefix("multi_gpu")?;
+                if rest.is_empty() {
+                    return Some(Self::multi_gpu(4));
+                }
+                let k: usize = rest.strip_prefix(':')?.parse().ok()?;
+                if k == 0 {
+                    return None;
+                }
+                Some(Self::multi_gpu(k))
+            }
+        }
+    }
+
+    /// The registry ids `by_id` understands (for `--help` / error text).
+    pub fn registry_help() -> &'static str {
+        "cpu_gpu | paper3 | multi_gpu:<k>"
+    }
+
+    /// One representative of each registered testbed family (used by the
+    /// plumbing property tests and the serving sweep).
+    pub fn registered() -> Vec<Testbed> {
+        vec![Self::cpu_gpu(), Self::paper3(), Self::multi_gpu(4)]
     }
 
     pub fn n_devices(&self) -> usize {
         self.devices.len()
+    }
+
+    /// Size of the policy action space.
+    pub fn n_actions(&self) -> usize {
+        self.placeable.len()
+    }
+
+    /// Map a policy action index to a simulator device id.
+    pub fn action_device(&self, action: usize) -> DeviceId {
+        self.placeable[action]
+    }
+
+    /// The designated accelerator: the placeable device with the highest
+    /// matmul throughput, first on ties (the "GPU-only" row of Table 2).
+    pub fn accel(&self) -> DeviceId {
+        let mut best = self.placeable[0];
+        for &d in &self.placeable[1..] {
+            if self.devices[d].flops_matmul > self.devices[best].flops_matmul {
+                best = d;
+            }
+        }
+        best
     }
 }
 
@@ -224,5 +353,72 @@ mod tests {
     fn same_device_transfer_free() {
         let tb = Testbed::paper();
         assert_eq!(tb.links[CPU][CPU].transfer_time(1e9), 0.0);
+    }
+
+    #[test]
+    fn cpu_gpu_matches_paper_contract() {
+        let tb = Testbed::cpu_gpu();
+        assert_eq!(tb.id, "cpu_gpu");
+        assert_eq!(tb.n_devices(), 3);
+        assert_eq!(tb.n_actions(), 2);
+        assert_eq!(tb.action_device(0), CPU);
+        assert_eq!(tb.action_device(1), DGPU);
+        assert_eq!(tb.reference, CPU);
+        assert_eq!(tb.accel(), DGPU);
+    }
+
+    #[test]
+    fn paper3_exposes_all_devices() {
+        let tb = Testbed::paper3();
+        assert_eq!(tb.n_actions(), 3);
+        assert_eq!(tb.placeable, vec![CPU, IGPU, DGPU]);
+        assert_eq!(tb.accel(), DGPU);
+    }
+
+    #[test]
+    fn multi_gpu_shape() {
+        let tb = Testbed::multi_gpu(4);
+        assert_eq!(tb.id, "multi_gpu:4");
+        assert_eq!(tb.n_devices(), 5);
+        assert_eq!(tb.n_actions(), 5);
+        assert_eq!(tb.reference, CPU);
+        assert_eq!(tb.accel(), 1); // first GPU (homogeneous tie -> first)
+        assert_eq!(tb.links.len(), 5);
+        for row in &tb.links {
+            assert_eq!(row.len(), 5);
+        }
+        for d in 0..tb.n_devices() {
+            assert_eq!(tb.links[d][d].transfer_time(1e9), 0.0);
+        }
+        // Degenerate k is clamped, never empty.
+        assert_eq!(Testbed::multi_gpu(0).n_devices(), 2);
+    }
+
+    #[test]
+    fn registry_resolves_ids() {
+        assert_eq!(Testbed::by_id("cpu_gpu").unwrap().id, "cpu_gpu");
+        assert_eq!(Testbed::by_id("paper").unwrap().id, "cpu_gpu");
+        assert_eq!(Testbed::by_id("paper3").unwrap().id, "paper3");
+        assert_eq!(Testbed::by_id("multi_gpu:8").unwrap().n_devices(), 9);
+        assert_eq!(Testbed::by_id("multi_gpu").unwrap().n_devices(), 5);
+        assert!(Testbed::by_id("multi_gpu:0").is_none());
+        assert!(Testbed::by_id("multi_gpu:x").is_none());
+        assert!(Testbed::by_id("tpu_pod").is_none());
+    }
+
+    #[test]
+    fn registered_testbeds_are_well_formed() {
+        for tb in Testbed::registered() {
+            assert!(tb.n_actions() >= 2, "{}", tb.id);
+            assert_eq!(tb.links.len(), tb.n_devices(), "{}", tb.id);
+            for row in &tb.links {
+                assert_eq!(row.len(), tb.n_devices(), "{}", tb.id);
+            }
+            assert!(tb.reference < tb.n_devices(), "{}", tb.id);
+            for &d in &tb.placeable {
+                assert!(d < tb.n_devices(), "{}: placeable {d}", tb.id);
+            }
+            assert!(Testbed::by_id(&tb.id).is_some(), "{} not addressable", tb.id);
+        }
     }
 }

@@ -1,12 +1,13 @@
 //! Heterogeneous execution engine: the substitute for the paper's
 //! CPU + iGPU + dGPU OpenVINO testbed (DESIGN.md §4). Device roofline
-//! models, link models, an event-driven list scheduler producing the
-//! latency l_P(G) the RL reward is built from, and the downstream numeric
-//! drift model behind Table 4.
+//! models, link models, a registry of `Testbed`s addressable by string id
+//! (`cpu_gpu`, `paper3`, `multi_gpu:<k>`), an event-driven list scheduler
+//! producing the latency l_P(G) the RL reward is built from, and the
+//! downstream numeric drift model behind Table 4.
 
 pub mod device;
 pub mod numerics;
 pub mod scheduler;
 
-pub use device::{DeviceId, DeviceModel, LinkModel, Testbed, CPU, DGPU, IGPU, PLACEABLE};
-pub use scheduler::{execute, measure, ExecReport, Placement};
+pub use device::{DeviceId, DeviceKind, DeviceModel, LinkModel, Testbed, CPU, DGPU, IGPU};
+pub use scheduler::{execute, execute_reference, measure, ExecReport, Placement};

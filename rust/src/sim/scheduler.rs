@@ -2,17 +2,42 @@
 //! testbed and reports the makespan (the l_P(G) the reward is built from).
 //!
 //! Semantics:
-//! - each device executes one op at a time (OpenVINO streams=1 inference);
+//! - each device executes one op at a time per lane (OpenVINO streams=1
+//!   inference);
 //! - an op may start once all producers finished and their outputs arrived
 //!   (cross-device tensors pay the link cost; weights/`Constant`s are
 //!   pre-staged at model-load time and never transferred);
-//! - among ready ops on the same device, the one with the highest
-//!   critical-path priority runs first (classic HEFT-style list
-//!   scheduling).
+//! - among ready ops, the one that can start earliest runs first, ties
+//!   broken by the highest critical-path priority, then by node id
+//!   (classic HEFT-style list scheduling).
+//!
+//! Implementation: `execute` keeps the ready set in a lazy `BinaryHeap`
+//! keyed by (earliest start = max(device-free time, data-ready time),
+//! critical-path rank). A popped entry whose device got busier since it
+//! was pushed is re-keyed and re-pushed; because device-free times only
+//! grow, this is equivalent to rescanning the whole ready set every
+//! iteration — which is exactly what `execute_reference` (the retained
+//! pre-optimization implementation) does. The two are differential-tested
+//! against each other, and `benches/bench_sim.rs` measures the before
+//! (`execute_reference`, O(|ready|) re-scan per scheduled op) vs after
+//! (`execute`, O(log |ready|) amortized).
+//!
+//! One deliberate semantic canonicalization versus the pre-heap code:
+//! the old selection treated start times within 1e-15 s as tied (then
+//! broke ties by rank, then by ready-Vec order). Epsilon comparisons are
+//! not transitive and cannot key a heap, so both implementations now use
+//! the exact total order (start, -rank, node id). Start-time differences
+//! below 1e-15 s are far under the simulator's physical resolution, but
+//! schedules produced across that boundary can in principle differ from
+//! the pre-refactor binary; `tests/testbeds.rs` pins the refactored
+//! default path against `execute_reference` under the canonical order.
 //!
 //! The simulator is deterministic; the *measurement* model layers
 //! multiplicative noise on top (`measure`) and applies the paper's
 //! "10 runs, average last 5" protocol.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 use super::device::{DeviceId, Testbed};
 use crate::graph::{CompGraph, OpKind};
@@ -41,13 +66,10 @@ pub struct ExecReport {
     pub n_transfers: usize,
 }
 
-/// Simulate one execution of `g` under `placement` on `tb`.
-pub fn execute(g: &CompGraph, placement: &Placement, tb: &Testbed) -> ExecReport {
-    assert_eq!(placement.0.len(), g.n(), "one device per node");
-    let order = g.topo_order().expect("simulator needs a DAG");
-
-    // Critical-path upward rank (in expected-time terms, device-averaged)
-    // for priority. Computed once per call; cheap relative to search.
+/// Critical-path upward rank (in expected-time terms, device-averaged)
+/// used as the list-scheduling priority. Computed once per `execute`;
+/// cheap relative to search.
+fn upward_rank(g: &CompGraph, tb: &Testbed, order: &[usize]) -> Vec<f64> {
     let avg_time: Vec<f64> = (0..g.n())
         .map(|v| {
             tb.devices.iter().map(|d| d.op_time(&g.nodes[v])).sum::<f64>() / tb.n_devices() as f64
@@ -55,17 +77,74 @@ pub fn execute(g: &CompGraph, placement: &Placement, tb: &Testbed) -> ExecReport
         .collect();
     let mut rank = vec![0f64; g.n()];
     for &v in order.iter().rev() {
-        let best_child =
-            g.out_neighbors(v).iter().map(|&w| rank[w]).fold(0f64, f64::max);
+        let best_child = g.out_neighbors(v).iter().map(|&w| rank[w]).fold(0f64, f64::max);
         rank[v] = avg_time[v] + best_child;
     }
+    rank
+}
 
-    // Per-device ready queues processed in priority order. We schedule by
-    // repeatedly picking, over all devices, the ready op whose device frees
-    // earliest (then highest rank).
+/// Data-ready time of `v` on its device: all producers finished and their
+/// outputs arrived (only valid once every predecessor has been scheduled).
+fn data_ready_time(g: &CompGraph, placement: &Placement, tb: &Testbed, finish: &[f64], v: usize) -> f64 {
+    let d = placement.0[v];
+    let mut data_ready = 0f64;
+    for &p in g.in_neighbors(v) {
+        let arr = if placement.0[p] == d || g.nodes[p].kind == OpKind::Constant {
+            finish[p]
+        } else {
+            finish[p] + tb.links[placement.0[p]][d].transfer_time(g.nodes[p].out_bytes())
+        };
+        data_ready = data_ready.max(arr);
+    }
+    data_ready
+}
+
+/// A ready-set entry. `BinaryHeap` is a max-heap, so `Ord` is arranged to
+/// pop the smallest (start, -rank, node) first.
+#[derive(Clone, Copy)]
+struct ReadyOp {
+    start: f64,
+    rank: f64,
+    node: usize,
+}
+
+impl PartialEq for ReadyOp {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for ReadyOp {}
+
+impl PartialOrd for ReadyOp {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ReadyOp {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Earliest start wins, then highest rank, then lowest node id
+        // (total order -> deterministic schedules). Times are finite.
+        other
+            .start
+            .partial_cmp(&self.start)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| self.rank.partial_cmp(&other.rank).unwrap_or(Ordering::Equal))
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+
+/// Simulate one execution of `g` under `placement` on `tb`.
+pub fn execute(g: &CompGraph, placement: &Placement, tb: &Testbed) -> ExecReport {
+    assert_eq!(placement.0.len(), g.n(), "one device per node");
+    let order = g.topo_order().expect("simulator needs a DAG");
+    let rank = upward_rank(g, tb, &order);
+
     let n = g.n();
     let mut indeg: Vec<usize> = (0..n).map(|v| g.in_degree(v)).collect();
     let mut finish = vec![0f64; n]; // data-ready time of each node's output
+    // Fixed once a node becomes ready (all producers scheduled).
+    let mut data_ready = vec![0f64; n];
     // Per-device lane free times (a device runs `lanes` ops concurrently).
     let mut lane_free: Vec<Vec<f64>> =
         tb.devices.iter().map(|d| vec![0f64; d.lanes.max(1)]).collect();
@@ -73,45 +152,33 @@ pub fn execute(g: &CompGraph, placement: &Placement, tb: &Testbed) -> ExecReport
     let mut bytes_transferred = 0.0;
     let mut n_transfers = 0usize;
 
-    // Ready set as a Vec we re-scan: graphs are ~1k nodes, fine. (Perf note:
-    // profiled in benches/bench_sim.rs; see EXPERIMENTS.md §Perf.)
-    let mut ready: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let dev_free = |lane_free: &[Vec<f64>], d: DeviceId| -> f64 {
+        lane_free[d].iter().cloned().fold(f64::INFINITY, f64::min)
+    };
+
+    let mut heap: BinaryHeap<ReadyOp> = BinaryHeap::with_capacity(n);
+    for v in 0..n {
+        if indeg[v] == 0 {
+            // No producers: data-ready at t=0.
+            heap.push(ReadyOp { start: dev_free(&lane_free, placement.0[v]), rank: rank[v], node: v });
+        }
+    }
+
     let mut scheduled = 0usize;
     let mut makespan = 0f64;
 
     while scheduled < n {
-        // Pick the ready op with the highest rank whose device is free
-        // earliest: sort key (dev_free, -rank).
-        let mut best: Option<(usize, f64)> = None; // (ready idx, start time)
-        for (ri, &v) in ready.iter().enumerate() {
-            let d = placement.0[v];
-            // Earliest start: device free AND inputs arrived.
-            let mut data_ready = 0f64;
-            for &p in g.in_neighbors(v) {
-                let arr = if placement.0[p] == d || g.nodes[p].kind == OpKind::Constant {
-                    finish[p]
-                } else {
-                    finish[p] + tb.links[placement.0[p]][d].transfer_time(g.nodes[p].out_bytes())
-                };
-                data_ready = data_ready.max(arr);
-            }
-            // Earliest-free lane on the device.
-            let dev_free = lane_free[d].iter().cloned().fold(f64::INFINITY, f64::min);
-            let start = dev_free.max(data_ready);
-            let better = match best {
-                None => true,
-                Some((bri, bstart)) => {
-                    start < bstart - 1e-15
-                        || ((start - bstart).abs() <= 1e-15 && rank[v] > rank[ready[bri]])
-                }
-            };
-            if better {
-                best = Some((ri, start));
-            }
-        }
-        let (ri, start) = best.expect("ready set non-empty while ops remain");
-        let v = ready.swap_remove(ri);
+        let e = heap.pop().expect("ready heap non-empty while ops remain");
+        let v = e.node;
         let d = placement.0[v];
+        let start = dev_free(&lane_free, d).max(data_ready[v]);
+        if start > e.start {
+            // Stale key: the device got busier since this entry was
+            // pushed. Re-key lazily; keys only grow, so correctness of
+            // the global minimum is preserved.
+            heap.push(ReadyOp { start, rank: e.rank, node: v });
+            continue;
+        }
 
         // Account transfers now (for the report; time already in `start`).
         for &p in g.in_neighbors(v) {
@@ -125,6 +192,89 @@ pub fn execute(g: &CompGraph, placement: &Placement, tb: &Testbed) -> ExecReport
         let end = start + t;
         finish[v] = end;
         // Occupy the earliest-free lane (recompute: `start` may exceed it).
+        let lane = (0..lane_free[d].len())
+            .min_by(|&a, &b| lane_free[d][a].partial_cmp(&lane_free[d][b]).unwrap())
+            .unwrap();
+        lane_free[d][lane] = end;
+        busy[d] += t;
+        makespan = makespan.max(end);
+        scheduled += 1;
+
+        for &w in g.out_neighbors(v) {
+            indeg[w] -= 1;
+            if indeg[w] == 0 {
+                data_ready[w] = data_ready_time(g, placement, tb, &finish, w);
+                heap.push(ReadyOp {
+                    start: dev_free(&lane_free, placement.0[w]).max(data_ready[w]),
+                    rank: rank[w],
+                    node: w,
+                });
+            }
+        }
+    }
+
+    ExecReport { makespan, busy, bytes_transferred, n_transfers }
+}
+
+/// Reference implementation of `execute`: the ready set as a Vec that is
+/// linearly re-scanned for every scheduled op. Kept as the behavioral
+/// specification the heap scheduler is differential-tested against (see
+/// `heap_matches_reference_prop` below) and as the "before" side of
+/// `benches/bench_sim.rs`. Semantically identical to `execute` by
+/// construction: same (start, -rank, node) selection order.
+pub fn execute_reference(g: &CompGraph, placement: &Placement, tb: &Testbed) -> ExecReport {
+    assert_eq!(placement.0.len(), g.n(), "one device per node");
+    let order = g.topo_order().expect("simulator needs a DAG");
+    let rank = upward_rank(g, tb, &order);
+
+    let n = g.n();
+    let mut indeg: Vec<usize> = (0..n).map(|v| g.in_degree(v)).collect();
+    let mut finish = vec![0f64; n];
+    let mut lane_free: Vec<Vec<f64>> =
+        tb.devices.iter().map(|d| vec![0f64; d.lanes.max(1)]).collect();
+    let mut busy = vec![0f64; tb.n_devices()];
+    let mut bytes_transferred = 0.0;
+    let mut n_transfers = 0usize;
+
+    let mut ready: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut scheduled = 0usize;
+    let mut makespan = 0f64;
+
+    while scheduled < n {
+        // Pick the ready op with the smallest (start, -rank, node).
+        let mut best: Option<(usize, f64)> = None; // (ready idx, start time)
+        for (ri, &v) in ready.iter().enumerate() {
+            let d = placement.0[v];
+            let data_ready = data_ready_time(g, placement, tb, &finish, v);
+            let free = lane_free[d].iter().cloned().fold(f64::INFINITY, f64::min);
+            let start = free.max(data_ready);
+            let better = match best {
+                None => true,
+                Some((bri, bstart)) => {
+                    let bv = ready[bri];
+                    start < bstart
+                        || (start == bstart
+                            && (rank[v] > rank[bv] || (rank[v] == rank[bv] && v < bv)))
+                }
+            };
+            if better {
+                best = Some((ri, start));
+            }
+        }
+        let (ri, start) = best.expect("ready set non-empty while ops remain");
+        let v = ready.swap_remove(ri);
+        let d = placement.0[v];
+
+        for &p in g.in_neighbors(v) {
+            if placement.0[p] != d && g.nodes[p].kind != OpKind::Constant {
+                bytes_transferred += g.nodes[p].out_bytes();
+                n_transfers += 1;
+            }
+        }
+
+        let t = tb.devices[d].op_time(&g.nodes[v]);
+        let end = start + t;
+        finish[v] = end;
         let lane = (0..lane_free[d].len())
             .min_by(|&a, &b| lane_free[d][a].partial_cmp(&lane_free[d][b]).unwrap())
             .unwrap();
@@ -266,6 +416,61 @@ mod tests {
         let meas = measure(&g, &p, &tb, 0.02, &mut rng);
         assert!((meas - det).abs() / det < 0.1);
         assert_eq!(measure(&g, &p, &tb, 0.0, &mut rng), det);
+    }
+
+    #[test]
+    fn heap_matches_reference_on_benchmarks() {
+        // Exact agreement of the optimized scheduler with the retained
+        // reference re-scan on the real benchmark graphs, across all
+        // registered testbeds.
+        for tb in Testbed::registered() {
+            let mut rng = crate::util::Rng::new(0xD1FF);
+            for b in Benchmark::ALL {
+                let g = b.build();
+                let p = Placement(
+                    (0..g.n()).map(|_| tb.placeable[rng.below(tb.n_actions())]).collect(),
+                );
+                let fast = execute(&g, &p, &tb);
+                let slow = execute_reference(&g, &p, &tb);
+                assert_eq!(fast.makespan, slow.makespan, "{}/{}", tb.id, b.id());
+                assert_eq!(fast.busy, slow.busy, "{}/{}", tb.id, b.id());
+                assert_eq!(fast.n_transfers, slow.n_transfers, "{}/{}", tb.id, b.id());
+                assert_eq!(
+                    fast.bytes_transferred, slow.bytes_transferred,
+                    "{}/{}",
+                    tb.id,
+                    b.id()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn heap_matches_reference_prop() {
+        check(
+            "heap-vs-reference",
+            PropConfig { cases: 48, max_size: 80, ..Default::default() },
+            |rng, size| {
+                let g = CompGraph::random(rng, size, size / 3);
+                let tbs = Testbed::registered();
+                let tb = &tbs[rng.below(tbs.len())];
+                let placement = Placement(
+                    (0..g.n()).map(|_| tb.placeable[rng.below(tb.n_actions())]).collect(),
+                );
+                let fast = execute(&g, &placement, tb);
+                let slow = execute_reference(&g, &placement, tb);
+                if fast.makespan != slow.makespan {
+                    return Err(format!(
+                        "{}: heap {} != reference {}",
+                        tb.id, fast.makespan, slow.makespan
+                    ));
+                }
+                if fast.busy != slow.busy || fast.n_transfers != slow.n_transfers {
+                    return Err(format!("{}: report mismatch", tb.id));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT bindings over
+//! xla_extension).
+//!
+//! The container this workspace builds in has neither crates.io access
+//! nor the xla_extension C library, so this stub keeps the whole
+//! coordinator compiling and the non-neural pipeline fully functional:
+//!
+//! - `Literal` is a real host-side implementation (dims + typed buffer,
+//!   `vec1` / `reshape` / `to_vec` / `to_tuple`), which is all the
+//!   environment/tensor layers need — feature extraction, the simulator,
+//!   the baselines and every table that doesn't run a policy work
+//!   end-to-end.
+//! - The PJRT client/executable surface exists but `compile`/`execute`
+//!   return a descriptive `Error` — exactly the paths that also require
+//!   the AOT artifacts from `make artifacts`, which the callers already
+//!   gate on. Swapping in the real xla-rs (same API) re-enables them
+//!   without touching any call site.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type (the real crate wraps XLA status codes).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: this build uses the vendored xla stub \
+         (no PJRT runtime / xla_extension in the environment)"
+    ))
+}
+
+/// Element buffer of a literal.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ElemData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl ElemData {
+    fn len(&self) -> usize {
+        match self {
+            ElemData::F32(v) => v.len(),
+            ElemData::I32(v) => v.len(),
+            ElemData::U32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a `Literal` can hold (mirrors xla-rs's NativeType).
+pub trait NativeType: Copy + Sized + fmt::Debug + 'static {
+    const DTYPE: &'static str;
+    fn wrap(data: Vec<Self>) -> ElemData;
+    fn extract(data: &ElemData) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($ty:ty, $variant:ident, $name:literal) => {
+        impl NativeType for $ty {
+            const DTYPE: &'static str = $name;
+            fn wrap(data: Vec<Self>) -> ElemData {
+                ElemData::$variant(data)
+            }
+            fn extract(data: &ElemData) -> Option<Vec<Self>> {
+                match data {
+                    ElemData::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32, "f32");
+native!(i32, I32, "i32");
+native!(u32, U32, "u32");
+
+/// A host-side literal: shape + typed buffer. Fully functional in the
+/// stub (no device memory involved).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: ElemData,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Reinterpret with new dimensions (element count must match; empty
+    /// dims = scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = if dims.is_empty() { 1 } else { dims.iter().product() };
+        if numel < 0 || numel as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy the buffer out as a host vector of the matching dtype.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(&self.data)
+            .ok_or_else(|| Error(format!("to_vec: literal is not {}", T::DTYPE)))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they
+    /// only come out of executions), so this is always an error here.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple literals (produced only by PJRT executions)"))
+    }
+}
+
+/// Device buffer handle returned by executions (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module proto (stub: carries nothing).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parsing HLO text '{path}'")))
+    }
+}
+
+/// An XLA computation (stub: carries nothing).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable (stub: never constructed — `compile` errors).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client. Construction succeeds (so error paths that only need
+/// a client, e.g. artifact-directory validation, behave normally);
+/// compilation reports the stub.
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: String,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "cpu-stub (xla unavailable)".to_string() })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.clone()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_all_dtypes() {
+        let f = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(f.dims(), &[2, 2]);
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(f.to_vec::<i32>().is_err());
+
+        let i = Literal::vec1(&[7i32, -1]).reshape(&[2]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, -1]);
+
+        let u = Literal::vec1(&[5u32]).reshape(&[]).unwrap(); // scalar
+        assert_eq!(u.to_vec::<u32>().unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let l = Literal::vec1(&[0f32; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn runtime_paths_report_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let err = HloModuleProto::from_text_file("x.hlo.txt").err().unwrap();
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+}
