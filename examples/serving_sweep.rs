@@ -3,16 +3,20 @@
 //! single-device deployments — the "heterogeneous execution" use case the
 //! paper's introduction motivates.
 //!
-//! The sweep runs per *testbed*: the paper's 2-way `cpu_gpu` setup and
-//! the 3-device `paper3` testbed (CPU + iGPU + dGPU, the §4 future-work
-//! configuration). For each, the HSDAG policy learns a placement over
-//! that testbed's full action space, then the request stream is served
-//! back-to-back per deployment (OpenVINO streams=1); the simulator's
-//! measurement noise models run-to-run jitter, and the reported
-//! percentiles follow standard serving practice.
+//! The sweep runs per *testbed*: the paper's 2-way `cpu_gpu` setup, the
+//! 3-device `paper3` testbed (§4 future work) and the memory-constrained
+//! `cpu_gpu_tight` variant, where all-accelerator deployments OOM and
+//! only capacity-aware placements are feasible. Each deployment is
+//! simulated **once**; its request stream is then served through the
+//! cost model's batched path (`ParallelCostModel::measure_many_from`,
+//! which fans out over the scoped worker pool past its request
+//! threshold — the per-request counter RNG makes parallel and serial
+//! streams bit-identical). Every row reports feasibility, per-device
+//! utilization and memory high-water from the `ExecReport`.
 //!
-//! NOTE: `paper3` needs artifacts lowered with ND=3
-//! (`ND=3 make artifacts` — the spec's `nd` is checked at load time).
+//! NOTE: the HSDAG rows need AOT artifacts lowered at this testbed's
+//! action-space width (`ND=<k> make artifacts`); without them the sweep
+//! still serves all static deployments.
 //!
 //!   cargo run --release --example serving_sweep [n_requests]
 
@@ -21,33 +25,18 @@ use hsdag::config::Config;
 use hsdag::models::Benchmark;
 use hsdag::rl::{Env, HsdagAgent};
 use hsdag::runtime::Engine;
-use hsdag::sim::{measure, Placement};
+use hsdag::sim::{AnalyticCostModel, CostModel, ParallelCostModel, Placement};
 use hsdag::util::stats;
-use hsdag::util::Rng;
-
-fn serve(
-    env: &Env,
-    placement: &Placement,
-    n_requests: usize,
-    rng: &mut Rng,
-) -> (f64, f64, f64, f64) {
-    let lats: Vec<f64> = (0..n_requests)
-        .map(|_| measure(&env.graph, placement, &env.testbed, 0.03, rng))
-        .collect();
-    let p50 = stats::percentile(&lats, 50.0);
-    let p99 = stats::percentile(&lats, 99.0);
-    let mean = stats::mean(&lats);
-    let throughput = 1.0 / mean;
-    (p50, p99, mean, throughput)
-}
 
 fn main() -> anyhow::Result<()> {
     let n_requests: usize =
         std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
-    let mut rng = Rng::new(123);
 
-    for testbed_id in ["cpu_gpu", "paper3"] {
+    for testbed_id in ["cpu_gpu", "paper3", "cpu_gpu_tight"] {
         let cfg = Config { seed: 9, testbed: testbed_id.to_string(), ..Default::default() };
+        // The serving path: batched requests over the configured pool
+        // width (`Config::eval_workers`, 0 = one per core).
+        let model = ParallelCostModel::new(AnalyticCostModel, cfg.eval_workers);
         let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
 
         for bench in [Benchmark::BertBase, Benchmark::ResNet50] {
@@ -62,25 +51,26 @@ fn main() -> anyhow::Result<()> {
 
             // Learn a placement over this testbed's action space (short
             // budget — this is a demo driver). The artifacts directory
-            // holds policies lowered at ONE action-space width, so the
-            // other testbed's agents won't construct — skip it with a
-            // note rather than aborting the sweep.
-            let mut agent = match HsdagAgent::new(&env, &mut engine, &cfg) {
-                Ok(agent) => agent,
+            // holds policies lowered at ONE action-space width; when this
+            // testbed's agent cannot construct, serve the static
+            // deployments only.
+            let learned: Option<Placement> = match HsdagAgent::new(&env, &mut engine, &cfg) {
+                Ok(mut agent) => {
+                    let res = agent.search(&env, &mut engine, 10)?;
+                    if res.best_actions.is_empty() {
+                        None
+                    } else {
+                        Some(env.expand(&res.best_actions))
+                    }
+                }
                 Err(e) => {
-                    println!("  (skipping: {e:#})");
-                    continue;
+                    println!("  (no learned deployment: {e:#})");
+                    None
                 }
             };
-            let res = agent.search(&env, &mut engine, 10)?;
-            let learned = env.expand(&res.best_actions);
 
-            println!(
-                "{:<22} {:>9} {:>9} {:>9} {:>11}",
-                "deployment", "p50 ms", "p99 ms", "mean ms", "req/s"
-            );
-            // One single-device deployment per placeable device, the
-            // transfer-blind greedy, then the learned placement.
+            // One single-device deployment per placeable device, the two
+            // greedies, then the learned placement if available.
             let mut deployments: Vec<(String, Placement)> = env
                 .testbed
                 .placeable
@@ -89,17 +79,50 @@ fn main() -> anyhow::Result<()> {
                     (env.testbed.devices[d].name.clone(), Placement::all(env.graph.n(), d))
                 })
                 .collect();
-            deployments
-                .push(("Greedy".to_string(), baselines::greedy_placement(&env.graph, &env.testbed)));
-            deployments.push(("HSDAG".to_string(), learned));
-            for (name, placement) in &deployments {
-                let (p50, p99, mean, tput) = serve(&env, placement, n_requests, &mut rng);
+            deployments.push((
+                "Greedy".to_string(),
+                baselines::greedy_placement(&env.graph, &env.testbed),
+            ));
+            deployments.push((
+                "Memory-greedy".to_string(),
+                baselines::memory_greedy_placement(&env.graph, &env.testbed),
+            ));
+            if let Some(p) = learned {
+                deployments.push(("HSDAG".to_string(), p));
+            }
+
+            println!(
+                "{:<22} {:>9} {:>9} {:>9} {:>11}  {:>4}  {:<14} {}",
+                "deployment", "p50 ms", "p99 ms", "mean ms", "req/s", "feas", "util %/dev", "mem MB/dev"
+            );
+            for (i, (name, placement)) in deployments.iter().enumerate() {
+                let rep = model.evaluate(&env.graph, placement, &env.testbed);
+                // Serve the stream off the one simulation above (the
+                // noise model is multiplicative on its makespan).
+                let seed = 123 ^ ((i as u64) << 32);
+                let lats = model.measure_many_from(rep.makespan, 0.03, seed, n_requests);
+                let p50 = stats::percentile(&lats, 50.0);
+                let p99 = stats::percentile(&lats, 99.0);
+                let mean = stats::mean(&lats);
+                let util = rep
+                    .utilization(&env.testbed)
+                    .iter()
+                    .map(|u| format!("{:.0}", 100.0 * u))
+                    .collect::<Vec<_>>()
+                    .join("/");
+                let mem = rep
+                    .mem_peak
+                    .iter()
+                    .map(|m| format!("{:.0}", m / 1e6))
+                    .collect::<Vec<_>>()
+                    .join("/");
                 println!(
-                    "{name:<22} {:>9.3} {:>9.3} {:>9.3} {:>11.1}",
+                    "{name:<22} {:>9.3} {:>9.3} {:>9.3} {:>11.1}  {:>4}  {util:<14} {mem}",
                     p50 * 1e3,
                     p99 * 1e3,
                     mean * 1e3,
-                    tput
+                    1.0 / mean,
+                    if rep.feasible() { "yes" } else { "OOM" },
                 );
             }
         }

@@ -3,16 +3,22 @@
 //! on the three paper benchmarks across every registered testbed plus a
 //! wide synthetic DAG where the ready set actually gets large (the
 //! re-scan is O(|ready|) per scheduled op, so wide graphs are where the
-//! heap pays off).
+//! heap pays off) — and the batched cost-model paths: parallel
+//! `evaluate_many` / `measure_many` against their serial loops, asserted
+//! bit-identical.
 //!
 //!   cargo bench --bench bench_sim
 //!
-//! Quote the heap/ vs scan/ lines as the before/after in perf notes.
+//! Quote the heap/ vs scan/ and serial/ vs parallel/ lines as the
+//! before/after in perf notes.
 
 use hsdag::baselines::random_placement;
 use hsdag::graph::CompGraph;
 use hsdag::models::Benchmark;
-use hsdag::sim::{execute, execute_reference, Testbed};
+use hsdag::sim::{
+    execute, execute_reference, measure, request_rng, AnalyticCostModel, CostModel,
+    ParallelCostModel, Testbed,
+};
 use hsdag::util::bench::bench_fn;
 use hsdag::util::Rng;
 
@@ -57,4 +63,43 @@ fn main() {
         "  -> heap/scan median ratio {:.2}x",
         scan.median_ns / heap.median_ns.max(1.0)
     );
+
+    println!("\n== batched evaluation: serial loop vs parallel worker pool ==");
+    let serial = AnalyticCostModel;
+    let parallel = ParallelCostModel::new(AnalyticCostModel, 0);
+    let g = Benchmark::ResNet50.build();
+    let tb = Testbed::multi_gpu(4);
+    let mut rng = Rng::new(17);
+    let placements: Vec<_> = (0..64).map(|_| random_placement(&g, &tb, &mut rng)).collect();
+
+    let s = bench_fn("sim/evaluate_many/serial/resnet50 x64", 1, 8, || {
+        serial.evaluate_many(&g, &placements, &tb).len()
+    });
+    let p = bench_fn("sim/evaluate_many/parallel/resnet50 x64", 1, 8, || {
+        parallel.evaluate_many(&g, &placements, &tb).len()
+    });
+    println!("  -> parallel speedup {:.2}x", s.median_ns / p.median_ns.max(1.0));
+    // Identical results, report for report (also enforced in the tests).
+    assert_eq!(
+        serial.evaluate_many(&g, &placements, &tb),
+        parallel.evaluate_many(&g, &placements, &tb)
+    );
+
+    // Request-stream serving: the naive per-request `measure` loop (one
+    // full simulation per request — the pre-cost-model serving path)
+    // against `measure_many`, which simulates the invariant base once.
+    let p0 = &placements[0];
+    let s = bench_fn("sim/measure_stream/per-request-loop/resnet50 x256", 1, 8, || {
+        (0..256)
+            .map(|i| measure(&g, p0, &tb, 0.03, &mut request_rng(7, i)))
+            .sum::<f64>()
+    });
+    let p = bench_fn("sim/measure_stream/measure_many/resnet50 x256", 1, 8, || {
+        parallel.measure_many(&g, p0, &tb, 0.03, 7, 256).iter().sum::<f64>()
+    });
+    println!("  -> measure_many speedup {:.2}x", s.median_ns / p.median_ns.max(1.0));
+    let naive: Vec<f64> =
+        (0..256).map(|i| measure(&g, p0, &tb, 0.03, &mut request_rng(7, i))).collect();
+    assert_eq!(naive, serial.measure_many(&g, p0, &tb, 0.03, 7, 256));
+    assert_eq!(naive, parallel.measure_many(&g, p0, &tb, 0.03, 7, 256));
 }

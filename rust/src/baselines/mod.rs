@@ -1,7 +1,9 @@
 //! Non-learned placement baselines (§3.3): single-device placements, the
-//! OpenVINO-CPU / OpenVINO-GPU heuristics, and K-device-aware
+//! OpenVINO-CPU / OpenVINO-GPU heuristics, K-device-aware
 //! random / greedy / topo baselines that enumerate every placeable device
-//! of the injected `Testbed`.
+//! of the injected `Testbed`, and a memory-aware greedy that respects
+//! device memory capacities (Tarnawski-style first-class memory
+//! constraint) on the memory-constrained testbeds.
 //!
 //! OpenVINO's HETERO mode assigns each op to the first device in the
 //! priority list that *supports* it; unsupported ops fall through to the
@@ -20,6 +22,8 @@
 //!   data-movement ops (Gather / StridedSlice / Pad / EmbeddingLookup)
 //!   that the GPU plugin executes on CPU; the extra hops make it slightly
 //!   worse than GPU-only, again matching Table 2's shape.
+
+use std::collections::HashSet;
 
 use crate::graph::{CompGraph, OpKind};
 use crate::sim::{execute, DeviceId, Placement, Testbed};
@@ -67,6 +71,95 @@ pub fn greedy_placement(g: &CompGraph, tb: &Testbed) -> Placement {
             best
         })
         .collect();
+    Placement(out)
+}
+
+/// Memory-aware greedy: like [`greedy_placement`] (fastest device per
+/// op), but respecting device memory capacities under a conservative
+/// static accounting that upper-bounds the scheduler's steady-state
+/// high-water: every output counts against its device for the whole run,
+/// cross-device inputs charge a copy to the consumer's device, and
+/// constants are pre-staged once per consuming device. An op goes to its
+/// fastest placeable device *that still fits*; if none fits it falls to
+/// the device with the most remaining headroom (best effort — the
+/// simulator will still flag the overflow). Because the static total
+/// dominates the dynamic high-water, a placement this returns without
+/// overflowing is guaranteed feasible under `execute`. With unbounded
+/// capacities it reduces exactly to [`greedy_placement`].
+///
+/// `Constant` nodes get the same device greedy gives them
+/// (`placeable[0]`): their memory is pre-staged on their consumers'
+/// devices no matter where the node itself sits (see the simulator's
+/// residency model), so the choice only affects tie-break parity with
+/// the plain greedy. One precondition on the feasibility guarantee: a
+/// consumer-less `Constant` (rejected by `CompGraph::validate`, so
+/// absent from every real graph) is staged on its own device by the
+/// simulator but not charged by this static accounting.
+pub fn memory_greedy_placement(g: &CompGraph, tb: &Testbed) -> Placement {
+    let order = g.topo_order().expect("baselines need a DAG");
+    let n = g.n();
+    let mut out = vec![usize::MAX; n];
+    let mut resident = vec![0f64; tb.n_devices()];
+    // Constants already pre-staged per device (charged at most once each).
+    let mut staged: Vec<HashSet<usize>> = vec![HashSet::new(); tb.n_devices()];
+
+    // Bytes device `d` gains if `v` lands there: own output, un-staged
+    // weights, and copies of already-placed cross-device producers.
+    let bytes_on = |v: usize, d: DeviceId, out: &[usize], staged: &[HashSet<usize>]| -> f64 {
+        let mut b = g.nodes[v].out_bytes();
+        for &p in g.in_neighbors(v) {
+            if g.nodes[p].kind == OpKind::Constant {
+                if !staged[d].contains(&p) {
+                    b += g.nodes[p].out_bytes();
+                }
+            } else if out[p] != usize::MAX && out[p] != d {
+                b += g.nodes[p].out_bytes();
+            }
+        }
+        b
+    };
+
+    for &v in &order {
+        if g.nodes[v].kind == OpKind::Constant {
+            continue; // assigned greedy's default below
+        }
+        // Fastest-first candidate order; the stable sort keeps placeable
+        // order on ties, matching `greedy_placement`'s tie-break.
+        let mut cands: Vec<DeviceId> = tb.placeable.clone();
+        cands.sort_by(|&a, &b| {
+            tb.devices[a].op_time(&g.nodes[v]).total_cmp(&tb.devices[b].op_time(&g.nodes[v]))
+        });
+        let fits = cands
+            .iter()
+            .copied()
+            .find(|&d| resident[d] + bytes_on(v, d, &out, &staged) <= tb.devices[d].mem_capacity);
+        let d = fits.unwrap_or_else(|| {
+            // Nothing fits: overflow the device with the most headroom.
+            let over = |d: DeviceId| {
+                resident[d] + bytes_on(v, d, &out, &staged) - tb.devices[d].mem_capacity
+            };
+            cands
+                .iter()
+                .copied()
+                .min_by(|&a, &b| over(a).total_cmp(&over(b)))
+                .expect("placeable set non-empty")
+        });
+        resident[d] += bytes_on(v, d, &out, &staged);
+        for &p in g.in_neighbors(v) {
+            if g.nodes[p].kind == OpKind::Constant {
+                staged[d].insert(p);
+            }
+        }
+        out[v] = d;
+    }
+    // Constants take greedy's tie-break default: their bytes are staged
+    // on their consumers' devices regardless of this assignment.
+    for v in 0..n {
+        if g.nodes[v].kind == OpKind::Constant {
+            out[v] = tb.placeable[0];
+        }
+    }
+    debug_assert!(out.iter().all(|&d| d != usize::MAX));
     Placement(out)
 }
 
@@ -124,34 +217,51 @@ pub fn openvino_greedy(g: &CompGraph, tb: &Testbed, preferred: DeviceId) -> Plac
 /// is far too high-variance to be a meaningful table row).
 const RANDOM_DRAWS: usize = 8;
 
+/// A representative placement for a named baseline. Deterministic;
+/// `random` returns one fixed-seed draw ([`baseline_latency`] still
+/// averages [`RANDOM_DRAWS`] draws for its table row).
+pub fn baseline_placement(name: &str, g: &CompGraph, tb: &Testbed) -> Option<Placement> {
+    Some(match name {
+        "cpu" => cpu_only(g, tb),
+        "gpu" => gpu_only(g, tb),
+        "random" => random_placement(g, tb, &mut Rng::new(0x5EED)),
+        "greedy" => greedy_placement(g, tb),
+        "memory-greedy" => memory_greedy_placement(g, tb),
+        "topo" => topo_chunks(g, tb),
+        "openvino-cpu" => openvino_greedy(g, tb, tb.reference),
+        "openvino-gpu" => openvino_greedy(g, tb, tb.accel()),
+        _ => return None,
+    })
+}
+
 /// Latency of a named baseline on graph `g` over testbed `tb`.
 /// Deterministic: `random` reports the mean over [`RANDOM_DRAWS`]
 /// fixed-seed draws; use [`random_placement`] directly to control the
 /// RNG or sample distributions yourself.
 pub fn baseline_latency(name: &str, g: &CompGraph, tb: &Testbed) -> Option<f64> {
-    let p = match name {
-        "cpu" => cpu_only(g, tb),
-        "gpu" => gpu_only(g, tb),
-        "random" => {
-            let mut rng = Rng::new(0x5EED);
-            let mean = (0..RANDOM_DRAWS)
-                .map(|_| execute(g, &random_placement(g, tb, &mut rng), tb).makespan)
-                .sum::<f64>()
-                / RANDOM_DRAWS as f64;
-            return Some(mean);
-        }
-        "greedy" => greedy_placement(g, tb),
-        "topo" => topo_chunks(g, tb),
-        "openvino-cpu" => openvino_greedy(g, tb, tb.reference),
-        "openvino-gpu" => openvino_greedy(g, tb, tb.accel()),
-        _ => return None,
-    };
-    Some(execute(g, &p, tb).makespan)
+    if name == "random" {
+        let mut rng = Rng::new(0x5EED);
+        let mean = (0..RANDOM_DRAWS)
+            .map(|_| execute(g, &random_placement(g, tb, &mut rng), tb).makespan)
+            .sum::<f64>()
+            / RANDOM_DRAWS as f64;
+        return Some(mean);
+    }
+    baseline_placement(name, g, tb).map(|p| execute(g, &p, tb).makespan)
 }
 
-/// The named baselines `baseline_latency` understands.
-pub const BASELINE_NAMES: [&str; 7] =
-    ["cpu", "gpu", "random", "greedy", "topo", "openvino-cpu", "openvino-gpu"];
+/// The named baselines `baseline_latency` / `baseline_placement`
+/// understand.
+pub const BASELINE_NAMES: [&str; 8] = [
+    "cpu",
+    "gpu",
+    "random",
+    "greedy",
+    "memory-greedy",
+    "topo",
+    "openvino-cpu",
+    "openvino-gpu",
+];
 
 #[cfg(test)]
 mod tests {
@@ -203,6 +313,51 @@ mod tests {
     fn unknown_baseline_is_none() {
         let g = Benchmark::ResNet50.build();
         assert!(baseline_latency("magic", &g, &Testbed::paper()).is_none());
+        assert!(baseline_placement("magic", &g, &Testbed::paper()).is_none());
+    }
+
+    #[test]
+    fn memory_greedy_reduces_to_greedy_when_unbounded() {
+        // With infinite capacities the memory constraint never binds, so
+        // the two greedies must agree placement-for-placement.
+        for tb in [Testbed::cpu_gpu(), Testbed::paper3(), Testbed::multi_gpu(4)] {
+            for b in Benchmark::ALL {
+                let g = b.build();
+                assert_eq!(
+                    memory_greedy_placement(&g, &tb),
+                    greedy_placement(&g, &tb),
+                    "{}/{}",
+                    tb.id,
+                    b.id()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_greedy_feasible_on_tight_testbed() {
+        let tb = Testbed::cpu_gpu_tight();
+        for b in Benchmark::ALL {
+            let g = b.build();
+            let p = memory_greedy_placement(&g, &tb);
+            let rep = execute(&g, &p, &tb);
+            assert!(rep.feasible(), "{}: memory-greedy overflowed {:?}", b.id(), rep.oom_devices);
+            assert!(rep.makespan.is_finite() && rep.makespan > 0.0, "{}", b.id());
+        }
+    }
+
+    #[test]
+    fn baseline_placements_match_their_latencies() {
+        let g = Benchmark::InceptionV3.build();
+        let tb = Testbed::paper3();
+        for name in BASELINE_NAMES {
+            if name == "random" {
+                continue; // latency averages several draws by design
+            }
+            let p = baseline_placement(name, &g, &tb).unwrap();
+            let lat = baseline_latency(name, &g, &tb).unwrap();
+            assert_eq!(execute(&g, &p, &tb).makespan, lat, "{name}");
+        }
     }
 
     #[test]
@@ -213,6 +368,7 @@ mod tests {
             for p in [
                 random_placement(&g, &tb, &mut rng),
                 greedy_placement(&g, &tb),
+                memory_greedy_placement(&g, &tb),
                 topo_chunks(&g, &tb),
             ] {
                 assert_eq!(p.0.len(), g.n(), "{}", tb.id);

@@ -38,10 +38,13 @@ COMMANDS
 
 COMMON FLAGS
   --bench inception|resnet|bert     benchmark (default resnet)
-  --testbed ID                      device set: cpu_gpu | paper3 | multi_gpu:<k>
-                                    (default cpu_gpu — the paper's 2-way CPU/dGPU setup)
+  --testbed ID                      device set: cpu_gpu | paper3 | cpu_gpu_tight | multi_gpu:<k>[:<mem_gb>]
+                                    (default cpu_gpu — the paper's 2-way CPU/dGPU setup;
+                                    cpu_gpu_tight / :<mem_gb> bound device memory)
   --episodes N                      RL search episodes (default 30)
   --seed N                          RNG seed (default 0)
+  --oom-penalty X                   reward for infeasible (OOM) placements during search (default 0)
+  --workers N                       threads for batched placement evaluation (default 0 = auto)
   --artifacts DIR                   artifacts directory (default artifacts)
   --no-baseline                     disable the EMA reward baseline (paper-literal Eq. 14)
   --no-shape | --no-node-id | --no-structural   feature ablations
@@ -90,6 +93,13 @@ impl Cli {
         }
     }
 
+    pub fn f64_flag(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
     pub fn str_flag(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
@@ -106,6 +116,8 @@ impl Cli {
             artifacts_dir: self.str_flag("artifacts", "artifacts"),
             max_episodes: self.usize_flag("episodes", 30)?,
             testbed: self.str_flag("testbed", "cpu_gpu"),
+            oom_penalty: self.f64_flag("oom-penalty", 0.0)?,
+            eval_workers: self.usize_flag("workers", 0)?,
             use_baseline: !self.flags.contains_key("no-baseline"),
             features: FeatureConfig {
                 no_shape: self.flags.contains_key("no-shape"),
@@ -174,6 +186,25 @@ mod tests {
 
         let c = parse(&argv("train --testbed multi_gpu:4")).unwrap();
         assert_eq!(c.config().unwrap().num_devices(), 5);
+    }
+
+    #[test]
+    fn memory_flags_parse() {
+        let args = argv("train --testbed cpu_gpu_tight --oom-penalty 0.25 --workers 4");
+        let cfg = parse(&args).unwrap().config().unwrap();
+        assert_eq!(cfg.testbed, "cpu_gpu_tight");
+        assert_eq!(cfg.oom_penalty, 0.25);
+        assert_eq!(cfg.eval_workers, 4);
+        // Memory-capped multi-GPU ids resolve through the same flag.
+        let c = parse(&argv("train --testbed multi_gpu:2:8")).unwrap();
+        assert_eq!(c.config().unwrap().num_devices(), 3);
+        // Defaults: penalty 0, auto workers.
+        let c = parse(&argv("table2")).unwrap();
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.oom_penalty, 0.0);
+        assert_eq!(cfg.eval_workers, 0);
+        // Malformed values are errors, not silent defaults.
+        assert!(parse(&argv("train --oom-penalty x")).unwrap().config().is_err());
     }
 
     #[test]

@@ -221,6 +221,72 @@ mod tests {
     }
 
     #[test]
+    fn colocate_covers_every_node_exactly_once_prop() {
+        // The co-location sets are a partition: every original node lands
+        // in exactly one member list, and `set_of` agrees with it.
+        check(
+            "coarsen-partition",
+            PropConfig { cases: 48, max_size: 100, ..Default::default() },
+            |rng, size| {
+                let g = CompGraph::random(rng, size, size / 3);
+                let c = colocate(&g);
+                let mut count = vec![0usize; g.n()];
+                for mem in &c.members {
+                    for &v in mem {
+                        count[v] += 1;
+                    }
+                }
+                if let Some(v) = count.iter().position(|&k| k != 1) {
+                    return Err(format!("node {v} covered {} times", count[v]));
+                }
+                if c.set_of.len() != g.n() {
+                    return Err(format!("set_of len {} != {}", c.set_of.len(), g.n()));
+                }
+                if c.n_sets != c.members.len() || c.coarse.n() != c.n_sets {
+                    return Err("set count / coarse node count mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn expand_placement_roundtrips_group_actions_prop() {
+        // Expanding a per-group action vector assigns every original node
+        // exactly its group's action: members of one set always share a
+        // device, and nothing else leaks in.
+        check(
+            "coarsen-expand-roundtrip",
+            PropConfig { cases: 48, max_size: 100, ..Default::default() },
+            |rng, size| {
+                let g = CompGraph::random(rng, size, size / 4);
+                let c = colocate(&g);
+                let k = 2 + rng.below(4);
+                let actions: Vec<usize> = (0..c.n_sets).map(|_| rng.below(k)).collect();
+                let p = c.expand_placement(&actions);
+                if p.len() != g.n() {
+                    return Err(format!("expanded {} of {} nodes", p.len(), g.n()));
+                }
+                for v in 0..g.n() {
+                    if p[v] != actions[c.set_of[v]] {
+                        return Err(format!(
+                            "node {v}: device {} != group action {}",
+                            p[v],
+                            actions[c.set_of[v]]
+                        ));
+                    }
+                }
+                for (s, mem) in c.members.iter().enumerate() {
+                    if mem.iter().any(|&v| p[v] != p[mem[0]]) {
+                        return Err(format!("set {s} split across devices"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn coarse_graph_is_dag_prop() {
         check("coarsen-dag", PropConfig { cases: 48, max_size: 100, ..Default::default() }, |rng, size| {
             let g = CompGraph::random(rng, size, size / 3);

@@ -41,6 +41,18 @@ pub struct Config {
     pub use_baseline: bool,
     /// Softmax temperature for device sampling.
     pub temperature: f64,
+    /// Reward granted to an infeasible (OOM) placement during search, in
+    /// place of the latency-based reward. Keep it at or below 0.0 (the
+    /// default): every feasible placement's reward `l_ref / l` is
+    /// strictly positive, so a non-positive value always ranks OOM last,
+    /// while a positive value is a reward *floor* that can bias the
+    /// policy toward OOM regions whenever feasible samples score below
+    /// it. Irrelevant on the unbounded default testbeds, where every
+    /// placement is feasible.
+    pub oom_penalty: f64,
+    /// Worker threads for batched placement evaluation
+    /// (`evaluate_many` / `measure_many`); 0 = one per available core.
+    pub eval_workers: usize,
     /// RNG seed.
     pub seed: u64,
     /// Feature ablation switches (Table 3).
@@ -63,6 +75,8 @@ impl Default for Config {
             measure_sigma: 0.02,
             use_baseline: true,
             temperature: 1.0,
+            oom_penalty: 0.0,
+            eval_workers: 0,
             seed: 0,
             features: FeatureConfig::default(),
             artifacts_dir: "artifacts".to_string(),
@@ -107,7 +121,8 @@ impl Config {
              max_episodes         {}\n\
              update_timestep      {}\n\
              K_epochs             {}\n\
-             gamma                {}\n",
+             gamma                {}\n\
+             oom_penalty          {}\n",
             self.testbed,
             self.num_devices(),
             self.hidden,
@@ -117,6 +132,7 @@ impl Config {
             self.update_timestep,
             self.k_epochs,
             self.gamma,
+            self.oom_penalty,
         )
     }
 }
@@ -135,6 +151,8 @@ mod tests {
         assert_eq!(c.max_episodes, 100);
         assert_eq!(c.update_timestep, 20);
         assert_eq!(c.dropout_network, 0.2);
+        assert_eq!(c.oom_penalty, 0.0);
+        assert_eq!(c.eval_workers, 0);
     }
 
     #[test]

@@ -10,6 +10,7 @@ use hsdag::harness::{figure2, table1, table2, table3, table4, table5};
 use hsdag::models::Benchmark;
 use hsdag::rl::{Env, HsdagAgent};
 use hsdag::runtime::Engine;
+use hsdag::sim::execute;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -34,6 +35,7 @@ fn run(c: Cli) -> Result<()> {
             let episodes = c.usize_flag("episodes", 30)?;
             let (t, results) = table2::run(&cfg, episodes)?;
             println!("{}", t.render());
+            println!("{}", table2::render_feasibility(&results).render());
             println!("{}", table5::render(&results).render());
         }
         "table3" => {
@@ -99,6 +101,38 @@ fn run(c: Cli) -> Result<()> {
                         tb.id,
                         100.0 * (1.0 - lat / cpu)
                     );
+                    // Feasibility / utilization / memory of the method's
+                    // representative placement.
+                    if method == "random" {
+                        println!(
+                            "(latency above is the mean over several fixed-seed draws; the \
+                             report below describes one representative draw)"
+                        );
+                    }
+                    let p = baselines::baseline_placement(&method, &g, &tb).unwrap();
+                    let rep = execute(&g, &p, &tb);
+                    println!(
+                        "feasible: {}",
+                        if rep.feasible() {
+                            "yes".to_string()
+                        } else {
+                            format!("NO (OOM on devices {:?})", rep.oom_devices)
+                        }
+                    );
+                    let util = rep.utilization(&tb);
+                    for (d, dev) in tb.devices.iter().enumerate() {
+                        let cap = if dev.mem_capacity.is_finite() {
+                            format!("{:.0} MB cap", dev.mem_capacity / 1e6)
+                        } else {
+                            "unbounded".to_string()
+                        };
+                        println!(
+                            "  {:<22} util {:>5.1}%  mem high-water {:>8.1} MB ({cap})",
+                            dev.name,
+                            100.0 * util[d],
+                            rep.mem_peak[d] / 1e6
+                        );
+                    }
                 }
                 None => anyhow::bail!(
                     "unknown method '{method}' ({})",

@@ -6,10 +6,11 @@
 use anyhow::{Context, Result};
 
 use super::env::Env;
-use super::hsdag::{argmax, sample_softmax};
+use super::hsdag::{argmax, sample_softmax, StepOutcome};
 use super::search::{reinforce_coefficients, SearchResult, Tracker};
 use crate::config::Config;
 use crate::runtime::{Engine, ParamStore, Tensor};
+use crate::sim::measure_from;
 use crate::util::stats::Ema;
 use crate::util::Rng;
 
@@ -115,8 +116,9 @@ impl BaselineAgent {
         inputs
     }
 
-    /// One step: sample a device per node, simulate, buffer.
-    pub fn step(&mut self, env: &Env, engine: &mut Engine, explore: bool) -> Result<(Vec<usize>, f64, f64)> {
+    /// One step: sample a device per node, simulate, buffer. Infeasible
+    /// (OOM) placements earn `Config::oom_penalty` as their reward.
+    pub fn step(&mut self, env: &Env, engine: &mut Engine, explore: bool) -> Result<StepOutcome> {
         let fwd = engine.load(&self.fwd_name)?;
         let outs = fwd.run(&self.fwd_inputs(env))?;
         let logits: Vec<f32> = outs[0].to_vec()?;
@@ -145,12 +147,14 @@ impl BaselineAgent {
             }
         };
 
+        let report = env.report(&actions);
+        let feasible = report.feasible();
         let latency = if explore && self.cfg.measure_sigma > 0.0 {
-            env.measured_latency(&actions, self.cfg.measure_sigma, &mut self.rng)
+            measure_from(report.makespan, self.cfg.measure_sigma, &mut self.rng)
         } else {
-            env.latency(&actions)
+            report.makespan
         };
-        let reward = env.reward(latency);
+        let reward = env.reward_with_penalty(&report, latency, self.cfg.oom_penalty);
 
         if explore {
             let t = self.rewards.len();
@@ -160,7 +164,14 @@ impl BaselineAgent {
             }
             self.rewards.push(reward);
         }
-        Ok((actions, latency, reward))
+        Ok(StepOutcome {
+            n_groups: actions.len(),
+            actions,
+            latency,
+            det_latency: report.makespan,
+            reward,
+            feasible,
+        })
     }
 
     /// REINFORCE update through the train artifact.
@@ -210,18 +221,19 @@ impl BaselineAgent {
         let mut tracker = Tracker::new();
         for ep in 0..episodes {
             for _ in 0..self.cfg.update_timestep {
-                let (actions, _lat, reward) = self.step(env, engine, true)?;
-                let det = env.latency(&actions);
-                tracker.observe(&actions, det, reward);
+                let o = self.step(env, engine, true)?;
+                // Infeasible (OOM) placements never become "best".
+                let det = if o.feasible { o.det_latency } else { f64::INFINITY };
+                tracker.observe(&o.actions, det, o.reward);
             }
             if let Some(loss) = self.update(env, engine)? {
                 tracker.record_loss(loss as f64);
             }
             tracker.end_episode(ep);
         }
-        let (actions, _lat, reward) = self.step(env, engine, false)?;
-        let det = env.latency(&actions);
-        tracker.observe(&actions, det, reward);
+        let o = self.step(env, engine, false)?;
+        let det = if o.feasible { o.det_latency } else { f64::INFINITY };
+        tracker.observe(&o.actions, det, o.reward);
 
         // The RNN's attention matrix is the memory hog the paper's Table 5
         // reports as OOM on BERT: [V, V] attention + LSTM states per

@@ -21,7 +21,10 @@ use crate::features::{extract, normalized_adjacency, FeatureConfig, Features};
 use crate::graph::CompGraph;
 use crate::models::Benchmark;
 use crate::runtime::Tensor;
-use crate::sim::{execute, measure, Placement, Testbed};
+use crate::sim::{
+    execute, measure_from, AnalyticCostModel, CostModel, ExecReport, ParallelCostModel, Placement,
+    Testbed,
+};
 use crate::util::Rng;
 
 /// A fully-prepared placement environment.
@@ -35,6 +38,9 @@ pub struct Env {
     pub features: Features,
     /// The device set this environment places onto (action space + links).
     pub testbed: Testbed,
+    /// Pluggable placement cost model (default: the analytic list
+    /// scheduler). Swap with [`Env::set_cost_model`].
+    pub cost: Box<dyn CostModel>,
     /// Padded capacities (artifact contract).
     pub v_pad: usize,
     pub e_pad: usize,
@@ -72,9 +78,14 @@ impl Env {
     }
 
     /// Build with explicit feature ablation switches (Table 3). The
-    /// testbed is taken from `cfg.testbed` (registry id).
+    /// testbed is taken from `cfg.testbed` (registry id) and the cost
+    /// model honors `cfg.eval_workers` (`--workers`): batched calls
+    /// through `Env::cost` fan out over the configured pool width, while
+    /// single-placement `evaluate` stays inline and bit-identical.
     pub fn with_features(bench: Benchmark, cfg: &Config, fcfg: FeatureConfig) -> Result<Env> {
-        Self::from_graph_on(bench, bench.build(), fcfg, cfg.resolve_testbed()?)
+        let mut env = Self::from_graph_on(bench, bench.build(), fcfg, cfg.resolve_testbed()?)?;
+        env.set_cost_model(Box::new(ParallelCostModel::new(AnalyticCostModel, cfg.eval_workers)));
+        Ok(env)
     }
 
     /// Build an environment for an arbitrary computation graph on the
@@ -160,6 +171,7 @@ impl Env {
             colo,
             graph,
             testbed,
+            cost: Box::new(AnalyticCostModel),
             v_pad,
             e_pad,
             x0: x0_t,
@@ -193,20 +205,55 @@ impl Env {
         Placement(self.colo.expand_placement(&devices))
     }
 
+    /// Swap the placement cost model (default: [`AnalyticCostModel`]).
+    /// The reference latency is re-derived under the new model so rewards
+    /// stay consistently normalized.
+    pub fn set_cost_model(&mut self, model: Box<dyn CostModel>) {
+        let all_ref = Placement::all(self.graph.n(), self.testbed.reference);
+        self.ref_latency = model.evaluate(&self.graph, &all_ref, &self.testbed).makespan;
+        self.cost = model;
+    }
+
+    /// Full simulator report for a working-graph placement: latency, busy
+    /// time, transfer volume, memory high-water, feasibility.
+    pub fn report(&self, working_actions: &[usize]) -> ExecReport {
+        self.cost.evaluate(&self.graph, &self.expand(working_actions), &self.testbed)
+    }
+
+    /// Whether a placement fits every device's memory capacity. Always
+    /// true on the unbounded default testbeds.
+    pub fn feasible(&self, working_actions: &[usize]) -> bool {
+        self.report(working_actions).feasible()
+    }
+
     /// Deterministic latency of a working-graph placement.
     pub fn latency(&self, working_actions: &[usize]) -> f64 {
-        execute(&self.graph, &self.expand(working_actions), &self.testbed).makespan
+        self.report(working_actions).makespan
     }
 
     /// Measured latency (paper's 10-run protocol with noise).
     pub fn measured_latency(&self, working_actions: &[usize], sigma: f64, rng: &mut Rng) -> f64 {
-        measure(&self.graph, &self.expand(working_actions), &self.testbed, sigma, rng)
+        measure_from(self.latency(working_actions), sigma, rng)
     }
 
     /// Reward (the paper's r = 1/l, normalized by the reference device so
     /// rewards sit in a sane range: r = l_ref / l = speedup factor).
     pub fn reward(&self, latency: f64) -> f64 {
         self.ref_latency / latency
+    }
+
+    /// Search-time reward of a simulated step: feasible placements earn
+    /// the normalized speedup reward, infeasible (OOM) ones earn the flat
+    /// `oom_penalty` instead of a latency-based score (`Config::oom_penalty`;
+    /// the Mirhoseini-style handling of placements that fail to run).
+    /// Pass a non-positive penalty to rank OOM strictly below every
+    /// feasible placement — a positive value acts as a reward floor.
+    pub fn reward_with_penalty(&self, report: &ExecReport, latency: f64, oom_penalty: f64) -> f64 {
+        if report.feasible() {
+            self.reward(latency)
+        } else {
+            oom_penalty
+        }
     }
 }
 
@@ -297,6 +344,48 @@ mod tests {
         // Reference is still the CPU.
         let cpu = e.latency(&vec![0; e.n_nodes]);
         assert!((cpu - e.ref_latency).abs() / e.ref_latency < 1e-9);
+    }
+
+    #[test]
+    fn default_testbed_everything_feasible() {
+        let e = env(Benchmark::ResNet50);
+        for actions in [vec![0usize; e.n_nodes], vec![1usize; e.n_nodes]] {
+            let rep = e.report(&actions);
+            assert!(rep.feasible());
+            assert!(e.feasible(&actions));
+            assert_eq!(rep.mem_peak.len(), e.testbed.n_devices());
+            assert_eq!(rep.makespan, e.latency(&actions));
+        }
+    }
+
+    #[test]
+    fn tight_testbed_flags_oom_and_applies_penalty() {
+        let e = env_on(Benchmark::BertBase, "cpu_gpu_tight");
+        // All-accelerator: the model's weights dwarf the 64 MB dGPU.
+        let gpu_actions = vec![1usize; e.n_nodes];
+        let rep = e.report(&gpu_actions);
+        assert!(!rep.feasible());
+        assert!(!e.feasible(&gpu_actions));
+        assert_eq!(e.reward_with_penalty(&rep, rep.makespan, 0.25), 0.25);
+        // All-CPU is feasible and earns the normal (reference) reward.
+        let cpu_actions = vec![0usize; e.n_nodes];
+        let rep = e.report(&cpu_actions);
+        assert!(rep.feasible());
+        let r = e.reward_with_penalty(&rep, rep.makespan, 0.25);
+        assert!((r - 1.0).abs() < 1e-9, "{r}");
+    }
+
+    #[test]
+    fn cost_model_is_swappable() {
+        use crate::sim::ReferenceCostModel;
+        let mut e = env(Benchmark::InceptionV3);
+        let actions: Vec<usize> = (0..e.n_nodes).map(|v| v % 2).collect();
+        let before = e.latency(&actions);
+        let ref_before = e.ref_latency;
+        e.set_cost_model(Box::new(ReferenceCostModel));
+        // The reference scheduler is differential-tested bit-identical.
+        assert_eq!(e.latency(&actions), before);
+        assert_eq!(e.ref_latency, ref_before);
     }
 
     #[test]

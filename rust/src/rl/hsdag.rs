@@ -18,6 +18,7 @@ use super::search::{reinforce_coefficients, SearchResult, Tracker};
 use crate::config::Config;
 use crate::parsing::{parse, Partition};
 use crate::runtime::{Engine, ParamStore, Tensor};
+use crate::sim::measure_from;
 use crate::util::stats::Ema;
 use crate::util::Rng;
 
@@ -70,12 +71,25 @@ impl Buffer {
     }
 }
 
-/// One step's outcome (also used by the figure2 / quickstart paths).
+/// One step's outcome (shared with `BaselineAgent` and the figure2 /
+/// quickstart paths).
 pub struct StepOutcome {
     pub actions: Vec<usize>,
+    /// Latency the reward was computed from (noisy under exploration).
     pub latency: f64,
+    /// Deterministic makespan of the same placement (no measurement
+    /// noise) — what best-placement tracking uses; computed from the one
+    /// simulation the step already ran.
+    pub det_latency: f64,
     pub reward: f64,
+    /// Placement groups this step acted on (for per-node policies, the
+    /// node count).
     pub n_groups: usize,
+    /// Whether the sampled placement fits every device's memory capacity
+    /// (always true on the unbounded default testbeds). Infeasible steps
+    /// earn `Config::oom_penalty` as their reward and are never tracked
+    /// as the best placement.
+    pub feasible: bool,
 }
 
 /// The HSDAG policy agent.
@@ -209,12 +223,15 @@ impl HsdagAgent {
             };
         }
         let actions: Vec<usize> = part.cluster_of.iter().map(|&c| group_devices[c]).collect();
+        let report = env.report(&actions);
+        let feasible = report.feasible();
         let latency = if explore && self.cfg.measure_sigma > 0.0 {
-            env.measured_latency(&actions, self.cfg.measure_sigma, &mut self.rng)
+            measure_from(report.makespan, self.cfg.measure_sigma, &mut self.rng)
         } else {
-            env.latency(&actions)
+            report.makespan
         };
-        let reward = env.reward(latency);
+        // OOM placements earn the flat penalty, never a latency reward.
+        let reward = env.reward_with_penalty(&report, latency, self.cfg.oom_penalty);
 
         // (5) Feedback update: fb_v += mean Z of v's group.
         let mut gsum = vec![0f32; part.n_groups * H];
@@ -256,7 +273,14 @@ impl HsdagAgent {
         }
 
         self.last_partition = Some(part.clone());
-        Ok(StepOutcome { actions, latency, reward, n_groups: part.n_groups })
+        Ok(StepOutcome {
+            actions,
+            latency,
+            det_latency: report.makespan,
+            reward,
+            n_groups: part.n_groups,
+            feasible,
+        })
     }
 
     /// Flush the buffer through the train artifact (Eq. 14). Returns the
@@ -320,8 +344,9 @@ impl HsdagAgent {
             for _ in 0..self.cfg.update_timestep {
                 let o = self.step(env, engine, true)?;
                 // Track with the *deterministic* latency of the sampled
-                // placement so "best" is noise-free.
-                let det = env.latency(&o.actions);
+                // placement so "best" is noise-free; infeasible (OOM)
+                // placements are never candidates for "best".
+                let det = if o.feasible { o.det_latency } else { f64::INFINITY };
                 tracker.observe(&o.actions, det, o.reward);
             }
             if self.buffer.full() {
@@ -334,7 +359,7 @@ impl HsdagAgent {
         // Greedy final placement under the trained policy.
         self.reset_episode();
         let greedy = self.step(env, engine, false)?;
-        let det = env.latency(&greedy.actions);
+        let det = if greedy.feasible { greedy.det_latency } else { f64::INFINITY };
         tracker.observe(&greedy.actions, det, greedy.reward);
 
         let peak = self.buffer.bytes() + env.v_pad * env.v_pad * 4 + self.params.n_scalars() * 12;

@@ -10,5 +10,5 @@ pub mod search;
 
 pub use baseline_agents::{BaselineAgent, BaselineKind};
 pub use env::Env;
-pub use hsdag::HsdagAgent;
+pub use hsdag::{HsdagAgent, StepOutcome};
 pub use search::{CurvePoint, SearchResult};

@@ -1,0 +1,273 @@
+//! Pluggable placement cost models — the seam between search and the
+//! simulator.
+//!
+//! `CostModel` abstracts how a placement is scored: `AnalyticCostModel`
+//! (the default) runs the event-driven lazy-heap list scheduler
+//! (`scheduler::execute`); `ReferenceCostModel` runs the retained linear
+//! re-scan (the behavioral specification, for differential testing);
+//! `ParallelCostModel` wraps any model and fans the batched entry points
+//! out over a scoped `std::thread` worker pool (`sim::pool`).
+//!
+//! Batched entry points:
+//! - [`CostModel::evaluate_many`]: one graph, many placements — the shape
+//!   of a search step / population evaluation;
+//! - [`CostModel::measure_many`]: one placement, many noisy requests —
+//!   the shape of a serving stream. The invariant base simulation runs
+//!   once and each request draws its noise from a counter-derived RNG
+//!   ([`request_rng`]), so the stream is bit-identical to the naive
+//!   per-request `measure` loop, order-independent, and parallelizes
+//!   without changing a single result.
+//!
+//! Contract: implementations are deterministic, and batched calls return
+//! exactly what the serial default bodies below return, in the same
+//! order — parallel implementations included. `tests/cost_model.rs` and
+//! `benches/bench_sim.rs` enforce this.
+
+use super::device::Testbed;
+use super::pool;
+use super::scheduler::{execute, execute_reference, measure_from, ExecReport, Placement};
+use crate::graph::CompGraph;
+use crate::util::Rng;
+
+/// A placement cost model: maps (graph, placement, testbed) to a full
+/// [`ExecReport`] (latency, busy time, transfer volume, memory
+/// high-water, feasibility).
+pub trait CostModel: Send + Sync {
+    /// Short id for reports and logs.
+    fn id(&self) -> &'static str;
+
+    /// Simulate one placement.
+    fn evaluate(&self, g: &CompGraph, p: &Placement, tb: &Testbed) -> ExecReport;
+
+    /// Evaluate a batch of placements (default: the serial loop).
+    fn evaluate_many(&self, g: &CompGraph, ps: &[Placement], tb: &Testbed) -> Vec<ExecReport> {
+        ps.iter().map(|p| self.evaluate(g, p, tb)).collect()
+    }
+
+    /// Serve a stream of `n_requests` measurements of one placement.
+    /// The deterministic base simulation runs once — the measurement
+    /// noise is multiplicative on an invariant makespan, so this is
+    /// bit-identical to the naive per-request `measure` loop it
+    /// replaces (`benches/bench_sim.rs` asserts the identity and
+    /// quotes the speedup). Request `i` draws from its own
+    /// [`request_rng`]-derived generator, making the stream
+    /// order-independent; `sigma = 0` yields the deterministic makespan
+    /// for every request.
+    fn measure_many(
+        &self,
+        g: &CompGraph,
+        p: &Placement,
+        tb: &Testbed,
+        sigma: f64,
+        base_seed: u64,
+        n_requests: usize,
+    ) -> Vec<f64> {
+        let base = self.evaluate(g, p, tb).makespan;
+        self.measure_many_from(base, sigma, base_seed, n_requests)
+    }
+
+    /// Noise-only variant of [`CostModel::measure_many`] for callers that
+    /// already hold the placement's deterministic makespan (e.g. from an
+    /// `evaluate` they needed anyway): applies the measurement protocol
+    /// per request without re-running the simulator. Same per-request
+    /// RNGs, so `measure_many(g, p, tb, ...) ==
+    /// measure_many_from(evaluate(g, p, tb).makespan, ...)`.
+    fn measure_many_from(
+        &self,
+        base: f64,
+        sigma: f64,
+        base_seed: u64,
+        n_requests: usize,
+    ) -> Vec<f64> {
+        (0..n_requests)
+            .map(|i| measure_from(base, sigma, &mut request_rng(base_seed, i)))
+            .collect()
+    }
+}
+
+/// Per-request RNG: one independent generator per (stream seed, request
+/// index), so a request's noise never depends on the requests scheduled
+/// before it — the property that lets `measure_many` parallelize with
+/// bit-identical results.
+pub fn request_rng(base_seed: u64, i: usize) -> Rng {
+    Rng::new(base_seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// The default analytic model: the lazy-heap list scheduler.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticCostModel;
+
+impl CostModel for AnalyticCostModel {
+    fn id(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn evaluate(&self, g: &CompGraph, p: &Placement, tb: &Testbed) -> ExecReport {
+        execute(g, p, tb)
+    }
+}
+
+/// The retained pre-optimization re-scan scheduler as a cost model (the
+/// behavioral specification `AnalyticCostModel` is differential-tested
+/// against).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReferenceCostModel;
+
+impl CostModel for ReferenceCostModel {
+    fn id(&self) -> &'static str {
+        "reference"
+    }
+
+    fn evaluate(&self, g: &CompGraph, p: &Placement, tb: &Testbed) -> ExecReport {
+        execute_reference(g, p, tb)
+    }
+}
+
+/// Wraps any cost model and parallelizes the batched entry points over a
+/// scoped worker pool; single-placement `evaluate` stays inline. Results
+/// are positionally identical to the wrapped model's serial loop.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelCostModel<M: CostModel> {
+    inner: M,
+    /// Worker threads for batched calls (0 = one per available core).
+    workers: usize,
+}
+
+impl<M: CostModel> ParallelCostModel<M> {
+    pub fn new(inner: M, workers: usize) -> Self {
+        ParallelCostModel { inner, workers }
+    }
+}
+
+impl<M: CostModel> CostModel for ParallelCostModel<M> {
+    fn id(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn evaluate(&self, g: &CompGraph, p: &Placement, tb: &Testbed) -> ExecReport {
+        self.inner.evaluate(g, p, tb)
+    }
+
+    fn evaluate_many(&self, g: &CompGraph, ps: &[Placement], tb: &Testbed) -> Vec<ExecReport> {
+        pool::map_indexed(ps.len(), self.workers, |i| self.inner.evaluate(g, &ps[i], tb))
+    }
+
+    fn measure_many(
+        &self,
+        g: &CompGraph,
+        p: &Placement,
+        tb: &Testbed,
+        sigma: f64,
+        base_seed: u64,
+        n_requests: usize,
+    ) -> Vec<f64> {
+        let base = self.inner.evaluate(g, p, tb).makespan;
+        self.measure_many_from(base, sigma, base_seed, n_requests)
+    }
+
+    fn measure_many_from(
+        &self,
+        base: f64,
+        sigma: f64,
+        base_seed: u64,
+        n_requests: usize,
+    ) -> Vec<f64> {
+        if n_requests < PAR_STREAM_MIN {
+            // A post-hoisting request is ~10 RNG draws: below this the
+            // pool's spawn/join overhead exceeds the work. Same results
+            // either way (counter-derived RNGs).
+            return (0..n_requests)
+                .map(|i| measure_from(base, sigma, &mut request_rng(base_seed, i)))
+                .collect();
+        }
+        pool::map_indexed(n_requests, self.workers, |i| {
+            measure_from(base, sigma, &mut request_rng(base_seed, i))
+        })
+    }
+}
+
+/// Minimum stream length before `ParallelCostModel::measure_many_from`
+/// fans the (cheap, post-hoisting) noise loop out over the pool.
+const PAR_STREAM_MIN: usize = 4096;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::random_placement;
+    use crate::models::Benchmark;
+
+    fn random_placements(g: &CompGraph, tb: &Testbed, n: usize, seed: u64) -> Vec<Placement> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| random_placement(g, tb, &mut rng)).collect()
+    }
+
+    #[test]
+    fn analytic_matches_execute() {
+        let g = Benchmark::ResNet50.build();
+        let tb = Testbed::cpu_gpu();
+        let p = Placement::all(g.n(), tb.accel());
+        let a = AnalyticCostModel.evaluate(&g, &p, &tb);
+        let b = execute(&g, &p, &tb);
+        assert_eq!(a, b);
+        assert_eq!(AnalyticCostModel.id(), "analytic");
+    }
+
+    #[test]
+    fn reference_matches_reference_scheduler() {
+        let g = Benchmark::InceptionV3.build();
+        let tb = Testbed::paper3();
+        let p = random_placements(&g, &tb, 1, 7).pop().unwrap();
+        assert_eq!(
+            ReferenceCostModel.evaluate(&g, &p, &tb),
+            execute_reference(&g, &p, &tb)
+        );
+    }
+
+    #[test]
+    fn parallel_evaluate_many_identical_to_serial() {
+        let g = Benchmark::ResNet50.build();
+        for tb in Testbed::registered() {
+            let ps = random_placements(&g, &tb, 12, 0xBA7C);
+            let serial = AnalyticCostModel.evaluate_many(&g, &ps, &tb);
+            let parallel = ParallelCostModel::new(AnalyticCostModel, 0).evaluate_many(&g, &ps, &tb);
+            assert_eq!(serial, parallel, "{}", tb.id);
+        }
+    }
+
+    #[test]
+    fn parallel_measure_many_identical_to_serial() {
+        let g = Benchmark::BertBase.build();
+        let tb = Testbed::cpu_gpu();
+        let p = Placement::all(g.n(), tb.accel());
+        let serial = AnalyticCostModel.measure_many(&g, &p, &tb, 0.03, 99, 32);
+        let parallel =
+            ParallelCostModel::new(AnalyticCostModel, 4).measure_many(&g, &p, &tb, 0.03, 99, 32);
+        assert_eq!(serial, parallel);
+        // ... and both equal the naive per-request measure loop they
+        // replace (same per-request RNGs, base re-simulated every time).
+        let naive: Vec<f64> = (0..32)
+            .map(|i| crate::sim::measure(&g, &p, &tb, 0.03, &mut request_rng(99, i)))
+            .collect();
+        assert_eq!(naive, serial);
+        // ... and the noise-only variant off a precomputed base agrees.
+        let base = execute(&g, &p, &tb).makespan;
+        assert_eq!(serial, AnalyticCostModel.measure_many_from(base, 0.03, 99, 32));
+        let par = ParallelCostModel::new(AnalyticCostModel, 2);
+        assert_eq!(serial, par.measure_many_from(base, 0.03, 99, 32));
+        // sigma = 0: every request is the deterministic makespan.
+        let det = AnalyticCostModel.measure_many(&g, &p, &tb, 0.0, 99, 4);
+        let base = execute(&g, &p, &tb).makespan;
+        assert!(det.iter().all(|&l| l == base));
+    }
+
+    #[test]
+    fn request_rng_is_deterministic_and_independent() {
+        let a: Vec<u64> = (0..4).map(|i| request_rng(5, i).next_u64()).collect();
+        let b: Vec<u64> = (0..4).map(|i| request_rng(5, i).next_u64()).collect();
+        assert_eq!(a, b);
+        let mut uniq = a.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), a.len(), "request streams must decorrelate");
+    }
+}

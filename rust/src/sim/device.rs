@@ -14,8 +14,12 @@
 //! link matrix, the subset of devices a placer may target (`placeable`,
 //! one action per entry) and the reference device the reward is
 //! normalized against. Testbeds are addressable by string id through
-//! `Testbed::by_id` (`cpu_gpu`, `paper3`, `multi_gpu:<k>`), so the number
-//! of placement targets is a runtime parameter of the whole pipeline.
+//! `Testbed::by_id` (`cpu_gpu`, `paper3`, `cpu_gpu_tight`,
+//! `multi_gpu:<k>[:<mem_gb>]`), so the number of placement targets is a
+//! runtime parameter of the whole pipeline. Each device carries a memory
+//! capacity; the paper testbeds are unbounded (so their latency pins are
+//! untouched), while the `_tight` / `:<mem_gb>` variants bound it and
+//! make the simulator report OOM placements as infeasible.
 
 use crate::graph::{OpKind, OpNode};
 
@@ -58,6 +62,12 @@ pub struct DeviceModel {
     /// serialize. This is what makes Inception-V3's wide blocks
     /// CPU-friendly in Table 2.
     pub lanes: usize,
+    /// Device memory capacity, bytes. `f64::INFINITY` (the paper
+    /// testbeds' value) disables the constraint; bounded values make the
+    /// simulator flag placements whose steady-state high-water overflows
+    /// the device (`ExecReport::feasible`). Capacities never change the
+    /// schedule itself.
+    pub mem_capacity: f64,
 }
 
 impl DeviceModel {
@@ -108,7 +118,8 @@ impl LinkModel {
 /// The full testbed: device list + link matrix + placement contract.
 #[derive(Debug, Clone)]
 pub struct Testbed {
-    /// Registry id (`cpu_gpu`, `paper3`, `multi_gpu:<k>`, ...).
+    /// Registry id (`cpu_gpu`, `paper3`, `cpu_gpu_tight`,
+    /// `multi_gpu:<k>[:<mem_gb>]`, ...).
     pub id: String,
     pub devices: Vec<DeviceModel>,
     /// links[a][b] = cost model for moving a tensor from device a to b.
@@ -142,6 +153,7 @@ fn paper_hardware() -> (Vec<DeviceModel>, Vec<Vec<LinkModel>>) {
         launch_overhead: 1.2e-6,
         sat_half_elems: 2.0e3,
         lanes: 2,
+        mem_capacity: f64::INFINITY,
     };
     let igpu = DeviceModel {
         name: "GPU.0 (UHD 770)".to_string(),
@@ -153,6 +165,7 @@ fn paper_hardware() -> (Vec<DeviceModel>, Vec<Vec<LinkModel>>) {
         launch_overhead: 9.0e-6,
         sat_half_elems: 2.0e5,
         lanes: 1,
+        mem_capacity: f64::INFINITY,
     };
     let dgpu = DeviceModel {
         name: "GPU.1 (Flex 170)".to_string(),
@@ -164,6 +177,7 @@ fn paper_hardware() -> (Vec<DeviceModel>, Vec<Vec<LinkModel>>) {
         launch_overhead: 3.5e-6,
         sat_half_elems: 1.0e5,
         lanes: 1,
+        mem_capacity: f64::INFINITY,
     };
     let same = LinkModel { latency: 0.0, bandwidth: f64::INFINITY };
     let shared = LinkModel { latency: 4.0e-6, bandwidth: 2.5e10 };
@@ -237,35 +251,86 @@ impl Testbed {
         }
     }
 
+    /// Memory-constrained variant of the paper testbed: same roofline
+    /// models and 2-way CPU/dGPU action space as `cpu_gpu`, but the dGPU
+    /// is capped at 64 MB — far below any benchmark's resident weights —
+    /// while the host keeps 32 GB. All-accelerator placements OOM here;
+    /// this is the registry entry that exercises the feasibility path
+    /// end to end.
+    pub fn cpu_gpu_tight() -> Testbed {
+        let (mut devices, links) = paper_hardware();
+        devices[CPU].mem_capacity = 32e9;
+        devices[IGPU].mem_capacity = 32e9; // shares host memory
+        devices[DGPU].mem_capacity = 64e6;
+        Testbed {
+            id: "cpu_gpu_tight".to_string(),
+            devices,
+            links,
+            placeable: vec![CPU, DGPU],
+            reference: CPU,
+        }
+    }
+
+    /// [`Testbed::multi_gpu`] with each GPU capped at `mem_gb` GB
+    /// (decimal, 1e9 bytes) and the host CPU at 64 GB.
+    pub fn multi_gpu_mem(k: usize, mem_gb: usize) -> Testbed {
+        let mut tb = Self::multi_gpu(k);
+        tb.id = format!("multi_gpu:{}:{mem_gb}", tb.n_devices() - 1);
+        tb.devices[CPU].mem_capacity = 64e9;
+        for d in tb.devices[1..].iter_mut() {
+            d.mem_capacity = mem_gb as f64 * 1e9;
+        }
+        tb
+    }
+
     /// Resolve a testbed from its registry id: `cpu_gpu` (alias `paper`),
-    /// `paper3`, or `multi_gpu:<k>` (bare `multi_gpu` defaults to k=4).
+    /// `paper3`, `cpu_gpu_tight`, or `multi_gpu:<k>[:<mem_gb>]` (bare
+    /// `multi_gpu` defaults to k=4; the optional third field caps each
+    /// GPU's memory).
     pub fn by_id(id: &str) -> Option<Testbed> {
         match id {
             "cpu_gpu" | "paper" => Some(Self::cpu_gpu()),
             "paper3" => Some(Self::paper3()),
+            "cpu_gpu_tight" => Some(Self::cpu_gpu_tight()),
             _ => {
                 let rest = id.strip_prefix("multi_gpu")?;
                 if rest.is_empty() {
                     return Some(Self::multi_gpu(4));
                 }
-                let k: usize = rest.strip_prefix(':')?.parse().ok()?;
+                let mut parts = rest.strip_prefix(':')?.split(':');
+                let k: usize = parts.next()?.parse().ok()?;
                 if k == 0 {
                     return None;
                 }
-                Some(Self::multi_gpu(k))
+                match parts.next() {
+                    None => Some(Self::multi_gpu(k)),
+                    Some(gb) => {
+                        let gb: usize = gb.parse().ok()?;
+                        if gb == 0 || parts.next().is_some() {
+                            return None;
+                        }
+                        Some(Self::multi_gpu_mem(k, gb))
+                    }
+                }
             }
         }
     }
 
     /// The registry ids `by_id` understands (for `--help` / error text).
     pub fn registry_help() -> &'static str {
-        "cpu_gpu | paper3 | multi_gpu:<k>"
+        "cpu_gpu | paper3 | cpu_gpu_tight | multi_gpu:<k>[:<mem_gb>]"
     }
 
     /// One representative of each registered testbed family (used by the
     /// plumbing property tests and the serving sweep).
     pub fn registered() -> Vec<Testbed> {
-        vec![Self::cpu_gpu(), Self::paper3(), Self::multi_gpu(4)]
+        vec![
+            Self::cpu_gpu(),
+            Self::paper3(),
+            Self::multi_gpu(4),
+            Self::cpu_gpu_tight(),
+            Self::multi_gpu_mem(2, 8),
+        ]
     }
 
     pub fn n_devices(&self) -> usize {
@@ -404,6 +469,47 @@ mod tests {
         assert!(Testbed::by_id("multi_gpu:0").is_none());
         assert!(Testbed::by_id("multi_gpu:x").is_none());
         assert!(Testbed::by_id("tpu_pod").is_none());
+    }
+
+    #[test]
+    fn paper_testbeds_have_unbounded_memory() {
+        // The pre-existing registry entries must keep infinite capacities:
+        // that is what keeps their latency pins / feasibility unchanged.
+        for tb in [Testbed::cpu_gpu(), Testbed::paper3(), Testbed::multi_gpu(4)] {
+            for d in &tb.devices {
+                assert!(d.mem_capacity.is_infinite(), "{}: {}", tb.id, d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn tight_testbed_caps_the_accelerator() {
+        let tb = Testbed::cpu_gpu_tight();
+        assert_eq!(tb.id, "cpu_gpu_tight");
+        assert_eq!(tb.n_actions(), 2);
+        assert_eq!(tb.accel(), DGPU);
+        assert_eq!(tb.devices[DGPU].mem_capacity, 64e6);
+        assert!(tb.devices[CPU].mem_capacity > tb.devices[DGPU].mem_capacity);
+        // Same hardware as cpu_gpu otherwise: op times agree.
+        let loose = Testbed::cpu_gpu();
+        let op = big_conv();
+        for d in [CPU, IGPU, DGPU] {
+            assert_eq!(tb.devices[d].op_time(&op), loose.devices[d].op_time(&op));
+        }
+    }
+
+    #[test]
+    fn registry_resolves_memory_capped_ids() {
+        let tb = Testbed::by_id("multi_gpu:2:8").unwrap();
+        assert_eq!(tb.id, "multi_gpu:2:8");
+        assert_eq!(tb.n_devices(), 3);
+        assert_eq!(tb.devices[1].mem_capacity, 8e9);
+        assert_eq!(tb.devices[2].mem_capacity, 8e9);
+        assert!(tb.devices[CPU].mem_capacity.is_finite());
+        assert_eq!(Testbed::by_id("cpu_gpu_tight").unwrap().id, "cpu_gpu_tight");
+        assert!(Testbed::by_id("multi_gpu:2:0").is_none());
+        assert!(Testbed::by_id("multi_gpu:2:x").is_none());
+        assert!(Testbed::by_id("multi_gpu:2:8:1").is_none());
     }
 
     #[test]

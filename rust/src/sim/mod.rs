@@ -1,13 +1,20 @@
 //! Heterogeneous execution engine: the substitute for the paper's
 //! CPU + iGPU + dGPU OpenVINO testbed (DESIGN.md §4). Device roofline
-//! models, link models, a registry of `Testbed`s addressable by string id
-//! (`cpu_gpu`, `paper3`, `multi_gpu:<k>`), an event-driven list scheduler
-//! producing the latency l_P(G) the RL reward is built from, and the
-//! downstream numeric drift model behind Table 4.
+//! models with memory capacities, link models, a registry of `Testbed`s
+//! addressable by string id (`cpu_gpu`, `paper3`, `cpu_gpu_tight`,
+//! `multi_gpu:<k>[:<mem_gb>]`), an event-driven list scheduler producing
+//! the latency l_P(G) the RL reward is built from plus per-device memory
+//! high-water / feasibility, a pluggable `CostModel` layer with batched
+//! (`evaluate_many`) and parallel request-stream (`measure_many`)
+//! evaluation over a scoped worker pool, and the downstream numeric drift
+//! model behind Table 4.
 
+pub mod cost;
 pub mod device;
 pub mod numerics;
+pub mod pool;
 pub mod scheduler;
 
+pub use cost::{request_rng, AnalyticCostModel, CostModel, ParallelCostModel, ReferenceCostModel};
 pub use device::{DeviceId, DeviceKind, DeviceModel, LinkModel, Testbed, CPU, DGPU, IGPU};
-pub use scheduler::{execute, execute_reference, measure, ExecReport, Placement};
+pub use scheduler::{execute, execute_reference, measure, measure_from, ExecReport, Placement};

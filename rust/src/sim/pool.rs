@@ -1,0 +1,109 @@
+//! Scoped `std::thread` worker pool for batched placement evaluation.
+//!
+//! The offline crate set has no rayon; this is the minimal deterministic
+//! fan-out the `CostModel` batched paths need: an atomic work counter,
+//! scoped workers (one per core, capped by the item count), and
+//! index-ordered result assembly — so parallel results are positionally
+//! identical to the serial loop, which the cost-model contract requires.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of workers a batched call should actually use: the explicit
+/// request if nonzero, else one per available core; never more than the
+/// item count and never zero.
+pub fn effective_workers(requested: usize, n_items: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let w = if requested == 0 { hw } else { requested };
+    w.min(n_items).max(1)
+}
+
+/// Compute `f(i)` for `i in 0..n` on `workers` scoped threads and return
+/// the results in index order. `workers == 0` means one per core; one
+/// worker (or one item) degenerates to the plain serial loop. Work is
+/// claimed from a shared counter, so uneven item costs balance
+/// automatically.
+pub fn map_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = effective_workers(workers, n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("pool worker panicked") {
+                slots[i] = Some(v);
+            }
+        }
+    });
+    slots.into_iter().map(|o| o.expect("every index computed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map() {
+        let serial: Vec<usize> = (0..100).map(|i| i * i).collect();
+        for workers in [0, 1, 3, 7] {
+            assert_eq!(map_indexed(100, workers, |i| i * i), serial, "workers {workers}");
+        }
+    }
+
+    #[test]
+    fn handles_fewer_items_than_workers() {
+        assert_eq!(map_indexed(2, 16, |i| i + 1), vec![1, 2]);
+        assert_eq!(map_indexed(1, 16, |i| i), vec![0]);
+    }
+
+    #[test]
+    fn empty_input_is_empty_output() {
+        assert_eq!(map_indexed(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn effective_workers_bounds() {
+        assert_eq!(effective_workers(4, 100), 4);
+        assert_eq!(effective_workers(4, 2), 2);
+        assert!(effective_workers(0, 100) >= 1);
+        assert_eq!(effective_workers(0, 1), 1);
+        assert_eq!(effective_workers(9, 0), 1);
+    }
+
+    #[test]
+    fn balances_uneven_work() {
+        // Items with wildly different costs still all complete and land in
+        // order (the counter-based claim makes this safe by construction;
+        // this is a smoke test that nothing deadlocks or reorders).
+        let out = map_indexed(64, 8, |i| {
+            if i % 9 == 0 {
+                std::hint::black_box((0..20_000).sum::<usize>());
+            }
+            i
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+}

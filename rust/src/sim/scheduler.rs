@@ -1,5 +1,10 @@
 //! Event-driven list scheduler: executes a placed computation graph on the
-//! testbed and reports the makespan (the l_P(G) the reward is built from).
+//! testbed and reports the makespan (the l_P(G) the reward is built from),
+//! per-device busy time / transfer volume, and a per-device memory
+//! high-water (see [`memory_highwater`]) checked against each device's
+//! capacity — placements that overflow a device are reported infeasible
+//! (`ExecReport::feasible`) instead of silently scored. The accounting is
+//! observational: capacities never alter the schedule or the makespan.
 //!
 //! Semantics:
 //! - each device executes one op at a time per lane (OpenVINO streams=1
@@ -54,7 +59,7 @@ impl Placement {
 }
 
 /// Detailed outcome of one simulated execution.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExecReport {
     /// End-to-end latency, seconds.
     pub makespan: f64,
@@ -64,6 +69,136 @@ pub struct ExecReport {
     pub bytes_transferred: f64,
     /// Number of cross-device tensor transfers.
     pub n_transfers: usize,
+    /// Steady-state resident-byte high-water per device (see
+    /// [`memory_highwater`] for the residency model).
+    pub mem_peak: Vec<f64>,
+    /// Devices whose high-water exceeds their `mem_capacity`, ascending.
+    /// Empty on the default testbeds (unbounded capacities).
+    pub oom_devices: Vec<DeviceId>,
+}
+
+impl ExecReport {
+    /// Whether the placement fits every device's memory capacity.
+    pub fn feasible(&self) -> bool {
+        self.oom_devices.is_empty()
+    }
+
+    /// Busy fraction per device: busy seconds over makespan × lanes, so
+    /// a multi-lane device at full occupancy reads 1.0. All zeros when
+    /// the makespan is zero.
+    pub fn utilization(&self, tb: &Testbed) -> Vec<f64> {
+        if self.makespan <= 0.0 {
+            return vec![0.0; self.busy.len()];
+        }
+        self.busy
+            .iter()
+            .zip(&tb.devices)
+            .map(|(&b, d)| b / (self.makespan * d.lanes.max(1) as f64))
+            .collect()
+    }
+}
+
+/// Per-device memory high-water of a completed schedule, plus the devices
+/// it overflows.
+///
+/// Residency model (steady-state serving, one inference in flight):
+/// - **weights**: every `Constant` output is pre-staged at model-load time
+///   on each device hosting at least one of its consumers (on its own
+///   device if it has none) and stays resident for the whole run;
+/// - **intermediates**: a non-constant node's output is allocated on its
+///   device when the op starts and freed once every consumer has finished
+///   (held to the end of the run if it has no consumers);
+/// - **transfers**: a cross-device edge materializes one copy per
+///   (producer, consumer device) pair — consumers on the same remote
+///   device share it — resident from the producer's finish until the
+///   last such consumer finishes.
+///
+/// The sweep is purely observational — capacities never change the
+/// schedule, so latency pins are unaffected by this accounting. It runs
+/// on every `execute` (the report always carries `mem_peak`, bounded
+/// testbed or not) and costs one event build plus a per-device sort on
+/// top of the schedule itself; skipping it on unbounded testbeds would
+/// leave the report's memory columns empty exactly where the harness
+/// prints them, so completeness is preferred over the constant factor.
+fn memory_highwater(
+    g: &CompGraph,
+    placement: &Placement,
+    tb: &Testbed,
+    finish: &[f64],
+    makespan: f64,
+) -> (Vec<f64>, Vec<DeviceId>) {
+    let nd = tb.n_devices();
+    let mut base = vec![0f64; nd];
+    // Per-device (time, signed bytes) events. Frees sort before
+    // allocations at equal timestamps (delta ascending), so back-to-back
+    // buffer reuse at the same instant is not double-counted.
+    let mut events: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nd];
+
+    for v in 0..g.n() {
+        let node = &g.nodes[v];
+        let d = placement.0[v];
+        let bytes = node.out_bytes();
+        if node.kind == OpKind::Constant {
+            let mut staged: Vec<DeviceId> =
+                g.out_neighbors(v).iter().map(|&w| placement.0[w]).collect();
+            staged.sort_unstable();
+            staged.dedup();
+            if staged.is_empty() {
+                staged.push(d);
+            }
+            for s in staged {
+                base[s] += bytes;
+            }
+            continue;
+        }
+        let start = finish[v] - tb.devices[d].op_time(node);
+        let freed = if g.out_degree(v) == 0 {
+            makespan
+        } else {
+            g.out_neighbors(v).iter().map(|&w| finish[w]).fold(0f64, f64::max)
+        };
+        events[d].push((start, bytes));
+        events[d].push((freed, -bytes));
+        // One copy per (producer, remote device): consumers sharing a
+        // device share the copy, resident from the producer's finish
+        // until the last of them finishes (mirrors the per-device dedup
+        // of the constants above).
+        let mut copies: Vec<(DeviceId, f64)> = Vec::new();
+        for &w in g.out_neighbors(v) {
+            let dw = placement.0[w];
+            if dw != d {
+                match copies.iter_mut().find(|(cd, _)| *cd == dw) {
+                    Some((_, last)) => *last = last.max(finish[w]),
+                    None => copies.push((dw, finish[w])),
+                }
+            }
+        }
+        for (dw, last) in copies {
+            events[dw].push((finish[v], bytes));
+            events[dw].push((last, -bytes));
+        }
+    }
+
+    let mut peak = vec![0f64; nd];
+    let mut oom = Vec::new();
+    for d in 0..nd {
+        // Unstable sort: the (time, delta) key is a total order and
+        // equal events are interchangeable in a running sum.
+        events[d].sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        let mut cur = base[d];
+        let mut hi = base[d];
+        for &(_, delta) in &events[d] {
+            cur += delta;
+            if cur > hi {
+                hi = cur;
+            }
+        }
+        peak[d] = hi;
+        if hi > tb.devices[d].mem_capacity {
+            oom.push(d);
+        }
+    }
+    (peak, oom)
 }
 
 /// Critical-path upward rank (in expected-time terms, device-averaged)
@@ -213,7 +348,8 @@ pub fn execute(g: &CompGraph, placement: &Placement, tb: &Testbed) -> ExecReport
         }
     }
 
-    ExecReport { makespan, busy, bytes_transferred, n_transfers }
+    let (mem_peak, oom_devices) = memory_highwater(g, placement, tb, &finish, makespan);
+    ExecReport { makespan, busy, bytes_transferred, n_transfers, mem_peak, oom_devices }
 }
 
 /// Reference implementation of `execute`: the ready set as a Vec that is
@@ -291,20 +427,27 @@ pub fn execute_reference(g: &CompGraph, placement: &Placement, tb: &Testbed) -> 
         }
     }
 
-    ExecReport { makespan, busy, bytes_transferred, n_transfers }
+    let (mem_peak, oom_devices) = memory_highwater(g, placement, tb, &finish, makespan);
+    ExecReport { makespan, busy, bytes_transferred, n_transfers, mem_peak, oom_devices }
 }
 
-/// The paper's measurement protocol: run 10 times with multiplicative
-/// noise (~N(1, sigma)), average the last 5 (Table 2 caption). `sigma = 0`
-/// gives the deterministic makespan.
-pub fn measure(g: &CompGraph, placement: &Placement, tb: &Testbed, sigma: f64, rng: &mut Rng) -> f64 {
-    let base = execute(g, placement, tb).makespan;
+/// The paper's measurement protocol applied to an already-simulated
+/// deterministic makespan: 10 runs with multiplicative noise
+/// (~N(1, sigma)), average of the last 5 (Table 2 caption). `sigma = 0`
+/// returns `base` unchanged and draws nothing from `rng`. Callers that
+/// already hold an `ExecReport` use this to avoid a second simulation.
+pub fn measure_from(base: f64, sigma: f64, rng: &mut Rng) -> f64 {
     if sigma == 0.0 {
         return base;
     }
     let samples: Vec<f64> =
         (0..10).map(|_| base * (1.0 + sigma * rng.next_gauss()).max(0.5)).collect();
     stats::paper_latency_protocol(&samples)
+}
+
+/// Simulate and measure in one call (see [`measure_from`]).
+pub fn measure(g: &CompGraph, placement: &Placement, tb: &Testbed, sigma: f64, rng: &mut Rng) -> f64 {
+    measure_from(execute(g, placement, tb).makespan, sigma, rng)
 }
 
 #[cfg(test)]
@@ -441,6 +584,8 @@ mod tests {
                     tb.id,
                     b.id()
                 );
+                assert_eq!(fast.mem_peak, slow.mem_peak, "{}/{}", tb.id, b.id());
+                assert_eq!(fast.oom_devices, slow.oom_devices, "{}/{}", tb.id, b.id());
             }
         }
     }
@@ -468,9 +613,142 @@ mod tests {
                 if fast.busy != slow.busy || fast.n_transfers != slow.n_transfers {
                     return Err(format!("{}: report mismatch", tb.id));
                 }
+                if fast.mem_peak != slow.mem_peak || fast.oom_devices != slow.oom_devices {
+                    return Err(format!("{}: memory report mismatch", tb.id));
+                }
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn unbounded_testbeds_always_feasible() {
+        let g = Benchmark::ResNet50.build();
+        let tb = Testbed::paper();
+        for p in [Placement::all(g.n(), CPU), Placement::all(g.n(), DGPU)] {
+            let rep = execute(&g, &p, &tb);
+            assert!(rep.feasible(), "unbounded capacity can never OOM");
+            assert_eq!(rep.mem_peak.len(), tb.n_devices());
+            assert!(rep.mem_peak[p.0[0]] > 0.0, "placed device holds live bytes");
+        }
+    }
+
+    #[test]
+    fn chain_memory_peak_bounds() {
+        let g = conv_chain(4);
+        let tb = Testbed::paper();
+        let rep = execute(&g, &Placement::all(g.n(), CPU), &tb);
+        let per_node: Vec<f64> = g.nodes.iter().map(|n| n.out_bytes()).collect();
+        let largest = per_node.iter().cloned().fold(0f64, f64::max);
+        let total: f64 = per_node.iter().sum();
+        assert!(rep.mem_peak[CPU] >= largest, "{} < {largest}", rep.mem_peak[CPU]);
+        assert!(rep.mem_peak[CPU] <= total, "{} > {total}", rep.mem_peak[CPU]);
+        // Unused devices hold nothing.
+        assert_eq!(rep.mem_peak[DGPU], 0.0);
+    }
+
+    #[test]
+    fn constants_prestaged_on_consumer_device() {
+        let mut g = CompGraph::new("w");
+        let i = g.add_node(OpNode::new("in", OpKind::Parameter, vec![1, 4]));
+        let w = g.add_node(OpNode::new("w", OpKind::Constant, vec![4, 4]));
+        let m = g.add_node(
+            OpNode::new("mm", OpKind::MatMul, vec![1, 4])
+                .with_attrs(OpAttrs { reduce_dim: 4, ..Default::default() }),
+        );
+        let o = g.add_node(OpNode::new("out", OpKind::Result, vec![1, 4]));
+        g.add_edge(i, m);
+        g.add_edge(w, m);
+        g.add_edge(m, o);
+        let tb = Testbed::paper();
+        // Weight nominally on CPU, its consumer on the dGPU: the 64-byte
+        // weight is pre-staged on the consumer's device, not the CPU.
+        let p = Placement(vec![CPU, CPU, DGPU, CPU]);
+        let rep = execute(&g, &p, &tb);
+        let w_bytes = g.nodes[w].out_bytes();
+        assert_eq!(w_bytes, 64.0);
+        assert!(rep.mem_peak[DGPU] >= w_bytes, "{}", rep.mem_peak[DGPU]);
+        assert!(rep.mem_peak[CPU] < w_bytes, "{}", rep.mem_peak[CPU]);
+    }
+
+    #[test]
+    fn cross_device_copy_counted_on_consumer() {
+        let g = conv_chain(2);
+        let tb = Testbed::paper();
+        let mut p = Placement::all(g.n(), CPU);
+        p.0[2] = DGPU; // second conv on the dGPU
+        let rep = execute(&g, &p, &tb);
+        // The dGPU holds its own output plus the copied producer output.
+        let own = g.nodes[2].out_bytes();
+        let copied = g.nodes[1].out_bytes();
+        assert!(rep.mem_peak[DGPU] >= own + copied, "{} < {}", rep.mem_peak[DGPU], own + copied);
+    }
+
+    #[test]
+    fn shared_remote_copy_counted_once_per_device() {
+        // One producer on CPU feeding two consumers on the dGPU: the
+        // consumers share a single copied buffer, so the dGPU peak is
+        // bounded by copy + both outputs (per-edge counting would admit
+        // four tensors).
+        let mut g = CompGraph::new("fan");
+        let i = g.add_node(OpNode::new("in", OpKind::Parameter, vec![1, 64]));
+        let a = g.add_node(OpNode::new("a", OpKind::Relu, vec![1, 64]));
+        let c1 = g.add_node(OpNode::new("c1", OpKind::Relu, vec![1, 64]));
+        let c2 = g.add_node(OpNode::new("c2", OpKind::Sigmoid, vec![1, 64]));
+        let o = g.add_node(OpNode::new("out", OpKind::Result, vec![1, 64]));
+        g.add_edge(i, a);
+        g.add_edge(a, c1);
+        g.add_edge(a, c2);
+        g.add_edge(c1, o);
+        g.add_edge(c2, o);
+        let tb = Testbed::paper();
+        let p = Placement(vec![CPU, CPU, DGPU, DGPU, DGPU]);
+        let rep = execute(&g, &p, &tb);
+        let b = g.nodes[a].out_bytes();
+        assert!(rep.mem_peak[DGPU] <= 3.0 * b + 1e-9, "{}", rep.mem_peak[DGPU]);
+        assert!(rep.mem_peak[DGPU] >= 2.0 * b, "{}", rep.mem_peak[DGPU]);
+    }
+
+    #[test]
+    fn oom_flagged_without_changing_the_schedule() {
+        let g = Benchmark::ResNet50.build();
+        let mut tight = Testbed::paper();
+        tight.devices[DGPU].mem_capacity = 1.0; // one byte: everything OOMs
+        let p = Placement::all(g.n(), DGPU);
+        let constrained = execute(&g, &p, &tight);
+        let unbounded = execute(&g, &p, &Testbed::paper());
+        assert!(!constrained.feasible());
+        assert_eq!(constrained.oom_devices, vec![DGPU]);
+        assert_eq!(constrained.makespan, unbounded.makespan);
+        assert_eq!(constrained.mem_peak, unbounded.mem_peak);
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        let g = Benchmark::InceptionV3.build();
+        let tb = Testbed::paper();
+        let mut rng = crate::util::Rng::new(3);
+        let p = Placement((0..g.n()).map(|_| [CPU, DGPU][rng.below(2)]).collect());
+        let rep = execute(&g, &p, &tb);
+        for (d, u) in rep.utilization(&tb).iter().enumerate() {
+            assert!((0.0..=1.0).contains(u), "device {d}: utilization {u}");
+        }
+        // The 2-lane CPU can host more busy-seconds than the makespan;
+        // lane normalization is what keeps the fraction in [0, 1].
+        let all_cpu = execute(&g, &Placement::all(g.n(), CPU), &tb);
+        assert!(all_cpu.utilization(&tb)[CPU] <= 1.0);
+    }
+
+    #[test]
+    fn measure_from_matches_measure() {
+        let g = conv_chain(3);
+        let tb = Testbed::paper();
+        let p = Placement::all(g.n(), CPU);
+        let base = execute(&g, &p, &tb).makespan;
+        let mut a = crate::util::Rng::new(42);
+        let mut b = crate::util::Rng::new(42);
+        assert_eq!(measure(&g, &p, &tb, 0.05, &mut a), measure_from(base, 0.05, &mut b));
+        assert_eq!(measure_from(base, 0.0, &mut b), base);
     }
 
     #[test]

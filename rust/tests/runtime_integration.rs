@@ -95,9 +95,10 @@ fn placeto_agent_runs() {
     let cfg = small_cfg();
     let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
     let mut agent = BaselineAgent::new(&env, &mut eng, &cfg, BaselineKind::Placeto).unwrap();
-    let (actions, lat, _r) = agent.step(&env, &mut eng, true).unwrap();
-    assert_eq!(actions.len(), env.n_nodes);
-    assert!(lat.is_finite() && lat > 0.0);
+    let out = agent.step(&env, &mut eng, true).unwrap();
+    assert_eq!(out.actions.len(), env.n_nodes);
+    assert!(out.latency.is_finite() && out.latency > 0.0);
+    assert!(out.feasible, "unbounded default testbed can never OOM");
     for _ in 1..cfg.update_timestep {
         agent.step(&env, &mut eng, true).unwrap();
     }
@@ -111,9 +112,11 @@ fn rnn_agent_runs() {
     let cfg = small_cfg();
     let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
     let mut agent = BaselineAgent::new(&env, &mut eng, &cfg, BaselineKind::Rnn).unwrap();
-    let (actions, lat, _r) = agent.step(&env, &mut eng, false).unwrap();
-    assert_eq!(actions.len(), env.n_nodes);
-    assert!(lat.is_finite() && lat > 0.0);
+    let out = agent.step(&env, &mut eng, false).unwrap();
+    assert_eq!(out.actions.len(), env.n_nodes);
+    assert!(out.latency.is_finite() && out.latency > 0.0);
+    assert_eq!(out.latency, out.det_latency, "greedy step carries no noise");
+    assert!(out.feasible, "unbounded default testbed can never OOM");
 }
 
 #[test]
