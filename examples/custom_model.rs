@@ -1,7 +1,8 @@
 //! Placing a *custom* model: build your own computation graph with the
-//! public `GraphBuilder` API and search a placement for it, reusing the
-//! AOT artifacts of the benchmark whose padded capacity fits (no python
-//! re-lowering needed).
+//! public `GraphBuilder` API and search a placement for it. On the
+//! default native backend the policy trains directly at the graph's own
+//! size; on the pjrt backend the AOT artifacts of the benchmark whose
+//! padded capacity fits are reused (no python re-lowering needed).
 //!
 //! The model here is a small two-branch vision network — one heavy conv
 //! trunk plus a cheap pooling branch — the kind of structure where a
@@ -15,7 +16,6 @@ use hsdag::graph::{CompGraph, OpKind};
 use hsdag::models::builder::GraphBuilder;
 use hsdag::models::Benchmark;
 use hsdag::rl::{Env, HsdagAgent};
-use hsdag::runtime::Engine;
 
 /// A two-branch CNN: deep 3x3 conv trunk + global-context branch, fused by
 /// a concat and a classifier head.
@@ -63,12 +63,14 @@ fn main() -> anyhow::Result<()> {
         g.total_flops() / 1e9
     );
 
-    // Reuse the ResNet-50 artifacts (512-node capacity).
+    // Env capacities come from the benchmark whose padding fits
+    // (ResNet-50, 512 nodes); the native backend ignores the padding and
+    // trains at the custom graph's real size.
     let cfg = Config { seed: 5, ..Default::default() };
     let env = Env::from_graph(Benchmark::ResNet50, g, FeatureConfig::default())?;
-    let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
-    let mut agent = HsdagAgent::new(&env, &mut engine, &cfg)?;
-    let res = agent.search(&env, &mut engine, 12)?;
+    let mut agent = HsdagAgent::new(&env, &cfg)?;
+    println!("policy backend: {}", agent.backend_desc());
+    let res = agent.search(&env, 12)?;
 
     let gpu = env.latency(&vec![1; env.n_nodes]);
     println!("CPU-only  {:.3} ms", env.ref_latency * 1e3);

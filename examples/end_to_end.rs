@@ -1,24 +1,25 @@
 //! End-to-end driver: the full three-layer system on a real workload.
 //!
-//! Loads the AOT-compiled JAX/Pallas policy artifacts through the PJRT
-//! runtime, runs the HSDAG REINFORCE search (Algorithm 1) on every
-//! benchmark, logs the learning curve, and reports the final placements
-//! against all baselines — a miniature Table 2. Requires `make artifacts`.
+//! Runs the HSDAG REINFORCE search (Algorithm 1) on every benchmark,
+//! logs the learning curve, and reports the final placements against the
+//! baselines — a miniature Table 2. The policy backend resolves
+//! automatically: the pure-rust native kernels out of the box, or the
+//! AOT-compiled JAX/Pallas artifacts through PJRT when `artifacts/`
+//! exists (`make artifacts`).
 //!
 //!   cargo run --release --example end_to_end [episodes]
 
 use hsdag::baselines;
 use hsdag::config::Config;
 use hsdag::models::Benchmark;
-use hsdag::rl::{Env, HsdagAgent};
-use hsdag::runtime::Engine;
+use hsdag::rl::{BackendFactory, Env, HsdagAgent};
 
 fn main() -> anyhow::Result<()> {
     let episodes: usize =
         std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(15);
     let cfg = Config { seed: 1, ..Default::default() };
-    let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
-    println!("PJRT platform: {}", engine.platform());
+    let mut factory = BackendFactory::new(&cfg)?;
+    println!("policy backend: {}", factory.kind().id());
 
     for bench in Benchmark::ALL {
         let env = Env::new(bench, &cfg)?;
@@ -27,8 +28,8 @@ fn main() -> anyhow::Result<()> {
             bench.display(),
             env.n_nodes
         );
-        let mut agent = HsdagAgent::new(&env, &mut engine, &cfg)?;
-        let res = agent.search(&env, &mut engine, episodes)?;
+        let mut agent = HsdagAgent::with_backend(&env, factory.create(&env, &cfg)?, &cfg)?;
+        let res = agent.search(&env, episodes)?;
         for p in res.curve.iter().step_by(5.max(episodes / 6)) {
             println!(
                 "  ep {:>3}: best {:.3} ms, mean reward {:.3}",

@@ -14,8 +14,10 @@
 //! streams bit-identical). Every row reports feasibility, per-device
 //! utilization and memory high-water from the `ExecReport`.
 //!
-//! NOTE: the HSDAG rows need AOT artifacts lowered at this testbed's
-//! action-space width (`ND=<k> make artifacts`); without them the sweep
+//! NOTE: on the default native backend the HSDAG rows learn directly at
+//! each testbed's action-space width — no artifacts needed. On the pjrt
+//! backend they additionally require AOT artifacts lowered at that width
+//! (`ND=<k> make artifacts`); when the agent cannot construct, the sweep
 //! still serves all static deployments.
 //!
 //!   cargo run --release --example serving_sweep [n_requests]
@@ -24,7 +26,6 @@ use hsdag::baselines;
 use hsdag::config::Config;
 use hsdag::models::Benchmark;
 use hsdag::rl::{Env, HsdagAgent};
-use hsdag::runtime::Engine;
 use hsdag::sim::{AnalyticCostModel, CostModel, ParallelCostModel, Placement};
 use hsdag::util::stats;
 
@@ -37,7 +38,6 @@ fn main() -> anyhow::Result<()> {
         // The serving path: batched requests over the configured pool
         // width (`Config::eval_workers`, 0 = one per core).
         let model = ParallelCostModel::new(AnalyticCostModel, cfg.eval_workers);
-        let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
 
         for bench in [Benchmark::BertBase, Benchmark::ResNet50] {
             let env = Env::new(bench, &cfg)?;
@@ -50,13 +50,13 @@ fn main() -> anyhow::Result<()> {
             );
 
             // Learn a placement over this testbed's action space (short
-            // budget — this is a demo driver). The artifacts directory
-            // holds policies lowered at ONE action-space width; when this
-            // testbed's agent cannot construct, serve the static
+            // budget — this is a demo driver). The native backend trains
+            // at any width; pjrt needs artifacts lowered at this width —
+            // when the agent cannot construct, serve the static
             // deployments only.
-            let learned: Option<Placement> = match HsdagAgent::new(&env, &mut engine, &cfg) {
+            let learned: Option<Placement> = match HsdagAgent::new(&env, &cfg) {
                 Ok(mut agent) => {
-                    let res = agent.search(&env, &mut engine, 10)?;
+                    let res = agent.search(&env, 10)?;
                     if res.best_actions.is_empty() {
                         None
                     } else {

@@ -3,15 +3,16 @@
 //!   L3: simulator executes/sec, Algorithm-2 parsing, feature extraction,
 //!       normalized adjacency, co-location — everything on the per-step
 //!       critical path of the search loop.
-//!   L2/L1 (via PJRT): policy fwd, placer, and train-step execution
-//!       latency of the AOT artifacts — the compute the rust loop calls.
+//!   L2/L1: policy fwd, placer, and train-step execution latency through
+//!       whichever backend the config resolves to (native kernels by
+//!       default; the AOT artifacts via PJRT when artifacts/ exists).
+//!       Per-kernel native timings live in benches/bench_policy.rs.
 
 use hsdag::config::Config;
 use hsdag::features::{extract, normalized_adjacency, FeatureConfig};
 use hsdag::models::Benchmark;
 use hsdag::parsing::parse;
 use hsdag::rl::{Env, HsdagAgent};
-use hsdag::runtime::Engine;
 use hsdag::baselines::random_placement;
 use hsdag::sim::{execute, Testbed};
 use hsdag::util::bench::bench_fn;
@@ -38,26 +39,29 @@ fn main() {
     });
     bench_fn("features/a_norm/bert_coarse", 1, 10, || normalized_adjacency(&wg));
 
-    println!("\n== L2/L1 artifact execution (PJRT) ==");
+    println!("\n== L2/L1 policy execution (resolved backend) ==");
     let cfg = Config { seed: 2, ..Default::default() };
-    let Ok(mut engine) = Engine::cpu(&cfg.artifacts_dir) else {
-        println!("  (artifacts missing: run `make artifacts` first)");
-        return;
-    };
     for b in Benchmark::ALL {
         let env = Env::new(b, &cfg).unwrap();
-        let mut agent = HsdagAgent::new(&env, &mut engine, &cfg).unwrap();
+        let mut agent = match HsdagAgent::new(&env, &cfg) {
+            Ok(a) => a,
+            Err(e) => {
+                println!("  (skipping {}: {e:#})", b.id());
+                continue;
+            }
+        };
+        println!("  backend: {}", agent.backend_desc());
         // One full step = fwd + parse + placer + sample + simulate.
         bench_fn(&format!("step/full/{}", b.id()), 1, 10, || {
-            agent.step(&env, &mut engine, true).unwrap().latency
+            agent.step(&env, true).unwrap().latency
         });
         bench_fn(&format!("train/update/{}", b.id()), 0, 3, || {
-            // Re-prime and update (measures the train-artifact call + the
-            // host round-trip of all parameters).
+            // Re-prime and update (measures the train step + the
+            // parameter round-trip).
             for _ in 0..cfg.update_timestep {
-                agent.step(&env, &mut engine, true).unwrap();
+                agent.step(&env, true).unwrap();
             }
-            agent.update(&env, &mut engine).unwrap()
+            agent.update(&env).unwrap()
         });
     }
 }

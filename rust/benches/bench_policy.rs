@@ -1,0 +1,89 @@
+//! `cargo bench` target for the native policy backend: per-call timings
+//! of the three PolicyBackend entry points (fwd / placer / train) on each
+//! paper benchmark, so future kernel optimizations (blocking, SIMD,
+//! sparsity) have a recorded baseline to beat.
+//!
+//! The train timing measures one full Eq. 14 window: `update_timestep`
+//! re-forwards with dropout, the hand-written backward pass, and Adam.
+
+use hsdag::config::Config;
+use hsdag::models::Benchmark;
+use hsdag::parsing::parse;
+use hsdag::rl::{Env, NativeBackend, PolicyBackend, TrainBatch};
+use hsdag::util::bench::bench_fn;
+
+fn main() {
+    println!("== native policy backend (fwd / placer / train per call) ==");
+    let cfg = Config { backend: "native".to_string(), seed: 3, ..Default::default() };
+    for b in Benchmark::ALL {
+        let env = Env::new(b, &cfg).unwrap();
+        let mut backend = NativeBackend::new(&env, &cfg).unwrap();
+        println!(
+            "-- {} ({} working nodes, {} edges, {} actions) --",
+            b.id(),
+            env.n_nodes,
+            env.n_edges,
+            env.n_actions()
+        );
+        let h = cfg.hidden;
+        let fb = vec![0f32; env.v_pad * h];
+
+        // fwd: encoder + edge scorer at the real graph size.
+        bench_fn(&format!("policy/fwd/{}", b.id()), 1, 10, || {
+            backend.fwd(&env, &fb).unwrap()
+        });
+
+        // placer: group pooling + device head over a real partition.
+        let out = backend.fwd(&env, &fb).unwrap();
+        let part = parse(env.working_graph(), &out.scores);
+        let mut cids = vec![0i32; env.v_pad];
+        let mut gmask = vec![0f32; env.v_pad];
+        for (node, &c) in part.cluster_of.iter().enumerate() {
+            cids[node] = c as i32;
+        }
+        for m in gmask.iter_mut().take(part.n_groups) {
+            *m = 1.0;
+        }
+        bench_fn(&format!("policy/placer/{}", b.id()), 1, 20, || {
+            backend.placer(&env, &out, &cids, &gmask).unwrap()
+        });
+
+        // train: one full buffered window built from the partition above
+        // (identical planes per step — timing, not learning, is the
+        // point here).
+        let (t, v, e) = (cfg.update_timestep, env.v_pad, env.e_pad);
+        let mut fb_buf = vec![0f32; t * v * h];
+        let mut cids_buf = vec![0i32; t * v];
+        let mut actions_buf = vec![0i32; t * v];
+        let mut gmask_buf = vec![0f32; t * v];
+        let mut retained_buf = vec![0f32; t * e];
+        for ti in 0..t {
+            fb_buf[ti * v * h..ti * v * h + env.n_nodes * h]
+                .copy_from_slice(&out.z[..env.n_nodes * h]);
+            cids_buf[ti * v..(ti + 1) * v].copy_from_slice(&cids);
+            gmask_buf[ti * v..(ti + 1) * v].copy_from_slice(&gmask);
+            for g in 0..part.n_groups {
+                actions_buf[ti * v + g] = (g % env.n_actions()) as i32;
+            }
+            for (ei, &r) in part.retained.iter().enumerate() {
+                retained_buf[ti * e + ei] = if r { 1.0 } else { 0.0 };
+            }
+        }
+        let coeff: Vec<f32> = (0..t).map(|i| 0.5 - 0.02 * i as f32).collect();
+        bench_fn(&format!("policy/train/{}", b.id()), 0, 3, || {
+            let batch = TrainBatch {
+                t,
+                v,
+                e,
+                fb: &fb_buf,
+                cids: &cids_buf,
+                actions: &actions_buf,
+                gmask: &gmask_buf,
+                retained: &retained_buf,
+                coeff: &coeff,
+                key: [11, 13],
+            };
+            backend.train(&env, &batch).unwrap()
+        });
+    }
+}

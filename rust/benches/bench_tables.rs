@@ -35,14 +35,12 @@ fn main() {
         });
     }
     let cfg = Config { seed: 1, ..Default::default() };
-    if let Ok(mut engine) = Engine::cpu(&cfg.artifacts_dir) {
+    {
         let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
         bench_fn("table2/hsdag_search_1ep/resnet50", 0, 3, || {
-            let mut agent = HsdagAgent::new(&env, &mut engine, &cfg).unwrap();
-            agent.search(&env, &mut engine, 1).unwrap().best_latency
+            let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+            agent.search(&env, 1).unwrap().best_latency
         });
-    } else {
-        println!("  (artifacts missing: skipping learned-search benches)");
     }
 
     println!("\n== Table 3: ablation feature extraction ==");
@@ -67,17 +65,22 @@ fn main() {
     bench_fn("table4/full", 1, 5, || table4::run(&cfg, None).unwrap());
 
     println!("\n== Table 5: per-episode search cost by method ==");
-    if let Ok(mut engine) = Engine::cpu(&cfg.artifacts_dir) {
+    {
         let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
         bench_fn("table5/episode/hsdag/resnet50", 0, 3, || {
-            let mut agent = HsdagAgent::new(&env, &mut engine, &cfg).unwrap();
-            agent.search(&env, &mut engine, 1).unwrap().wall_secs
+            let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+            agent.search(&env, 1).unwrap().wall_secs
         });
-        for kind in [BaselineKind::Placeto, BaselineKind::Rnn] {
-            bench_fn(&format!("table5/episode/{}/resnet50", kind.id()), 0, 3, || {
-                let mut agent = BaselineAgent::new(&env, &mut engine, &cfg, kind).unwrap();
-                agent.search(&env, &mut engine, 1).unwrap().wall_secs
-            });
+        // The learned baselines exist only as AOT artifacts (pjrt path).
+        if let Ok(mut engine) = Engine::cpu(&cfg.artifacts_dir) {
+            for kind in [BaselineKind::Placeto, BaselineKind::Rnn] {
+                bench_fn(&format!("table5/episode/{}/resnet50", kind.id()), 0, 3, || {
+                    let mut agent = BaselineAgent::new(&env, &mut engine, &cfg, kind).unwrap();
+                    agent.search(&env, &mut engine, 1).unwrap().wall_secs
+                });
+            }
+        } else {
+            println!("  (artifacts missing: skipping Placeto/RNN baseline benches)");
         }
     }
 

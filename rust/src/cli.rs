@@ -41,6 +41,10 @@ COMMON FLAGS
   --testbed ID                      device set: cpu_gpu | paper3 | cpu_gpu_tight | multi_gpu:<k>[:<mem_gb>]
                                     (default cpu_gpu — the paper's 2-way CPU/dGPU setup;
                                     cpu_gpu_tight / :<mem_gb> bound device memory)
+  --backend native|pjrt|auto        policy backend (default auto: pjrt when the artifacts
+                                    directory holds compiled *.hlo.txt artifacts, else the
+                                    pure-rust native kernels — training needs no artifacts
+                                    on the native backend)
   --episodes N                      RL search episodes (default 30)
   --seed N                          RNG seed (default 0)
   --oom-penalty X                   reward for infeasible (OOM) placements during search (default 0)
@@ -116,6 +120,7 @@ impl Cli {
             artifacts_dir: self.str_flag("artifacts", "artifacts"),
             max_episodes: self.usize_flag("episodes", 30)?,
             testbed: self.str_flag("testbed", "cpu_gpu"),
+            backend: self.str_flag("backend", "auto"),
             oom_penalty: self.f64_flag("oom-penalty", 0.0)?,
             eval_workers: self.usize_flag("workers", 0)?,
             use_baseline: !self.flags.contains_key("no-baseline"),
@@ -126,8 +131,10 @@ impl Cli {
             },
             ..Config::default()
         };
-        // Fail fast on typos (the registry error names the known ids).
+        // Fail fast on typos (the registry / backend errors name the
+        // known ids).
         cfg.resolve_testbed()?;
+        crate::rl::backend::BackendKind::resolve(&cfg.backend, &cfg.artifacts_dir)?;
         Ok(cfg)
     }
 }
@@ -205,6 +212,22 @@ mod tests {
         assert_eq!(cfg.eval_workers, 0);
         // Malformed values are errors, not silent defaults.
         assert!(parse(&argv("train --oom-penalty x")).unwrap().config().is_err());
+    }
+
+    #[test]
+    fn backend_flag_parses_and_rejects_typos() {
+        let c = parse(&argv("train --backend native")).unwrap();
+        assert_eq!(c.config().unwrap().backend, "native");
+        let c = parse(&argv("train --backend pjrt")).unwrap();
+        assert_eq!(c.config().unwrap().backend, "pjrt");
+        // Default is auto.
+        let c = parse(&argv("train")).unwrap();
+        assert_eq!(c.config().unwrap().backend, "auto");
+        // Typos fail fast with the known values in the message.
+        let err = parse(&argv("train --backend tpu")).unwrap().config();
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("tpu") && msg.contains("native"), "{msg}");
     }
 
     #[test]

@@ -18,10 +18,16 @@ pub struct Config {
     /// Testbed registry id (`cpu_gpu`, `paper3`, `multi_gpu:<k>`); decides
     /// the number and identity of placement targets.
     pub testbed: String,
+    /// Policy backend request: `native` (pure-rust kernels, no artifacts),
+    /// `pjrt` (AOT HLO artifacts via the PJRT engine), or `auto` (pjrt
+    /// exactly when `artifacts_dir` holds compiled `*.hlo.txt` artifacts).
+    /// Resolved by `rl::backend::BackendKind::resolve`.
+    pub backend: String,
     /// hidden_channel.
     pub hidden: usize,
-    /// learning_rate (lives in the AOT'd train step; recorded here for
-    /// reporting only).
+    /// learning_rate (Table 6). The native backend's Adam consumes it
+    /// directly; on the pjrt backend the value is baked into the AOT'd
+    /// train step at lowering time and this field is reporting-only.
     pub learning_rate: f64,
     /// max_episodes.
     pub max_episodes: usize,
@@ -65,6 +71,7 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             testbed: "cpu_gpu".to_string(),
+            backend: "auto".to_string(),
             hidden: 128,
             learning_rate: 1e-4,
             max_episodes: 100,
@@ -107,6 +114,7 @@ impl Config {
     pub fn table6(&self) -> String {
         format!(
             "testbed              {}\n\
+             backend              {}\n\
              num_devices          {}\n\
              hidden_channel       {}\n\
              layer_trans          2\n\
@@ -124,6 +132,7 @@ impl Config {
              gamma                {}\n\
              oom_penalty          {}\n",
             self.testbed,
+            self.backend,
             self.num_devices(),
             self.hidden,
             self.dropout_network,
@@ -145,6 +154,7 @@ mod tests {
     fn defaults_match_table6() {
         let c = Config::default();
         assert_eq!(c.testbed, "cpu_gpu");
+        assert_eq!(c.backend, "auto");
         assert_eq!(c.num_devices(), 2);
         assert_eq!(c.hidden, 128);
         assert_eq!(c.learning_rate, 1e-4);
@@ -160,6 +170,7 @@ mod tests {
         let t = Config::default().table6();
         for key in [
             "testbed",
+            "backend",
             "num_devices",
             "hidden_channel",
             "learning_rate",

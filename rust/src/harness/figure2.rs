@@ -9,27 +9,28 @@ use crate::config::Config;
 use crate::graph::dot;
 use crate::models::Benchmark;
 use crate::parsing::parse;
-use crate::rl::{Env, HsdagAgent};
-use crate::runtime::Engine;
+use crate::rl::{BackendFactory, Env, HsdagAgent};
 
 /// Generate Figure 2 assets into `out_dir`. Uses a short policy warm-up so
 /// the partition reflects learned edge scores rather than initialization.
+/// Runs on whichever policy backend the config resolves to — on the
+/// native backend no artifacts are needed.
 pub fn run(cfg: &Config, out_dir: &str, episodes: usize) -> Result<Table> {
     std::fs::create_dir_all(out_dir)?;
-    let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
+    let mut factory = BackendFactory::new(cfg)?;
     let mut t = Table::new(
         "Figure 2: graphs before/after partitioning + pooling",
         &["Benchmark", "|V|", "coarse |V|", "groups |V'|", "cut fraction", "files"],
     );
     for b in Benchmark::ALL {
         let env = Env::new(b, cfg)?;
-        let mut agent = HsdagAgent::new(&env, &mut engine, cfg)?;
+        let mut agent = HsdagAgent::with_backend(&env, factory.create(&env, cfg)?, cfg)?;
         if episodes > 0 {
-            agent.search(&env, &mut engine, episodes)?;
+            agent.search(&env, episodes)?;
         }
         // Greedy step to obtain the current partition.
         agent.reset_episode();
-        agent.step(&env, &mut engine, false)?;
+        agent.step(&env, false)?;
         let part = agent.last_partition.clone().expect("partition after step");
         let wg = env.working_graph();
 

@@ -13,8 +13,9 @@ use super::report::{fmt_speedup, Table};
 use crate::baselines;
 use crate::config::Config;
 use crate::models::Benchmark;
-use crate::rl::{BaselineAgent, BaselineKind, Env, HsdagAgent, SearchResult};
-use crate::runtime::Engine;
+use crate::rl::{
+    BackendFactory, BackendKind, BaselineAgent, BaselineKind, Env, HsdagAgent, SearchResult,
+};
 use crate::sim::{ExecReport, Testbed};
 
 /// The static (non-learned) methods, in presentation order.
@@ -57,6 +58,11 @@ pub struct ExecMeta {
 pub struct Table2Results {
     /// Testbed registry id the run was placed on.
     pub testbed: String,
+    /// Resolved policy backend the learned searches ran on ("native" /
+    /// "pjrt"; empty in synthetic results). On the native backend the
+    /// Placeto / RNN baselines — which exist only as AOT artifacts — are
+    /// skipped and render as gaps.
+    pub backend: String,
     /// (method, benchmark id) -> latency seconds.
     pub latency: Vec<(String, String, f64)>,
     /// Learned-method search metadata: (method, benchmark id, wall secs,
@@ -97,8 +103,15 @@ impl Table2Results {
 /// learned method (the paper uses max_episodes=100; smaller values keep
 /// CI-style runs fast — record the budget used in EXPERIMENTS.md).
 pub fn run(cfg: &Config, episodes: usize) -> Result<(Table, Table2Results)> {
-    let mut results = Table2Results { testbed: cfg.testbed.clone(), ..Default::default() };
-    let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
+    // The PJRT engine behind the factory is constructed lazily: a
+    // native-backend run (or one that never reaches a learned method)
+    // must not require `artifacts/` to exist.
+    let mut factory = BackendFactory::new(cfg)?;
+    let mut results = Table2Results {
+        testbed: cfg.testbed.clone(),
+        backend: factory.kind().id().to_string(),
+        ..Default::default()
+    };
 
     for bench in Benchmark::ALL {
         let env = Env::new(bench, cfg)?;
@@ -119,25 +132,32 @@ pub fn run(cfg: &Config, episodes: usize) -> Result<(Table, Table2Results)> {
             results.push_meta(name, bench, &rep, tb);
         }
 
-        // Learned baselines.
-        for kind in [BaselineKind::Placeto, BaselineKind::Rnn] {
-            let mut agent = BaselineAgent::new(&env, &mut engine, cfg, kind)?;
-            let res = agent.search(&env, &mut engine, episodes)?;
-            record_learned(
-                &mut results,
-                match kind {
-                    BaselineKind::Placeto => "Placeto",
-                    BaselineKind::Rnn => "RNN-based",
-                },
-                bench,
-                &res,
-                &env,
-            );
+        // Learned baselines (Placeto / RNN exist only as AOT artifacts,
+        // so they run on the pjrt backend and are skipped on native —
+        // their rows render as gaps).
+        if factory.kind() == BackendKind::Pjrt {
+            let engine = factory.engine()?;
+            for kind in [BaselineKind::Placeto, BaselineKind::Rnn] {
+                let mut eng = engine.borrow_mut();
+                let mut agent = BaselineAgent::new(&env, &mut eng, cfg, kind)?;
+                let res = agent.search(&env, &mut eng, episodes)?;
+                drop(eng);
+                record_learned(
+                    &mut results,
+                    match kind {
+                        BaselineKind::Placeto => "Placeto",
+                        BaselineKind::Rnn => "RNN-based",
+                    },
+                    bench,
+                    &res,
+                    &env,
+                );
+            }
         }
 
-        // HSDAG.
-        let mut agent = HsdagAgent::new(&env, &mut engine, cfg)?;
-        let res = agent.search(&env, &mut engine, episodes)?;
+        // HSDAG, through whichever backend the run resolved to.
+        let mut agent = HsdagAgent::with_backend(&env, factory.create(&env, cfg)?, cfg)?;
+        let res = agent.search(&env, episodes)?;
         record_learned(&mut results, "HSDAG", bench, &res, &env);
     }
 
@@ -165,10 +185,15 @@ fn record_learned(
 pub fn render(results: &Table2Results) -> Table {
     let tb_label =
         if results.testbed.is_empty() { "cpu_gpu" } else { results.testbed.as_str() };
+    let be_label = if results.backend.is_empty() {
+        String::new()
+    } else {
+        format!("; backend {}", results.backend)
+    };
     let mut t = Table::new(
         &format!(
             "Table 2: Evaluation on the device placement task \
-             (speedup % vs reference device; testbed {tb_label})"
+             (speedup % vs reference device; testbed {tb_label}{be_label})"
         ),
         &[
             "Method",
@@ -274,6 +299,14 @@ mod tests {
     fn render_reports_the_testbed_used() {
         let r = Table2Results { testbed: "paper3".into(), ..Default::default() };
         assert!(render(&r).title.contains("paper3"));
+    }
+
+    #[test]
+    fn render_reports_the_backend_used() {
+        let r = Table2Results { backend: "native".into(), ..Default::default() };
+        assert!(render(&r).title.contains("backend native"));
+        // Synthetic results without a backend stay label-free.
+        assert!(!render(&Table2Results::default()).title.contains("backend"));
     }
 
     #[test]

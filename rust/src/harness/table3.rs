@@ -7,8 +7,7 @@ use super::report::{fmt_speedup, Table};
 use crate::config::Config;
 use crate::features::FeatureConfig;
 use crate::models::Benchmark;
-use crate::rl::{Env, HsdagAgent};
-use crate::runtime::Engine;
+use crate::rl::{BackendFactory, Env, HsdagAgent};
 
 pub const VARIANTS: [FeatureConfig; 4] = [
     FeatureConfig { no_shape: false, no_node_id: false, no_structural: false },
@@ -18,9 +17,16 @@ pub const VARIANTS: [FeatureConfig; 4] = [
 ];
 
 pub fn run(cfg: &Config, episodes: usize) -> Result<Table> {
-    let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
+    // One factory for the whole ablation grid: the PJRT engine (if that
+    // backend is selected) is created lazily and compiles each artifact
+    // once across all variants; the native backend needs no artifacts.
+    let mut factory = BackendFactory::new(cfg)?;
     let mut t = Table::new(
-        &format!("Table 3: Feature ablations (speedup % vs reference; testbed {})", cfg.testbed),
+        &format!(
+            "Table 3: Feature ablations (speedup % vs reference; testbed {}; backend {})",
+            cfg.testbed,
+            factory.kind().id()
+        ),
         &[
             "Variant",
             "Incep l_P(G)", "Incep Speedup %",
@@ -43,8 +49,8 @@ pub fn run(cfg: &Config, episodes: usize) -> Result<Table> {
         let mut cells = vec![fcfg.ablation_name().to_string()];
         for (bi, b) in Benchmark::ALL.iter().enumerate() {
             let env = Env::with_features(*b, cfg, fcfg)?;
-            let mut agent = HsdagAgent::new(&env, &mut engine, cfg)?;
-            let res = agent.search(&env, &mut engine, episodes)?;
+            let mut agent = HsdagAgent::with_backend(&env, factory.create(&env, cfg)?, cfg)?;
+            let res = agent.search(&env, episodes)?;
             cells.push(format!("{:.5}", res.best_latency));
             cells.push(fmt_speedup(res.best_latency, cpu_ref[bi]));
         }

@@ -3,12 +3,23 @@
 //! A rust + JAX + Pallas reproduction of *"A Structure-Aware Framework for
 //! Learning Device Placements on Computation Graphs"* (NeurIPS 2024).
 //!
-//! The crate is the Layer-3 coordinator: it owns the computation-graph
-//! substrate, feature extraction, graph-parsing partitioner, heterogeneous
-//! execution simulator, PJRT runtime (loading AOT-compiled JAX/Pallas
-//! policies from `artifacts/`), the REINFORCE search loop, the baselines,
-//! and the experiment harness that regenerates every table and figure of
-//! the paper. See DESIGN.md for the system inventory.
+//! The crate owns the computation-graph substrate, feature extraction,
+//! graph-parsing partitioner, heterogeneous execution simulator, the
+//! REINFORCE search loop, the baselines, and the experiment harness that
+//! regenerates every table and figure of the paper. Neural compute runs
+//! behind the [`rl::PolicyBackend`] trait with two interchangeable
+//! implementations:
+//!
+//! - **native** (default) — pure-rust f32 kernels ([`runtime::nn`]); the
+//!   whole pipeline, *including end-to-end HSDAG training*, runs with no
+//!   artifacts, no python and no external dependencies;
+//! - **pjrt** — AOT-compiled JAX/Pallas policies (HLO text from
+//!   `make artifacts`) executed through the PJRT [`runtime::Engine`], the
+//!   paper-faithful path.
+//!
+//! `--backend {native,pjrt,auto}` selects one; `auto` picks pjrt exactly
+//! when `artifacts/` holds compiled artifacts. See DESIGN.md for the
+//! system inventory.
 
 pub mod baselines;
 pub mod coarsen;

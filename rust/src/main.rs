@@ -8,8 +8,7 @@ use hsdag::baselines;
 use hsdag::cli::{self, Cli};
 use hsdag::harness::{figure2, table1, table2, table3, table4, table5};
 use hsdag::models::Benchmark;
-use hsdag::rl::{Env, HsdagAgent};
-use hsdag::runtime::Engine;
+use hsdag::rl::{BackendFactory, Env, HsdagAgent};
 use hsdag::sim::execute;
 
 fn main() {
@@ -59,20 +58,20 @@ fn run(c: Cli) -> Result<()> {
         "train" => {
             let bench = c.bench()?;
             let episodes = c.usize_flag("episodes", 30)?;
-            let mut engine = Engine::cpu(&cfg.artifacts_dir)?;
+            let mut factory = BackendFactory::new(&cfg)?;
             let env = Env::new(bench, &cfg)?;
+            let mut agent = HsdagAgent::with_backend(&env, factory.create(&env, &cfg)?, &cfg)?;
             println!(
                 "searching {} ({} working nodes, {} edges) on testbed {} ({} placement targets) \
-                 for {episodes} episodes on {}",
+                 for {episodes} episodes on backend {}",
                 bench.display(),
                 env.n_nodes,
                 env.n_edges,
                 env.testbed.id,
                 env.n_actions(),
-                engine.platform(),
+                agent.backend_desc(),
             );
-            let mut agent = HsdagAgent::new(&env, &mut engine, &cfg)?;
-            let res = agent.search(&env, &mut engine, episodes)?;
+            let res = agent.search(&env, episodes)?;
             for p in &res.curve {
                 println!(
                     "  episode {:>3}  best {:.5}s  mean-reward {:.3}  loss {:+.4}",

@@ -267,6 +267,188 @@ mod tests {
         });
     }
 
+    /// Reference Eq. 9: the lowest-index incident edge with the maximum
+    /// non-negative score, or None for isolated / fully-dropped nodes.
+    fn argmax_edge(g: &CompGraph, scores: &[f32], v: usize) -> Option<usize> {
+        let mut best = None;
+        let mut best_s = f32::NEG_INFINITY;
+        for (ei, &(s, d)) in g.edges.iter().enumerate() {
+            if (s == v || d == v) && scores[ei] >= 0.0 && scores[ei] > best_s {
+                best_s = scores[ei];
+                best = Some(ei);
+            }
+        }
+        best
+    }
+
+    /// Independent connected-components computation over the retained
+    /// edge set (plain BFS, no union-find).
+    fn components_of_retained(g: &CompGraph, retained: &[bool]) -> Vec<usize> {
+        let n = g.n();
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (ei, &(s, d)) in g.edges.iter().enumerate() {
+            if retained[ei] {
+                adj[s].push(d);
+                adj[d].push(s);
+            }
+        }
+        let mut comp = vec![usize::MAX; n];
+        let mut next = 0;
+        for start in 0..n {
+            if comp[start] != usize::MAX {
+                continue;
+            }
+            let mut queue = vec![start];
+            comp[start] = next;
+            while let Some(v) = queue.pop() {
+                for &u in &adj[v] {
+                    if comp[u] == usize::MAX {
+                        comp[u] = next;
+                        queue.push(u);
+                    }
+                }
+            }
+            next += 1;
+        }
+        comp
+    }
+
+    #[test]
+    fn eq9_retains_exactly_the_argmax_edges_prop() {
+        // Scores drawn from a tiny discrete set force frequent ties; the
+        // deterministic tie-break (lowest edge index) must still hold.
+        check(
+            "parse-eq9-argmax",
+            PropConfig { cases: 48, max_size: 100, ..Default::default() },
+            |rng, size| {
+                let g = CompGraph::random(rng, size, size / 2);
+                let levels = [0.0f32, 0.25, 0.25, 0.5, 1.0, -1.0];
+                let scores: Vec<f32> = (0..g.m()).map(|_| *rng.choose(&levels)).collect();
+                let p = parse(&g, &scores);
+                // ε is exactly the union of per-node argmax edges …
+                let mut expected = vec![false; g.m()];
+                for v in 0..g.n() {
+                    if let Some(ei) = argmax_edge(&g, &scores, v) {
+                        expected[ei] = true;
+                    }
+                }
+                if p.retained != expected {
+                    return Err("retained set is not the union of argmax edges".into());
+                }
+                // … so every non-isolated node with a surviving edge keeps
+                // an incident edge of its maximum score.
+                for v in 0..g.n() {
+                    if let Some(ei) = argmax_edge(&g, &scores, v) {
+                        let best = scores[ei];
+                        let keeps_max = g.edges.iter().enumerate().any(|(e2, &(s, d))| {
+                            (s == v || d == v) && p.retained[e2] && scores[e2] == best
+                        });
+                        if !keeps_max {
+                            return Err(format!("node {v} lost its max-score edge"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn groups_equal_connected_components_prop() {
+        check(
+            "parse-components",
+            PropConfig { cases: 48, max_size: 100, ..Default::default() },
+            |rng, size| {
+                let g = CompGraph::random(rng, size, size / 3);
+                let scores: Vec<f32> = (0..g.m())
+                    .map(|_| if rng.next_f64() < 0.2 { -1.0 } else { rng.next_f32() })
+                    .collect();
+                let p = parse(&g, &scores);
+                let comp = components_of_retained(&g, &p.retained);
+                let n_comp = comp.iter().max().map_or(0, |&m| m + 1);
+                if p.n_groups != n_comp {
+                    return Err(format!("{} groups vs {} components", p.n_groups, n_comp));
+                }
+                // Same equivalence classes: co-grouped iff co-component.
+                for v in 0..g.n() {
+                    for u in (v + 1)..g.n() {
+                        if (p.cluster_of[v] == p.cluster_of[u]) != (comp[v] == comp[u]) {
+                            return Err(format!("nodes {v},{u} disagree with components"));
+                        }
+                    }
+                }
+                // Dense ids: every id in 0..n_groups occurs.
+                let mut seen = vec![false; p.n_groups];
+                for &c in &p.cluster_of {
+                    if c >= p.n_groups {
+                        return Err("group id out of range".into());
+                    }
+                    seen[c] = true;
+                }
+                if !seen.iter().all(|&s| s) {
+                    return Err("group ids are not dense 0..n_groups".into());
+                }
+                // Pooled edges: no self-loops, valid endpoints.
+                for &(a, b) in &p.pooled_edges {
+                    if a == b {
+                        return Err("self pooled edge".into());
+                    }
+                    if a >= p.n_groups || b >= p.n_groups {
+                        return Err("pooled edge endpoint out of range".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn isolated_nodes_become_singleton_groups() {
+        // A graph with nodes that have no incident edges at all: each must
+        // end up alone in its own (dense-id) group.
+        let mut g = path(4);
+        let i1 = g.add_node(OpNode::new("iso1", OpKind::Relu, vec![1]));
+        let i2 = g.add_node(OpNode::new("iso2", OpKind::Relu, vec![1]));
+        let p = parse(&g, &[0.9, 0.9, 0.9]);
+        assert_eq!(p.cluster_of.len(), 6);
+        assert_eq!(p.members[p.cluster_of[i1]], vec![i1]);
+        assert_eq!(p.members[p.cluster_of[i2]], vec![i2]);
+        assert_ne!(p.cluster_of[i1], p.cluster_of[i2]);
+        // Dense ids cover 0..n_groups.
+        let mut seen = vec![false; p.n_groups];
+        p.cluster_of.iter().for_each(|&c| seen[c] = true);
+        assert!(seen.iter().all(|&s| s));
+        // Fully-dropped scores isolate every node the same way.
+        let p2 = parse(&g, &[-1.0, -1.0, -1.0]);
+        assert_eq!(p2.n_groups, 6);
+        for (v, m) in p2.members.iter().enumerate() {
+            assert_eq!(m, &vec![v]);
+        }
+    }
+
+    #[test]
+    fn tie_scores_break_toward_lower_edge_index() {
+        // Star: node 0 feeds 1, 2, 3 with identical scores — node 0's
+        // argmax must be edge 0 (the lowest index), and leaves keep their
+        // only incident edge, so all three are retained but the winner of
+        // the center's tie is well-defined.
+        let mut g = CompGraph::new("star");
+        let c = g.add_node(OpNode::new("c", OpKind::Parameter, vec![1]));
+        for i in 0..3 {
+            let leaf = g.add_node(OpNode::new(format!("l{i}"), OpKind::Relu, vec![1]));
+            g.add_edge(c, leaf);
+        }
+        let p = parse(&g, &[0.5, 0.5, 0.5]);
+        // Every leaf's sole edge retained -> one big group.
+        assert!(p.retained.iter().all(|&r| r));
+        assert_eq!(p.n_groups, 1);
+        // Drop two leaves' edges below: center still ties on the rest.
+        let p2 = parse(&g, &[0.5, 0.5, 0.1]);
+        assert!(p2.retained[0] && p2.retained[1]);
+        assert!(p2.retained[2]); // leaf 3 keeps its only edge
+        assert_eq!(p2.n_groups, 1);
+    }
+
     #[test]
     fn benchmark_graphs_give_nontrivial_partitions() {
         let mut rng = Rng::new(11);

@@ -1,0 +1,556 @@
+//! Policy backends: one trait, two implementations.
+//!
+//! [`PolicyBackend`] is the neural-compute boundary of the HSDAG agent —
+//! three calls per Algorithm-1 step family:
+//!
+//! - `fwd`    — node embeddings Z + GPN edge scores S from the evolving
+//!   feedback state;
+//! - `placer` — per-group device logits after rust's discrete parse;
+//! - `train`  — one Eq. 14 REINFORCE/Adam update over a buffered window.
+//!
+//! [`PjrtBackend`] executes the AOT-compiled HLO artifacts through the
+//! PJRT [`Engine`] (the paper-faithful JAX/Pallas path; requires
+//! `artifacts/` and a real xla crate). [`NativeBackend`] runs the same
+//! model with the pure-rust kernels in [`crate::runtime::nn`] — no
+//! artifacts, no python, works everywhere, at the real (unpadded)
+//! working-graph sizes.
+//!
+//! [`BackendFactory`] resolves `--backend {native,pjrt,auto}` (auto picks
+//! pjrt exactly when the artifacts directory holds compiled
+//! `*.hlo.txt` artifacts) and constructs the
+//! PJRT engine *lazily*, only when a pjrt backend is actually requested —
+//! baseline-only and native runs never touch `artifacts/`.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::env::Env;
+use crate::config::Config;
+use crate::runtime::{Engine, NativeBatch, NativePolicy, ParamStore, Tensor};
+use crate::util::Rng;
+
+/// Resolved backend flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust kernels (`runtime::nn`), no artifacts needed.
+    Native,
+    /// AOT HLO artifacts executed through the PJRT engine.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn id(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Resolve a requested backend string (`native` | `pjrt` | `auto`).
+    /// `auto` selects pjrt exactly when `artifacts_dir` holds at least
+    /// one compiled artifact (`*.hlo.txt`), native otherwise — a merely
+    /// existing (empty or stale) directory still trains out of the box.
+    pub fn resolve(request: &str, artifacts_dir: &str) -> Result<BackendKind> {
+        match request {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "auto" | "" => Ok(if dir_has_artifacts(artifacts_dir) {
+                BackendKind::Pjrt
+            } else {
+                BackendKind::Native
+            }),
+            other => bail!("unknown backend '{other}' (known: native | pjrt | auto)"),
+        }
+    }
+}
+
+/// Whether a directory holds at least one compiled HLO artifact.
+fn dir_has_artifacts(dir: &str) -> bool {
+    std::fs::read_dir(dir)
+        .map(|entries| {
+            entries
+                .flatten()
+                .any(|e| e.file_name().to_string_lossy().ends_with(".hlo.txt"))
+        })
+        .unwrap_or(false)
+}
+
+/// Output of one policy forward pass. `z` has at least `env.n_nodes` rows
+/// of width `hidden`; `scores` covers exactly the real edges.
+pub struct PolicyFwd {
+    pub z: Vec<f32>,
+    pub scores: Vec<f32>,
+    /// PJRT keeps the device literal of Z so the placer can reuse it
+    /// without a host round-trip.
+    z_lit: Option<xla::Literal>,
+}
+
+/// One buffered Eq. 14 window, in the agent's padded-slot layout
+/// (`v` = padded node slots, `e` = padded edge slots).
+pub struct TrainBatch<'a> {
+    pub t: usize,
+    pub v: usize,
+    pub e: usize,
+    /// Feedback state each step's forward saw, `[t, v, hidden]`.
+    pub fb: &'a [f32],
+    /// Group id per node, `[t, v]`.
+    pub cids: &'a [i32],
+    /// Sampled device per group slot, `[t, v]`.
+    pub actions: &'a [i32],
+    /// Valid-group-slot mask, `[t, v]`.
+    pub gmask: &'a [f32],
+    /// Retained-edge (Eq. 9) mask, `[t, e]`.
+    pub retained: &'a [f32],
+    /// gamma^t · (r_t − baseline) coefficients, `[t]`.
+    pub coeff: &'a [f32],
+    /// Dropout key (two u32 halves, the artifact convention).
+    pub key: [u32; 2],
+}
+
+/// The neural-compute boundary of the HSDAG agent.
+pub trait PolicyBackend {
+    fn kind(&self) -> BackendKind;
+
+    /// Human-readable identity for logs (platform, mode).
+    fn describe(&self) -> String;
+
+    /// The policy parameters + optimizer state (diagnostics, Table 5
+    /// memory accounting).
+    fn params(&self) -> &ParamStore;
+
+    /// Forward: Z + edge scores from the feedback state `fb`
+    /// (`[v_pad, hidden]` row-major; backends may read only the real
+    /// rows).
+    fn fwd(&mut self, env: &Env, fb: &[f32]) -> Result<PolicyFwd>;
+
+    /// Placer: device logits per group slot, row-major with stride
+    /// `env.n_actions()`; at least `n_groups` valid rows.
+    fn placer(
+        &mut self,
+        env: &Env,
+        fwd: &PolicyFwd,
+        cids: &[i32],
+        gmask: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// One Eq. 14 REINFORCE/Adam update over `batch`. Returns the loss.
+    fn train(&mut self, env: &Env, batch: &TrainBatch) -> Result<f32>;
+}
+
+// ---------------------------------------------------------------------------
+// Native backend
+// ---------------------------------------------------------------------------
+
+/// Pure-rust backend: the `runtime::nn` HSDAG policy bound to one
+/// environment's working graph.
+pub struct NativeBackend {
+    policy: NativePolicy,
+    hidden: usize,
+}
+
+impl NativeBackend {
+    pub fn new(env: &Env, cfg: &Config) -> Result<NativeBackend> {
+        let mut rng = Rng::new(cfg.seed ^ 0x45DA6);
+        let wg = env.working_graph();
+        let policy = NativePolicy::new(
+            env.features.x.clone(),
+            env.n_nodes,
+            env.features.d,
+            wg.edges.clone(),
+            cfg.hidden,
+            env.n_actions(),
+            cfg.learning_rate,
+            &mut rng,
+        )?;
+        Ok(NativeBackend { policy, hidden: cfg.hidden })
+    }
+
+    /// The underlying policy (benches probe the kernels directly).
+    pub fn policy(&self) -> &NativePolicy {
+        &self.policy
+    }
+
+    pub fn policy_mut(&mut self) -> &mut NativePolicy {
+        &mut self.policy
+    }
+}
+
+impl PolicyBackend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "native (pure-rust kernels, {} params, hidden {})",
+            self.policy.params.n_scalars(),
+            self.hidden
+        )
+    }
+
+    fn params(&self) -> &ParamStore {
+        &self.policy.params
+    }
+
+    fn fwd(&mut self, _env: &Env, fb: &[f32]) -> Result<PolicyFwd> {
+        let (z, scores) = self.policy.fwd(fb);
+        Ok(PolicyFwd { z, scores, z_lit: None })
+    }
+
+    fn placer(
+        &mut self,
+        _env: &Env,
+        fwd: &PolicyFwd,
+        cids: &[i32],
+        gmask: &[f32],
+    ) -> Result<Vec<f32>> {
+        Ok(self.policy.placer(&fwd.z, cids, gmask))
+    }
+
+    fn train(&mut self, _env: &Env, batch: &TrainBatch) -> Result<f32> {
+        let native = NativeBatch {
+            t: batch.t,
+            v_stride: batch.v,
+            e_stride: batch.e,
+            fb: batch.fb,
+            cids: batch.cids,
+            actions: batch.actions,
+            gmask: batch.gmask,
+            retained: batch.retained,
+            coeff: batch.coeff,
+            key: batch.key,
+        };
+        self.policy.train(&native)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// Artifact-executing backend: the pre-refactor engine path, now behind
+/// the trait. The engine is shared (`Rc<RefCell<_>>`) so one harness run
+/// compiles each artifact once across agents.
+pub struct PjrtBackend {
+    engine: Rc<RefCell<Engine>>,
+    params: ParamStore,
+    param_lits: Vec<xla::Literal>,
+    lits_dirty: bool,
+    hidden: usize,
+    fwd_name: String,
+    placer_name: String,
+    train_name: String,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: Rc<RefCell<Engine>>, env: &Env, cfg: &Config) -> Result<PjrtBackend> {
+        let bench = env.bench.id();
+        let train_name = format!("{bench}_hsdag_train");
+        {
+            let mut eng = engine.borrow_mut();
+            let train = eng.load(&train_name).context("loading train artifact")?;
+            anyhow::ensure!(train.spec.v == env.v_pad, "artifact V mismatch");
+            anyhow::ensure!(train.spec.e == env.e_pad, "artifact E mismatch");
+            anyhow::ensure!(train.spec.t == cfg.update_timestep, "artifact T mismatch");
+            // The placer head's logit width must match the testbed's
+            // action space.
+            let artifact_nd = train.spec.nd_or_legacy();
+            anyhow::ensure!(
+                artifact_nd == env.n_actions(),
+                "artifact lowered for {} devices but testbed '{}' exposes {} placement targets \
+                 (re-run `make artifacts` with ND={})",
+                artifact_nd,
+                env.testbed.id,
+                env.n_actions(),
+                env.n_actions()
+            );
+        }
+        anyhow::ensure!(
+            cfg.hidden == 128,
+            "the AOT artifacts are lowered at hidden=128 (got --hidden {})",
+            cfg.hidden
+        );
+        let mut rng = Rng::new(cfg.seed ^ 0x45DA6);
+        let params = {
+            let mut eng = engine.borrow_mut();
+            let train = eng.load(&train_name)?;
+            ParamStore::init_from_spec(&train.spec, &mut rng)?
+        };
+        let param_lits = params
+            .params
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PjrtBackend {
+            engine,
+            params,
+            param_lits,
+            lits_dirty: false,
+            hidden: cfg.hidden,
+            fwd_name: format!("{bench}_hsdag_fwd"),
+            placer_name: format!("{bench}_hsdag_placer"),
+            train_name,
+        })
+    }
+
+    /// Refresh the cached parameter literals after a train step.
+    fn refresh_lits(&mut self) -> Result<()> {
+        if self.lits_dirty {
+            self.param_lits = self
+                .params
+                .params
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<Vec<_>>>()?;
+            self.lits_dirty = false;
+        }
+        Ok(())
+    }
+}
+
+impl PolicyBackend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt ({})", self.engine.borrow().platform())
+    }
+
+    fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    fn fwd(&mut self, env: &Env, fb: &[f32]) -> Result<PolicyFwd> {
+        self.refresh_lits()?;
+        // Constant tensors (params between updates, features, adjacency)
+        // go in as cached literals; only the evolving feedback state is
+        // serialized per step.
+        let fb_lit = Tensor::f32(&[env.v_pad, self.hidden], fb.to_vec()).to_literal()?;
+        let mut refs: Vec<&xla::Literal> = self.param_lits.iter().collect();
+        refs.push(&env.lit.x0);
+        refs.push(&env.lit.a_norm);
+        refs.push(&fb_lit);
+        refs.push(&env.lit.edge_src);
+        refs.push(&env.lit.edge_dst);
+        refs.push(&env.lit.node_mask);
+        let mut eng = self.engine.borrow_mut();
+        let fwd = eng.load(&self.fwd_name)?;
+        let mut outs = fwd.run_refs(&refs)?;
+        let z: Vec<f32> = outs[0].to_vec()?;
+        let scores_padded: Vec<f32> = outs[1].to_vec()?;
+        let z_lit = outs.swap_remove(0);
+        Ok(PolicyFwd {
+            z,
+            scores: scores_padded[..env.n_edges].to_vec(),
+            z_lit: Some(z_lit),
+        })
+    }
+
+    fn placer(
+        &mut self,
+        env: &Env,
+        fwd: &PolicyFwd,
+        cids: &[i32],
+        gmask: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.refresh_lits()?;
+        // Z straight from the fwd output when available (no copy).
+        let owned_z;
+        let z_lit = match &fwd.z_lit {
+            Some(lit) => lit,
+            None => {
+                let mut z = fwd.z.clone();
+                z.resize(env.v_pad * self.hidden, 0.0);
+                owned_z = Tensor::f32(&[env.v_pad, self.hidden], z).to_literal()?;
+                &owned_z
+            }
+        };
+        let cids_lit = Tensor::i32(&[env.v_pad], cids.to_vec()).to_literal()?;
+        let gmask_lit = Tensor::f32(&[env.v_pad], gmask.to_vec()).to_literal()?;
+        let mut refs: Vec<&xla::Literal> = self.param_lits.iter().collect();
+        refs.push(z_lit);
+        refs.push(&cids_lit);
+        refs.push(&gmask_lit);
+        let mut eng = self.engine.borrow_mut();
+        let placer = eng.load(&self.placer_name)?;
+        let pouts = placer.run_refs(&refs)?;
+        Ok(pouts[0].to_vec()?)
+    }
+
+    fn train(&mut self, env: &Env, batch: &TrainBatch) -> Result<f32> {
+        let (t, v, e, h) = (batch.t, batch.v, batch.e, self.hidden);
+        let mut inputs = self.params.train_prefix();
+        inputs.push(env.x0.clone());
+        inputs.push(env.a_norm.clone());
+        inputs.push(env.edge_src.clone());
+        inputs.push(env.edge_dst.clone());
+        inputs.push(env.node_mask.clone());
+        inputs.push(env.edge_mask.clone());
+        inputs.push(Tensor::f32(&[t, v, h], batch.fb.to_vec()));
+        inputs.push(Tensor::i32(&[t, v], batch.cids.to_vec()));
+        inputs.push(Tensor::i32(&[t, v], batch.actions.to_vec()));
+        inputs.push(Tensor::f32(&[t, v], batch.gmask.to_vec()));
+        inputs.push(Tensor::f32(&[t, e], batch.retained.to_vec()));
+        inputs.push(Tensor::f32(&[t], batch.coeff.to_vec()));
+        inputs.push(Tensor::u32(&[2], vec![batch.key[0], batch.key[1]]));
+        let outs = {
+            let mut eng = self.engine.borrow_mut();
+            let train = eng.load(&self.train_name)?;
+            train.run(&inputs)?
+        };
+        let loss = self.params.apply_train_outputs(&outs)?;
+        self.lits_dirty = true;
+        Ok(loss)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Factory
+// ---------------------------------------------------------------------------
+
+/// Resolves the configured backend once and hands out backends per
+/// environment. The PJRT engine is constructed lazily on first use and
+/// shared across every backend (and baseline agent) of the run, so a
+/// native or baseline-only run never requires `artifacts/` to exist.
+pub struct BackendFactory {
+    kind: BackendKind,
+    /// Whether the kind came from an `auto` request: pjrt construction
+    /// failures then fall back to the native backend instead of erroring
+    /// (artifacts may exist but cover a different benchmark / testbed
+    /// width than the one being run).
+    auto: bool,
+    artifacts_dir: String,
+    engine: Option<Rc<RefCell<Engine>>>,
+}
+
+impl BackendFactory {
+    pub fn new(cfg: &Config) -> Result<BackendFactory> {
+        Ok(BackendFactory {
+            kind: BackendKind::resolve(&cfg.backend, &cfg.artifacts_dir)?,
+            auto: matches!(cfg.backend.as_str(), "auto" | ""),
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            engine: None,
+        })
+    }
+
+    /// The resolved backend flavor for this run.
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    /// The shared PJRT engine, created on first call (errors when the
+    /// artifacts directory is missing — callers should only ask for it
+    /// when the pjrt backend is selected).
+    pub fn engine(&mut self) -> Result<Rc<RefCell<Engine>>> {
+        if self.engine.is_none() {
+            self.engine = Some(Rc::new(RefCell::new(Engine::cpu(&self.artifacts_dir)?)));
+        }
+        Ok(self.engine.as_ref().unwrap().clone())
+    }
+
+    /// Build a policy backend for one environment. Under an `auto`
+    /// request a pjrt backend that cannot construct for *this*
+    /// environment (artifacts missing the benchmark, lowered at a
+    /// different action-space width, stub xla, ...) falls back to the
+    /// native backend with a note; an explicit `--backend pjrt` still
+    /// fails hard.
+    pub fn create(&mut self, env: &Env, cfg: &Config) -> Result<Box<dyn PolicyBackend>> {
+        match self.kind {
+            BackendKind::Native => Ok(Box::new(NativeBackend::new(env, cfg)?)),
+            BackendKind::Pjrt => {
+                let pjrt = self
+                    .engine()
+                    .and_then(|engine| Ok(Box::new(PjrtBackend::new(engine, env, cfg)?)));
+                match pjrt {
+                    Ok(backend) => Ok(backend),
+                    Err(e) if self.auto => {
+                        eprintln!(
+                            "note: auto backend falling back to native for {}: {e:#}",
+                            env.bench.id()
+                        );
+                        Ok(Box::new(NativeBackend::new(env, cfg)?))
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Benchmark;
+
+    #[test]
+    fn backend_kind_resolution() {
+        // Explicit requests ignore the artifacts directory.
+        assert_eq!(BackendKind::resolve("native", "/nope").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::resolve("pjrt", "/nope").unwrap(), BackendKind::Pjrt);
+        // Auto: native without compiled artifacts, pjrt with.
+        assert_eq!(
+            BackendKind::resolve("auto", "/definitely/not/a/dir").unwrap(),
+            BackendKind::Native
+        );
+        let dir = std::env::temp_dir().join("hsdag_backend_auto_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::remove_file(dir.join("x_hsdag_fwd.hlo.txt")).ok();
+        // An empty (or stale) directory must NOT force the pjrt path.
+        assert_eq!(
+            BackendKind::resolve("auto", dir.to_str().unwrap()).unwrap(),
+            BackendKind::Native
+        );
+        std::fs::write(dir.join("x_hsdag_fwd.hlo.txt"), "HloModule x").unwrap();
+        assert_eq!(
+            BackendKind::resolve("auto", dir.to_str().unwrap()).unwrap(),
+            BackendKind::Pjrt
+        );
+        std::fs::remove_file(dir.join("x_hsdag_fwd.hlo.txt")).ok();
+        assert!(BackendKind::resolve("tpu", "x").is_err());
+    }
+
+    #[test]
+    fn factory_is_lazy_for_native() {
+        // A native factory over a missing artifacts dir must construct
+        // backends without ever touching the engine.
+        let cfg = Config {
+            backend: "native".to_string(),
+            artifacts_dir: "/definitely/not/a/dir".to_string(),
+            hidden: 16,
+            ..Config::default()
+        };
+        let mut factory = BackendFactory::new(&cfg).unwrap();
+        assert_eq!(factory.kind(), BackendKind::Native);
+        let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
+        let backend = factory.create(&env, &cfg).unwrap();
+        assert_eq!(backend.kind(), BackendKind::Native);
+        assert!(backend.describe().contains("native"));
+        assert_eq!(backend.params().n(), 16);
+    }
+
+    #[test]
+    fn native_backend_fwd_and_placer_shapes() {
+        let cfg = Config { backend: "native".to_string(), hidden: 16, ..Config::default() };
+        let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
+        let mut backend = NativeBackend::new(&env, &cfg).unwrap();
+        let fb = vec![0f32; env.v_pad * cfg.hidden];
+        let out = PolicyBackend::fwd(&mut backend, &env, &fb).unwrap();
+        assert_eq!(out.scores.len(), env.n_edges);
+        assert!(out.z.len() >= env.n_nodes * cfg.hidden);
+        assert!(out.scores.iter().all(|&s| (0.0..=1.0).contains(&s)));
+        // Two groups: nodes 0..k -> 0, rest -> 1.
+        let mut cids = vec![1i32; env.v_pad];
+        for c in cids.iter_mut().take(env.n_nodes / 2) {
+            *c = 0;
+        }
+        let mut gmask = vec![0f32; env.v_pad];
+        gmask[..2].fill(1.0);
+        let logits = backend.placer(&env, &out, &cids, &gmask).unwrap();
+        let nd = env.n_actions();
+        assert!(logits.len() >= 2 * nd);
+        assert!(logits[..2 * nd].iter().all(|l| l.is_finite() && *l > -1e8));
+    }
+}

@@ -1,28 +1,28 @@
 //! The HSDAG agent: Algorithm 1's end-to-end loop, driven from rust with
-//! all neural compute in AOT-compiled HLO (fwd / placer / train).
+//! all neural compute behind a [`PolicyBackend`] (native pure-rust
+//! kernels by default; AOT-compiled HLO via PJRT when artifacts exist).
 //!
 //! Per step:
-//!   1. `*_hsdag_fwd`    -> node embeddings Z, GPN edge scores S
+//!   1. `backend.fwd`    -> node embeddings Z, GPN edge scores S
 //!   2. rust parsing     -> groups (Eq. 9 + union-find), exploration edge
 //!                          dropout (dropout_network)
-//!   3. `*_hsdag_placer` -> per-group device logits
+//!   3. `backend.placer` -> per-group device logits
 //!   4. rust sampling    -> placement, simulator -> latency -> reward
 //!   5. feedback update  -> fb_v += mean Z of v's group (Alg. 1 line 10)
-//!   6. buffer; every `update_timestep` steps one `*_hsdag_train` call
-//!      applies the Eq. 14 REINFORCE update (Adam inside the artifact).
+//!   6. buffer; every `update_timestep` steps one `backend.train` call
+//!      applies the Eq. 14 REINFORCE update (Adam inside the backend).
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+use super::backend::{BackendFactory, PolicyBackend, TrainBatch};
 use super::env::Env;
 use super::search::{reinforce_coefficients, SearchResult, Tracker};
 use crate::config::Config;
 use crate::parsing::{parse, Partition};
-use crate::runtime::{Engine, ParamStore, Tensor};
+use crate::runtime::ParamStore;
 use crate::sim::measure_from;
 use crate::util::stats::Ema;
 use crate::util::Rng;
-
-const H: usize = 128; // hidden_channel; verified against the spec at init
 
 /// Replay buffer for one update window (T steps).
 struct Buffer {
@@ -39,9 +39,9 @@ struct Buffer {
 }
 
 impl Buffer {
-    fn new(t_cap: usize, v: usize, e: usize) -> Buffer {
+    fn new(t_cap: usize, v: usize, e: usize, h: usize) -> Buffer {
         Buffer {
-            fb: vec![0.0; t_cap * v * H],
+            fb: vec![0.0; t_cap * v * h],
             cids: vec![0; t_cap * v],
             actions: vec![0; t_cap * v],
             gmask: vec![0.0; t_cap * v],
@@ -66,8 +66,15 @@ impl Buffer {
         self.len == self.t_cap
     }
 
+    /// Working-set bytes of one full window, including the f64 reward
+    /// buffer (Table 5's memory column counts the whole replay state).
     fn bytes(&self) -> usize {
-        4 * (self.fb.len() + self.cids.len() + self.actions.len() + self.gmask.len() + self.retained.len())
+        4 * (self.fb.len()
+            + self.cids.len()
+            + self.actions.len()
+            + self.gmask.len()
+            + self.retained.len())
+            + 8 * self.t_cap
     }
 }
 
@@ -95,60 +102,52 @@ pub struct StepOutcome {
 /// The HSDAG policy agent.
 pub struct HsdagAgent {
     pub cfg: Config,
-    pub params: ParamStore,
+    backend: Box<dyn PolicyBackend>,
+    h: usize,
     fb: Vec<f32>, // [V, H] evolving feedback state
     buffer: Buffer,
     baseline: Ema,
     rng: Rng,
-    fwd_name: String,
-    placer_name: String,
-    train_name: String,
-    /// Cached literal forms of the parameters (invalidated on update).
-    param_lits: Vec<xla::Literal>,
     /// Last partition (exposed for Figure 2 dumps).
     pub last_partition: Option<Partition>,
 }
 
 impl HsdagAgent {
-    pub fn new(env: &Env, engine: &mut Engine, cfg: &Config) -> Result<HsdagAgent> {
-        let bench = env.bench.id();
-        let train_name = format!("{bench}_hsdag_train");
-        let train = engine.load(&train_name).context("loading train artifact")?;
-        anyhow::ensure!(train.spec.v == env.v_pad, "artifact V mismatch");
-        anyhow::ensure!(train.spec.e == env.e_pad, "artifact E mismatch");
-        anyhow::ensure!(train.spec.t == cfg.update_timestep, "artifact T mismatch");
-        // The placer head's logit width must match the testbed's action
-        // space.
-        let artifact_nd = train.spec.nd_or_legacy();
-        anyhow::ensure!(
-            artifact_nd == env.n_actions(),
-            "artifact lowered for {} devices but testbed '{}' exposes {} placement targets \
-             (re-run `make artifacts` with ND={})",
-            artifact_nd,
-            env.testbed.id,
-            env.n_actions(),
-            env.n_actions()
-        );
-        let mut rng = Rng::new(cfg.seed ^ 0x45DA6);
-        let params = ParamStore::init_from_spec(&train.spec, &mut rng)?;
-        let param_lits = params
-            .params
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
+    /// Construct with the backend the config resolves to (`cfg.backend`:
+    /// native / pjrt / auto).
+    pub fn new(env: &Env, cfg: &Config) -> Result<HsdagAgent> {
+        let backend = BackendFactory::new(cfg)?.create(env, cfg)?;
+        Self::with_backend(env, backend, cfg)
+    }
+
+    /// Construct over an explicit backend (harness runs share a
+    /// [`BackendFactory`] so the PJRT engine compiles each artifact once).
+    pub fn with_backend(
+        env: &Env,
+        backend: Box<dyn PolicyBackend>,
+        cfg: &Config,
+    ) -> Result<HsdagAgent> {
+        let h = cfg.hidden;
         Ok(HsdagAgent {
             cfg: cfg.clone(),
-            params,
-            fb: vec![0.0; env.v_pad * H],
-            buffer: Buffer::new(cfg.update_timestep, env.v_pad, env.e_pad),
+            backend,
+            h,
+            fb: vec![0.0; env.v_pad * h],
+            buffer: Buffer::new(cfg.update_timestep, env.v_pad, env.e_pad, h),
             baseline: Ema::new(0.1),
-            rng,
-            fwd_name: format!("{bench}_hsdag_fwd"),
-            placer_name: format!("{bench}_hsdag_placer"),
-            train_name,
-            param_lits,
+            rng: Rng::new(cfg.seed ^ 0xA6E27),
             last_partition: None,
         })
+    }
+
+    /// The active backend's human-readable identity.
+    pub fn backend_desc(&self) -> String {
+        self.backend.describe()
+    }
+
+    /// Policy parameters + optimizer state (diagnostics).
+    pub fn params(&self) -> &ParamStore {
+        self.backend.params()
     }
 
     /// Reset episode state (fb persists across steps within an episode;
@@ -159,28 +158,16 @@ impl HsdagAgent {
 
     /// One Alg. 1 step. `explore` enables sampling + edge dropout;
     /// greedy argmax otherwise.
-    pub fn step(&mut self, env: &Env, engine: &mut Engine, explore: bool) -> Result<StepOutcome> {
+    pub fn step(&mut self, env: &Env, explore: bool) -> Result<StepOutcome> {
         let v_pad = env.v_pad;
+        let h = self.h;
 
-        // (1) Forward: Z + edge scores. Constant tensors (params between
-        // updates, features, adjacency) go in as cached literals; only the
-        // evolving feedback state is serialized per step.
+        // (1) Forward: Z + edge scores on the current feedback state.
         let fb_used = self.fb.clone();
-        let fb_lit = Tensor::f32(&[v_pad, H], self.fb.clone()).to_literal()?;
-        let mut refs: Vec<&xla::Literal> = self.param_lits.iter().collect();
-        refs.push(&env.lit.x0);
-        refs.push(&env.lit.a_norm);
-        refs.push(&fb_lit);
-        refs.push(&env.lit.edge_src);
-        refs.push(&env.lit.edge_dst);
-        refs.push(&env.lit.node_mask);
-        let fwd = engine.load(&self.fwd_name)?;
-        let outs = fwd.run_refs(&refs)?;
-        let z: Vec<f32> = outs[0].to_vec()?;
-        let scores_padded: Vec<f32> = outs[1].to_vec()?;
+        let out = self.backend.fwd(env, &self.fb)?;
 
         // (2) Parse on real edges, with exploration dropout.
-        let mut scores: Vec<f32> = scores_padded[..env.n_edges].to_vec();
+        let mut scores = out.scores.clone();
         if explore && self.cfg.dropout_network > 0.0 {
             for s in scores.iter_mut() {
                 if self.rng.next_f64() < self.cfg.dropout_network {
@@ -199,17 +186,9 @@ impl HsdagAgent {
         for m in gmask.iter_mut().take(part.n_groups) {
             *m = 1.0;
         }
-        let cids_lit = Tensor::i32(&[v_pad], cids.clone()).to_literal()?;
-        let gmask_lit = Tensor::f32(&[v_pad], gmask.clone()).to_literal()?;
-        let mut prefs: Vec<&xla::Literal> = self.param_lits.iter().collect();
-        prefs.push(&outs[0]); // Z straight from the fwd output, no copy
-        prefs.push(&cids_lit);
-        prefs.push(&gmask_lit);
-        let placer = engine.load(&self.placer_name)?;
-        let pouts = placer.run_refs(&prefs)?;
-        let logits: Vec<f32> = pouts[0].to_vec()?;
+        let logits = self.backend.placer(env, &out, &cids, &gmask)?;
         // Action-space width comes from the env's testbed, not the config:
-        // the artifact contract was validated against it at construction.
+        // the backend contract was validated against it at construction.
         let nd = env.n_actions();
 
         // (4) Sample (or argmax) a device per group; expand; simulate.
@@ -234,18 +213,18 @@ impl HsdagAgent {
         let reward = env.reward_with_penalty(&report, latency, self.cfg.oom_penalty);
 
         // (5) Feedback update: fb_v += mean Z of v's group.
-        let mut gsum = vec![0f32; part.n_groups * H];
+        let mut gsum = vec![0f32; part.n_groups * h];
         let mut gcount = vec![0f32; part.n_groups];
         for (node, &c) in part.cluster_of.iter().enumerate() {
             gcount[c] += 1.0;
-            for k in 0..H {
-                gsum[c * H + k] += z[node * H + k];
+            for k in 0..h {
+                gsum[c * h + k] += out.z[node * h + k];
             }
         }
         for (node, &c) in part.cluster_of.iter().enumerate() {
             let cnt = gcount[c].max(1.0);
-            for k in 0..H {
-                self.fb[node * H + k] += gsum[c * H + k] / cnt;
+            for k in 0..h {
+                self.fb[node * h + k] += gsum[c * h + k] / cnt;
             }
         }
 
@@ -255,14 +234,12 @@ impl HsdagAgent {
             let t = self.buffer.len;
             let (v, e) = (self.buffer.v, self.buffer.e);
             // Store the fb that THIS forward actually saw (pre-update).
-            self.buffer.fb[t * v * H..(t + 1) * v * H].copy_from_slice(&fb_used);
+            self.buffer.fb[t * v * h..(t + 1) * v * h].copy_from_slice(&fb_used);
             self.buffer.cids[t * v..(t + 1) * v].copy_from_slice(&cids);
-            for (node, &a) in actions.iter().enumerate() {
+            for g in 0..part.n_groups {
                 // Store per-group actions in group-slot order (the loss
                 // indexes logits by group id).
-                let g = part.cluster_of[node];
                 self.buffer.actions[t * v + g] = group_devices[g] as i32;
-                let _ = (node, a);
             }
             self.buffer.gmask[t * v..(t + 1) * v].copy_from_slice(&gmask);
             for (ei, &r) in part.retained.iter().enumerate() {
@@ -283,9 +260,9 @@ impl HsdagAgent {
         })
     }
 
-    /// Flush the buffer through the train artifact (Eq. 14). Returns the
-    /// loss, or None if the buffer was empty.
-    pub fn update(&mut self, env: &Env, engine: &mut Engine) -> Result<Option<f32>> {
+    /// Flush the buffer through the backend's train step (Eq. 14).
+    /// Returns the loss, or None if the buffer was empty.
+    pub fn update(&mut self, env: &Env) -> Result<Option<f32>> {
         if self.buffer.len == 0 {
             return Ok(None);
         }
@@ -302,47 +279,36 @@ impl HsdagAgent {
             *c = 0.0;
         }
 
-        let (v, e, t) = (self.buffer.v, self.buffer.e, self.buffer.t_cap);
         let mut loss = 0.0;
         for _ in 0..self.cfg.k_epochs {
-            let mut inputs = self.params.train_prefix();
-            inputs.push(env.x0.clone());
-            inputs.push(env.a_norm.clone());
-            inputs.push(env.edge_src.clone());
-            inputs.push(env.edge_dst.clone());
-            inputs.push(env.node_mask.clone());
-            inputs.push(env.edge_mask.clone());
-            inputs.push(Tensor::f32(&[t, v, H], self.buffer.fb.clone()));
-            inputs.push(Tensor::i32(&[t, v], self.buffer.cids.clone()));
-            inputs.push(Tensor::i32(&[t, v], self.buffer.actions.clone()));
-            inputs.push(Tensor::f32(&[t, v], self.buffer.gmask.clone()));
-            inputs.push(Tensor::f32(&[t, e], self.buffer.retained.clone()));
-            inputs.push(Tensor::f32(&[t], coeff.clone()));
-            inputs.push(Tensor::u32(&[2], vec![self.rng.next_u64() as u32, self.rng.next_u64() as u32]));
-            let train = engine.load(&self.train_name)?;
-            let outs = train.run(&inputs)?;
-            loss = self.params.apply_train_outputs(&outs)?;
+            let key = [self.rng.next_u64() as u32, self.rng.next_u64() as u32];
+            let batch = TrainBatch {
+                t: self.buffer.t_cap,
+                v: self.buffer.v,
+                e: self.buffer.e,
+                fb: &self.buffer.fb,
+                cids: &self.buffer.cids,
+                actions: &self.buffer.actions,
+                gmask: &self.buffer.gmask,
+                retained: &self.buffer.retained,
+                coeff: &coeff,
+                key,
+            };
+            loss = self.backend.train(env, &batch)?;
         }
-        // Refresh the cached parameter literals for the next steps.
-        self.param_lits = self
-            .params
-            .params
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
         self.buffer.clear();
         Ok(Some(loss))
     }
 
     /// Full search: `episodes` episodes of `update_timestep` steps each,
     /// followed by one greedy evaluation step.
-    pub fn search(&mut self, env: &Env, engine: &mut Engine, episodes: usize) -> Result<SearchResult> {
+    pub fn search(&mut self, env: &Env, episodes: usize) -> Result<SearchResult> {
         let start = std::time::Instant::now();
         let mut tracker = Tracker::new();
         for ep in 0..episodes {
             self.reset_episode();
             for _ in 0..self.cfg.update_timestep {
-                let o = self.step(env, engine, true)?;
+                let o = self.step(env, true)?;
                 // Track with the *deterministic* latency of the sampled
                 // placement so "best" is noise-free; infeasible (OOM)
                 // placements are never candidates for "best".
@@ -350,7 +316,7 @@ impl HsdagAgent {
                 tracker.observe(&o.actions, det, o.reward);
             }
             if self.buffer.full() {
-                if let Some(loss) = self.update(env, engine)? {
+                if let Some(loss) = self.update(env)? {
                     tracker.record_loss(loss as f64);
                 }
             }
@@ -358,11 +324,16 @@ impl HsdagAgent {
         }
         // Greedy final placement under the trained policy.
         self.reset_episode();
-        let greedy = self.step(env, engine, false)?;
+        let greedy = self.step(env, false)?;
         let det = if greedy.feasible { greedy.det_latency } else { f64::INFINITY };
         tracker.observe(&greedy.actions, det, greedy.reward);
 
-        let peak = self.buffer.bytes() + env.v_pad * env.v_pad * 4 + self.params.n_scalars() * 12;
+        // Peak working set: replay buffer (incl. rewards), the evolving
+        // feedback state, the dense adjacency, parameters + Adam moments.
+        let peak = self.buffer.bytes()
+            + self.fb.len() * 4
+            + env.v_pad * env.v_pad * 4
+            + self.backend.params().n_scalars() * 12;
         Ok(tracker.finish(start.elapsed().as_secs_f64(), peak))
     }
 }
@@ -410,12 +381,14 @@ mod tests {
 
     #[test]
     fn buffer_layout() {
-        let mut b = Buffer::new(2, 4, 3);
+        let mut b = Buffer::new(2, 4, 3, 8);
         assert!(!b.full());
         b.len = 2;
         assert!(b.full());
         b.clear();
         assert_eq!(b.len, 0);
-        assert!(b.bytes() > 0);
+        // fb + cids + actions + gmask + retained in f32/i32, rewards f64.
+        let f32_bytes = 4 * (2 * 4 * 8 + 2 * 4 + 2 * 4 + 2 * 4 + 2 * 3);
+        assert_eq!(b.bytes(), f32_bytes + 8 * 2);
     }
 }

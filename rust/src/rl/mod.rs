@@ -1,13 +1,20 @@
 //! Reinforcement-learning coordinator (Algorithm 1): the placement
-//! environment, the HSDAG agent, the learned baselines, and search
-//! bookkeeping. All neural compute happens in AOT-compiled HLO artifacts
-//! executed via the PJRT runtime; this module owns everything else.
+//! environment, the HSDAG agent, the learned baselines, search
+//! bookkeeping, and the policy-backend layer. Neural compute happens
+//! behind the [`PolicyBackend`] trait — pure-rust kernels by default
+//! (`backend::NativeBackend`), AOT-compiled HLO via PJRT when artifacts
+//! are available (`backend::PjrtBackend`); this module owns everything
+//! else.
 
+pub mod backend;
 pub mod baseline_agents;
 pub mod env;
 pub mod hsdag;
 pub mod search;
 
+pub use backend::{
+    BackendFactory, BackendKind, NativeBackend, PjrtBackend, PolicyBackend, PolicyFwd, TrainBatch,
+};
 pub use baseline_agents::{BaselineAgent, BaselineKind};
 pub use env::Env;
 pub use hsdag::{HsdagAgent, StepOutcome};

@@ -1,13 +1,25 @@
-//! PJRT runtime: load AOT-compiled policy artifacts (HLO text) and execute
-//! them from the rust search loop. Python never runs here — `make
-//! artifacts` is the only python invocation in the whole system.
+//! Policy compute runtime, two flavors behind one parameter layout:
+//!
+//! - **PJRT** (`engine`): load AOT-compiled policy artifacts (HLO text
+//!   from `make artifacts`) and execute them on an XLA client — the
+//!   paper-faithful JAX/Pallas path.
+//! - **Native** (`nn`): small pure-rust f32 kernels implementing the same
+//!   HSDAG model (GCN encoder, GPN edge scorer, placer head, Eq. 14
+//!   REINFORCE + Adam) with no artifacts and no external dependencies —
+//!   the default whenever `artifacts/` is absent.
+//!
+//! `params` owns the shared parameter-store layout (spec order, Adam
+//! state); `spec`/`tensor` are the artifact-side contracts. The backend
+//! selection itself lives in `rl::backend`.
 
 pub mod engine;
+pub mod nn;
 pub mod params;
 pub mod spec;
 pub mod tensor;
 
 pub use engine::{Engine, Executable};
+pub use nn::{NativeBatch, NativePolicy};
 pub use params::ParamStore;
 pub use spec::{ArtifactSpec, DType, InputSpec};
 pub use tensor::Tensor;

@@ -1,0 +1,618 @@
+//! The native (pure-rust) HSDAG policy: the same model the AOT artifacts
+//! implement — input MLP (layer_trans=2) → feedback add → 2 GCN layers
+//! (Eq. 6) → GPN edge scorer (Eq. 7) and group placer head — plus a
+//! hand-written backward pass and Adam, so the full Eq. 14 REINFORCE
+//! update runs with zero external dependencies.
+//!
+//! Unlike the PJRT path, everything here works at the *real* working-graph
+//! sizes (no static padding) and the GCN aggregation is sparse (COO over
+//! A+I), so a training step costs O((V + E) · H + V · H²) instead of
+//! O(V_pad² · H). Parameter layout and initialization mirror
+//! `python/compile/model.py::hsdag_param_spec` exactly (Glorot-uniform
+//! weights, zero biases) via [`ParamStore::init_hsdag`], drawn from the
+//! deterministic seeded [`Rng`], so runs reproduce bit-for-bit from a
+//! fixed seed.
+
+use anyhow::{ensure, Result};
+
+use super::{
+    add_bias, aggregate, colsum_acc, log_softmax, matmul, matmul_a_bt, matmul_at_b_acc,
+    normalized_adjacency_coo, relu, relu_bwd, segment_mean, sigmoid,
+};
+use crate::runtime::params::ParamStore;
+use crate::util::Rng;
+
+/// GPN partition log-likelihood weight in the REINFORCE objective
+/// (`shapes.PARTITION_LOSS_WEIGHT`).
+const LAMBDA: f32 = 0.1;
+/// Edge-score clip for the partition log-likelihood (`model.py` eps).
+const SCORE_EPS: f32 = 1e-6;
+/// Train-time dropout on the input MLP (`shapes.DROPOUT`).
+const TRAIN_DROPOUT: f64 = 0.2;
+/// Adam moments (`shapes.ADAM_B1/B2/EPS`).
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.999;
+const ADAM_EPS: f64 = 1e-8;
+
+// Parameter indices, in `hsdag_param_spec` order.
+const TRANS_W0: usize = 0;
+const TRANS_B0: usize = 1;
+const TRANS_W1: usize = 2;
+const TRANS_B1: usize = 3;
+const GCN_W0: usize = 4;
+const GCN_B0: usize = 5;
+const GCN_W1: usize = 6;
+const GCN_B1: usize = 7;
+const EDGE_W0: usize = 8;
+const EDGE_B0: usize = 9;
+const EDGE_W1: usize = 10;
+const EDGE_B1: usize = 11;
+const PLACE_W0: usize = 12;
+const PLACE_B0: usize = 13;
+const PLACE_W1: usize = 14;
+const PLACE_B1: usize = 15;
+
+/// One buffered REINFORCE window, viewed as plain slices. The planes use
+/// the caller's slot strides (`v_stride` ≥ real nodes, `e_stride` ≥ real
+/// edges) so the agent's padded replay buffer can be passed as-is; only
+/// the first `n` / `e` entries of each step's plane are read.
+pub struct NativeBatch<'a> {
+    /// Buffered steps (coefficient slots; zero-coefficient steps skip).
+    pub t: usize,
+    /// Row stride of the per-step node planes.
+    pub v_stride: usize,
+    /// Row stride of the per-step edge planes.
+    pub e_stride: usize,
+    /// Feedback state each step's forward saw, `[t, v_stride, H]`.
+    pub fb: &'a [f32],
+    /// Group id per node, `[t, v_stride]`.
+    pub cids: &'a [i32],
+    /// Sampled device per group *slot*, `[t, v_stride]`.
+    pub actions: &'a [i32],
+    /// 1.0 for valid group slots, `[t, v_stride]`. Group ids are dense,
+    /// so valid slots must lie in `0..max(cids)+1` (the agent's parser
+    /// guarantees this).
+    pub gmask: &'a [f32],
+    /// 1.0 for retained (Eq. 9) edges, `[t, e_stride]`.
+    pub retained: &'a [f32],
+    /// Eq. 14 coefficients gamma^t · (r_t − baseline), `[t]`.
+    pub coeff: &'a [f32],
+    /// Dropout key for this update (two u32 halves, artifact convention).
+    pub key: [u32; 2],
+}
+
+/// Forward caches of the encoder (kept for the backward pass).
+struct Encode {
+    h0: Vec<f32>,
+    h1: Vec<f32>,
+    /// Per-element dropout multiplier (0 or 1/(1−p)); None outside train.
+    keep: Option<Vec<f32>>,
+    f: Vec<f32>,
+    z1: Vec<f32>,
+    z: Vec<f32>,
+}
+
+/// Forward caches of the edge scorer.
+struct EdgeFwd {
+    pr: Vec<f32>,
+    eh: Vec<f32>,
+    s: Vec<f32>,
+}
+
+/// Forward caches of the placer head (raw, unmasked logits).
+struct PlacerFwd {
+    /// Group slots actually computed (`max(cids) + 1` — with the dense
+    /// group ids the parser produces, exactly `n_groups`).
+    slots: usize,
+    pooled: Vec<f32>,
+    counts: Vec<f32>,
+    ph: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+/// The pure-rust HSDAG policy (parameters + graph constants).
+pub struct NativePolicy {
+    /// Parameters + Adam state, `hsdag_param_spec` order.
+    pub params: ParamStore,
+    n: usize,
+    d: usize,
+    h: usize,
+    nd: usize,
+    /// Node features X⁰, `[n, d]` (unpadded).
+    x0: Vec<f32>,
+    /// Real working-graph edges.
+    edges: Vec<(usize, usize)>,
+    /// Â = D̂^{-1/2}(A+I)D̂^{-1/2} in COO form (symmetric).
+    coo: Vec<(u32, u32, f32)>,
+    /// Adam learning rate.
+    lr: f64,
+    /// Train-forward dropout probability (0 disables; tests use 0 for
+    /// finite-difference gradient checks).
+    pub train_dropout: f64,
+}
+
+impl NativePolicy {
+    /// Build a policy over a working graph: `x0` is the row-major `[n, d]`
+    /// feature matrix, `edges` the real edge list. Parameters initialize
+    /// Glorot-uniform from `rng` (deterministic per seed).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        x0: Vec<f32>,
+        n: usize,
+        d: usize,
+        edges: Vec<(usize, usize)>,
+        h: usize,
+        nd: usize,
+        lr: f64,
+        rng: &mut Rng,
+    ) -> Result<NativePolicy> {
+        ensure!(x0.len() == n * d, "x0 is {} elems, want {}x{}", x0.len(), n, d);
+        ensure!(n > 0 && h > 0 && nd > 0, "degenerate policy dims");
+        for &(s, t) in &edges {
+            ensure!(s < n && t < n, "edge ({s},{t}) out of range for {n} nodes");
+        }
+        let coo = normalized_adjacency_coo(n, &edges);
+        let params = ParamStore::init_hsdag(d, h, nd, rng);
+        Ok(NativePolicy {
+            params,
+            n,
+            d,
+            h,
+            nd,
+            x0,
+            edges,
+            coo,
+            lr,
+            train_dropout: TRAIN_DROPOUT,
+        })
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    fn p(&self, i: usize) -> &[f32] {
+        self.params.params[i].as_f32()
+    }
+
+    /// Encoder: MLP → (optional dropout) → +fb → 2 GCN layers.
+    /// `fb` is the evolving feedback state, at least `[n, h]` row-major.
+    fn encode(&self, fb: &[f32], mut drop_rng: Option<&mut Rng>) -> Encode {
+        let (n, d, h) = (self.n, self.d, self.h);
+        let mut h0 = matmul(&self.x0, self.p(TRANS_W0), n, d, h);
+        add_bias(&mut h0, self.p(TRANS_B0), n, h);
+        relu(&mut h0);
+        let mut h1 = matmul(&h0, self.p(TRANS_W1), n, h, h);
+        add_bias(&mut h1, self.p(TRANS_B1), n, h);
+        relu(&mut h1);
+        let (mut f, keep) = match drop_rng.as_deref_mut() {
+            Some(rng) if self.train_dropout > 0.0 => {
+                let inv = (1.0 / (1.0 - self.train_dropout)) as f32;
+                let keep: Vec<f32> = (0..n * h)
+                    .map(|_| if rng.next_f64() < self.train_dropout { 0.0 } else { inv })
+                    .collect();
+                (h1.iter().zip(&keep).map(|(a, k)| a * k).collect::<Vec<f32>>(), Some(keep))
+            }
+            _ => (h1.clone(), None),
+        };
+        for (fi, fbv) in f.iter_mut().zip(&fb[..n * h]) {
+            *fi += fbv;
+        }
+        let g0 = matmul(&f, self.p(GCN_W0), n, h, h);
+        let mut z1 = aggregate(&self.coo, &g0, n, h);
+        add_bias(&mut z1, self.p(GCN_B0), n, h);
+        relu(&mut z1);
+        let g1 = matmul(&z1, self.p(GCN_W1), n, h, h);
+        let mut z = aggregate(&self.coo, &g1, n, h);
+        add_bias(&mut z, self.p(GCN_B1), n, h);
+        relu(&mut z);
+        Encode { h0, h1, keep, f, z1, z }
+    }
+
+    /// GPN edge scorer: sigmoid(MLP(z_s ⊙ z_d)) per real edge.
+    fn edge_fwd(&self, z: &[f32]) -> EdgeFwd {
+        let (e, h) = (self.edges.len(), self.h);
+        let mut pr = vec![0f32; e * h];
+        for (ei, &(s, t)) in self.edges.iter().enumerate() {
+            let zs = &z[s * h..(s + 1) * h];
+            let zd = &z[t * h..(t + 1) * h];
+            for (k, out) in pr[ei * h..(ei + 1) * h].iter_mut().enumerate() {
+                *out = zs[k] * zd[k];
+            }
+        }
+        let mut eh = matmul(&pr, self.p(EDGE_W0), e, h, h);
+        add_bias(&mut eh, self.p(EDGE_B0), e, h);
+        relu(&mut eh);
+        let w1 = self.p(EDGE_W1); // [h, 1]
+        let b1 = self.p(EDGE_B1)[0];
+        let mut s = vec![0f32; e];
+        for ei in 0..e {
+            let logit: f32 =
+                eh[ei * h..(ei + 1) * h].iter().zip(w1).map(|(a, b)| a * b).sum::<f32>() + b1;
+            s[ei] = sigmoid(logit);
+        }
+        EdgeFwd { pr, eh, s }
+    }
+
+    /// Placer head over group slots (raw logits, no validity mask).
+    /// Only slots up to `max(cids) + 1` are computed — with dense group
+    /// ids that is exactly `n_groups`, so the head skips the (often ~10x
+    /// more numerous) empty padding slots on every step and every train
+    /// re-forward.
+    fn placer_fwd(&self, z: &[f32], cids: &[i32]) -> PlacerFwd {
+        let (n, h, nd) = (self.n, self.h, self.nd);
+        let slots = cids[..n].iter().map(|&c| c.max(0) as usize + 1).max().unwrap_or(1);
+        let (pooled, counts) = segment_mean(z, &cids[..n], n, h, slots);
+        let mut ph = matmul(&pooled, self.p(PLACE_W0), slots, h, h);
+        add_bias(&mut ph, self.p(PLACE_B0), slots, h);
+        relu(&mut ph);
+        let mut logits = matmul(&ph, self.p(PLACE_W1), slots, h, nd);
+        add_bias(&mut logits, self.p(PLACE_B1), slots, nd);
+        PlacerFwd { slots, pooled, counts, ph, logits }
+    }
+
+    /// Search-path forward: node embeddings Z `[n, h]` and edge scores
+    /// `[e]` over the real edges. No dropout (greedy/sampling path).
+    pub fn fwd(&self, fb: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let enc = self.encode(fb, None);
+        let ef = self.edge_fwd(&enc.z);
+        (enc.z, ef.s)
+    }
+
+    /// Placer: per-group-slot device logits, row-major `[slots, nd]`
+    /// with `slots = max(cids) + 1` (== `n_groups` for the parser's
+    /// dense ids, so every valid group has a row); slots with
+    /// `gmask <= 0` get −1e9 so softmax mass stays on valid groups.
+    pub fn placer(&self, z: &[f32], cids: &[i32], gmask: &[f32]) -> Vec<f32> {
+        let nd = self.nd;
+        let pf = self.placer_fwd(z, cids);
+        let mut logits = pf.logits;
+        for g in 0..pf.slots {
+            if gmask[g] <= 0.0 {
+                for l in logits[g * nd..(g + 1) * nd].iter_mut() {
+                    *l = -1e9;
+                }
+            }
+        }
+        logits
+    }
+
+    /// Eq. 14 loss over a buffered window, forward only (tests and
+    /// gradient checks). `with_dropout` matches the train-step forward.
+    pub fn loss(&self, batch: &NativeBatch, with_dropout: bool) -> f32 {
+        self.loss_and_grads(batch, with_dropout).0
+    }
+
+    /// One full REINFORCE/Adam update (Eq. 14) over the buffered window.
+    /// Returns the loss; errors if it is non-finite.
+    pub fn train(&mut self, batch: &NativeBatch) -> Result<f32> {
+        let (loss, grads) = self.loss_and_grads(batch, true);
+        ensure!(loss.is_finite(), "non-finite native training loss {loss}");
+        self.params.adam_step(&grads, self.lr, ADAM_B1, ADAM_B2, ADAM_EPS);
+        Ok(loss)
+    }
+
+    /// loss = −Σ_t coeff[t] · log p(P_t | G'; θ), with log p = placer
+    /// log-likelihood + λ · partition (GPN) log-likelihood; gradients for
+    /// every parameter by hand-written reverse-mode over the caches.
+    fn loss_and_grads(&self, batch: &NativeBatch, with_dropout: bool) -> (f32, Vec<Vec<f32>>) {
+        let (n, d, h, nd) = (self.n, self.d, self.h, self.nd);
+        let e = self.edges.len();
+        debug_assert!(batch.v_stride >= n && batch.e_stride >= e);
+        let mut grads: Vec<Vec<f32>> =
+            self.params.params.iter().map(|t| vec![0f32; t.numel()]).collect();
+        let mut rng = Rng::new(((batch.key[0] as u64) << 32) | batch.key[1] as u64);
+        let mut loss = 0f64;
+        let denom = e.max(1) as f32;
+
+        for t in 0..batch.t {
+            let c = batch.coeff[t];
+            if c == 0.0 {
+                continue; // zero-coefficient slots contribute nothing
+            }
+            let base_v = t * batch.v_stride;
+            let fb_t = &batch.fb[base_v * h..base_v * h + n * h];
+            let cids_t = &batch.cids[base_v..base_v + n];
+            let actions_t = &batch.actions[base_v..base_v + n];
+            let gmask_t = &batch.gmask[base_v..base_v + n];
+            let ret_t = &batch.retained[t * batch.e_stride..t * batch.e_stride + e];
+
+            let enc = self.encode(fb_t, if with_dropout { Some(&mut rng) } else { None });
+            let ef = self.edge_fwd(&enc.z);
+            let pf = self.placer_fwd(&enc.z, cids_t);
+
+            // d loss / d logp_t.
+            let w = -c;
+
+            // Placer log-likelihood + dlogits = w · (onehot − softmax).
+            // Valid groups live in slots 0..pf.slots (dense ids), so the
+            // gmask scan stops there too.
+            let slots = pf.slots;
+            let mut lp_place = 0f64;
+            let mut dlogits = vec![0f32; slots * nd];
+            for g in 0..slots {
+                if gmask_t[g] <= 0.0 {
+                    continue;
+                }
+                let row = &pf.logits[g * nd..(g + 1) * nd];
+                let logp = log_softmax(row);
+                let a = actions_t[g] as usize;
+                lp_place += logp[a] as f64;
+                for (j, lpj) in logp.iter().enumerate() {
+                    let onehot = if j == a { 1.0 } else { 0.0 };
+                    dlogits[g * nd + j] = w * (onehot - lpj.exp());
+                }
+            }
+
+            // Partition (GPN) log-likelihood + per-edge logit gradients.
+            let mut lp_part = 0f64;
+            let mut dlogit_e = vec![0f32; e];
+            let wl = w * LAMBDA / denom;
+            for ei in 0..e {
+                let r = ret_t[ei];
+                let sr = ef.s[ei];
+                let sc = sr.clamp(SCORE_EPS, 1.0 - SCORE_EPS);
+                lp_part += (r * sc.ln() + (1.0 - r) * (1.0 - sc).ln()) as f64;
+                // Clip gradient: flat outside the clamp window.
+                if sr > SCORE_EPS && sr < 1.0 - SCORE_EPS {
+                    let ds = wl * (r / sc - (1.0 - r) / (1.0 - sc));
+                    dlogit_e[ei] = ds * sr * (1.0 - sr);
+                }
+            }
+            lp_part /= denom as f64;
+            loss += -(c as f64) * (lp_place + LAMBDA as f64 * lp_part);
+
+            // ---- backward: placer head → dz ----
+            let mut dz = vec![0f32; n * h];
+            matmul_at_b_acc(&pf.ph, &dlogits, slots, h, nd, &mut grads[PLACE_W1]);
+            colsum_acc(&dlogits, slots, nd, &mut grads[PLACE_B1]);
+            let mut dph = matmul_a_bt(&dlogits, self.p(PLACE_W1), slots, nd, h);
+            relu_bwd(&mut dph, &pf.ph);
+            matmul_at_b_acc(&pf.pooled, &dph, slots, h, h, &mut grads[PLACE_W0]);
+            colsum_acc(&dph, slots, h, &mut grads[PLACE_B0]);
+            let dpooled = matmul_a_bt(&dph, self.p(PLACE_W0), slots, h, h);
+            for (node, &cid) in cids_t.iter().enumerate() {
+                let c = cid as usize;
+                let cnt = pf.counts[c].max(1.0);
+                let src = &dpooled[c * h..(c + 1) * h];
+                for (o, s) in dz[node * h..(node + 1) * h].iter_mut().zip(src) {
+                    *o += s / cnt;
+                }
+            }
+
+            // ---- backward: edge scorer → dz ----
+            let w1 = self.p(EDGE_W1);
+            let mut deh = vec![0f32; e * h];
+            for (ei, &dl) in dlogit_e.iter().enumerate() {
+                if dl == 0.0 {
+                    continue;
+                }
+                for (k, out) in deh[ei * h..(ei + 1) * h].iter_mut().enumerate() {
+                    *out = dl * w1[k];
+                }
+                for (k, g) in grads[EDGE_W1].iter_mut().enumerate() {
+                    *g += ef.eh[ei * h + k] * dl;
+                }
+                grads[EDGE_B1][0] += dl;
+            }
+            relu_bwd(&mut deh, &ef.eh);
+            matmul_at_b_acc(&ef.pr, &deh, e, h, h, &mut grads[EDGE_W0]);
+            colsum_acc(&deh, e, h, &mut grads[EDGE_B0]);
+            let dpr = matmul_a_bt(&deh, self.p(EDGE_W0), e, h, h);
+            for (ei, &(s, t2)) in self.edges.iter().enumerate() {
+                let dpr_row = &dpr[ei * h..(ei + 1) * h];
+                for k in 0..h {
+                    let zs = enc.z[s * h + k];
+                    let zd = enc.z[t2 * h + k];
+                    dz[s * h + k] += dpr_row[k] * zd;
+                    dz[t2 * h + k] += dpr_row[k] * zs;
+                }
+            }
+
+            // ---- backward: encoder ----
+            let mut dq1 = dz;
+            relu_bwd(&mut dq1, &enc.z);
+            colsum_acc(&dq1, n, h, &mut grads[GCN_B1]);
+            let dg1 = aggregate(&self.coo, &dq1, n, h); // Â symmetric
+            matmul_at_b_acc(&enc.z1, &dg1, n, h, h, &mut grads[GCN_W1]);
+            let mut dq0 = matmul_a_bt(&dg1, self.p(GCN_W1), n, h, h);
+            relu_bwd(&mut dq0, &enc.z1);
+            colsum_acc(&dq0, n, h, &mut grads[GCN_B0]);
+            let dg0 = aggregate(&self.coo, &dq0, n, h);
+            matmul_at_b_acc(&enc.f, &dg0, n, h, h, &mut grads[GCN_W0]);
+            let mut df = matmul_a_bt(&dg0, self.p(GCN_W0), n, h, h);
+            if let Some(keep) = &enc.keep {
+                for (x, k) in df.iter_mut().zip(keep) {
+                    *x *= k;
+                }
+            }
+            let mut dp1 = df;
+            relu_bwd(&mut dp1, &enc.h1);
+            matmul_at_b_acc(&enc.h0, &dp1, n, h, h, &mut grads[TRANS_W1]);
+            colsum_acc(&dp1, n, h, &mut grads[TRANS_B1]);
+            let mut dh0 = matmul_a_bt(&dp1, self.p(TRANS_W1), n, h, h);
+            relu_bwd(&mut dh0, &enc.h0);
+            matmul_at_b_acc(&self.x0, &dh0, n, d, h, &mut grads[TRANS_W0]);
+            colsum_acc(&dh0, n, h, &mut grads[TRANS_B0]);
+        }
+        (loss as f32, grads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 6-node diamond-ish DAG with 6 edges.
+    fn tiny() -> (usize, Vec<(usize, usize)>) {
+        (6, vec![(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (4, 5)])
+    }
+
+    fn tiny_policy(seed: u64) -> NativePolicy {
+        let (n, edges) = tiny();
+        let d = 3;
+        let mut rng = Rng::new(seed);
+        let x0: Vec<f32> = (0..n * d).map(|_| rng.next_f32() - 0.5).collect();
+        let mut p = NativePolicy::new(x0, n, d, edges, 4, 2, 1e-2, &mut rng).unwrap();
+        p.train_dropout = 0.0; // deterministic forwards for the checks
+        p
+    }
+
+    /// A consistent batch over the tiny graph: 2 steps, padded strides.
+    fn tiny_batch<'a>(bufs: &'a TinyBufs) -> NativeBatch<'a> {
+        NativeBatch {
+            t: 2,
+            v_stride: 8,
+            e_stride: 7,
+            fb: &bufs.fb,
+            cids: &bufs.cids,
+            actions: &bufs.actions,
+            gmask: &bufs.gmask,
+            retained: &bufs.retained,
+            coeff: &bufs.coeff,
+            key: [7, 9],
+        }
+    }
+
+    struct TinyBufs {
+        fb: Vec<f32>,
+        cids: Vec<i32>,
+        actions: Vec<i32>,
+        gmask: Vec<f32>,
+        retained: Vec<f32>,
+        coeff: Vec<f32>,
+    }
+
+    fn tiny_bufs() -> TinyBufs {
+        let (h, vs, es, t) = (4usize, 8usize, 7usize, 2usize);
+        let mut rng = Rng::new(99);
+        let fb: Vec<f32> = (0..t * vs * h).map(|_| rng.next_f32() * 0.1).collect();
+        // Step 0: 3 groups {0,1},{2,3},{4,5}; step 1: 2 groups.
+        let mut cids = vec![0i32; t * vs];
+        cids[..6].copy_from_slice(&[0, 0, 1, 1, 2, 2]);
+        cids[vs..vs + 6].copy_from_slice(&[0, 0, 0, 1, 1, 1]);
+        let mut gmask = vec![0f32; t * vs];
+        gmask[..3].fill(1.0);
+        gmask[vs..vs + 2].fill(1.0);
+        let mut actions = vec![0i32; t * vs];
+        actions[..3].copy_from_slice(&[1, 0, 1]);
+        actions[vs..vs + 2].copy_from_slice(&[0, 1]);
+        let mut retained = vec![0f32; t * es];
+        retained[..6].copy_from_slice(&[1.0, 0.0, 1.0, 0.0, 0.0, 1.0]);
+        retained[es..es + 6].copy_from_slice(&[1.0, 1.0, 0.0, 1.0, 0.0, 1.0]);
+        TinyBufs { fb, cids, actions, gmask, retained, coeff: vec![0.7, -0.4] }
+    }
+
+    #[test]
+    fn fwd_shapes_and_score_range() {
+        let p = tiny_policy(1);
+        let fb = vec![0f32; 6 * 4];
+        let (z, s) = p.fwd(&fb);
+        assert_eq!(z.len(), 6 * 4);
+        assert_eq!(s.len(), 6);
+        assert!(s.iter().all(|&x| x > 0.0 && x < 1.0), "{s:?}");
+        assert!(z.iter().all(|&x| x.is_finite() && x >= 0.0)); // post-ReLU
+    }
+
+    #[test]
+    fn placer_masks_invalid_slots() {
+        let p = tiny_policy(2);
+        let fb = vec![0f32; 6 * 4];
+        let (z, _) = p.fwd(&fb);
+        // Three referenced group slots, but only the first two valid:
+        // the head computes exactly max(cids)+1 rows and masks slot 2.
+        let cids = [0, 0, 1, 1, 2, 2];
+        let gmask = [1.0, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let logits = p.placer(&z, &cids, &gmask);
+        assert_eq!(logits.len(), 3 * 2);
+        assert!(logits[..4].iter().all(|&l| l > -1e8));
+        assert!(logits[4..].iter().all(|&l| l <= -1e8));
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut p = tiny_policy(3);
+        let bufs = tiny_bufs();
+        let batch = tiny_batch(&bufs);
+        let (_, grads) = p.loss_and_grads(&batch, false);
+        // Probe a few entries of every parameter tensor. Tolerances are
+        // loose enough to absorb f32 noise and the occasional ReLU kink
+        // inside the central-difference interval, but tight enough that a
+        // wrong transpose / missing term / sign error fails loudly.
+        let mut rng = Rng::new(17);
+        let eps = 5e-3f32;
+        for pi in 0..p.params.n() {
+            let numel = p.params.params[pi].numel();
+            for _ in 0..3.min(numel) {
+                let idx = rng.below(numel);
+                let orig = p.params.params[pi].as_f32()[idx];
+                p.params.params[pi].as_f32_mut()[idx] = orig + eps;
+                let lp = p.loss(&batch, false);
+                p.params.params[pi].as_f32_mut()[idx] = orig - eps;
+                let lm = p.loss(&batch, false);
+                p.params.params[pi].as_f32_mut()[idx] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads[pi][idx];
+                let tol = (0.1 * (1.0 + fd.abs().max(an.abs()))).max(1e-2);
+                assert!(
+                    (fd - an).abs() < tol,
+                    "param {pi} idx {idx}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_descends_on_fixed_batch() {
+        let mut p = tiny_policy(4);
+        let bufs = tiny_bufs();
+        let l0 = {
+            let batch = tiny_batch(&bufs);
+            p.loss(&batch, false)
+        };
+        for _ in 0..30 {
+            let batch = tiny_batch(&bufs);
+            p.train(&batch).unwrap();
+        }
+        let l1 = {
+            let batch = tiny_batch(&bufs);
+            p.loss(&batch, false)
+        };
+        assert!(l1.is_finite() && l0.is_finite());
+        assert!(l1 < l0, "loss should descend: {l0} -> {l1}");
+        assert_eq!(p.params.step, 30.0);
+    }
+
+    #[test]
+    fn zero_coefficients_leave_params_untouched() {
+        let mut p = tiny_policy(5);
+        let before: Vec<f32> = p.params.params[TRANS_W0].as_f32().to_vec();
+        let mut bufs = tiny_bufs();
+        bufs.coeff = vec![0.0, 0.0];
+        let batch = tiny_batch(&bufs);
+        let loss = p.train(&batch).unwrap();
+        assert_eq!(loss, 0.0);
+        // Adam still counts the step, but zero grads move nothing.
+        assert_eq!(p.params.params[TRANS_W0].as_f32(), &before[..]);
+    }
+
+    #[test]
+    fn deterministic_per_key() {
+        let mut a = tiny_policy(6);
+        let mut b = tiny_policy(6);
+        a.train_dropout = 0.2;
+        b.train_dropout = 0.2;
+        let bufs = tiny_bufs();
+        let la = a.train(&tiny_batch(&bufs)).unwrap();
+        let lb = b.train(&tiny_batch(&bufs)).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(
+            a.params.params[PLACE_W1].as_f32(),
+            b.params.params[PLACE_W1].as_f32()
+        );
+    }
+}

@@ -53,6 +53,67 @@ impl ParamStore {
         Ok(ParamStore { params, m, v, step: 0.0, names })
     }
 
+    /// Initialize the HSDAG parameter set for the native backend: same
+    /// tensors, order and names as `python/compile/model.py`'s
+    /// `hsdag_param_spec` (Glorot-uniform weights, zero biases), so the
+    /// two backends share one layout.
+    pub fn init_hsdag(d: usize, h: usize, nd: usize, rng: &mut Rng) -> ParamStore {
+        let spec: [(&str, Vec<usize>); 16] = [
+            ("trans_w0", vec![d, h]),
+            ("trans_b0", vec![h]),
+            ("trans_w1", vec![h, h]),
+            ("trans_b1", vec![h]),
+            ("gcn_w0", vec![h, h]),
+            ("gcn_b0", vec![h]),
+            ("gcn_w1", vec![h, h]),
+            ("gcn_b1", vec![h]),
+            ("edge_w0", vec![h, h]),
+            ("edge_b0", vec![h]),
+            ("edge_w1", vec![h, 1]),
+            ("edge_b1", vec![1]),
+            ("place_w0", vec![h, h]),
+            ("place_b0", vec![h]),
+            ("place_w1", vec![h, nd]),
+            ("place_b1", vec![nd]),
+        ];
+        let mut params = Vec::with_capacity(spec.len());
+        let mut names = Vec::with_capacity(spec.len());
+        for (name, dims) in spec {
+            params.push(glorot_init(&dims, rng));
+            names.push(name.to_string());
+        }
+        let m = params.iter().map(|p: &Tensor| Tensor::zeros(DType::F32, p.dims())).collect();
+        let v = params.iter().map(|p: &Tensor| Tensor::zeros(DType::F32, p.dims())).collect();
+        ParamStore { params, m, v, step: 0.0, names }
+    }
+
+    /// One Adam step over per-parameter gradients (aligned with `params`),
+    /// matching the artifact train-step's update rule bit-for-bit in
+    /// structure: bias-corrected moments, float32 step counter.
+    pub fn adam_step(&mut self, grads: &[Vec<f32>], lr: f64, b1: f64, b2: f64, eps: f64) {
+        assert_eq!(grads.len(), self.params.len(), "one gradient per parameter");
+        self.step += 1.0;
+        let step = self.step as f64;
+        let bc1 = 1.0 - b1.powf(step);
+        let bc2 = 1.0 - b2.powf(step);
+        for i in 0..self.params.len() {
+            let p = self.params[i].as_f32_mut();
+            let m = self.m[i].as_f32_mut();
+            let v = self.v[i].as_f32_mut();
+            assert_eq!(grads[i].len(), p.len(), "gradient {i} shape mismatch");
+            for k in 0..p.len() {
+                let g = grads[i][k] as f64;
+                let mk = b1 * m[k] as f64 + (1.0 - b1) * g;
+                let vk = b2 * v[k] as f64 + (1.0 - b2) * g * g;
+                m[k] = mk as f32;
+                v[k] = vk as f32;
+                let mhat = mk / bc1;
+                let vhat = vk / bc2;
+                p[k] = (p[k] as f64 - lr * mhat / (vhat.sqrt() + eps)) as f32;
+            }
+        }
+    }
+
     pub fn n(&self) -> usize {
         self.params.len()
     }
@@ -145,6 +206,50 @@ out loss
         assert_eq!(prefix[6].numel(), 1);
         // Moments zeroed.
         assert!(prefix[2].as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn init_hsdag_matches_python_spec_layout() {
+        let mut rng = Rng::new(6);
+        let ps = ParamStore::init_hsdag(69, 128, 2, &mut rng);
+        assert_eq!(ps.n(), 16);
+        assert_eq!(ps.names[0], "trans_w0");
+        assert_eq!(ps.names[10], "edge_w1");
+        assert_eq!(ps.names[15], "place_b1");
+        assert_eq!(ps.params[0].dims(), &[69, 128]);
+        assert_eq!(ps.params[10].dims(), &[128, 1]);
+        assert_eq!(ps.params[14].dims(), &[128, 2]);
+        // Weights random, biases zero, moments zero.
+        assert!(ps.params[0].as_f32().iter().any(|&x| x != 0.0));
+        assert!(ps.params[1].as_f32().iter().all(|&x| x == 0.0));
+        assert!(ps.m[0].as_f32().iter().all(|&x| x == 0.0));
+        // Deterministic per seed.
+        let mut rng2 = Rng::new(6);
+        let ps2 = ParamStore::init_hsdag(69, 128, 2, &mut rng2);
+        assert_eq!(ps.params[0].as_f32(), ps2.params[0].as_f32());
+    }
+
+    #[test]
+    fn adam_step_moves_against_gradient() {
+        let mut rng = Rng::new(7);
+        let mut ps = ParamStore::init_hsdag(4, 4, 2, &mut rng);
+        let before = ps.params[0].as_f32()[0];
+        let mut grads: Vec<Vec<f32>> =
+            ps.params.iter().map(|p| vec![0.0; p.numel()]).collect();
+        grads[0][0] = 1.0; // positive gradient -> parameter must decrease
+        ps.adam_step(&grads, 1e-2, 0.9, 0.999, 1e-8);
+        assert_eq!(ps.step, 1.0);
+        let after = ps.params[0].as_f32()[0];
+        assert!(after < before, "{before} -> {after}");
+        // First step with bias correction moves by ~lr.
+        assert!((before - after - 1e-2).abs() < 1e-3, "{}", before - after);
+        // Untouched entries stay put.
+        assert_eq!(ps.params[2].as_f32(), {
+            let mut rng2 = Rng::new(7);
+            let ps2 = ParamStore::init_hsdag(4, 4, 2, &mut rng2);
+            ps2.params[2].as_f32().to_vec()
+        }
+        .as_slice());
     }
 
     #[test]

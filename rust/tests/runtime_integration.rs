@@ -1,10 +1,12 @@
 //! End-to-end runtime integration: load real AOT artifacts, execute the
-//! policy fwd / placer / train path from rust, and run whole agent steps.
+//! policy fwd / placer / train path from rust through the pjrt backend,
+//! and run whole agent steps.
 //!
 //! Requires `make artifacts` to have populated artifacts/ AND a real
 //! PJRT-backed `xla` crate. When either is missing (the offline CI
 //! environment), each test skips with a note instead of failing — the
-//! non-neural pipeline is covered by the unit suites and
+//! native-backend twin of this suite (tests/native_backend.rs) always
+//! runs, and the non-neural pipeline is covered by the unit suites and
 //! tests/testbeds.rs regardless.
 
 use hsdag::config::Config;
@@ -31,16 +33,17 @@ fn engine() -> Option<Engine> {
 }
 
 fn small_cfg() -> Config {
-    Config { max_episodes: 2, seed: 42, ..Default::default() }
+    Config { max_episodes: 2, seed: 42, backend: "pjrt".to_string(), ..Default::default() }
 }
 
 #[test]
 fn fwd_artifact_runs_and_shapes_match() {
-    let Some(mut eng) = engine() else { return };
+    let Some(_eng) = engine() else { return };
     let cfg = small_cfg();
     let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
-    let mut agent = HsdagAgent::new(&env, &mut eng, &cfg).unwrap();
-    let out = agent.step(&env, &mut eng, false).unwrap();
+    let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+    assert!(agent.backend_desc().contains("pjrt"), "{}", agent.backend_desc());
+    let out = agent.step(&env, false).unwrap();
     assert_eq!(out.actions.len(), env.n_nodes);
     assert!(out.latency > 0.0 && out.latency.is_finite());
     assert!(out.n_groups > 1 && out.n_groups < env.n_nodes);
@@ -48,35 +51,35 @@ fn fwd_artifact_runs_and_shapes_match() {
 
 #[test]
 fn train_step_updates_parameters() {
-    let Some(mut eng) = engine() else { return };
+    let Some(_eng) = engine() else { return };
     let cfg = small_cfg();
     let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
-    let mut agent = HsdagAgent::new(&env, &mut eng, &cfg).unwrap();
-    let before: Vec<f32> = agent.params.params[0].as_f32().to_vec();
+    let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+    let before: Vec<f32> = agent.params().params[0].as_f32().to_vec();
     for _ in 0..cfg.update_timestep {
-        agent.step(&env, &mut eng, true).unwrap();
+        agent.step(&env, true).unwrap();
     }
-    let loss = agent.update(&env, &mut eng).unwrap().expect("buffer full");
+    let loss = agent.update(&env).unwrap().expect("buffer full");
     assert!(loss.is_finite());
-    let after = agent.params.params[0].as_f32();
-    assert!(agent.params.step == 1.0);
+    assert!(agent.params().step == 1.0);
     // Many rows of trans_w0 see zero gradient (one-hot feature columns
     // that never fire); require a substantial but not total update.
+    let after = agent.params().params[0].as_f32();
     let changed = before.iter().zip(after).filter(|(a, b)| a != b).count();
     assert!(changed > before.len() / 10, "only {changed} weights moved");
     // The placer head sits on dense activations: nearly all must move.
-    let pw_idx = agent.params.names.iter().position(|n| n == "place_w0").unwrap();
-    let pw = agent.params.params[pw_idx].as_f32();
+    let pw_idx = agent.params().names.iter().position(|n| n == "place_w0").unwrap();
+    let pw = agent.params().params[pw_idx].as_f32();
     assert!(pw.iter().filter(|&&x| x != 0.0).count() > pw.len() / 2);
 }
 
 #[test]
 fn mini_search_improves_over_random_start() {
-    let Some(mut eng) = engine() else { return };
-    let cfg = Config { max_episodes: 3, seed: 7, ..Default::default() };
+    let Some(_eng) = engine() else { return };
+    let cfg = Config { max_episodes: 3, seed: 7, ..small_cfg() };
     let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
-    let mut agent = HsdagAgent::new(&env, &mut eng, &cfg).unwrap();
-    let res = agent.search(&env, &mut eng, 3).unwrap();
+    let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+    let res = agent.search(&env, 3).unwrap();
     assert_eq!(res.curve.len(), 3);
     // Best found must at least beat the all-CPU reference (GPU-only is in
     // the search space and trivially better on ResNet).
@@ -121,13 +124,13 @@ fn rnn_agent_runs() {
 
 #[test]
 fn deterministic_given_seed() {
-    let Some(mut eng) = engine() else { return };
+    let Some(_eng) = engine() else { return };
     let cfg = small_cfg();
     let env = Env::new(Benchmark::ResNet50, &cfg).unwrap();
-    let mut a1 = HsdagAgent::new(&env, &mut eng, &cfg).unwrap();
-    let mut a2 = HsdagAgent::new(&env, &mut eng, &cfg).unwrap();
-    let o1 = a1.step(&env, &mut eng, true).unwrap();
-    let o2 = a2.step(&env, &mut eng, true).unwrap();
+    let mut a1 = HsdagAgent::new(&env, &cfg).unwrap();
+    let mut a2 = HsdagAgent::new(&env, &cfg).unwrap();
+    let o1 = a1.step(&env, true).unwrap();
+    let o2 = a2.step(&env, true).unwrap();
     assert_eq!(o1.actions, o2.actions);
     assert_eq!(o1.latency, o2.latency);
 }
