@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     println!("policy backend: {}", agent.backend_desc());
     let res = agent.search(&env, 12)?;
 
-    let gpu = env.latency(&vec![1; env.n_nodes]);
+    let gpu = env.latency(&vec![1; env.n_nodes])?;
     println!("CPU-only  {:.3} ms", env.ref_latency * 1e3);
     println!("GPU-only  {:.3} ms", gpu * 1e3);
     println!(
@@ -82,7 +82,7 @@ fn main() -> anyhow::Result<()> {
         res.wall_secs
     );
     // Show where the groups landed.
-    let placement = env.expand(&res.best_actions);
+    let placement = env.expand(&res.best_actions)?;
     let n_gpu = placement.0.iter().filter(|&&d| d == hsdag::sim::DGPU).count();
     println!(
         "final placement: {}/{} original ops on the dGPU",

@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
                     if res.best_actions.is_empty() {
                         None
                     } else {
-                        Some(env.expand(&res.best_actions))
+                        Some(env.expand(&res.best_actions)?)
                     }
                 }
                 Err(e) => {

@@ -1,0 +1,61 @@
+//! Workload-subsystem micro-bench: graph load / generate / feature-extract
+//! throughput for the registry sources — how fast can the system open a
+//! new workload?
+//!
+//!   cargo bench --bench bench_workloads
+//!
+//! Covers: the synthetic generators (pure CPU), JSON serialize + parse of
+//! a paper-sized graph, the `file:` source end to end (disk read + parse
+//! + validate), the DOT round-trip, and feature extraction + coarsening
+//! on the loaded graphs — the per-workload setup cost that fronts every
+//! search.
+
+use hsdag::coarsen::colocate;
+use hsdag::features::{extract, FeatureConfig};
+use hsdag::graph::{dot, json};
+use hsdag::models::{Benchmark, Workload};
+use hsdag::util::bench::bench_fn;
+
+fn main() {
+    println!("== synthetic generators ==");
+    for spec in ["seq:256", "layered:16x8:3", "transformer:4:4", "random:256:9"] {
+        let r = bench_fn(&format!("workload/generate/{spec}"), 3, 20, || {
+            Workload::resolve(spec).unwrap().graph.n()
+        });
+        let n = Workload::resolve(spec).unwrap().graph.n();
+        println!("  -> {spec}: {n} nodes, {:.1} us/node", r.median_ns / 1e3 / n as f64);
+    }
+
+    println!("== serialize / parse (ResNet-50, Table-1 size) ==");
+    let g = Benchmark::ResNet50.build();
+    let text = json::to_json(&g);
+    println!("  JSON document: {} bytes for {} nodes", text.len(), g.n());
+    bench_fn("workload/json/serialize/resnet50", 3, 20, || json::to_json(&g).len());
+    bench_fn("workload/json/parse/resnet50", 3, 20, || json::from_json(&text).unwrap().n());
+    let dot_text = dot::to_dot(&g);
+    bench_fn("workload/dot/serialize/resnet50", 3, 20, || dot::to_dot(&g).len());
+    bench_fn("workload/dot/parse/resnet50", 3, 20, || dot::from_dot(&dot_text).unwrap().n());
+    // Parsers must reproduce the graph they serialized.
+    assert_eq!(json::from_json(&text).unwrap().edges, g.edges);
+    assert_eq!(dot::from_dot(&dot_text).unwrap().edges, g.edges);
+
+    println!("== file source end to end (disk read + parse + validate) ==");
+    let dir = std::env::temp_dir().join("hsdag_bench_workloads");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resnet50.json");
+    std::fs::write(&path, &text).unwrap();
+    let spec = format!("file:{}", path.display());
+    bench_fn("workload/file/resnet50.json", 3, 20, || {
+        Workload::resolve(&spec).unwrap().graph.n()
+    });
+
+    println!("== per-workload setup: coarsen + feature extraction ==");
+    for spec in ["resnet", "layered:16x8:3", "transformer:4:4"] {
+        let w = Workload::resolve(spec).unwrap();
+        bench_fn(&format!("workload/coarsen/{spec}"), 3, 20, || colocate(&w.graph).n_sets);
+        let colo = colocate(&w.graph);
+        bench_fn(&format!("workload/features/{spec}"), 3, 20, || {
+            extract(&colo.coarse, FeatureConfig::default()).x.len()
+        });
+    }
+}

@@ -10,7 +10,7 @@ use anyhow::{bail, Result};
 
 use crate::config::Config;
 use crate::features::FeatureConfig;
-use crate::models::Benchmark;
+use crate::models::Workload;
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -31,13 +31,22 @@ COMMANDS
   table4                 BERT downstream drift (Table 4)
   table5                 search runtime (Table 5)          [--episodes N]
   figure2                partition DOT dumps (Figure 2)    [--out-dir D] [--episodes N]
-  train                  run one HSDAG search              [--bench B] [--episodes N]
-  place                  evaluate a fixed placement        [--bench B] [--method M]
-  graph-stats            validate + describe the graphs
+  train                  run one HSDAG search              [--workload W] [--episodes N]
+  place                  evaluate a fixed placement        [--workload W] [--method M]
+                                                           [--dump-dot F]
+  generalize             train one policy on a workload    [--train A,B,..] [--eval C,D,..]
+                         suite, zero-shot eval held-out    [--episodes N] [--rollouts N]
+  export                 write a workload as v1 JSON       [--workload W] [--out F]
+  graph-stats            validate + describe workloads     [--workload W]
   config                 print the Table 6 hyper-parameters
 
 COMMON FLAGS
-  --bench inception|resnet|bert     benchmark (default resnet)
+  --workload SPEC                   what to place (default resnet). Registry specs:
+                                    inception | resnet | bert   (paper benchmarks)
+                                    file:<path>{.json|.dot}     (on-disk graph)
+                                    seq:<n> | layered:<d>x<w>[:<seed>]
+                                    transformer:<layers>:<heads> | random:<n>[:<seed>]
+  --bench B                         legacy alias for --workload
   --testbed ID                      device set: cpu_gpu | paper3 | cpu_gpu_tight | multi_gpu:<k>[:<mem_gb>]
                                     (default cpu_gpu — the paper's 2-way CPU/dGPU setup;
                                     cpu_gpu_tight / :<mem_gb> bound device memory)
@@ -108,9 +117,26 @@ impl Cli {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
-    pub fn bench(&self) -> Result<Benchmark> {
-        let name = self.str_flag("bench", "resnet");
-        Benchmark::parse(&name).ok_or_else(|| anyhow::anyhow!("unknown benchmark '{name}'"))
+    /// Comma-separated list flag (empty entries dropped).
+    pub fn str_list_flag(&self, key: &str, default: &str) -> Vec<String> {
+        self.str_flag(key, default)
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect()
+    }
+
+    /// Resolve `--workload` (falling back to its legacy `--bench` alias,
+    /// default resnet) through the workload registry.
+    pub fn workload(&self) -> Result<Workload> {
+        let spec = self
+            .flags
+            .get("workload")
+            .or_else(|| self.flags.get("bench"))
+            .cloned()
+            .unwrap_or_else(|| "resnet".to_string());
+        Workload::resolve(&spec)
     }
 
     /// Assemble the run Config from flags.
@@ -142,6 +168,7 @@ impl Cli {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::Benchmark;
 
     fn argv(s: &str) -> Vec<String> {
         s.split_whitespace().map(String::from).collect()
@@ -151,7 +178,7 @@ mod tests {
     fn parses_command_and_flags() {
         let c = parse(&argv("train --bench bert --episodes 5 --no-baseline")).unwrap();
         assert_eq!(c.command, "train");
-        assert_eq!(c.bench().unwrap(), Benchmark::BertBase);
+        assert_eq!(c.workload().unwrap().bench, Some(Benchmark::BertBase));
         assert_eq!(c.usize_flag("episodes", 30).unwrap(), 5);
         let cfg = c.config().unwrap();
         assert!(!cfg.use_baseline);
@@ -175,7 +202,7 @@ mod tests {
         assert_eq!(cfg.seed, 0);
         assert!(cfg.use_baseline);
         assert_eq!(cfg.testbed, "cpu_gpu");
-        assert_eq!(c.bench().unwrap(), Benchmark::ResNet50);
+        assert_eq!(c.workload().unwrap().bench, Some(Benchmark::ResNet50));
     }
 
     #[test]
@@ -212,6 +239,38 @@ mod tests {
         assert_eq!(cfg.eval_workers, 0);
         // Malformed values are errors, not silent defaults.
         assert!(parse(&argv("train --oom-penalty x")).unwrap().config().is_err());
+    }
+
+    #[test]
+    fn workload_flag_resolves_through_registry() {
+        // Registry spec.
+        let c = parse(&argv("train --workload layered:4x3")).unwrap();
+        let w = c.workload().unwrap();
+        assert!(w.bench.is_none());
+        assert_eq!(w.graph.n(), 4 * 3 + 2);
+        // Paper benchmark by alias, via --workload or legacy --bench.
+        let c = parse(&argv("train --workload bert")).unwrap();
+        assert_eq!(c.workload().unwrap().bench, Some(Benchmark::BertBase));
+        let c = parse(&argv("train --bench bert")).unwrap();
+        assert_eq!(c.workload().unwrap().bench, Some(Benchmark::BertBase));
+        // --workload wins over --bench; default stays resnet.
+        let c = parse(&argv("train --bench bert --workload seq:4")).unwrap();
+        assert!(c.workload().unwrap().bench.is_none());
+        let c = parse(&argv("train")).unwrap();
+        assert_eq!(c.workload().unwrap().bench, Some(Benchmark::ResNet50));
+        // Unknown specs name the registry.
+        let err = parse(&argv("train --workload warehouse")).unwrap().workload();
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("known workload sources"), "{msg}");
+    }
+
+    #[test]
+    fn list_flags_split_on_commas() {
+        let c = parse(&argv("generalize --train seq:8,layered:3x2, --eval random:12:1")).unwrap();
+        assert_eq!(c.str_list_flag("train", ""), vec!["seq:8", "layered:3x2"]);
+        assert_eq!(c.str_list_flag("eval", ""), vec!["random:12:1"]);
+        assert_eq!(c.str_list_flag("missing", "a,b"), vec!["a", "b"]);
+        assert!(c.str_list_flag("missing2", "").is_empty());
     }
 
     #[test]

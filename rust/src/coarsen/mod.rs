@@ -15,6 +15,8 @@
 //! construction (§2.2 "co-locating heuristics eliminate certain execution
 //! failures").
 
+use anyhow::{ensure, Result};
+
 use crate::graph::{CompGraph, OpKind, OpNode};
 
 /// Result of the co-location pass.
@@ -32,10 +34,17 @@ pub struct Coarsening {
 
 impl Coarsening {
     /// Expand a placement over coarse nodes to a placement over original
-    /// nodes.
-    pub fn expand_placement(&self, coarse_placement: &[usize]) -> Vec<usize> {
-        assert_eq!(coarse_placement.len(), self.n_sets);
-        self.set_of.iter().map(|&s| coarse_placement[s]).collect()
+    /// nodes. Errors (instead of panicking) when the placement length
+    /// doesn't match the set count — the failure mode of pairing a
+    /// placement with the wrong (e.g. user-supplied) graph.
+    pub fn expand_placement(&self, coarse_placement: &[usize]) -> Result<Vec<usize>> {
+        ensure!(
+            coarse_placement.len() == self.n_sets,
+            "placement covers {} co-location sets but the graph has {}",
+            coarse_placement.len(),
+            self.n_sets
+        );
+        Ok(self.set_of.iter().map(|&s| coarse_placement[s]).collect())
     }
 }
 
@@ -125,6 +134,13 @@ pub fn colocate(g: &CompGraph) -> Coarsening {
             g.nodes[term].output_shape.clone(),
         );
         node.attrs = g.nodes[term].attrs;
+        // A set whose members all carry the same custom kind label keeps
+        // it (typically a singleton from a loaded workload), so the
+        // hashed one-hot slot survives coarsening; mixed sets fall back
+        // to the mean-kind rule above.
+        if mem.iter().all(|&v| g.nodes[v].custom_kind == g.nodes[term].custom_kind) {
+            node.custom_kind = g.nodes[term].custom_kind.clone();
+        }
         coarse.add_node(node);
     }
     for &(a, b) in &g.edges {
@@ -199,9 +215,18 @@ mod tests {
     #[test]
     fn expand_placement_roundtrip() {
         let c = colocate(&chain(5));
-        let p = c.expand_placement(&vec![1; c.n_sets]);
+        let p = c.expand_placement(&vec![1; c.n_sets]).unwrap();
         assert!(p.iter().all(|&d| d == 1));
         assert_eq!(p.len(), 7);
+    }
+
+    #[test]
+    fn expand_placement_length_mismatch_is_an_error() {
+        let c = colocate(&chain(5));
+        let err = c.expand_placement(&vec![0; c.n_sets + 3]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("co-location sets"), "{msg}");
+        assert!(c.expand_placement(&[]).is_err());
     }
 
     #[test]
@@ -263,7 +288,7 @@ mod tests {
                 let c = colocate(&g);
                 let k = 2 + rng.below(4);
                 let actions: Vec<usize> = (0..c.n_sets).map(|_| rng.below(k)).collect();
-                let p = c.expand_placement(&actions);
+                let p = c.expand_placement(&actions).map_err(|e| format!("{e:#}"))?;
                 if p.len() != g.n() {
                     return Err(format!("expanded {} of {} nodes", p.len(), g.n()));
                 }

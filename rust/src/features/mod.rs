@@ -1,7 +1,10 @@
 //! Feature extraction (§2.3): the initial node feature matrix X⁰.
 //!
 //! Per node v the feature vector concatenates, in order:
-//!   [ one-hot op type |T|=32
+//!   [ one-hot op type |T|=32 (fixed slot count; built-in kinds keep
+//!     stable indices, custom kinds from loaded workloads hash-bucket
+//!     into the same 32 slots so the feature width — and every policy
+//!     shape built on it — never depends on the workload)
 //!   | in-degree one-hot (8 buckets, 7+ saturating)
 //!   | out-degree one-hot (8 buckets)
 //!   | padded log-scaled output shape (|S| = 4)
@@ -107,8 +110,8 @@ pub fn extract(g: &CompGraph, cfg: FeatureConfig) -> Features {
         let row = &mut x[v * d..(v + 1) * d];
         let mut off = 0;
 
-        // One-hot op type.
-        row[off + g.nodes[v].kind.index()] = 1.0;
+        // One-hot op type (custom kinds hash-bucket into the same slots).
+        row[off + g.nodes[v].feature_slot()] = 1.0;
         off += OpKind::COUNT;
 
         // Degree one-hots (structural).
@@ -255,6 +258,67 @@ mod tests {
         let din = OpKind::COUNT;
         assert!(nostruct.row(1)[din..din + 2 * DEGREE_BUCKETS].iter().all(|&x| x == 0.0));
         assert_eq!(nostruct.row(1)[base + SHAPE_SLOTS], 0.0); // fractal slot
+    }
+
+    #[test]
+    fn degree_buckets_saturate_at_seven_or_more() {
+        // A star with 9 producers and 9 consumers around a Concat hub:
+        // both degree one-hots must land in the saturating last bucket.
+        let mut g = CompGraph::new("star");
+        let hub = g.add_node(OpNode::new("hub", OpKind::Concat, vec![1, 8]));
+        for i in 0..9 {
+            let p = g.add_node(OpNode::new(format!("in{i}"), OpKind::Parameter, vec![1, 8]));
+            g.add_edge(p, hub);
+            let c = g.add_node(OpNode::new(format!("out{i}"), OpKind::Result, vec![1, 8]));
+            g.add_edge(hub, c);
+        }
+        let f = extract(&g, FeatureConfig::default());
+        let base_in = OpKind::COUNT;
+        let base_out = OpKind::COUNT + DEGREE_BUCKETS;
+        assert_eq!(f.row(hub)[base_in + DEGREE_BUCKETS - 1], 1.0);
+        assert_eq!(f.row(hub)[base_out + DEGREE_BUCKETS - 1], 1.0);
+        // Exactly one bucket set per degree block.
+        assert_eq!(f.row(hub)[base_in..base_in + DEGREE_BUCKETS].iter().sum::<f32>(), 1.0);
+        assert_eq!(f.row(hub)[base_out..base_out + DEGREE_BUCKETS].iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn custom_kinds_one_hot_into_hashed_slot() {
+        use crate::graph::hash_kind_slot;
+        let mut g = CompGraph::new("custom");
+        let a = g.add_node(OpNode::new("in", OpKind::Parameter, vec![1, 4]));
+        let b = g.add_node(
+            OpNode::new("fused", OpKind::MatMul, vec![1, 4]).with_custom_kind("MyFusedOp"),
+        );
+        let c = g.add_node(OpNode::new("out", OpKind::Result, vec![1, 4]));
+        g.add_edge(a, b);
+        g.add_edge(b, c);
+        let f = extract(&g, FeatureConfig::default());
+        let slot = hash_kind_slot("MyFusedOp");
+        assert_eq!(f.row(b)[slot], 1.0);
+        // Exactly one op-type slot is set, and the width stays 69.
+        assert_eq!(f.row(b)[..OpKind::COUNT].iter().sum::<f32>(), 1.0);
+        assert_eq!(f.d, FeatureConfig::dim());
+    }
+
+    #[test]
+    fn empty_shape_nodes_extract_cleanly() {
+        // Scalar outputs (empty shape, e.g. a loss value) leave the shape
+        // block zero and every other block finite.
+        let mut g = CompGraph::new("scalar");
+        let a = g.add_node(OpNode::new("in", OpKind::Parameter, vec![]));
+        let b = g.add_node(OpNode::new("mean", OpKind::ReduceMean, vec![]));
+        let c = g.add_node(OpNode::new("out", OpKind::Result, vec![]));
+        g.add_edge(a, b);
+        g.add_edge(b, c);
+        let f = extract(&g, FeatureConfig::default());
+        let base = OpKind::COUNT + 2 * DEGREE_BUCKETS;
+        for v in 0..g.n() {
+            for s in 0..SHAPE_SLOTS {
+                assert_eq!(f.row(v)[base + s], 0.0);
+            }
+            assert!(f.row(v).iter().all(|x| x.is_finite()));
+        }
     }
 
     #[test]

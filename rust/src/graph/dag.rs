@@ -6,7 +6,7 @@
 //! co-location coarsening (Appendix G), graph parsing (Algorithm 2) and the
 //! heterogeneous execution simulator.
 
-use super::ops::{flops, numel, out_bytes, OpAttrs, OpKind};
+use super::ops::{flops, hash_kind_slot, numel, out_bytes, OpAttrs, OpKind};
 use crate::util::Rng;
 
 /// One operation in a computation graph.
@@ -14,22 +14,69 @@ use crate::util::Rng;
 pub struct OpNode {
     /// Human-readable name (layer path), unique within a graph.
     pub name: String,
-    /// Operation type (one-hot feature + cost-model class).
+    /// Operation type (cost-model class; for ops loaded from disk with a
+    /// kind outside the built-in vocabulary this is the declared — or
+    /// defaulted — cost class, and `custom_kind` carries the label).
     pub kind: OpKind,
     /// Output tensor shape (NCHW for vision, [batch, seq, hidden] for BERT).
     pub output_shape: Vec<usize>,
     /// Cost-model attributes (kernel size, reduction length, groups).
     pub attrs: OpAttrs,
+    /// Op-kind label outside the built-in OpenVINO vocabulary (set by the
+    /// graph loaders for unknown kinds). Display and the feature one-hot
+    /// use this label; `kind` then only classifies the op for the cost
+    /// model.
+    pub custom_kind: Option<String>,
 }
 
 impl OpNode {
     pub fn new(name: impl Into<String>, kind: OpKind, output_shape: Vec<usize>) -> Self {
-        OpNode { name: name.into(), kind, output_shape, attrs: OpAttrs::default() }
+        OpNode {
+            name: name.into(),
+            kind,
+            output_shape,
+            attrs: OpAttrs::default(),
+            custom_kind: None,
+        }
     }
 
     pub fn with_attrs(mut self, attrs: OpAttrs) -> Self {
         self.attrs = attrs;
         self
+    }
+
+    /// Attach a custom (non-OpenVINO) kind label; `kind` keeps serving as
+    /// the cost class. A label that names a built-in kind
+    /// (case-insensitively) normalizes to that kind instead — a "custom"
+    /// `Softmax` riding on another cost class would be unrepresentable in
+    /// the serialized formats (the label alone round-trips), so the
+    /// ambiguity is resolved here, at construction.
+    pub fn with_custom_kind(mut self, label: impl Into<String>) -> Self {
+        let label = label.into();
+        match OpKind::parse(&label) {
+            Some(kind) => {
+                self.kind = kind;
+                self.custom_kind = None;
+            }
+            None => self.custom_kind = Some(label),
+        }
+        self
+    }
+
+    /// The label shown in DOT dumps and serialized as the node's `kind`:
+    /// the custom label when present, else the built-in kind name.
+    pub fn kind_label(&self) -> &str {
+        self.custom_kind.as_deref().unwrap_or_else(|| self.kind.name())
+    }
+
+    /// One-hot slot in the fixed 32-wide op-type feature block: built-in
+    /// kinds keep their stable index, custom kinds hash-bucket into the
+    /// same slots (see [`hash_kind_slot`]).
+    pub fn feature_slot(&self) -> usize {
+        match &self.custom_kind {
+            Some(label) => hash_kind_slot(label),
+            None => self.kind.index(),
+        }
     }
 
     /// FLOPs to execute this op once.
@@ -389,6 +436,28 @@ mod tests {
         assert_eq!(g.m() as isize - g.n() as isize, surplus);
         g.validate().unwrap();
         assert!(g.is_dag());
+    }
+
+    #[test]
+    fn custom_kind_label_and_slot() {
+        let plain = OpNode::new("a", OpKind::Relu, vec![1]);
+        assert_eq!(plain.kind_label(), "ReLU");
+        assert_eq!(plain.feature_slot(), OpKind::Relu.index());
+        let custom = OpNode::new("b", OpKind::Relu, vec![1]).with_custom_kind("FusedGate");
+        assert_eq!(custom.kind_label(), "FusedGate");
+        assert!(custom.feature_slot() < OpKind::COUNT);
+        assert_eq!(
+            custom.feature_slot(),
+            OpNode::new("c", OpKind::Add, vec![1]).with_custom_kind("fusedgate").feature_slot(),
+            "slot depends only on the label, case-insensitively"
+        );
+        // A "custom" label that names a built-in kind normalizes to it,
+        // so serialization (which round-trips the label alone) can never
+        // produce a kind/cost-class conflict.
+        let normalized = OpNode::new("d", OpKind::MatMul, vec![1]).with_custom_kind("softmax");
+        assert_eq!(normalized.kind, OpKind::Softmax);
+        assert!(normalized.custom_kind.is_none());
+        assert_eq!(normalized.kind_label(), "Softmax");
     }
 
     #[test]

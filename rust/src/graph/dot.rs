@@ -1,11 +1,22 @@
-//! Graphviz DOT export for computation graphs and their partitions.
+//! Graphviz DOT export/import for computation graphs and their partitions.
 //!
 //! Regenerates the paper's Figure 2 (benchmark graphs before/after graph
 //! partitioning + pooling): `to_dot` renders the raw graph, and
 //! `to_dot_partitioned` colors nodes by their learned group and renders the
-//! pooled graph next to it.
+//! pooled graph next to it. `to_dot_placed` colors nodes by their assigned
+//! *device* (the `place --dump-dot` path), so any workload's placement can
+//! be inspected visually.
+//!
+//! `to_dot` additionally embeds machine-readable `hsdag_*` attributes
+//! (shape, cost attrs, kind) on every node — Graphviz ignores unknown
+//! attributes, and `from_dot` reads them back, making the exporter's own
+//! dialect a lossless on-disk graph format alongside the JSON one
+//! (`--workload file:<g>.dot`).
 
-use super::dag::CompGraph;
+use anyhow::{anyhow, bail, Result};
+
+use super::dag::{CompGraph, OpNode};
+use super::ops::{OpAttrs, OpKind};
 
 /// Palette for partition coloring (cycled when there are more groups).
 const COLORS: [&str; 12] = [
@@ -13,20 +24,53 @@ const COLORS: [&str; 12] = [
     "#cab2d6", "#6a3d9a", "#ffff99", "#b15928",
 ];
 
+/// Escape a string for a quoted DOT attribute value. Literal newlines
+/// must not survive into the output (the importer is line-based), so
+/// they encode as the DOT `\n` escape; pre-existing backslashes are
+/// doubled first, which keeps the encoding unambiguous — `\\n` is a
+/// backslash followed by `n`, `\n` is a newline.
 fn esc(s: &str) -> String {
-    s.replace('"', "\\\"")
+    s.replace('\\', "\\\\")
+        .replace('"', "\\\"")
+        .replace('\n', "\\n")
+        .replace('\r', "\\r")
 }
 
-/// Render the graph as DOT, labeling nodes with `name\nkind`.
+/// Render one node's machine-readable metadata attributes. `hsdag_name`
+/// carries the authoritative node name: the label's `\n`-separated lines
+/// are display-only and ambiguous for names containing backslashes.
+fn meta_attrs(n: &OpNode) -> String {
+    let shape: Vec<String> = n.output_shape.iter().map(|d| d.to_string()).collect();
+    let mut out = format!(
+        ", hsdag_name=\"{}\", hsdag_kind=\"{}\", hsdag_shape=\"{}\"",
+        esc(&n.name),
+        esc(n.kind_label()),
+        shape.join(",")
+    );
+    if n.custom_kind.is_some() {
+        out.push_str(&format!(", hsdag_class=\"{}\"", n.kind.name()));
+    }
+    if n.attrs != OpAttrs::default() {
+        out.push_str(&format!(
+            ", hsdag_attrs=\"{},{},{}\"",
+            n.attrs.taps, n.attrs.reduce_dim, n.attrs.groups
+        ));
+    }
+    out
+}
+
+/// Render the graph as DOT, labeling nodes with `name\nkind` and embedding
+/// round-trippable `hsdag_*` metadata.
 pub fn to_dot(g: &CompGraph) -> String {
     let mut out = String::new();
     out.push_str(&format!("digraph \"{}\" {{\n", esc(&g.name)));
     out.push_str("  rankdir=TB;\n  node [shape=box, fontsize=9];\n");
     for (i, n) in g.nodes.iter().enumerate() {
         out.push_str(&format!(
-            "  n{i} [label=\"{}\\n{}\"];\n",
+            "  n{i} [label=\"{}\\n{}\"{}];\n",
             esc(&n.name),
-            n.kind.name()
+            esc(n.kind_label()),
+            meta_attrs(n)
         ));
     }
     for &(s, d) in &g.edges {
@@ -59,6 +103,43 @@ pub fn to_dot_partitioned(g: &CompGraph, cluster_of: &[usize]) -> String {
     out
 }
 
+/// Render the graph with nodes colored by *assigned device* (the
+/// `place --dump-dot` view). `placement[i]` is a device id indexing
+/// `device_names`; cross-device edges — the transfers a placement pays
+/// for — render dashed. A legend cluster maps colors to device names.
+pub fn to_dot_placed(g: &CompGraph, placement: &[usize], device_names: &[String]) -> String {
+    assert_eq!(placement.len(), g.n(), "one device per node");
+    let mut out = String::new();
+    out.push_str(&format!("digraph \"{}_placed\" {{\n", esc(&g.name)));
+    out.push_str("  rankdir=TB;\n  node [shape=box, style=filled, fontsize=9];\n");
+    out.push_str("  subgraph cluster_legend {\n    label=\"devices\";\n");
+    for (d, name) in device_names.iter().enumerate() {
+        out.push_str(&format!(
+            "    legend_d{d} [label=\"{}\", fillcolor=\"{}\"];\n",
+            esc(name),
+            COLORS[d % COLORS.len()]
+        ));
+    }
+    out.push_str("  }\n");
+    for (i, n) in g.nodes.iter().enumerate() {
+        let d = placement[i];
+        let dev = device_names.get(d).map(String::as_str).unwrap_or("?");
+        out.push_str(&format!(
+            "  n{i} [label=\"{}\\n{}\\n{}\", fillcolor=\"{}\"];\n",
+            esc(&n.name),
+            esc(n.kind_label()),
+            esc(dev),
+            COLORS[d % COLORS.len()]
+        ));
+    }
+    for &(s, d) in &g.edges {
+        let style = if placement[s] == placement[d] { "solid" } else { "dashed" };
+        out.push_str(&format!("  n{s} -> n{d} [style={style}];\n"));
+    }
+    out.push_str("}\n");
+    out
+}
+
 /// Render the pooled graph G' = (V', E') given the pooled adjacency as an
 /// edge list over cluster ids.
 pub fn to_dot_pooled(name: &str, n_clusters: usize, pooled_edges: &[(usize, usize)]) -> String {
@@ -78,6 +159,274 @@ pub fn to_dot_pooled(name: &str, n_clusters: usize, pooled_edges: &[(usize, usiz
     out
 }
 
+/// Split a DOT attribute list (`key="value", key=value, ...`) into
+/// key/value pairs. Quoted values may contain escaped quotes.
+fn parse_attrs(text: &str) -> Result<Vec<(String, String)>> {
+    let bytes = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        while i < bytes.len() && matches!(bytes[i], b' ' | b',' | b'\t') {
+            i += 1;
+        }
+        if i >= bytes.len() {
+            break;
+        }
+        let key_start = i;
+        while i < bytes.len() && bytes[i] != b'=' {
+            i += 1;
+        }
+        if i >= bytes.len() {
+            bail!("attribute without '=' in '{text}'");
+        }
+        let key = text[key_start..i].trim().to_string();
+        i += 1; // consume '='
+        while i < bytes.len() && bytes[i] == b' ' {
+            i += 1;
+        }
+        let value = if i < bytes.len() && bytes[i] == b'"' {
+            i += 1;
+            let mut v = String::new();
+            loop {
+                if i >= bytes.len() {
+                    bail!("unterminated quoted value for '{key}'");
+                }
+                match bytes[i] {
+                    // Decode the writer's escapes: `\"` `\\` `\n` `\r`.
+                    // An unknown escape keeps the backslash literally and
+                    // lets the next byte re-enter the loop (it may start
+                    // a multi-byte character).
+                    b'\\' if i + 1 < bytes.len() => match bytes[i + 1] {
+                        b'"' => {
+                            v.push('"');
+                            i += 2;
+                        }
+                        b'\\' => {
+                            v.push('\\');
+                            i += 2;
+                        }
+                        b'n' => {
+                            v.push('\n');
+                            i += 2;
+                        }
+                        b'r' => {
+                            v.push('\r');
+                            i += 2;
+                        }
+                        _ => {
+                            v.push('\\');
+                            i += 1;
+                        }
+                    },
+                    b'"' => {
+                        i += 1;
+                        break;
+                    }
+                    _ => {
+                        // Attribute text is ASCII in our dialect except
+                        // inside names, which arrive as valid UTF-8.
+                        let rest = &text[i..];
+                        let c = rest.chars().next().unwrap();
+                        v.push(c);
+                        i += c.len_utf8();
+                    }
+                }
+            }
+            v
+        } else {
+            let start = i;
+            while i < bytes.len() && !matches!(bytes[i], b',' | b' ') {
+                i += 1;
+            }
+            text[start..i].to_string()
+        };
+        out.push((key, value));
+    }
+    Ok(out)
+}
+
+/// Parse a usize list like "1,64,56,56".
+fn parse_usize_list(text: &str, what: &str) -> Result<Vec<usize>> {
+    text.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad {what} entry '{t}' (want an integer)"))
+        })
+        .collect()
+}
+
+/// Import a graph from the dialect [`to_dot`] emits: `nI [...]` node
+/// statements carrying `hsdag_*` metadata and `nA -> nB` edges. Node ids
+/// must be dense (`n0..n{V-1}`) and every node must carry `hsdag_shape`
+/// (display-only dumps like the partitioned/placed renderings are
+/// refused — they have no cost metadata to reconstruct a workload from);
+/// the resulting graph is validated before it is returned, so malformed
+/// files fail with a message, not a panic.
+pub fn from_dot(text: &str) -> Result<CompGraph> {
+    let mut name = "graph".to_string();
+    if let Some(rest) = text.trim_start().strip_prefix("digraph") {
+        let rest = rest.trim_start();
+        if let Some(stripped) = rest.strip_prefix('"') {
+            // Scan to the closing quote, decoding the writer's escapes
+            // with the same rules as `parse_attrs` (unknown escapes keep
+            // their backslash).
+            let mut unescaped = String::new();
+            let mut chars = stripped.chars();
+            while let Some(c) = chars.next() {
+                match c {
+                    '"' => break,
+                    '\\' => match chars.next() {
+                        Some('n') => unescaped.push('\n'),
+                        Some('r') => unescaped.push('\r'),
+                        Some('"') => unescaped.push('"'),
+                        Some('\\') => unescaped.push('\\'),
+                        Some(other) => {
+                            unescaped.push('\\');
+                            unescaped.push(other);
+                        }
+                        None => {}
+                    },
+                    c => unescaped.push(c),
+                }
+            }
+            name = unescaped;
+        } else if let Some(end) = rest.find(|c: char| c.is_whitespace() || c == '{') {
+            if end > 0 {
+                name = rest[..end].to_string();
+            }
+        }
+    }
+
+    let mut nodes: Vec<(usize, OpNode)> = Vec::new();
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for raw in text.lines() {
+        let line = raw.trim().trim_end_matches(';');
+        // Only node/edge statements start with `n<digit>`.
+        let is_stmt = line.starts_with('n')
+            && line.len() > 1
+            && line.as_bytes()[1].is_ascii_digit();
+        if !is_stmt {
+            continue;
+        }
+        // Classify by what follows the leading `n<digits>` token — labels
+        // may legitimately contain `->` or `[`, so scanning the whole
+        // line would misparse them.
+        let id_end = 1 + line[1..]
+            .bytes()
+            .position(|b| !b.is_ascii_digit())
+            .unwrap_or(line.len() - 1);
+        let rest = line[id_end..].trim_start();
+        if let Some(dsts) = rest.strip_prefix("->") {
+            // Edge statement, possibly chained (`n0 -> n1 -> n2`); edge
+            // attrs (e.g. `[style=dashed]`) are display-only.
+            let mut prev = node_id(&line[..id_end])?;
+            for seg in dsts.split("->") {
+                let tok = seg.trim().split([' ', '[']).next().unwrap_or("");
+                let next = node_id(tok)?;
+                edges.push((prev, next));
+                prev = next;
+            }
+        } else if let Some(attr_part) = rest.strip_prefix('[') {
+            let id = node_id(&line[..id_end])?;
+            let attr_text = attr_part
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("node n{id}: unterminated attribute list"))?;
+            let attrs = parse_attrs(attr_text)?;
+            let get = |key: &str| attrs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str());
+
+            // Name: the authoritative `hsdag_name` when present, else the
+            // first label line (the label's `\n` escapes decode to real
+            // newlines in `parse_attrs`, so the fallback splits on those;
+            // it is display text and ambiguous for exotic names, which is
+            // why the exporter emits `hsdag_name`).
+            let label = get("label").ok_or_else(|| anyhow!("node n{id}: missing label"))?;
+            let node_name = match get("hsdag_name") {
+                Some(name) => name.to_string(),
+                None => label.split('\n').next().unwrap_or(label).to_string(),
+            };
+            let kind_label = match get("hsdag_kind") {
+                Some(k) => k.to_string(),
+                None => {
+                    let second = label.split('\n').nth(1).ok_or_else(|| {
+                        anyhow!("node n{id} '{node_name}': no hsdag_kind and single-line label")
+                    })?;
+                    second.to_string()
+                }
+            };
+            let shape = match get("hsdag_shape") {
+                // Empty means a scalar output (shape []), mirroring the
+                // JSON format's "shape": [].
+                Some("") => Vec::new(),
+                Some(s) => parse_usize_list(s, "shape")?,
+                // Defaulting here would load display-only dumps (the
+                // partitioned / placed renderings) as graphs whose every
+                // node costs nothing — refuse instead of corrupting.
+                None => bail!(
+                    "node n{id} '{node_name}': no hsdag_shape attribute — this DOT file \
+                     was not exported by to_dot (display-only dumps such as the \
+                     partitioned/placed renderings carry no graph metadata)"
+                ),
+            };
+            if shape.iter().any(|&d| d == 0) {
+                bail!("node n{id} '{node_name}': zero dim in shape");
+            }
+            let mut op = match OpKind::parse(&kind_label) {
+                Some(kind) => OpNode::new(node_name, kind, shape),
+                None => {
+                    let class = match get("hsdag_class") {
+                        Some(c) => OpKind::parse(c)
+                            .ok_or_else(|| anyhow!("node n{id}: unknown hsdag_class '{c}'"))?,
+                        None => super::json::DEFAULT_COST_CLASS,
+                    };
+                    OpNode::new(node_name, class, shape).with_custom_kind(kind_label)
+                }
+            };
+            if let Some(a) = get("hsdag_attrs") {
+                let vals = parse_usize_list(a, "hsdag_attrs")?;
+                if vals.len() != 3 || vals.iter().any(|&v| v == 0) {
+                    bail!("node n{id}: hsdag_attrs wants three positive ints, got '{a}'");
+                }
+                op = op.with_attrs(OpAttrs { taps: vals[0], reduce_dim: vals[1], groups: vals[2] });
+            }
+            nodes.push((id, op));
+        }
+        // `nI` statements with neither '[' nor '->' carry no information.
+    }
+
+    nodes.sort_by_key(|(id, _)| *id);
+    let mut g = CompGraph::new(name);
+    for (pos, (id, op)) in nodes.into_iter().enumerate() {
+        if id != pos {
+            bail!("node ids must be dense n0..: missing n{pos}, found n{id}");
+        }
+        g.add_node(op);
+    }
+    let mut seen_edges = std::collections::HashSet::new();
+    for (s, d) in edges {
+        if s >= g.n() || d >= g.n() {
+            bail!("edge n{s} -> n{d} references an undeclared node");
+        }
+        if s == d {
+            bail!("self-loop on node n{s}");
+        }
+        if !seen_edges.insert((s, d)) {
+            bail!("duplicate edge n{s} -> n{d}");
+        }
+        g.add_edge(s, d);
+    }
+    g.validate().map_err(|e| anyhow!("invalid graph: {e}"))?;
+    Ok(g)
+}
+
+/// Parse a `n<digits>` node reference.
+fn node_id(token: &str) -> Result<usize> {
+    token
+        .strip_prefix('n')
+        .and_then(|t| t.parse::<usize>().ok())
+        .ok_or_else(|| anyhow!("expected a node reference 'n<id>', got '{token}'"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,7 +436,10 @@ mod tests {
     fn tiny() -> CompGraph {
         let mut g = CompGraph::new("tiny");
         let a = g.add_node(OpNode::new("in", OpKind::Parameter, vec![1]));
-        let b = g.add_node(OpNode::new("relu", OpKind::Relu, vec![1]));
+        let b = g.add_node(
+            OpNode::new("relu", OpKind::Relu, vec![1, 8])
+                .with_attrs(OpAttrs { taps: 9, reduce_dim: 4, groups: 2 }),
+        );
         let c = g.add_node(OpNode::new("out", OpKind::Result, vec![1]));
         g.add_edge(a, b);
         g.add_edge(b, c);
@@ -126,5 +478,120 @@ mod tests {
         g.nodes[1].name = "we\"ird".into();
         let dot = to_dot(&g);
         assert!(dot.contains("we\\\"ird"));
+    }
+
+    #[test]
+    fn placed_dot_colors_by_device_and_includes_legend() {
+        let g = tiny();
+        let names = vec!["CPU".to_string(), "GPU".to_string()];
+        let dot = to_dot_placed(&g, &[0, 1, 0], &names);
+        assert!(dot.contains("cluster_legend"));
+        assert!(dot.contains("legend_d0"));
+        assert!(dot.contains("legend_d1"));
+        assert!(dot.contains("GPU"));
+        // Device changes across both edges -> dashed transfers.
+        assert!(dot.contains("n0 -> n1 [style=dashed]"));
+        assert!(dot.contains("n1 -> n2 [style=dashed]"));
+        let same = to_dot_placed(&g, &[1, 1, 1], &names);
+        assert!(same.contains("n0 -> n1 [style=solid]"));
+    }
+
+    #[test]
+    fn dot_roundtrip_preserves_structure_and_metadata() {
+        let mut g = tiny();
+        g.nodes[1].custom_kind = Some("FusedThing".to_string());
+        let text = to_dot(&g);
+        let h = from_dot(&text).unwrap();
+        assert_eq!(h.name, g.name);
+        assert_eq!(h.n(), g.n());
+        assert_eq!(h.edges, g.edges);
+        for (a, b) in g.nodes.iter().zip(h.nodes.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.output_shape, b.output_shape);
+            assert_eq!(a.attrs, b.attrs);
+            assert_eq!(a.custom_kind, b.custom_kind);
+        }
+    }
+
+    #[test]
+    fn from_dot_rejects_malformed_inputs() {
+        // Sparse ids.
+        let sparse = "digraph g {\n  n0 [label=\"a\\nParameter\", hsdag_shape=\"1\"];\n  \
+                      n2 [label=\"b\\nResult\", hsdag_shape=\"1\"];\n  n0 -> n2;\n}\n";
+        assert!(format!("{:#}", from_dot(sparse).unwrap_err()).contains("dense"));
+        // Edge to an undeclared node.
+        let dangling = "digraph g {\n  n0 [label=\"a\\nParameter\", hsdag_shape=\"1\"];\n  \
+                        n0 -> n7;\n}\n";
+        assert!(from_dot(dangling).is_err());
+        // A node that fails graph validation (orphan Relu).
+        let orphan = "digraph g {\n  n0 [label=\"a\\nParameter\", hsdag_shape=\"1\"];\n  \
+                      n1 [label=\"b\\nRelu\", hsdag_shape=\"1\"];\n  \
+                      n2 [label=\"c\\nResult\", hsdag_shape=\"1\"];\n  n0 -> n2;\n}\n";
+        assert!(format!("{:#}", from_dot(orphan).unwrap_err()).contains("invalid graph"));
+        // Duplicate edges are a loud error, not a silent dedup.
+        let dup = "digraph g {\n  n0 [label=\"a\\nParameter\", hsdag_shape=\"1\"];\n  \
+                   n1 [label=\"b\\nResult\", hsdag_shape=\"1\"];\n  n0 -> n1;\n  n0 -> n1;\n}\n";
+        assert!(format!("{:#}", from_dot(dup).unwrap_err()).contains("duplicate"));
+    }
+
+    #[test]
+    fn display_only_dumps_are_refused_not_miscosted() {
+        // Partitioned / placed renderings carry no hsdag_* metadata;
+        // loading one must error instead of silently costing every node
+        // as a [1]-shaped no-op.
+        let g = tiny();
+        let display = to_dot_partitioned(&g, &[0, 0, 1]);
+        let err = from_dot(&display).unwrap_err();
+        assert!(format!("{err:#}").contains("hsdag_shape"), "{err:#}");
+    }
+
+    #[test]
+    fn hostile_names_roundtrip() {
+        // Names containing the label separator sequence (backslash-n),
+        // `->`, `[`, quotes and backslashes must survive the round-trip:
+        // the importer classifies statements by the `n<id>` prefix and
+        // reads names from `hsdag_name`, never from the display label.
+        let mut g = CompGraph::new("we\"ird \\graph");
+        let a = g.add_node(OpNode::new("a->b", OpKind::Parameter, vec![1]));
+        let b = g.add_node(OpNode::new("odd\\name [x]", OpKind::Relu, vec![1]));
+        let nl = g.add_node(OpNode::new("real\nnewline", OpKind::Sigmoid, vec![1]));
+        let scalar = g.add_node(OpNode::new("scalar", OpKind::ReduceMean, vec![]));
+        let c = g.add_node(OpNode::new("q\"uote", OpKind::Result, vec![1]));
+        g.add_edge(a, b);
+        g.add_edge(b, nl);
+        g.add_edge(nl, scalar);
+        g.add_edge(scalar, c);
+        g.validate().unwrap();
+        let h = from_dot(&to_dot(&g)).unwrap();
+        assert_eq!(h.name, g.name);
+        assert_eq!(h.edges, g.edges);
+        for (x, y) in g.nodes.iter().zip(h.nodes.iter()) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.output_shape, y.output_shape);
+        }
+    }
+
+    #[test]
+    fn chained_edge_statements_keep_every_hop() {
+        let text = "digraph g {\n  n0 [label=\"a\\nParameter\", hsdag_shape=\"1\"];\n  \
+                    n1 [label=\"b\\nRelu\", hsdag_shape=\"1\"];\n  \
+                    n2 [label=\"c\\nResult\", hsdag_shape=\"1\"];\n  n0 -> n1 -> n2;\n}\n";
+        let g = from_dot(text).unwrap();
+        assert_eq!(g.edges, vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn from_dot_reads_unknown_kinds_as_custom() {
+        let text = "digraph \"x\" {\n  n0 [label=\"in\\nParameter\", hsdag_shape=\"1,4\"];\n  \
+                    n1 [label=\"z\\nOddOp\", hsdag_shape=\"1,4\", hsdag_class=\"MatMul\", \
+                    hsdag_attrs=\"1,4,1\"];\n  n2 [label=\"out\\nResult\", hsdag_shape=\"1\"];\n  \
+                    n0 -> n1;\n  n1 -> n2;\n}\n";
+        let g = from_dot(text).unwrap();
+        assert_eq!(g.name, "x");
+        assert_eq!(g.nodes[1].kind, OpKind::MatMul);
+        assert_eq!(g.nodes[1].kind_label(), "OddOp");
+        assert_eq!(g.nodes[1].attrs.reduce_dim, 4);
     }
 }

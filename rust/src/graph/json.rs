@@ -1,0 +1,348 @@
+//! On-disk JSON graph format (`--workload file:<path>`).
+//!
+//! The format is a direct, hand-editable projection of [`CompGraph`] at
+//! OpenVINO granularity (see README "Workloads" for the spec):
+//!
+//! ```json
+//! {
+//!   "format": "hsdag-graph-v1",
+//!   "name": "my_model",
+//!   "nodes": [
+//!     {"name": "input", "kind": "Parameter", "shape": [1, 3, 224, 224]},
+//!     {"name": "conv1", "kind": "Convolution", "shape": [1, 64, 112, 112],
+//!      "taps": 49, "reduce_dim": 3},
+//!     {"name": "gate", "kind": "MyFusedGate", "cost_class": "MatMul",
+//!      "shape": [1, 64], "reduce_dim": 64},
+//!     {"name": "out", "kind": "Result", "shape": [1, 64]}
+//!   ],
+//!   "edges": [[0, 1], [1, 2], [2, 3]]
+//! }
+//! ```
+//!
+//! `kind` may be any string: names from the built-in vocabulary resolve
+//! to their [`OpKind`] (case-insensitive); anything else becomes a
+//! *custom* kind whose one-hot feature slot is hash-bucketed
+//! ([`crate::graph::ops::hash_kind_slot`]) and whose simulator cost class
+//! is the optional `cost_class` field (default: a generic 1-FLOP/element
+//! elementwise op). `taps` / `reduce_dim` / `groups` default to 1.
+//! Malformed documents fail with a message naming the offending node or
+//! edge — never a panic.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::dag::{CompGraph, OpNode};
+use super::ops::{OpAttrs, OpKind};
+use crate::util::json::Json;
+
+/// Format tag written into (and required from) every document.
+pub const FORMAT_TAG: &str = "hsdag-graph-v1";
+
+/// Cost class assumed for custom kinds that don't declare one: a generic
+/// 1-FLOP/element elementwise op.
+pub const DEFAULT_COST_CLASS: OpKind = OpKind::Relu;
+
+/// Serialize a graph to the pretty-printed v1 JSON document.
+pub fn to_json(g: &CompGraph) -> String {
+    let nodes: Vec<Json> = g
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut fields = vec![
+                ("name".to_string(), Json::Str(n.name.clone())),
+                ("kind".to_string(), Json::Str(n.kind_label().to_string())),
+            ];
+            if n.custom_kind.is_some() {
+                fields.push(("cost_class".to_string(), Json::Str(n.kind.name().to_string())));
+            }
+            fields.push((
+                "shape".to_string(),
+                Json::Arr(n.output_shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+            ));
+            if n.attrs.taps != 1 {
+                fields.push(("taps".to_string(), Json::Num(n.attrs.taps as f64)));
+            }
+            if n.attrs.reduce_dim != 1 {
+                fields.push(("reduce_dim".to_string(), Json::Num(n.attrs.reduce_dim as f64)));
+            }
+            if n.attrs.groups != 1 {
+                fields.push(("groups".to_string(), Json::Num(n.attrs.groups as f64)));
+            }
+            Json::Obj(fields)
+        })
+        .collect();
+    let edges: Vec<Json> = g
+        .edges
+        .iter()
+        .map(|&(s, d)| Json::Arr(vec![Json::Num(s as f64), Json::Num(d as f64)]))
+        .collect();
+    Json::Obj(vec![
+        ("format".to_string(), Json::Str(FORMAT_TAG.to_string())),
+        ("name".to_string(), Json::Str(g.name.clone())),
+        ("nodes".to_string(), Json::Arr(nodes)),
+        ("edges".to_string(), Json::Arr(edges)),
+    ])
+    .to_string_pretty()
+}
+
+/// Parse and validate a v1 JSON document into a [`CompGraph`].
+pub fn from_json(text: &str) -> Result<CompGraph> {
+    let doc = Json::parse(text).map_err(|e| anyhow!("invalid JSON: {e}"))?;
+    match doc.get("format").and_then(Json::as_str) {
+        Some(FORMAT_TAG) => {}
+        Some(other) => bail!("unsupported graph format '{other}' (want '{FORMAT_TAG}')"),
+        None => bail!("missing \"format\" field (want '{FORMAT_TAG}')"),
+    }
+    let name = doc.get("name").and_then(Json::as_str).unwrap_or("graph").to_string();
+    let nodes = doc
+        .get("nodes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing \"nodes\" array"))?;
+    let edges = doc
+        .get("edges")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing \"edges\" array"))?;
+
+    let mut g = CompGraph::new(name);
+    for (i, node) in nodes.iter().enumerate() {
+        g.add_node(parse_node(i, node)?);
+    }
+    let n = g.n();
+    let mut seen_edges = std::collections::HashSet::new();
+    for (i, e) in edges.iter().enumerate() {
+        let pair = e.as_arr().ok_or_else(|| anyhow!("edge {i}: expected a [src, dst] pair"))?;
+        if pair.len() != 2 {
+            bail!("edge {i}: expected exactly [src, dst], got {} entries", pair.len());
+        }
+        let src = pair[0]
+            .as_usize()
+            .ok_or_else(|| anyhow!("edge {i}: src is not a non-negative integer"))?;
+        let dst = pair[1]
+            .as_usize()
+            .ok_or_else(|| anyhow!("edge {i}: dst is not a non-negative integer"))?;
+        if src >= n || dst >= n {
+            bail!("edge {i} ({src} -> {dst}) references a node outside 0..{n}");
+        }
+        if src == dst {
+            bail!("edge {i}: self-loop on node {src}");
+        }
+        // `add_edge` would silently dedup; a duplicate in a hand-edited
+        // file is almost certainly a fat-fingered index, so say so.
+        if !seen_edges.insert((src, dst)) {
+            bail!("edge {i}: duplicate edge {src} -> {dst}");
+        }
+        g.add_edge(src, dst);
+    }
+    g.validate().map_err(|e| anyhow!("invalid graph: {e}"))?;
+    Ok(g)
+}
+
+fn parse_node(i: usize, node: &Json) -> Result<OpNode> {
+    let name = node
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("node {i}: missing string \"name\""))?;
+    let kind_label = node
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("node {i} '{name}': missing string \"kind\""))?;
+    let shape_json = node
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("node {i} '{name}': missing \"shape\" array"))?;
+    let mut shape = Vec::with_capacity(shape_json.len());
+    for (si, d) in shape_json.iter().enumerate() {
+        let dim = d.as_usize().ok_or_else(|| {
+            anyhow!("node {i} '{name}': shape[{si}] is not a non-negative integer")
+        })?;
+        if dim == 0 {
+            bail!("node {i} '{name}': shape[{si}] is zero");
+        }
+        shape.push(dim);
+    }
+
+    let attr = |key: &str| -> Result<usize> {
+        match node.get(key) {
+            None => Ok(1),
+            Some(v) => v
+                .as_usize()
+                .filter(|&x| x > 0)
+                .ok_or_else(|| anyhow!("node {i} '{name}': \"{key}\" must be a positive integer")),
+        }
+    };
+    let attrs =
+        OpAttrs { taps: attr("taps")?, reduce_dim: attr("reduce_dim")?, groups: attr("groups")? };
+
+    let declared_class = match node.get("cost_class") {
+        None => None,
+        Some(c) => {
+            let cname = c
+                .as_str()
+                .ok_or_else(|| anyhow!("node {i} '{name}': \"cost_class\" must be a string"))?;
+            Some(OpKind::parse(cname).ok_or_else(|| {
+                anyhow!(
+                    "node {i} '{name}': unknown cost_class '{cname}' \
+                     (must be a built-in kind name)"
+                )
+            })?)
+        }
+    };
+    let mut op = match OpKind::parse(kind_label) {
+        Some(kind) => {
+            // A built-in kind IS its cost class; a conflicting
+            // declaration would be silently dropped, so reject it.
+            if let Some(class) = declared_class {
+                if class != kind {
+                    bail!(
+                        "node {i} '{name}': cost_class '{}' conflicts with built-in kind \
+                         '{}' (drop the field, or rename the kind to a custom label)",
+                        class.name(),
+                        kind.name()
+                    );
+                }
+            }
+            OpNode::new(name, kind, shape)
+        }
+        None => OpNode::new(name, declared_class.unwrap_or(DEFAULT_COST_CLASS), shape)
+            .with_custom_kind(kind_label),
+    };
+    op = op.with_attrs(attrs);
+    Ok(op)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::hash_kind_slot;
+
+    fn sample() -> CompGraph {
+        let mut g = CompGraph::new("sample");
+        let i = g.add_node(OpNode::new("in", OpKind::Parameter, vec![1, 3, 8, 8]));
+        let c = g.add_node(
+            OpNode::new("conv", OpKind::Convolution, vec![1, 16, 8, 8])
+                .with_attrs(OpAttrs { taps: 9, reduce_dim: 3, groups: 1 }),
+        );
+        let f = g.add_node(
+            OpNode::new("gate", OpKind::MatMul, vec![1, 16]).with_custom_kind("FusedGate"),
+        );
+        let o = g.add_node(OpNode::new("out", OpKind::Result, vec![1, 16]));
+        g.add_edge(i, c);
+        g.add_edge(c, f);
+        g.add_edge(f, o);
+        g
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure_kinds_and_attrs() {
+        let g = sample();
+        let text = to_json(&g);
+        let h = from_json(&text).unwrap();
+        assert_eq!(h.name, g.name);
+        assert_eq!(h.n(), g.n());
+        assert_eq!(h.edges, g.edges);
+        for (a, b) in g.nodes.iter().zip(h.nodes.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.output_shape, b.output_shape);
+            assert_eq!(a.attrs, b.attrs);
+            assert_eq!(a.custom_kind, b.custom_kind);
+            assert_eq!(a.feature_slot(), b.feature_slot());
+        }
+    }
+
+    #[test]
+    fn unknown_kind_becomes_custom_with_declared_cost_class() {
+        let text = r#"{
+            "format": "hsdag-graph-v1",
+            "name": "t",
+            "nodes": [
+                {"name": "in", "kind": "Parameter", "shape": [1, 4]},
+                {"name": "x", "kind": "WeirdOp", "cost_class": "MatMul",
+                 "shape": [1, 4], "reduce_dim": 4},
+                {"name": "out", "kind": "Result", "shape": [1, 4]}
+            ],
+            "edges": [[0, 1], [1, 2]]
+        }"#;
+        let g = from_json(text).unwrap();
+        assert_eq!(g.nodes[1].kind, OpKind::MatMul);
+        assert_eq!(g.nodes[1].kind_label(), "WeirdOp");
+        assert_eq!(g.nodes[1].feature_slot(), hash_kind_slot("WeirdOp"));
+        assert_eq!(g.nodes[1].attrs.reduce_dim, 4);
+        // Undeclared cost class falls back to generic elementwise.
+        let text2 = text.replace(r#""cost_class": "MatMul","#, "");
+        let g2 = from_json(&text2).unwrap();
+        assert_eq!(g2.nodes[1].kind, DEFAULT_COST_CLASS);
+        // A cost_class conflicting with a built-in kind is rejected, not
+        // silently dropped; a redundant matching one is accepted.
+        let text3 = text.replace(r#""kind": "WeirdOp""#, r#""kind": "Relu""#);
+        let err = from_json(&text3).unwrap_err();
+        assert!(format!("{err:#}").contains("conflicts"), "{err:#}");
+        let text4 = text.replace(r#""kind": "WeirdOp""#, r#""kind": "MatMul""#);
+        let g4 = from_json(&text4).unwrap();
+        assert_eq!(g4.nodes[1].kind, OpKind::MatMul);
+        assert!(g4.nodes[1].custom_kind.is_none());
+    }
+
+    #[test]
+    fn malformed_documents_error_with_location() {
+        let cases: [(&str, &str); 8] = [
+            (
+                r#"{"format": "hsdag-graph-v1",
+                   "nodes": [{"name": "a", "kind": "Parameter", "shape": [1]},
+                             {"name": "b", "kind": "Result", "shape": [1]}],
+                   "edges": [[0, 1], [0, 1]]}"#,
+                "duplicate",
+            ),
+            (r#"{"name": "x"}"#, "format"),
+            (r#"{"format": "hsdag-graph-v1", "name": "x"}"#, "nodes"),
+            (
+                r#"{"format": "hsdag-graph-v1",
+                   "nodes": [{"kind": "Relu", "shape": [1]}], "edges": []}"#,
+                "name",
+            ),
+            (
+                r#"{"format": "hsdag-graph-v1",
+                   "nodes": [{"name": "a", "kind": "Relu"}], "edges": []}"#,
+                "shape",
+            ),
+            (
+                r#"{"format": "hsdag-graph-v1",
+                   "nodes": [{"name": "a", "kind": "Relu", "shape": [0]}], "edges": []}"#,
+                "zero",
+            ),
+            (
+                r#"{"format": "hsdag-graph-v1",
+                   "nodes": [{"name": "a", "kind": "Parameter", "shape": [1]},
+                             {"name": "b", "kind": "Result", "shape": [1]}],
+                   "edges": [[0, 5]]}"#,
+                "outside",
+            ),
+            ("{ not json", "invalid JSON"),
+        ];
+        for (text, needle) in cases {
+            let err = from_json(text).expect_err(needle);
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "{needle}: {msg}");
+        }
+    }
+
+    #[test]
+    fn cycle_and_orphan_rejected_via_validate() {
+        let cyc = r#"{
+            "format": "hsdag-graph-v1", "name": "c",
+            "nodes": [{"name": "a", "kind": "Parameter", "shape": [1]},
+                      {"name": "b", "kind": "Relu", "shape": [1]},
+                      {"name": "c", "kind": "Result", "shape": [1]}],
+            "edges": [[0, 1], [1, 1]]
+        }"#;
+        // Self-loops are rejected explicitly.
+        assert!(format!("{:#}", from_json(cyc).unwrap_err()).contains("self-loop"));
+        let orphan = r#"{
+            "format": "hsdag-graph-v1", "name": "o",
+            "nodes": [{"name": "a", "kind": "Parameter", "shape": [1]},
+                      {"name": "b", "kind": "Relu", "shape": [1]},
+                      {"name": "c", "kind": "Result", "shape": [1]}],
+            "edges": [[0, 2]]
+        }"#;
+        assert!(format!("{:#}", from_json(orphan).unwrap_err()).contains("invalid graph"));
+    }
+}

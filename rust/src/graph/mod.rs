@@ -1,9 +1,12 @@
-//! Computation-graph substrate: DAG structure, operation vocabulary,
-//! topological utilities, and DOT export (Figure 2 support).
+//! Computation-graph substrate: DAG structure, operation vocabulary
+//! (built-in kinds + hash-bucketed custom kinds), topological utilities,
+//! DOT export/import (Figure 2 + `--dump-dot` support) and the on-disk
+//! JSON graph format behind `--workload file:<path>`.
 
 pub mod dag;
 pub mod dot;
+pub mod json;
 pub mod ops;
 
 pub use dag::{CompGraph, OpNode};
-pub use ops::{OpAttrs, OpKind};
+pub use ops::{hash_kind_slot, OpAttrs, OpKind};

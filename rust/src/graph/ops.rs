@@ -134,6 +134,14 @@ impl OpKind {
         }
     }
 
+    /// Inverse of [`OpKind::name`]: resolve an OpenVINO-style kind name
+    /// (case-insensitive) back to the enum. Unknown names return `None`
+    /// — graph loaders then treat them as a custom kind that one-hot
+    /// encodes through [`hash_kind_slot`].
+    pub fn parse(name: &str) -> Option<OpKind> {
+        OpKind::ALL.iter().copied().find(|k| k.name().eq_ignore_ascii_case(name))
+    }
+
     /// Whether the op is pure data movement / reshaping (near-zero FLOPs,
     /// cost dominated by bytes moved).
     pub fn is_data_movement(self) -> bool {
@@ -162,6 +170,22 @@ impl OpKind {
     pub fn is_boundary(self) -> bool {
         matches!(self, OpKind::Parameter | OpKind::Result | OpKind::Constant)
     }
+}
+
+/// Feature one-hot slot for an op-kind label outside the built-in
+/// vocabulary: FNV-1a over the lowercased label, bucketed into the same
+/// fixed `|T| = 32` slots the built-in kinds use. Keeping the slot count
+/// static means the feature width — and with it every policy-backend
+/// shape — never depends on which workload is loaded; distinct custom
+/// labels may collide with each other or with built-in kinds (the
+/// standard hashing-trick trade-off).
+pub fn hash_kind_slot(label: &str) -> usize {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in label.bytes() {
+        h ^= b.to_ascii_lowercase() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h % OpKind::COUNT as u64) as usize
 }
 
 /// Extra per-op attributes the FLOP model needs beyond the output shape.
@@ -286,6 +310,27 @@ mod tests {
         assert!(OpKind::Parameter.is_boundary());
         assert!(OpKind::Result.is_boundary());
         assert!(!OpKind::Convolution.is_boundary());
+    }
+
+    #[test]
+    fn parse_inverts_name() {
+        for k in OpKind::ALL {
+            assert_eq!(OpKind::parse(k.name()), Some(k), "{k:?}");
+            assert_eq!(OpKind::parse(&k.name().to_ascii_uppercase()), Some(k), "{k:?}");
+        }
+        assert_eq!(OpKind::parse("NotAnOp"), None);
+    }
+
+    #[test]
+    fn hash_kind_slot_stable_and_bounded() {
+        let a = hash_kind_slot("MyFusedOp");
+        assert!(a < OpKind::COUNT);
+        assert_eq!(a, hash_kind_slot("myfusedop"), "case-insensitive");
+        assert_eq!(a, hash_kind_slot("MyFusedOp"), "deterministic");
+        // Not a single-bucket degenerate hash.
+        let b = hash_kind_slot("AnotherOp");
+        let c = hash_kind_slot("ThirdOp");
+        assert!(a != b || b != c);
     }
 
     #[test]

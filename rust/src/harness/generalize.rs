@@ -1,0 +1,283 @@
+//! Cross-workload generalization harness (Placeto / GDP-style):
+//! train ONE policy round-robin over a suite of training workloads, then
+//! zero-shot evaluate it on held-out workloads it never saw, reporting
+//! per-workload speedup vs the testbed's reference device next to the
+//! best static baseline.
+//!
+//! The policy's parameter layout depends only on the feature width, the
+//! hidden size and the testbed's action count — never on the graph — so
+//! one `ParamStore` snapshot hops between per-workload
+//! [`NativeBackend`]s ([`PolicyBackend::export_params`] /
+//! `import_params`). Training interleaves one episode per workload per
+//! round (the curriculum of Addanki et al., 2019); evaluation runs a
+//! greedy rollout plus a few stochastic rollouts *without any parameter
+//! update*, so the held-out numbers are genuinely zero-shot.
+//!
+//! Only the native backend can do this: the pjrt artifacts are lowered
+//! per-benchmark and cannot follow the policy across graphs.
+
+use anyhow::{bail, ensure, Result};
+
+use super::report::{fmt_speedup, Table};
+use crate::baselines;
+use crate::config::Config;
+use crate::models::Workload;
+use crate::rl::{Env, HsdagAgent, NativeBackend, PolicyBackend};
+use crate::runtime::ParamStore;
+
+/// One evaluated workload in the generalization table.
+#[derive(Debug, Clone)]
+pub struct GeneralizeOutcome {
+    /// Workload spec.
+    pub workload: String,
+    /// Whether the workload was held out of training (zero-shot row).
+    pub held_out: bool,
+    /// Reference-device latency (the speedup denominator).
+    pub ref_latency: f64,
+    /// Best latency of the shared policy's evaluation rollouts
+    /// (`f64::INFINITY` when no rollout was feasible).
+    pub policy_latency: f64,
+    /// Best static baseline latency and its name.
+    pub static_latency: f64,
+    pub static_name: String,
+}
+
+/// Run the harness: train on `train_specs`, zero-shot evaluate on
+/// `eval_specs`. `episodes` is the number of round-robin rounds (one
+/// episode per training workload per round); `rollouts` the number of
+/// stochastic evaluation rollouts on top of the greedy one.
+pub fn run(
+    cfg: &Config,
+    train_specs: &[String],
+    eval_specs: &[String],
+    episodes: usize,
+    rollouts: usize,
+) -> Result<(Table, Vec<GeneralizeOutcome>)> {
+    ensure!(!train_specs.is_empty(), "generalization needs at least one training workload");
+    ensure!(episodes >= 1, "generalization needs at least one round-robin round");
+    if cfg.backend == "pjrt" {
+        bail!(
+            "the generalization harness shares one policy across workloads; pjrt artifacts \
+             are lowered per-benchmark — run with --backend native"
+        );
+    }
+    let cfg = Config { backend: "native".to_string(), ..cfg.clone() };
+
+    // Resolve every workload up front so a typo fails before training.
+    let mut train_envs = Vec::with_capacity(train_specs.len());
+    for spec in train_specs {
+        train_envs.push(Env::for_workload(Workload::resolve(spec)?, &cfg)?);
+    }
+    let mut eval_envs = Vec::with_capacity(eval_specs.len());
+    for spec in eval_specs {
+        let env = Env::for_workload(Workload::resolve(spec)?, &cfg)?;
+        // Held-out means held out of *training*: compare resolved graphs,
+        // not spec strings — `resnet` vs `resnet50`, or a generator spec
+        // vs its default-seed alias, build the identical graph.
+        for (tspec, tenv) in train_specs.iter().zip(train_envs.iter()) {
+            ensure!(
+                !same_graph(&env.graph, &tenv.graph),
+                "held-out workload '{spec}' resolves to the same graph as training \
+                 workload '{tspec}' — it would not be zero-shot"
+            );
+        }
+        eval_envs.push(env);
+    }
+
+    // One agent per training workload, all driven by the same snapshot.
+    let mut agents = Vec::with_capacity(train_envs.len());
+    for env in &train_envs {
+        let backend = Box::new(NativeBackend::new(env, &cfg)?);
+        agents.push(HsdagAgent::with_backend(env, backend, &cfg)?);
+    }
+    let mut shared: Option<ParamStore> = None;
+    for _round in 0..episodes {
+        for (env, agent) in train_envs.iter().zip(agents.iter_mut()) {
+            if let Some(snapshot) = &shared {
+                agent.import_params(snapshot)?;
+            }
+            agent.search(env, 1)?;
+            shared = Some(agent.export_params());
+        }
+    }
+    let trained = shared.expect("at least one training workload");
+
+    let mut outcomes = Vec::new();
+    for (env, spec) in train_envs.iter().zip(train_specs.iter()) {
+        outcomes.push(evaluate(env, spec, false, &trained, &cfg, rollouts)?);
+    }
+    for (env, spec) in eval_envs.iter().zip(eval_specs.iter()) {
+        outcomes.push(evaluate(env, spec, true, &trained, &cfg, rollouts)?);
+    }
+    Ok((render(&cfg, episodes, &outcomes), outcomes))
+}
+
+/// Whether two resolved graphs are structurally identical (same wiring,
+/// kinds, shapes and cost attrs — node names ignored so renames don't
+/// hide overlap; attrs compared so same-topology graphs with different
+/// FLOP profiles still count as distinct placement problems).
+fn same_graph(a: &crate::graph::CompGraph, b: &crate::graph::CompGraph) -> bool {
+    a.n() == b.n()
+        && a.edges == b.edges
+        && a.nodes.iter().zip(b.nodes.iter()).all(|(x, y)| {
+            x.kind == y.kind
+                && x.custom_kind == y.custom_kind
+                && x.output_shape == y.output_shape
+                && x.attrs == y.attrs
+        })
+}
+
+/// Evaluate the trained snapshot on one workload without updating it.
+fn evaluate(
+    env: &Env,
+    spec: &str,
+    held_out: bool,
+    trained: &ParamStore,
+    cfg: &Config,
+    rollouts: usize,
+) -> Result<GeneralizeOutcome> {
+    let mut backend = NativeBackend::new(env, cfg)?;
+    backend.import_params(trained)?;
+    let mut agent = HsdagAgent::with_backend(env, Box::new(backend), cfg)?;
+    let mut best = f64::INFINITY;
+    agent.reset_episode();
+    let greedy = agent.step(env, false)?;
+    if greedy.feasible {
+        best = best.min(greedy.det_latency);
+    }
+    for _ in 0..rollouts {
+        let o = agent.step(env, true)?;
+        if o.feasible {
+            best = best.min(o.det_latency);
+        }
+    }
+
+    // Best static baseline for context (finite on every testbed).
+    let mut static_latency = f64::INFINITY;
+    let mut static_name = "-".to_string();
+    for name in baselines::BASELINE_NAMES {
+        if let Some(lat) = baselines::baseline_latency(name, &env.graph, &env.testbed) {
+            if lat < static_latency {
+                static_latency = lat;
+                static_name = name.to_string();
+            }
+        }
+    }
+
+    Ok(GeneralizeOutcome {
+        workload: spec.to_string(),
+        held_out,
+        ref_latency: env.ref_latency,
+        policy_latency: best,
+        static_latency,
+        static_name,
+    })
+}
+
+/// Render the generalization table.
+pub fn render(cfg: &Config, episodes: usize, outcomes: &[GeneralizeOutcome]) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Generalization: one policy, {} workloads, {episodes} round-robin rounds \
+             (testbed {}; zero-shot on held-out rows)",
+            outcomes.iter().filter(|o| !o.held_out).count(),
+            cfg.testbed
+        ),
+        &[
+            "Workload",
+            "Role",
+            "Ref l(s)",
+            "Policy l(s)",
+            "Speedup %",
+            "Best static",
+            "Static l(s)",
+            "Static %",
+        ],
+    );
+    for o in outcomes {
+        let (policy_cell, speedup_cell) = if o.policy_latency.is_finite() {
+            (format!("{:.5}", o.policy_latency), fmt_speedup(o.policy_latency, o.ref_latency))
+        } else {
+            ("OOM".to_string(), "-".to_string())
+        };
+        t.row(vec![
+            o.workload.clone(),
+            if o.held_out { "held-out".to_string() } else { "train".to_string() },
+            format!("{:.5}", o.ref_latency),
+            policy_cell,
+            speedup_cell,
+            o.static_name.clone(),
+            format!("{:.5}", o.static_latency),
+            fmt_speedup(o.static_latency, o.ref_latency),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> Config {
+        Config {
+            backend: "native".to_string(),
+            hidden: 16,
+            update_timestep: 4,
+            max_episodes: 1,
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn trains_across_workloads_and_zero_shots_held_out() {
+        let cfg = tiny_cfg();
+        let train = vec!["seq:12".to_string(), "layered:3x3:1".to_string()];
+        let eval = vec!["layered:4x2:2".to_string()];
+        let (table, outcomes) = run(&cfg, &train, &eval, 1, 2).unwrap();
+        assert_eq!(outcomes.len(), 3);
+        assert_eq!(table.rows.len(), 3);
+        let held: Vec<_> = outcomes.iter().filter(|o| o.held_out).collect();
+        assert_eq!(held.len(), 1);
+        assert_eq!(held[0].workload, "layered:4x2:2");
+        for o in &outcomes {
+            assert!(o.ref_latency > 0.0, "{}", o.workload);
+            assert!(o.policy_latency.is_finite(), "{}", o.workload);
+            assert!(o.static_latency.is_finite(), "{}", o.workload);
+        }
+        assert!(table.title.contains("zero-shot"));
+    }
+
+    #[test]
+    fn rejects_pjrt_and_overlapping_sets() {
+        let cfg = Config { backend: "pjrt".to_string(), ..tiny_cfg() };
+        let train = vec!["seq:8".to_string()];
+        assert!(run(&cfg, &train, &[], 1, 0).is_err());
+        let cfg = tiny_cfg();
+        let err = run(&cfg, &train, &train.clone(), 1, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("zero-shot"), "{err:#}");
+        assert!(run(&cfg, &[], &[], 1, 0).is_err());
+        // Overlap is detected on the resolved graph, not the spec string:
+        // `random:14` is `random:14:0` under another name.
+        let train = vec!["random:14:0".to_string()];
+        let eval = vec!["random:14".to_string()];
+        let err = run(&cfg, &train, &eval, 1, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("same graph"), "{err:#}");
+    }
+
+    #[test]
+    fn render_marks_infeasible_policies_as_oom() {
+        let cfg = tiny_cfg();
+        let outcomes = vec![GeneralizeOutcome {
+            workload: "seq:8".to_string(),
+            held_out: true,
+            ref_latency: 0.01,
+            policy_latency: f64::INFINITY,
+            static_latency: 0.02,
+            static_name: "cpu".to_string(),
+        }];
+        let t = render(&cfg, 3, &outcomes);
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0][3], "OOM");
+        assert_eq!(t.rows[0][1], "held-out");
+    }
+}

@@ -1,8 +1,11 @@
 //! Experiment harness: regenerates every table and figure of the paper's
-//! evaluation (DESIGN.md §6 maps each to its module). Each `table*`
-//! function returns the formatted table; the CLI and the bench suite both
-//! call through here.
+//! evaluation (DESIGN.md §6 maps each to its module), plus the
+//! cross-workload [`generalize`] harness (train one policy on a workload
+//! suite, zero-shot evaluate on held-out graphs). Each `table*` function
+//! returns the formatted table; the CLI and the bench suite both call
+//! through here.
 
+pub mod generalize;
 pub mod report;
 pub mod table1;
 pub mod table2;

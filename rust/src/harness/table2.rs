@@ -151,14 +151,14 @@ pub fn run(cfg: &Config, episodes: usize) -> Result<(Table, Table2Results)> {
                     bench,
                     &res,
                     &env,
-                );
+                )?;
             }
         }
 
         // HSDAG, through whichever backend the run resolved to.
         let mut agent = HsdagAgent::with_backend(&env, factory.create(&env, cfg)?, cfg)?;
         let res = agent.search(&env, episodes)?;
-        record_learned(&mut results, "HSDAG", bench, &res, &env);
+        record_learned(&mut results, "HSDAG", bench, &res, &env)?;
     }
 
     Ok((render(&results), results))
@@ -170,16 +170,17 @@ fn record_learned(
     bench: Benchmark,
     res: &SearchResult,
     env: &Env,
-) {
+) -> Result<()> {
     results.latency.push((name.into(), bench.id().into(), res.best_latency));
     results
         .search_cost
         .push((name.into(), bench.id().into(), res.wall_secs, res.peak_bytes));
     // A search that never saw a feasible placement has no best actions.
     if !res.best_actions.is_empty() {
-        let rep = env.report(&res.best_actions);
+        let rep = env.report(&res.best_actions)?;
         results.push_meta(name, bench, &rep, &env.testbed);
     }
+    Ok(())
 }
 
 pub fn render(results: &Table2Results) -> Table {

@@ -6,7 +6,12 @@
 //! The crate owns the computation-graph substrate, feature extraction,
 //! graph-parsing partitioner, heterogeneous execution simulator, the
 //! REINFORCE search loop, the baselines, and the experiment harness that
-//! regenerates every table and figure of the paper. Neural compute runs
+//! regenerates every table and figure of the paper. What gets placed is
+//! open-world: the [`models::Workload`] registry resolves `--workload`
+//! specs (paper benchmarks, `file:` graphs in the JSON/DOT formats of
+//! [`graph`], parametric synthetic generators), and the
+//! [`harness::generalize`] harness trains one policy across a workload
+//! suite and zero-shot evaluates held-out graphs. Neural compute runs
 //! behind the [`rl::PolicyBackend`] trait with two interchangeable
 //! implementations:
 //!

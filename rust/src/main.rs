@@ -6,8 +6,9 @@
 use anyhow::Result;
 use hsdag::baselines;
 use hsdag::cli::{self, Cli};
-use hsdag::harness::{figure2, table1, table2, table3, table4, table5};
-use hsdag::models::Benchmark;
+use hsdag::graph::dot;
+use hsdag::harness::{figure2, generalize, table1, table2, table3, table4, table5};
+use hsdag::models::{Benchmark, Workload};
 use hsdag::rl::{BackendFactory, Env, HsdagAgent};
 use hsdag::sim::execute;
 
@@ -56,15 +57,15 @@ fn run(c: Cli) -> Result<()> {
             println!("{}", figure2::run(&cfg, &out, episodes)?.render());
         }
         "train" => {
-            let bench = c.bench()?;
+            let workload = c.workload()?;
             let episodes = c.usize_flag("episodes", 30)?;
             let mut factory = BackendFactory::new(&cfg)?;
-            let env = Env::new(bench, &cfg)?;
+            let env = Env::for_workload(workload, &cfg)?;
             let mut agent = HsdagAgent::with_backend(&env, factory.create(&env, &cfg)?, &cfg)?;
             println!(
                 "searching {} ({} working nodes, {} edges) on testbed {} ({} placement targets) \
                  for {episodes} episodes on backend {}",
-                bench.display(),
+                env.workload.display,
                 env.n_nodes,
                 env.n_edges,
                 env.testbed.id,
@@ -87,16 +88,16 @@ fn run(c: Cli) -> Result<()> {
             );
         }
         "place" => {
-            let bench = c.bench()?;
+            let workload = c.workload()?;
             let method = c.str_flag("method", "gpu");
-            let g = bench.build();
+            let g = &workload.graph;
             let tb = cfg.resolve_testbed()?;
-            match baselines::baseline_latency(&method, &g, &tb) {
+            match baselines::baseline_latency(&method, g, &tb) {
                 Some(lat) => {
-                    let cpu = baselines::baseline_latency("cpu", &g, &tb).unwrap();
+                    let cpu = baselines::baseline_latency("cpu", g, &tb).unwrap();
                     println!(
                         "{} under {method} on testbed {}: {lat:.5}s ({:+.1}% vs reference)",
-                        bench.display(),
+                        workload.display,
                         tb.id,
                         100.0 * (1.0 - lat / cpu)
                     );
@@ -108,8 +109,8 @@ fn run(c: Cli) -> Result<()> {
                              report below describes one representative draw)"
                         );
                     }
-                    let p = baselines::baseline_placement(&method, &g, &tb).unwrap();
-                    let rep = execute(&g, &p, &tb);
+                    let p = baselines::baseline_placement(&method, g, &tb).unwrap();
+                    let rep = execute(g, &p, &tb);
                     println!(
                         "feasible: {}",
                         if rep.feasible() {
@@ -132,6 +133,13 @@ fn run(c: Cli) -> Result<()> {
                             rep.mem_peak[d] / 1e6
                         );
                     }
+                    // Placement-aware DOT dump for visual inspection.
+                    if let Some(path) = c.flags.get("dump-dot") {
+                        let names: Vec<String> =
+                            tb.devices.iter().map(|dev| dev.name.clone()).collect();
+                        std::fs::write(path, dot::to_dot_placed(g, &p.0, &names))?;
+                        println!("placement DOT written to {path}");
+                    }
                 }
                 None => anyhow::bail!(
                     "unknown method '{method}' ({})",
@@ -139,13 +147,49 @@ fn run(c: Cli) -> Result<()> {
                 ),
             }
         }
+        "generalize" => {
+            let train = c.str_list_flag("train", "seq:48,layered:6x4,random:48:7");
+            let eval = c.str_list_flag("eval", "layered:8x8,transformer:2:2");
+            let episodes = c.usize_flag("episodes", 10)?;
+            let rollouts = c.usize_flag("rollouts", 8)?;
+            let (t, _) = generalize::run(&cfg, &train, &eval, episodes, rollouts)?;
+            println!("{}", t.render());
+        }
+        "export" => {
+            let workload = c.workload()?;
+            // Default filename: sanitized spec, without doubling the
+            // extension for `file:` specs.
+            let mut stem = workload.spec.replace([':', '/', '\\'], "_");
+            for ext in [".json", ".dot", ".gv"] {
+                if let Some(trimmed) = stem.strip_suffix(ext) {
+                    stem = trimmed.to_string();
+                    break;
+                }
+            }
+            let default_name = format!("{stem}.json");
+            let out = c.str_flag("out", &default_name);
+            std::fs::write(&out, hsdag::graph::json::to_json(&workload.graph))?;
+            println!(
+                "wrote {} ({} nodes, {} edges) to {out}",
+                workload.display,
+                workload.graph.n(),
+                workload.graph.m()
+            );
+        }
         "graph-stats" => {
-            for b in Benchmark::ALL {
-                let g = b.build();
-                g.validate().map_err(|e| anyhow::anyhow!("{}: {e}", b.id()))?;
+            // A named workload (--workload, or its --bench alias), or the
+            // three paper benchmarks by default.
+            let spec = c.flags.get("workload").or_else(|| c.flags.get("bench"));
+            let workloads: Vec<Workload> = match spec {
+                Some(spec) => vec![Workload::resolve(spec)?],
+                None => Benchmark::ALL.iter().map(|&b| Workload::from_bench(b)).collect(),
+            };
+            for w in workloads {
+                let g = &w.graph;
+                g.validate().map_err(|e| anyhow::anyhow!("{}: {e}", w.spec))?;
                 println!(
                     "{:<14} |V|={:<5} |E|={:<5} d̄={:.2}  critical-path={}  GFLOP={:.2}",
-                    b.display(),
+                    w.display,
                     g.n(),
                     g.m(),
                     g.avg_degree(),

@@ -1,6 +1,15 @@
-//! OpenVINO-style computation-graph builders for the paper's three
-//! benchmarks (Table 1): Inception-V3 (728/764), ResNet-50 (396/411) and
-//! BERT-base (1009/1071).
+//! The workload subsystem: every graph the placer can be pointed at.
+//!
+//! [`workload`] owns the [`GraphSource`] registry — `Workload::resolve`
+//! turns a spec string (`resnet`, `file:<path>`, `seq:<n>`,
+//! `layered:<d>x<w>`, `transformer:<l>:<h>`, `random:<n>[:<seed>]`) into
+//! a validated [`crate::graph::CompGraph`]. The paper's three Table-1
+//! builders ([`inception`], [`resnet`], [`bert`]) are ordinary registered
+//! sources; [`synth`] holds the parametric generators, and the `file:`
+//! source reads the JSON / DOT formats in [`crate::graph`]. Layers above
+//! this module never enumerate benchmarks to *place* something — only the
+//! paper-table harnesses and the AOT artifact contract still key on
+//! [`Benchmark`].
 //!
 //! # Substitution note (DESIGN.md §4)
 //! The paper generates these graphs by running torchvision/HuggingFace
@@ -19,6 +28,10 @@ pub mod bert;
 pub mod builder;
 pub mod inception;
 pub mod resnet;
+pub mod synth;
+pub mod workload;
+
+pub use workload::{GraphSource, Workload};
 
 use crate::graph::CompGraph;
 

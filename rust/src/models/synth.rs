@@ -1,0 +1,269 @@
+//! Parametric synthetic workload generators for scenario sweeps.
+//!
+//! Each generator returns a graph that passes `CompGraph::validate` by
+//! construction (rooted, sinked, acyclic, unique names) at OpenVINO
+//! granularity, with FLOP/byte attributes plausible enough that placement
+//! actually matters to the simulator:
+//!
+//! - [`seq`] — a pure operator chain (the co-location worst case: it
+//!   coarsens to a single group);
+//! - [`layered`] — a depth×width trellis with seeded cross-links (the
+//!   generalization suite's bread-and-butter topology);
+//! - [`transformer`] — encoder blocks at OpenVINO granularity (MVN
+//!   normalization, Q/K/V projections with weight constants, attention
+//!   matmuls, residual adds, a GELU FFN);
+//! - [`series_parallel`] — seeded random series-parallel DAGs built by
+//!   repeated series/parallel edge expansion.
+
+use crate::graph::{CompGraph, OpAttrs, OpKind, OpNode};
+use crate::util::Rng;
+
+/// Channel count shared by the elementwise/conv generator shapes.
+const C: usize = 64;
+/// Spatial extent of the generator activations.
+const S: usize = 28;
+
+/// Kind palette for the layered / series-parallel generators, with the
+/// attrs that make each op's cost non-trivial.
+fn palette_node(name: String, pick: usize) -> OpNode {
+    let act = vec![1, C, S, S];
+    match pick % 6 {
+        0 => OpNode::new(name, OpKind::Convolution, act)
+            .with_attrs(OpAttrs { taps: 9, reduce_dim: C, groups: 1 }),
+        1 => OpNode::new(name, OpKind::Relu, act),
+        2 => OpNode::new(name, OpKind::MatMul, vec![1, C, S * S])
+            .with_attrs(OpAttrs { reduce_dim: C, ..OpAttrs::default() }),
+        3 => OpNode::new(name, OpKind::MaxPool, act).with_attrs(OpAttrs {
+            taps: 9,
+            ..OpAttrs::default()
+        }),
+        4 => OpNode::new(name, OpKind::Add, act),
+        _ => OpNode::new(name, OpKind::Concat, act),
+    }
+}
+
+/// A sequential chain: Parameter -> n ops -> Result. The chain coarsens
+/// to one co-location group, which makes it the cheapest-possible
+/// training workload (and a degenerate placement problem — useful as a
+/// curriculum starter and a regression canary).
+pub fn seq(n: usize) -> CompGraph {
+    let mut g = CompGraph::new(format!("seq_{n}"));
+    let mut prev = g.add_node(OpNode::new("input", OpKind::Parameter, vec![1, C, S, S]));
+    for i in 0..n {
+        let v = g.add_node(palette_node(format!("op{i}"), i));
+        g.add_edge(prev, v);
+        prev = v;
+    }
+    let out = g.add_node(OpNode::new("output", OpKind::Result, vec![1, C, S, S]));
+    g.add_edge(prev, out);
+    g
+}
+
+/// A depth×width trellis: `depth` layers of `width` ops. Every op feeds
+/// its same-column successor (so each has at least one producer and one
+/// consumer) plus a seeded random cross-link into the next layer, giving
+/// the partitioner real branching structure to cut.
+pub fn layered(depth: usize, width: usize, seed: u64) -> CompGraph {
+    let mut rng = Rng::new(seed ^ 0x1A7E3ED);
+    let mut g = CompGraph::new(format!("layered_{depth}x{width}"));
+    let input = g.add_node(OpNode::new("input", OpKind::Parameter, vec![1, C, S, S]));
+    let mut prev_layer: Vec<usize> = vec![input; width];
+    for l in 0..depth {
+        let mut layer = Vec::with_capacity(width);
+        for w in 0..width {
+            let v = g.add_node(palette_node(format!("l{l}_n{w}"), rng.below(6)));
+            g.add_edge(prev_layer[w], v);
+            if width > 1 {
+                g.add_edge(prev_layer[rng.below(width)], v);
+            }
+            layer.push(v);
+        }
+        prev_layer = layer;
+    }
+    let out = g.add_node(OpNode::new("output", OpKind::Result, vec![1, C, S, S]));
+    for &v in &prev_layer {
+        g.add_edge(v, out);
+    }
+    g
+}
+
+/// Transformer encoder blocks at OpenVINO granularity. `layers` blocks
+/// with `heads` attention heads over a hidden width of `64 * heads` and
+/// sequence length 64; weights appear as `Constant` producers so the
+/// memory model sees them.
+pub fn transformer(layers: usize, heads: usize) -> CompGraph {
+    let seq_len = 64;
+    let h = 64 * heads;
+    let mut g = CompGraph::new(format!("transformer_{layers}x{heads}"));
+    let tok = vec![1, seq_len, h];
+    let mut x = g.add_node(OpNode::new("input", OpKind::Parameter, tok.clone()));
+    for l in 0..layers {
+        let p = |s: &str| format!("l{l}_{s}");
+        let mvn = g.add_node(OpNode::new(p("ln1"), OpKind::Mvn, tok.clone()));
+        g.add_edge(x, mvn);
+        // Q/K/V projections, each with its weight constant.
+        let mut qkv = [0usize; 3];
+        for (qi, tag) in ["q", "k", "v"].iter().enumerate() {
+            let w = g.add_node(OpNode::new(p(&format!("w{tag}")), OpKind::Constant, vec![h, h]));
+            let m = g.add_node(
+                OpNode::new(p(&format!("{tag}_proj")), OpKind::MatMul, tok.clone())
+                    .with_attrs(OpAttrs { reduce_dim: h, ..OpAttrs::default() }),
+            );
+            g.add_edge(mvn, m);
+            g.add_edge(w, m);
+            qkv[qi] = m;
+        }
+        let scores = g.add_node(
+            OpNode::new(p("scores"), OpKind::MatMul, vec![heads, seq_len, seq_len])
+                .with_attrs(OpAttrs { reduce_dim: 64, ..OpAttrs::default() }),
+        );
+        g.add_edge(qkv[0], scores);
+        g.add_edge(qkv[1], scores);
+        let soft =
+            g.add_node(OpNode::new(p("softmax"), OpKind::Softmax, vec![heads, seq_len, seq_len]));
+        g.add_edge(scores, soft);
+        let ctx = g.add_node(
+            OpNode::new(p("context"), OpKind::MatMul, tok.clone())
+                .with_attrs(OpAttrs { reduce_dim: seq_len, ..OpAttrs::default() }),
+        );
+        g.add_edge(soft, ctx);
+        g.add_edge(qkv[2], ctx);
+        let wo = g.add_node(OpNode::new(p("wo"), OpKind::Constant, vec![h, h]));
+        let proj = g.add_node(
+            OpNode::new(p("out_proj"), OpKind::MatMul, tok.clone())
+                .with_attrs(OpAttrs { reduce_dim: h, ..OpAttrs::default() }),
+        );
+        g.add_edge(ctx, proj);
+        g.add_edge(wo, proj);
+        let add1 = g.add_node(OpNode::new(p("residual1"), OpKind::Add, tok.clone()));
+        g.add_edge(x, add1);
+        g.add_edge(proj, add1);
+        // FFN: LN -> 4x expansion -> GELU -> contraction -> residual.
+        let mvn2 = g.add_node(OpNode::new(p("ln2"), OpKind::Mvn, tok.clone()));
+        g.add_edge(add1, mvn2);
+        let w1 = g.add_node(OpNode::new(p("w_ffn1"), OpKind::Constant, vec![h, 4 * h]));
+        let f1 = g.add_node(
+            OpNode::new(p("ffn1"), OpKind::MatMul, vec![1, seq_len, 4 * h])
+                .with_attrs(OpAttrs { reduce_dim: h, ..OpAttrs::default() }),
+        );
+        g.add_edge(mvn2, f1);
+        g.add_edge(w1, f1);
+        let gelu = g.add_node(OpNode::new(p("gelu"), OpKind::Gelu, vec![1, seq_len, 4 * h]));
+        g.add_edge(f1, gelu);
+        let w2 = g.add_node(OpNode::new(p("w_ffn2"), OpKind::Constant, vec![4 * h, h]));
+        let f2 = g.add_node(
+            OpNode::new(p("ffn2"), OpKind::MatMul, tok.clone())
+                .with_attrs(OpAttrs { reduce_dim: 4 * h, ..OpAttrs::default() }),
+        );
+        g.add_edge(gelu, f2);
+        g.add_edge(w2, f2);
+        let add2 = g.add_node(OpNode::new(p("residual2"), OpKind::Add, tok.clone()));
+        g.add_edge(add1, add2);
+        g.add_edge(f2, add2);
+        x = add2;
+    }
+    let out = g.add_node(OpNode::new("output", OpKind::Result, tok));
+    g.add_edge(x, out);
+    g
+}
+
+/// A seeded random series-parallel DAG with `n` nodes, grown by repeated
+/// series insertion (split an edge with a new op) and parallel expansion
+/// (add a one-op branch across an edge) — the classic SP construction, so
+/// every interior op has a producer and a consumer by induction.
+pub fn series_parallel(n: usize, seed: u64) -> CompGraph {
+    let n = n.max(3);
+    let mut rng = Rng::new(seed ^ 0x5B9A11E1);
+    // Logical structure first: node 0 = source, 1 = sink.
+    let mut count = 2usize;
+    let mut edges: Vec<(usize, usize)> = vec![(0, 1)];
+    while count < n {
+        let e = rng.below(edges.len());
+        let (a, b) = edges[e];
+        let m = count;
+        count += 1;
+        if rng.next_f64() < 0.5 {
+            // Series: a -> m -> b replaces a -> b.
+            edges[e] = (a, m);
+            edges.push((m, b));
+        } else {
+            // Parallel: keep a -> b, add the branch a -> m -> b.
+            edges.push((a, m));
+            edges.push((m, b));
+        }
+    }
+    let mut g = CompGraph::new(format!("sp_{n}"));
+    g.add_node(OpNode::new("input", OpKind::Parameter, vec![1, C, S, S]));
+    g.add_node(OpNode::new("output", OpKind::Result, vec![1, C, S, S]));
+    for i in 2..count {
+        g.add_node(palette_node(format!("op{i}"), rng.below(6)));
+    }
+    for (a, b) in edges {
+        g.add_edge(a, b);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_is_valid_and_chain_shaped() {
+        let g = seq(12);
+        g.validate().unwrap();
+        assert_eq!(g.n(), 14);
+        assert_eq!(g.m(), 13);
+        assert_eq!(g.critical_path_len(), 13);
+    }
+
+    #[test]
+    fn layered_is_valid_and_sized() {
+        let g = layered(6, 4, 0);
+        g.validate().unwrap();
+        assert_eq!(g.n(), 6 * 4 + 2);
+        assert!(g.is_dag());
+        // Cross-links give it more edges than a pure trellis.
+        assert!(g.m() >= 6 * 4 + 4);
+        // Seeds change the wiring but not the size.
+        let g2 = layered(6, 4, 1);
+        assert_eq!(g2.n(), g.n());
+        // Determinism per seed.
+        let g3 = layered(6, 4, 0);
+        assert_eq!(g3.edges, g.edges);
+    }
+
+    #[test]
+    fn layered_width_one_is_valid() {
+        let g = layered(4, 1, 3);
+        g.validate().unwrap();
+        assert_eq!(g.n(), 6);
+    }
+
+    #[test]
+    fn transformer_is_valid_with_weights() {
+        let g = transformer(2, 2);
+        g.validate().unwrap();
+        assert!(g.is_dag());
+        let n_const = g.nodes.iter().filter(|n| n.kind == OpKind::Constant).count();
+        assert_eq!(n_const, 2 * 6, "6 weight tensors per block");
+        let n_mm = g.nodes.iter().filter(|n| n.kind == OpKind::MatMul).count();
+        assert_eq!(n_mm, 2 * 8, "8 matmuls per block (qkv, scores, ctx, proj, ffn1, ffn2)");
+        assert!(g.total_flops() > 1e7);
+    }
+
+    #[test]
+    fn series_parallel_is_valid_and_seeded() {
+        for seed in [0u64, 7, 1234] {
+            let g = series_parallel(40, seed);
+            g.validate().unwrap();
+            assert_eq!(g.n(), 40);
+            assert!(g.is_dag());
+        }
+        let a = series_parallel(40, 9);
+        let b = series_parallel(40, 9);
+        assert_eq!(a.edges, b.edges, "deterministic per seed");
+        // Tiny sizes clamp instead of panicking.
+        assert_eq!(series_parallel(0, 1).n(), 3);
+    }
+}

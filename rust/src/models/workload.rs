@@ -1,0 +1,431 @@
+//! The workload subsystem: a [`GraphSource`] registry that turns a spec
+//! string into a placeable computation graph.
+//!
+//! A workload spec is `scheme` or `scheme:<args>`; [`Workload::resolve`]
+//! walks the registry:
+//!
+//! | spec                              | source                                   |
+//! |-----------------------------------|------------------------------------------|
+//! | `inception` / `resnet` / `bert`   | the three paper builders (Table 1 sizes) |
+//! | `file:<path>`                     | on-disk graph — `.json` (v1 format) or `.dot` (our DOT dialect) |
+//! | `seq:<n>`                         | operator chain                           |
+//! | `layered:<d>x<w>[:<seed>]`        | depth×width trellis with cross-links     |
+//! | `transformer:<layers>:<heads>`    | encoder blocks at OpenVINO granularity   |
+//! | `random:<n>[:<seed>]`             | seeded series-parallel DAG               |
+//!
+//! The paper benchmarks are ordinary registered sources — nothing above
+//! this layer distinguishes them except the `bench` handle that keys
+//! their AOT policy artifacts (the pjrt backend refuses workloads without
+//! one; the native backend places anything).
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::{synth, Benchmark};
+use crate::graph::{dot, json, CompGraph};
+
+/// One entry in the workload registry: knows how to turn the argument
+/// part of a spec (`<args>` in `scheme:<args>`) into a graph.
+pub trait GraphSource {
+    /// Canonical scheme name (the part before `:`).
+    fn scheme(&self) -> &'static str;
+
+    /// Human-readable spec grammar, e.g. `layered:<depth>x<width>[:<seed>]`.
+    fn grammar(&self) -> &'static str;
+
+    /// One-line description for the registry listing.
+    fn about(&self) -> &'static str;
+
+    /// Whether this source claims the (lowercased) scheme. Defaults to an
+    /// exact match; the paper builders also accept their aliases.
+    fn accepts(&self, scheme: &str) -> bool {
+        scheme == self.scheme()
+    }
+
+    /// The paper benchmark this source wraps, if any (keys the AOT
+    /// artifact family and the Table-1/2 harness rows).
+    fn bench(&self) -> Option<Benchmark> {
+        None
+    }
+
+    /// Build the graph for `arg` (empty when the spec had no `:`).
+    fn build(&self, arg: &str) -> Result<CompGraph>;
+}
+
+/// A resolved workload: the graph plus its registry identity.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// The spec it resolved from (`resnet50`, `layered:8x8`, `file:g.json`).
+    pub spec: String,
+    /// Display label for tables and logs.
+    pub display: String,
+    /// The paper benchmark behind this workload, if any.
+    pub bench: Option<Benchmark>,
+    /// The built computation graph.
+    pub graph: CompGraph,
+}
+
+impl Workload {
+    /// Resolve a spec string against the registry, build and validate the
+    /// graph.
+    pub fn resolve(spec: &str) -> Result<Workload> {
+        let spec = spec.trim();
+        ensure!(!spec.is_empty(), "empty workload spec\n{}", Workload::registry_help());
+        let (scheme, arg) = match spec.split_once(':') {
+            Some((s, a)) => (s, a),
+            None => (spec, ""),
+        };
+        let scheme = scheme.to_ascii_lowercase();
+        for source in sources() {
+            if source.accepts(&scheme) {
+                let graph = source
+                    .build(arg)
+                    .with_context(|| format!("workload '{spec}' ({})", source.grammar()))?;
+                graph
+                    .validate()
+                    .map_err(|e| anyhow!("workload '{spec}': invalid graph: {e}"))?;
+                let display = match source.bench() {
+                    Some(b) => b.display().to_string(),
+                    None => spec.to_string(),
+                };
+                return Ok(Workload {
+                    spec: spec.to_string(),
+                    display,
+                    bench: source.bench(),
+                    graph,
+                });
+            }
+        }
+        bail!("unknown workload '{spec}'\n{}", Workload::registry_help())
+    }
+
+    /// Wrap a paper benchmark directly (the `Env::new` path).
+    pub fn from_bench(bench: Benchmark) -> Workload {
+        Workload {
+            spec: bench.id().to_string(),
+            display: bench.display().to_string(),
+            bench: Some(bench),
+            graph: bench.build(),
+        }
+    }
+
+    /// Wrap an already-built graph (programmatic embedding, e.g. the
+    /// `custom_model` example). `bench` optionally keys AOT artifacts
+    /// whose padded capacities the graph must fit.
+    pub fn from_graph(graph: CompGraph, bench: Option<Benchmark>) -> Workload {
+        Workload { spec: graph.name.clone(), display: graph.name.clone(), bench, graph }
+    }
+
+    /// Registry id of this workload.
+    pub fn id(&self) -> &str {
+        &self.spec
+    }
+
+    /// The formatted registry listing (grammar + description per source).
+    pub fn registry_help() -> String {
+        let mut out = String::from("known workload sources:\n");
+        for s in sources() {
+            out.push_str(&format!("  {:<34} {}\n", s.grammar(), s.about()));
+        }
+        out
+    }
+}
+
+/// The registry: every available graph source, resolution order.
+pub fn sources() -> Vec<Box<dyn GraphSource>> {
+    vec![
+        Box::new(BenchSource(Benchmark::InceptionV3)),
+        Box::new(BenchSource(Benchmark::ResNet50)),
+        Box::new(BenchSource(Benchmark::BertBase)),
+        Box::new(FileSource),
+        Box::new(SeqSource),
+        Box::new(LayeredSource),
+        Box::new(TransformerSource),
+        Box::new(RandomSource),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Sources
+// ---------------------------------------------------------------------------
+
+/// A paper benchmark as a registry entry.
+struct BenchSource(Benchmark);
+
+impl GraphSource for BenchSource {
+    fn scheme(&self) -> &'static str {
+        self.0.id()
+    }
+
+    fn grammar(&self) -> &'static str {
+        match self.0 {
+            Benchmark::InceptionV3 => "inception",
+            Benchmark::ResNet50 => "resnet",
+            Benchmark::BertBase => "bert",
+        }
+    }
+
+    fn about(&self) -> &'static str {
+        match self.0 {
+            Benchmark::InceptionV3 => "paper benchmark: Inception-V3 (728 nodes / 764 edges)",
+            Benchmark::ResNet50 => "paper benchmark: ResNet-50 (396 nodes / 411 edges)",
+            Benchmark::BertBase => "paper benchmark: BERT-base (1009 nodes / 1071 edges)",
+        }
+    }
+
+    fn accepts(&self, scheme: &str) -> bool {
+        Benchmark::parse(scheme) == Some(self.0)
+    }
+
+    fn bench(&self) -> Option<Benchmark> {
+        Some(self.0)
+    }
+
+    fn build(&self, arg: &str) -> Result<CompGraph> {
+        ensure!(arg.is_empty(), "the paper benchmarks take no parameters (got ':{arg}')");
+        Ok(self.0.build())
+    }
+}
+
+/// `file:<path>` — load a serialized graph (.json v1 format, or the DOT
+/// dialect `to_dot` emits).
+struct FileSource;
+
+impl GraphSource for FileSource {
+    fn scheme(&self) -> &'static str {
+        "file"
+    }
+
+    fn grammar(&self) -> &'static str {
+        "file:<path>{.json|.dot}"
+    }
+
+    fn about(&self) -> &'static str {
+        "on-disk graph (hsdag-graph-v1 JSON, or the exporter's DOT dialect)"
+    }
+
+    fn build(&self, arg: &str) -> Result<CompGraph> {
+        ensure!(!arg.is_empty(), "file source needs a path (file:<path>)");
+        let text = std::fs::read_to_string(arg).with_context(|| format!("reading '{arg}'"))?;
+        let lower = arg.to_ascii_lowercase();
+        if lower.ends_with(".dot") || lower.ends_with(".gv") {
+            dot::from_dot(&text)
+        } else {
+            json::from_json(&text)
+        }
+    }
+}
+
+/// `seq:<n>` — operator chain.
+struct SeqSource;
+
+impl GraphSource for SeqSource {
+    fn scheme(&self) -> &'static str {
+        "seq"
+    }
+
+    fn grammar(&self) -> &'static str {
+        "seq:<n>"
+    }
+
+    fn about(&self) -> &'static str {
+        "sequential chain of <n> ops (coarsens to one group)"
+    }
+
+    fn build(&self, arg: &str) -> Result<CompGraph> {
+        let n: usize = arg.parse().map_err(|_| anyhow!("want seq:<n>, got ':{arg}'"))?;
+        ensure!(n >= 1, "seq needs at least one op");
+        Ok(synth::seq(n))
+    }
+}
+
+/// `layered:<depth>x<width>[:<seed>]` — trellis with cross-links.
+struct LayeredSource;
+
+impl GraphSource for LayeredSource {
+    fn scheme(&self) -> &'static str {
+        "layered"
+    }
+
+    fn grammar(&self) -> &'static str {
+        "layered:<depth>x<width>[:<seed>]"
+    }
+
+    fn about(&self) -> &'static str {
+        "depth x width trellis with seeded cross-links"
+    }
+
+    fn build(&self, arg: &str) -> Result<CompGraph> {
+        let (dims, seed) = split_seed(arg)?;
+        let (d, w) = dims
+            .split_once('x')
+            .ok_or_else(|| anyhow!("want layered:<depth>x<width>, got ':{arg}'"))?;
+        let depth: usize = d.parse().map_err(|_| anyhow!("bad depth '{d}'"))?;
+        let width: usize = w.parse().map_err(|_| anyhow!("bad width '{w}'"))?;
+        ensure!(depth >= 1 && width >= 1, "layered needs depth >= 1 and width >= 1");
+        Ok(synth::layered(depth, width, seed))
+    }
+}
+
+/// `transformer:<layers>:<heads>` — encoder blocks.
+struct TransformerSource;
+
+impl GraphSource for TransformerSource {
+    fn scheme(&self) -> &'static str {
+        "transformer"
+    }
+
+    fn grammar(&self) -> &'static str {
+        "transformer:<layers>:<heads>"
+    }
+
+    fn about(&self) -> &'static str {
+        "transformer encoder blocks (MVN/QKV/attention/FFN, weight constants)"
+    }
+
+    fn build(&self, arg: &str) -> Result<CompGraph> {
+        let (l, h) = arg
+            .split_once(':')
+            .ok_or_else(|| anyhow!("want transformer:<layers>:<heads>, got ':{arg}'"))?;
+        let layers: usize = l.parse().map_err(|_| anyhow!("bad layer count '{l}'"))?;
+        let heads: usize = h.parse().map_err(|_| anyhow!("bad head count '{h}'"))?;
+        ensure!(layers >= 1 && heads >= 1, "transformer needs layers >= 1 and heads >= 1");
+        ensure!(
+            layers <= 96 && heads <= 64,
+            "transformer size out of range (<= 96 layers, <= 64 heads)"
+        );
+        Ok(synth::transformer(layers, heads))
+    }
+}
+
+/// `random:<n>[:<seed>]` — seeded series-parallel DAG.
+struct RandomSource;
+
+impl GraphSource for RandomSource {
+    fn scheme(&self) -> &'static str {
+        "random"
+    }
+
+    fn grammar(&self) -> &'static str {
+        "random:<n>[:<seed>]"
+    }
+
+    fn about(&self) -> &'static str {
+        "seeded random series-parallel DAG with <n> ops"
+    }
+
+    fn build(&self, arg: &str) -> Result<CompGraph> {
+        let (n_text, seed) = split_seed(arg)?;
+        let n: usize = n_text
+            .parse()
+            .map_err(|_| anyhow!("want random:<n>[:<seed>], got ':{arg}'"))?;
+        ensure!(n >= 3, "random needs n >= 3 (source, sink, one op)");
+        Ok(synth::series_parallel(n, seed))
+    }
+}
+
+/// Split a trailing `:<seed>` off a generator argument (seed 0 default).
+fn split_seed(arg: &str) -> Result<(&str, u64)> {
+    match arg.split_once(':') {
+        None => Ok((arg, 0)),
+        Some((head, s)) => {
+            let seed: u64 = s.parse().map_err(|_| anyhow!("bad seed '{s}'"))?;
+            Ok((head, seed))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_benchmarks_resolve_through_registry() {
+        for (spec, bench) in [
+            ("resnet", Benchmark::ResNet50),
+            ("ResNet-50", Benchmark::ResNet50),
+            ("inception_v3", Benchmark::InceptionV3),
+            ("bert", Benchmark::BertBase),
+        ] {
+            let w = Workload::resolve(spec).unwrap();
+            assert_eq!(w.bench, Some(bench), "{spec}");
+            assert_eq!(w.graph.n(), bench.target_nodes(), "{spec}");
+            assert_eq!(w.graph.m(), bench.target_edges(), "{spec}");
+        }
+        // Parameters on a parameterless source are an error.
+        assert!(Workload::resolve("resnet:50").is_err());
+    }
+
+    #[test]
+    fn generators_resolve_and_validate() {
+        for spec in [
+            "seq:24",
+            "layered:4x3",
+            "layered:4x3:9",
+            "transformer:2:2",
+            "random:30",
+            "random:30:7",
+        ] {
+            let w = Workload::resolve(spec).unwrap();
+            assert!(w.bench.is_none(), "{spec}");
+            assert!(w.graph.n() > 3, "{spec}");
+            w.graph.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_and_malformed_specs_error_with_registry_help() {
+        for spec in ["warehouse", "layered:9", "seq:x", "transformer:2", "random:1", ""] {
+            let err = Workload::resolve(spec).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("workload") || msg.contains("known workload sources"),
+                "{spec}: {msg}"
+            );
+        }
+        // The unknown-scheme message lists the registry.
+        let msg = format!("{:#}", Workload::resolve("warehouse").unwrap_err());
+        assert!(msg.contains("layered:<depth>x<width>"), "{msg}");
+        assert!(msg.contains("file:<path>"), "{msg}");
+    }
+
+    #[test]
+    fn file_source_loads_json_and_dot() {
+        let dir = std::env::temp_dir().join("hsdag_workload_file_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = synth::layered(3, 2, 5);
+        let json_path = dir.join("g.json");
+        std::fs::write(&json_path, crate::graph::json::to_json(&g)).unwrap();
+        let w = Workload::resolve(&format!("file:{}", json_path.display())).unwrap();
+        assert_eq!(w.graph.n(), g.n());
+        assert_eq!(w.graph.edges, g.edges);
+        let dot_path = dir.join("g.dot");
+        std::fs::write(&dot_path, crate::graph::dot::to_dot(&g)).unwrap();
+        let w = Workload::resolve(&format!("file:{}", dot_path.display())).unwrap();
+        assert_eq!(w.graph.n(), g.n());
+        // Missing files are an error with the path in the message.
+        let missing = Workload::resolve("file:/definitely/not/here.json").unwrap_err();
+        assert!(format!("{missing:#}").contains("not/here.json"));
+    }
+
+    #[test]
+    fn seeded_specs_are_deterministic() {
+        let a = Workload::resolve("random:25:3").unwrap();
+        let b = Workload::resolve("random:25:3").unwrap();
+        assert_eq!(a.graph.edges, b.graph.edges);
+        // A different seed rewires the graph (size stays pinned).
+        let c = Workload::resolve("random:25:4").unwrap();
+        assert_eq!(c.graph.n(), a.graph.n());
+        assert_ne!(c.graph.edges, a.graph.edges);
+    }
+
+    #[test]
+    fn from_bench_and_from_graph_wrappers() {
+        let w = Workload::from_bench(Benchmark::ResNet50);
+        assert_eq!(w.id(), "resnet50");
+        assert_eq!(w.display, "ResNet");
+        let g = synth::seq(4);
+        let w = Workload::from_graph(g, None);
+        assert_eq!(w.id(), "seq_4");
+        assert!(w.bench.is_none());
+    }
+}

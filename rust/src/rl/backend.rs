@@ -137,6 +137,39 @@ pub trait PolicyBackend {
 
     /// One Eq. 14 REINFORCE/Adam update over `batch`. Returns the loss.
     fn train(&mut self, env: &Env, batch: &TrainBatch) -> Result<f32>;
+
+    /// Snapshot the parameters + optimizer state. The HSDAG layout is
+    /// graph-independent (it depends only on feature width, hidden size
+    /// and action count), which is what lets one policy train across
+    /// workloads (the generalization harness) by exporting here and
+    /// importing into a backend bound to a different graph.
+    fn export_params(&self) -> ParamStore;
+
+    /// Install a parameter snapshot taken by [`PolicyBackend::export_params`]
+    /// on a layout-compatible backend. Errors on a tensor-shape mismatch
+    /// (different hidden size or action-space width).
+    fn import_params(&mut self, snapshot: &ParamStore) -> Result<()>;
+}
+
+/// Shape-check a snapshot against a backend's current parameter layout.
+fn check_layout(current: &ParamStore, snapshot: &ParamStore) -> Result<()> {
+    anyhow::ensure!(
+        snapshot.params.len() == current.params.len(),
+        "parameter snapshot has {} tensors, backend wants {}",
+        snapshot.params.len(),
+        current.params.len()
+    );
+    for (i, (a, b)) in current.params.iter().zip(snapshot.params.iter()).enumerate() {
+        anyhow::ensure!(
+            a.dims() == b.dims(),
+            "parameter {i} ('{}') shape mismatch: snapshot {:?}, backend {:?} — the snapshot \
+             was trained at a different hidden size or action-space width",
+            current.names.get(i).map(String::as_str).unwrap_or("?"),
+            b.dims(),
+            a.dims()
+        );
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -224,6 +257,16 @@ impl PolicyBackend for NativeBackend {
         };
         self.policy.train(&native)
     }
+
+    fn export_params(&self) -> ParamStore {
+        self.policy.params.clone()
+    }
+
+    fn import_params(&mut self, snapshot: &ParamStore) -> Result<()> {
+        check_layout(&self.policy.params, snapshot)?;
+        self.policy.params = snapshot.clone();
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -246,7 +289,9 @@ pub struct PjrtBackend {
 
 impl PjrtBackend {
     pub fn new(engine: Rc<RefCell<Engine>>, env: &Env, cfg: &Config) -> Result<PjrtBackend> {
-        let bench = env.bench.id();
+        // Artifacts exist per paper benchmark; registry workloads without
+        // one can only run on the native backend.
+        let bench = env.artifact_bench()?.id();
         let train_name = format!("{bench}_hsdag_train");
         {
             let mut eng = engine.borrow_mut();
@@ -380,6 +425,17 @@ impl PolicyBackend for PjrtBackend {
         Ok(pouts[0].to_vec()?)
     }
 
+    fn export_params(&self) -> ParamStore {
+        self.params.clone()
+    }
+
+    fn import_params(&mut self, snapshot: &ParamStore) -> Result<()> {
+        check_layout(&self.params, snapshot)?;
+        self.params = snapshot.clone();
+        self.lits_dirty = true;
+        Ok(())
+    }
+
     fn train(&mut self, env: &Env, batch: &TrainBatch) -> Result<f32> {
         let (t, v, e, h) = (batch.t, batch.v, batch.e, self.hidden);
         let mut inputs = self.params.train_prefix();
@@ -469,7 +525,7 @@ impl BackendFactory {
                     Err(e) if self.auto => {
                         eprintln!(
                             "note: auto backend falling back to native for {}: {e:#}",
-                            env.bench.id()
+                            env.workload.spec
                         );
                         Ok(Box::new(NativeBackend::new(env, cfg)?))
                     }
@@ -529,6 +585,29 @@ mod tests {
         assert_eq!(backend.kind(), BackendKind::Native);
         assert!(backend.describe().contains("native"));
         assert_eq!(backend.params().n(), 16);
+    }
+
+    #[test]
+    fn params_roundtrip_across_backends() {
+        // Export from a backend bound to one workload, import into a
+        // backend bound to a different graph: same layout, so the
+        // snapshot transfers verbatim.
+        let cfg = Config { backend: "native".to_string(), hidden: 16, ..Config::default() };
+        let env_a = Env::new(Benchmark::ResNet50, &cfg).unwrap();
+        let backend_a = NativeBackend::new(&env_a, &cfg).unwrap();
+        let snap = backend_a.export_params();
+        let w = crate::models::Workload::resolve("layered:4x3:1").unwrap();
+        let env_b = Env::for_workload(w, &cfg).unwrap();
+        let mut backend_b = NativeBackend::new(&env_b, &cfg).unwrap();
+        backend_b.import_params(&snap).unwrap();
+        for (a, b) in snap.params.iter().zip(backend_b.policy().params.params.iter()) {
+            assert_eq!(a.as_f32(), b.as_f32());
+        }
+        // A snapshot from a different hidden size is rejected.
+        let cfg32 = Config { backend: "native".to_string(), hidden: 32, ..Config::default() };
+        let backend_c = NativeBackend::new(&env_a, &cfg32).unwrap();
+        let err = backend_b.import_params(&backend_c.export_params()).unwrap_err();
+        assert!(format!("{err:#}").contains("shape mismatch"), "{err:#}");
     }
 
     #[test]

@@ -53,7 +53,7 @@ pub struct BaselineAgent {
 
 impl BaselineAgent {
     pub fn new(env: &Env, engine: &mut Engine, cfg: &Config, kind: BaselineKind) -> Result<BaselineAgent> {
-        let bench = env.bench.id();
+        let bench = env.artifact_bench()?.id();
         let train_name = format!("{bench}_{}_train", kind.id());
         let train = engine.load(&train_name).context("loading baseline train artifact")?;
         anyhow::ensure!(train.spec.v == env.v_pad, "artifact V mismatch");
@@ -147,7 +147,7 @@ impl BaselineAgent {
             }
         };
 
-        let report = env.report(&actions);
+        let report = env.report(&actions)?;
         let feasible = report.feasible();
         let latency = if explore && self.cfg.measure_sigma > 0.0 {
             measure_from(report.makespan, self.cfg.measure_sigma, &mut self.rng)

@@ -1,10 +1,18 @@
-//! Placement environment: one benchmark prepared for the search loop.
+//! Placement environment: one workload prepared for the search loop.
 //!
-//! Pipeline (§2.2-2.3): build the OpenVINO-style graph -> apply the
-//! Appendix-G co-location heuristic -> extract §2.3 features and the
-//! normalized adjacency on the *co-located* graph -> pad everything to the
-//! artifact's static capacities. The policy then works on the co-located
-//! graph; placements are expanded back to original nodes for simulation.
+//! Pipeline (§2.2-2.3): resolve the workload's computation graph (paper
+//! benchmark, on-disk file, or synthetic generator — see
+//! [`crate::models::Workload`]) -> apply the Appendix-G co-location
+//! heuristic -> extract §2.3 features and the normalized adjacency on the
+//! *co-located* graph -> pad everything to static capacities. The policy
+//! then works on the co-located graph; placements are expanded back to
+//! original nodes for simulation.
+//!
+//! Padded capacities come from the AOT artifact contract when the
+//! workload is a paper benchmark (so the pjrt backend keeps working), and
+//! are rounded up to the next multiple of 64 otherwise — the native
+//! backend works at real sizes and only ever sees the padding through
+//! tensor shapes.
 //!
 //! The action space is owned by the injected `Testbed`: action index `a`
 //! means "place this group on `testbed.placeable[a]`", and the reward is
@@ -12,14 +20,19 @@
 //! default `cpu_gpu` testbed reproduces the paper's 2-way CPU/dGPU
 //! placement exactly; `paper3` / `multi_gpu:<k>` widen the action space
 //! without touching any other layer.
+//!
+//! Placement-vector plumbing is fallible (`expand` / `report` / `latency`
+//! return `Result`): a mis-sized action vector — the failure mode of
+//! pairing a policy with the wrong user-supplied graph — is a message,
+//! not a panic.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::coarsen::{colocate, Coarsening};
 use crate::config::Config;
 use crate::features::{extract, normalized_adjacency, FeatureConfig, Features};
 use crate::graph::CompGraph;
-use crate::models::Benchmark;
+use crate::models::{Benchmark, Workload};
 use crate::runtime::Tensor;
 use crate::sim::{
     execute, measure_from, AnalyticCostModel, CostModel, ExecReport, ParallelCostModel, Placement,
@@ -27,10 +40,30 @@ use crate::sim::{
 };
 use crate::util::Rng;
 
+/// Identity of the workload an [`Env`] was built from (the graph itself
+/// lives in [`Env::graph`]).
+#[derive(Debug, Clone)]
+pub struct WorkloadInfo {
+    /// Registry spec (`resnet50`, `layered:8x8`, `file:g.json`, ...).
+    pub spec: String,
+    /// Display label for tables and logs.
+    pub display: String,
+    /// The paper benchmark behind this workload, if any — keys the AOT
+    /// policy artifacts; `None` means native-backend-only.
+    pub bench: Option<Benchmark>,
+}
+
+/// Pad a real size up to the next multiple of 64 (at least 64) — the
+/// static capacity used for workloads without an artifact contract.
+fn pad_cap(n: usize) -> usize {
+    n.max(1).div_ceil(64) * 64
+}
+
 /// A fully-prepared placement environment.
 pub struct Env {
-    pub bench: Benchmark,
-    /// Original computation graph (Table 1 size).
+    /// Identity of the workload being placed.
+    pub workload: WorkloadInfo,
+    /// Original computation graph.
     pub graph: CompGraph,
     /// Co-location coarsening original -> working graph.
     pub colo: Coarsening,
@@ -41,7 +74,8 @@ pub struct Env {
     /// Pluggable placement cost model (default: the analytic list
     /// scheduler). Swap with [`Env::set_cost_model`].
     pub cost: Box<dyn CostModel>,
-    /// Padded capacities (artifact contract).
+    /// Padded capacities (artifact contract for paper benchmarks,
+    /// round-to-64 otherwise).
     pub v_pad: usize,
     pub e_pad: usize,
     /// Real sizes of the working graph.
@@ -49,6 +83,9 @@ pub struct Env {
     pub n_edges: usize,
     // Padded, artifact-ready tensors (constant across the whole search).
     pub x0: Tensor,
+    /// Dense normalized adjacency `[v_pad, v_pad]` for the AOT artifact
+    /// contract; a `[1, 1]` placeholder on workloads without an artifact
+    /// bench (the native backend uses sparse COO instead).
     pub a_norm: Tensor,
     pub edge_src: Tensor,
     pub edge_dst: Tensor,
@@ -83,7 +120,23 @@ impl Env {
     /// through `Env::cost` fan out over the configured pool width, while
     /// single-placement `evaluate` stays inline and bit-identical.
     pub fn with_features(bench: Benchmark, cfg: &Config, fcfg: FeatureConfig) -> Result<Env> {
-        let mut env = Self::from_graph_on(bench, bench.build(), fcfg, cfg.resolve_testbed()?)?;
+        Self::for_workload_with_features(Workload::from_bench(bench), cfg, fcfg)
+    }
+
+    /// Build an environment for any resolved workload under `cfg`
+    /// (testbed, feature ablations, eval-worker pool) — the
+    /// `--workload <spec>` path.
+    pub fn for_workload(workload: Workload, cfg: &Config) -> Result<Env> {
+        Self::for_workload_with_features(workload, cfg, cfg.features)
+    }
+
+    /// [`Env::for_workload`] with explicit feature switches.
+    pub fn for_workload_with_features(
+        workload: Workload,
+        cfg: &Config,
+        fcfg: FeatureConfig,
+    ) -> Result<Env> {
+        let mut env = Self::build(workload, fcfg, cfg.resolve_testbed()?)?;
         env.set_cost_model(Box::new(ParallelCostModel::new(AnalyticCostModel, cfg.eval_workers)));
         Ok(env)
     }
@@ -92,29 +145,48 @@ impl Env {
     /// default `cpu_gpu` testbed, reusing the AOT artifacts of `bench`
     /// (the graph's co-located form must fit that benchmark's padded
     /// capacities). This is how downstream users place their own models
-    /// without re-lowering artifacts.
+    /// on the pjrt backend without re-lowering artifacts.
     pub fn from_graph(bench: Benchmark, graph: CompGraph, fcfg: FeatureConfig) -> Result<Env> {
         Self::from_graph_on(bench, graph, fcfg, Testbed::cpu_gpu())
     }
 
-    /// Fully-injected construction: arbitrary graph *and* testbed.
+    /// Fully-injected construction: arbitrary graph *and* testbed, pinned
+    /// to `bench`'s artifact capacities.
     pub fn from_graph_on(
         bench: Benchmark,
         graph: CompGraph,
         fcfg: FeatureConfig,
         testbed: Testbed,
     ) -> Result<Env> {
+        Self::build(Workload::from_graph(graph, Some(bench)), fcfg, testbed)
+    }
+
+    /// Core constructor: coarsen, featurize, pad, and simulate the
+    /// reference placement for any workload.
+    fn build(workload: Workload, fcfg: FeatureConfig, testbed: Testbed) -> Result<Env> {
+        let Workload { spec, display, bench, graph } = workload;
+        let info = WorkloadInfo { spec, display, bench };
         let colo = colocate(&graph);
         let wg = &colo.coarse;
-        let (v_pad, e_pad) = (bench.padded_nodes(), bench.padded_edges());
-        if wg.n() > v_pad || wg.m() > e_pad {
-            bail!(
-                "{}: co-located graph ({} nodes, {} edges) exceeds padded capacity ({v_pad}, {e_pad})",
-                bench.id(),
-                wg.n(),
-                wg.m()
-            );
-        }
+        let (v_pad, e_pad) = match info.bench {
+            Some(b) => {
+                let caps = (b.padded_nodes(), b.padded_edges());
+                if wg.n() > caps.0 || wg.m() > caps.1 {
+                    bail!(
+                        "{}: co-located graph ({} nodes, {} edges) exceeds the {} artifact \
+                         capacity ({}, {})",
+                        info.spec,
+                        wg.n(),
+                        wg.m(),
+                        b.id(),
+                        caps.0,
+                        caps.1
+                    );
+                }
+                caps
+            }
+            None => (pad_cap(wg.n()), pad_cap(wg.m())),
+        };
         let features = extract(wg, fcfg);
         let d = FeatureConfig::dim();
 
@@ -122,13 +194,24 @@ impl Env {
         let mut x0 = vec![0f32; v_pad * d];
         x0[..wg.n() * d].copy_from_slice(&features.x);
 
-        // Pad A_norm [v_pad, v_pad] (block copy row by row).
-        let a_small = normalized_adjacency(wg);
-        let mut a_norm = vec![0f32; v_pad * v_pad];
-        for r in 0..wg.n() {
-            a_norm[r * v_pad..r * v_pad + wg.n()]
-                .copy_from_slice(&a_small[r * wg.n()..(r + 1) * wg.n()]);
-        }
+        // Dense Â [v_pad, v_pad] exists for the AOT artifact contract
+        // only — the native backend (the only one that can run registry
+        // workloads) message-passes over sparse COO at real size, so
+        // workloads without an artifact bench skip the O(v_pad²)
+        // allocation (a 1x1 placeholder stands in; every consumer sits
+        // behind `artifact_bench()`).
+        let a_norm = if info.bench.is_some() {
+            let a_small = normalized_adjacency(wg);
+            let mut a = vec![0f32; v_pad * v_pad];
+            for r in 0..wg.n() {
+                a[r * v_pad..r * v_pad + wg.n()]
+                    .copy_from_slice(&a_small[r * wg.n()..(r + 1) * wg.n()]);
+            }
+            a
+        } else {
+            vec![0f32]
+        };
+        let a_dims: [usize; 2] = if info.bench.is_some() { [v_pad, v_pad] } else { [1, 1] };
 
         // Edge index tensors; padded slots point at node 0 and are masked.
         let mut esrc = vec![0i32; e_pad];
@@ -149,7 +232,7 @@ impl Env {
             execute(&graph, &Placement::all(graph.n(), testbed.reference), &testbed).makespan;
 
         let x0_t = Tensor::f32(&[v_pad, d], x0);
-        let a_norm_t = Tensor::f32(&[v_pad, v_pad], a_norm);
+        let a_norm_t = Tensor::f32(&a_dims, a_norm);
         let esrc_t = Tensor::i32(&[e_pad], esrc);
         let edst_t = Tensor::i32(&[e_pad], edst);
         let nmask_t = Tensor::f32(&[v_pad], nmask);
@@ -164,7 +247,7 @@ impl Env {
         };
 
         Ok(Env {
-            bench,
+            workload: info,
             n_nodes: wg.n(),
             n_edges: wg.m(),
             features,
@@ -185,6 +268,19 @@ impl Env {
         })
     }
 
+    /// The paper benchmark whose AOT artifact family covers this env —
+    /// an error for registry workloads without one (the pjrt backend's
+    /// construction path; the native backend never asks).
+    pub fn artifact_bench(&self) -> Result<Benchmark> {
+        self.workload.bench.ok_or_else(|| {
+            anyhow!(
+                "workload '{}' has no AOT artifacts (only the paper benchmarks do) — \
+                 use --backend native",
+                self.workload.spec
+            )
+        })
+    }
+
     /// The working graph the policy sees.
     pub fn working_graph(&self) -> &CompGraph {
         &self.colo.coarse
@@ -196,13 +292,25 @@ impl Env {
     }
 
     /// Expand a working-graph placement (action indices) to a full
-    /// original-node placement (simulator device ids).
-    pub fn expand(&self, working_actions: &[usize]) -> Placement {
+    /// original-node placement (simulator device ids). Errors on a
+    /// mis-sized action vector or an action outside the testbed's
+    /// placeable range.
+    pub fn expand(&self, working_actions: &[usize]) -> Result<Placement> {
+        let nd = self.n_actions();
         let devices: Vec<usize> = working_actions
             .iter()
-            .map(|&a| self.testbed.action_device(a))
-            .collect();
-        Placement(self.colo.expand_placement(&devices))
+            .map(|&a| {
+                if a < nd {
+                    Ok(self.testbed.action_device(a))
+                } else {
+                    Err(anyhow!(
+                        "action {a} out of range for testbed '{}' ({nd} placement targets)",
+                        self.testbed.id
+                    ))
+                }
+            })
+            .collect::<Result<_>>()?;
+        Ok(Placement(self.colo.expand_placement(&devices)?))
     }
 
     /// Swap the placement cost model (default: [`AnalyticCostModel`]).
@@ -216,24 +324,29 @@ impl Env {
 
     /// Full simulator report for a working-graph placement: latency, busy
     /// time, transfer volume, memory high-water, feasibility.
-    pub fn report(&self, working_actions: &[usize]) -> ExecReport {
-        self.cost.evaluate(&self.graph, &self.expand(working_actions), &self.testbed)
+    pub fn report(&self, working_actions: &[usize]) -> Result<ExecReport> {
+        Ok(self.cost.evaluate(&self.graph, &self.expand(working_actions)?, &self.testbed))
     }
 
     /// Whether a placement fits every device's memory capacity. Always
     /// true on the unbounded default testbeds.
-    pub fn feasible(&self, working_actions: &[usize]) -> bool {
-        self.report(working_actions).feasible()
+    pub fn feasible(&self, working_actions: &[usize]) -> Result<bool> {
+        Ok(self.report(working_actions)?.feasible())
     }
 
     /// Deterministic latency of a working-graph placement.
-    pub fn latency(&self, working_actions: &[usize]) -> f64 {
-        self.report(working_actions).makespan
+    pub fn latency(&self, working_actions: &[usize]) -> Result<f64> {
+        Ok(self.report(working_actions)?.makespan)
     }
 
     /// Measured latency (paper's 10-run protocol with noise).
-    pub fn measured_latency(&self, working_actions: &[usize], sigma: f64, rng: &mut Rng) -> f64 {
-        measure_from(self.latency(working_actions), sigma, rng)
+    pub fn measured_latency(
+        &self,
+        working_actions: &[usize],
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Result<f64> {
+        Ok(measure_from(self.latency(working_actions)?, sigma, rng))
     }
 
     /// Reward (the paper's r = 1/l, normalized by the reference device so
@@ -278,7 +391,43 @@ mod tests {
             assert!(e.n_nodes <= e.v_pad, "{}", b.id());
             assert!(e.n_edges <= e.e_pad, "{}", b.id());
             assert!(e.n_nodes > 16, "{}: coarsening degenerate", b.id());
+            assert_eq!(e.workload.bench, Some(b));
+            assert_eq!(e.workload.spec, b.id());
+            assert_eq!(e.artifact_bench().unwrap(), b);
+            // Artifact-backed envs keep the dense adjacency the pjrt
+            // backend feeds to the AOT'd policies.
+            assert_eq!(e.a_norm.dims(), &[e.v_pad, e.v_pad]);
         }
+    }
+
+    #[test]
+    fn registry_workload_envs_pad_dynamically() {
+        let cfg = Config::default();
+        let w = Workload::resolve("layered:5x4:2").unwrap();
+        let e = Env::for_workload(w, &cfg).unwrap();
+        assert!(e.workload.bench.is_none());
+        assert!(e.artifact_bench().is_err());
+        assert_eq!(e.v_pad % 64, 0);
+        assert_eq!(e.e_pad % 64, 0);
+        assert!(e.v_pad >= e.n_nodes && e.e_pad >= e.n_edges);
+        assert!(e.ref_latency > 0.0);
+        // No artifact bench -> the dense adjacency is a placeholder (the
+        // native backend message-passes over sparse COO instead).
+        assert_eq!(e.a_norm.numel(), 1);
+        // The placement pipeline works end to end on a non-paper graph.
+        let lat = e.latency(&vec![1; e.n_nodes]).unwrap();
+        assert!(lat.is_finite() && lat > 0.0);
+    }
+
+    #[test]
+    fn chain_workload_coarsens_to_one_group() {
+        let cfg = Config::default();
+        let e = Env::for_workload(Workload::resolve("seq:32").unwrap(), &cfg).unwrap();
+        assert_eq!(e.n_nodes, 1, "a pure chain is one co-location set");
+        assert_eq!(e.n_edges, 0);
+        assert_eq!(e.e_pad, 64, "zero-edge graphs keep a non-empty edge capacity");
+        let lat = e.latency(&[1]).unwrap();
+        assert!(lat < e.ref_latency, "all-on-accelerator beats the reference CPU");
     }
 
     #[test]
@@ -294,15 +443,30 @@ mod tests {
     fn expand_roundtrip_covers_all_nodes() {
         let e = env(Benchmark::ResNet50);
         let actions = vec![1usize; e.n_nodes];
-        let p = e.expand(&actions);
+        let p = e.expand(&actions).unwrap();
         assert_eq!(p.0.len(), e.graph.n());
         assert!(p.0.iter().all(|&d| d == DGPU));
     }
 
     #[test]
+    fn mis_sized_or_out_of_range_actions_are_errors() {
+        let e = env(Benchmark::ResNet50);
+        // Wrong length: error mentions the set counts, no panic.
+        let err = e.expand(&vec![0; e.n_nodes + 5]).unwrap_err();
+        assert!(format!("{err:#}").contains("co-location sets"), "{err:#}");
+        assert!(e.latency(&vec![0; e.n_nodes + 5]).is_err());
+        assert!(e.report(&[]).is_err());
+        // Action index beyond the testbed's width.
+        let mut actions = vec![0usize; e.n_nodes];
+        actions[0] = 99;
+        let err = e.expand(&actions).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+
+    #[test]
     fn all_reference_actions_reproduce_reference_latency() {
         let e = env(Benchmark::InceptionV3);
-        let lat = e.latency(&vec![0; e.n_nodes]);
+        let lat = e.latency(&vec![0; e.n_nodes]).unwrap();
         assert!((lat - e.ref_latency).abs() / e.ref_latency < 1e-9);
         assert!((e.reward(lat) - 1.0).abs() < 1e-9);
     }
@@ -310,7 +474,7 @@ mod tests {
     #[test]
     fn gpu_actions_beat_cpu_on_bert() {
         let e = env(Benchmark::BertBase);
-        let lat = e.latency(&vec![1; e.n_nodes]);
+        let lat = e.latency(&vec![1; e.n_nodes]).unwrap();
         assert!(lat < e.ref_latency);
         assert!(e.reward(lat) > 1.5);
     }
@@ -329,9 +493,9 @@ mod tests {
         // Action 1 is the iGPU on paper3; every expanded device must be a
         // valid testbed device.
         let actions: Vec<usize> = (0..e.n_nodes).map(|v| v % 3).collect();
-        let p = e.expand(&actions);
+        let p = e.expand(&actions).unwrap();
         assert!(p.0.iter().all(|&d| d < e.testbed.n_devices()));
-        assert!(e.latency(&actions).is_finite());
+        assert!(e.latency(&actions).unwrap().is_finite());
     }
 
     #[test]
@@ -339,10 +503,10 @@ mod tests {
         let e = env_on(Benchmark::ResNet50, "multi_gpu:3");
         assert_eq!(e.n_actions(), 4); // CPU + 3 GPUs
         let actions: Vec<usize> = (0..e.n_nodes).map(|v| v % e.n_actions()).collect();
-        let lat = e.latency(&actions);
+        let lat = e.latency(&actions).unwrap();
         assert!(lat.is_finite() && lat > 0.0);
         // Reference is still the CPU.
-        let cpu = e.latency(&vec![0; e.n_nodes]);
+        let cpu = e.latency(&vec![0; e.n_nodes]).unwrap();
         assert!((cpu - e.ref_latency).abs() / e.ref_latency < 1e-9);
     }
 
@@ -350,11 +514,11 @@ mod tests {
     fn default_testbed_everything_feasible() {
         let e = env(Benchmark::ResNet50);
         for actions in [vec![0usize; e.n_nodes], vec![1usize; e.n_nodes]] {
-            let rep = e.report(&actions);
+            let rep = e.report(&actions).unwrap();
             assert!(rep.feasible());
-            assert!(e.feasible(&actions));
+            assert!(e.feasible(&actions).unwrap());
             assert_eq!(rep.mem_peak.len(), e.testbed.n_devices());
-            assert_eq!(rep.makespan, e.latency(&actions));
+            assert_eq!(rep.makespan, e.latency(&actions).unwrap());
         }
     }
 
@@ -363,13 +527,13 @@ mod tests {
         let e = env_on(Benchmark::BertBase, "cpu_gpu_tight");
         // All-accelerator: the model's weights dwarf the 64 MB dGPU.
         let gpu_actions = vec![1usize; e.n_nodes];
-        let rep = e.report(&gpu_actions);
+        let rep = e.report(&gpu_actions).unwrap();
         assert!(!rep.feasible());
-        assert!(!e.feasible(&gpu_actions));
+        assert!(!e.feasible(&gpu_actions).unwrap());
         assert_eq!(e.reward_with_penalty(&rep, rep.makespan, 0.25), 0.25);
         // All-CPU is feasible and earns the normal (reference) reward.
         let cpu_actions = vec![0usize; e.n_nodes];
-        let rep = e.report(&cpu_actions);
+        let rep = e.report(&cpu_actions).unwrap();
         assert!(rep.feasible());
         let r = e.reward_with_penalty(&rep, rep.makespan, 0.25);
         assert!((r - 1.0).abs() < 1e-9, "{r}");
@@ -380,11 +544,11 @@ mod tests {
         use crate::sim::ReferenceCostModel;
         let mut e = env(Benchmark::InceptionV3);
         let actions: Vec<usize> = (0..e.n_nodes).map(|v| v % 2).collect();
-        let before = e.latency(&actions);
+        let before = e.latency(&actions).unwrap();
         let ref_before = e.ref_latency;
         e.set_cost_model(Box::new(ReferenceCostModel));
         // The reference scheduler is differential-tested bit-identical.
-        assert_eq!(e.latency(&actions), before);
+        assert_eq!(e.latency(&actions).unwrap(), before);
         assert_eq!(e.ref_latency, ref_before);
     }
 

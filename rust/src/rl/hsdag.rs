@@ -150,6 +150,18 @@ impl HsdagAgent {
         self.backend.params()
     }
 
+    /// Snapshot the backend's full learning state (params + Adam moments)
+    /// for transfer to an agent bound to another workload.
+    pub fn export_params(&self) -> ParamStore {
+        self.backend.export_params()
+    }
+
+    /// Install a snapshot taken by [`HsdagAgent::export_params`] on a
+    /// layout-compatible agent (same hidden size and action-space width).
+    pub fn import_params(&mut self, snapshot: &ParamStore) -> Result<()> {
+        self.backend.import_params(snapshot)
+    }
+
     /// Reset episode state (fb persists across steps within an episode;
     /// Alg. 1 renews it per outer iteration).
     pub fn reset_episode(&mut self) {
@@ -202,7 +214,7 @@ impl HsdagAgent {
             };
         }
         let actions: Vec<usize> = part.cluster_of.iter().map(|&c| group_devices[c]).collect();
-        let report = env.report(&actions);
+        let report = env.report(&actions)?;
         let feasible = report.feasible();
         let latency = if explore && self.cfg.measure_sigma > 0.0 {
             measure_from(report.makespan, self.cfg.measure_sigma, &mut self.rng)
@@ -329,10 +341,11 @@ impl HsdagAgent {
         tracker.observe(&greedy.actions, det, greedy.reward);
 
         // Peak working set: replay buffer (incl. rewards), the evolving
-        // feedback state, the dense adjacency, parameters + Adam moments.
+        // feedback state, the dense adjacency (when materialized — see
+        // `Env::a_norm`), parameters + Adam moments.
         let peak = self.buffer.bytes()
             + self.fb.len() * 4
-            + env.v_pad * env.v_pad * 4
+            + env.a_norm.numel() * 4
             + self.backend.params().n_scalars() * 12;
         Ok(tracker.finish(start.elapsed().as_secs_f64(), peak))
     }

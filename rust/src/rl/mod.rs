@@ -16,6 +16,6 @@ pub use backend::{
     BackendFactory, BackendKind, NativeBackend, PjrtBackend, PolicyBackend, PolicyFwd, TrainBatch,
 };
 pub use baseline_agents::{BaselineAgent, BaselineKind};
-pub use env::Env;
+pub use env::{Env, WorkloadInfo};
 pub use hsdag::{HsdagAgent, StepOutcome};
 pub use search::{CurvePoint, SearchResult};

@@ -12,7 +12,11 @@ use super::spec::{ArtifactSpec, DType};
 use super::tensor::{glorot_init, Tensor};
 use crate::util::Rng;
 
-/// Policy parameters + optimizer state.
+/// Policy parameters + optimizer state. `Clone` snapshots the whole
+/// learning state — params, Adam moments and step — which is how one
+/// policy hops between per-workload backends in the generalization
+/// harness.
+#[derive(Clone)]
 pub struct ParamStore {
     /// Learnable tensors, spec order.
     pub params: Vec<Tensor>,

@@ -1,7 +1,9 @@
-//! Shared utilities: deterministic PRNG, statistics helpers, and a small
-//! property-testing harness (the offline crate set has no `proptest`).
+//! Shared utilities: deterministic PRNG, statistics helpers, a small
+//! property-testing harness (the offline crate set has no `proptest`),
+//! and a minimal JSON layer (no `serde`) for the on-disk graph format.
 
 pub mod bench;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;

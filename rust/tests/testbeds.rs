@@ -36,7 +36,7 @@ fn expand_maps_actions_to_valid_devices_on_every_testbed() {
             |rng: &mut Rng, _size| {
                 let actions: Vec<usize> =
                     (0..env.n_nodes).map(|_| rng.below(env.n_actions())).collect();
-                let p = env.expand(&actions);
+                let p = env.expand(&actions).map_err(|e| format!("{e:#}"))?;
                 if p.0.len() != env.graph.n() {
                     return Err(format!("{id}: expanded {} of {}", p.0.len(), env.graph.n()));
                 }
@@ -45,7 +45,7 @@ fn expand_maps_actions_to_valid_devices_on_every_testbed() {
                         return Err(format!("{id}: device {d} outside placeable set"));
                     }
                 }
-                let lat = env.latency(&actions);
+                let lat = env.latency(&actions).map_err(|e| format!("{e:#}"))?;
                 if !(lat.is_finite() && lat > 0.0) {
                     return Err(format!("{id}: latency {lat}"));
                 }
@@ -82,9 +82,9 @@ fn cpu_gpu_reproduces_pre_refactor_latencies() {
             // Legacy expansion: action index -> [CPU, DGPU].
             let devices: Vec<usize> =
                 actions.iter().map(|&a| [CPU, DGPU][a]).collect();
-            let legacy_placement = Placement(env.colo.expand_placement(&devices));
+            let legacy_placement = Placement(env.colo.expand_placement(&devices).unwrap());
             let legacy = execute_reference(&env.graph, &legacy_placement, &legacy_tb).makespan;
-            let now = env.latency(actions);
+            let now = env.latency(actions).unwrap();
             assert_eq!(now, legacy, "{}: latency drifted from pre-refactor", b.id());
         }
         // Reward denominator: still the CPU reference latency.
@@ -103,12 +103,12 @@ fn best_single_device_latencies_stable_across_testbed_widening() {
     for b in Benchmark::ALL {
         let narrow = env_on(b, "cpu_gpu");
         let wide = env_on(b, "paper3");
-        let n_cpu = narrow.latency(&vec![0; narrow.n_nodes]);
-        let w_cpu = wide.latency(&vec![0; wide.n_nodes]);
+        let n_cpu = narrow.latency(&vec![0; narrow.n_nodes]).unwrap();
+        let w_cpu = wide.latency(&vec![0; wide.n_nodes]).unwrap();
         assert_eq!(n_cpu, w_cpu, "{}", b.id());
         // dGPU is action 1 on cpu_gpu, action 2 on paper3.
-        let n_gpu = narrow.latency(&vec![1; narrow.n_nodes]);
-        let w_gpu = wide.latency(&vec![2; wide.n_nodes]);
+        let n_gpu = narrow.latency(&vec![1; narrow.n_nodes]).unwrap();
+        let w_gpu = wide.latency(&vec![2; wide.n_nodes]).unwrap();
         assert_eq!(n_gpu, w_gpu, "{}", b.id());
         assert_eq!(narrow.ref_latency, wide.ref_latency, "{}", b.id());
     }
@@ -123,7 +123,7 @@ fn multi_gpu_sweep_is_monotone_in_sanity() {
         let env = env_on(Benchmark::BertBase, &format!("multi_gpu:{k}"));
         assert_eq!(env.n_actions(), k + 1);
         let rr: Vec<usize> = (0..env.n_nodes).map(|v| v % env.n_actions()).collect();
-        let lat = env.latency(&rr);
+        let lat = env.latency(&rr).unwrap();
         assert!(lat.is_finite() && lat > 0.0, "k={k}: {lat}");
     }
 }
