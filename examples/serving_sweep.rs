@@ -1,131 +1,157 @@
-//! Serving scenario: use a learned placement to serve a stream of
-//! inference requests and report the latency/throughput profile against
-//! single-device deployments — the "heterogeneous execution" use case the
-//! paper's introduction motivates.
+//! Serving scenario, end to end through the placement *service* layer:
+//! train a policy, persist it as an `hsdag-params-v1` checkpoint, stand
+//! up the multi-threaded `hsdag serve` daemon on an ephemeral loopback
+//! port, and stream a mixed request workload through the same
+//! `hsdag request` plumbing the CLI uses — cold policy inference, cache
+//! hits on repeat graphs, inline-graph requests, and a budget-exhausted
+//! fallback — then read the daemon's live metrics and shut it down
+//! cleanly.
 //!
-//! The sweep runs per *testbed*: the paper's 2-way `cpu_gpu` setup, the
-//! 3-device `paper3` testbed (§4 future work) and the memory-constrained
-//! `cpu_gpu_tight` variant, where all-accelerator deployments OOM and
-//! only capacity-aware placements are feasible. Each deployment is
-//! simulated **once**; its request stream is then served through the
-//! cost model's batched path (`ParallelCostModel::measure_many_from`,
-//! which fans out over the scoped worker pool past its request
-//! threshold — the per-request counter RNG makes parallel and serial
-//! streams bit-identical). Every row reports feasibility, per-device
-//! utilization and memory high-water from the `ExecReport`.
+//! This replaces the old sweep that called the cost model directly: the
+//! point is no longer "simulate a request stream" but "drive the real
+//! server over TCP", which is what the ROADMAP's serving north star
+//! actually needs.
 //!
-//! NOTE: on the default native backend the HSDAG rows learn directly at
-//! each testbed's action-space width — no artifacts needed. On the pjrt
-//! backend they additionally require AOT artifacts lowered at that width
-//! (`ND=<k> make artifacts`); when the agent cannot construct, the sweep
-//! still serves all static deployments.
-//!
-//!   cargo run --release --example serving_sweep [n_requests]
+//!   cargo run --release --example serving_sweep [n_loadgen_requests]
 
-use hsdag::baselines;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
 use hsdag::config::Config;
-use hsdag::models::Benchmark;
+use hsdag::features::FeatureConfig;
+use hsdag::models::Workload;
 use hsdag::rl::{Env, HsdagAgent};
-use hsdag::sim::{AnalyticCostModel, CostModel, ParallelCostModel, Placement};
-use hsdag::util::stats;
+use hsdag::serve::{
+    client, protocol, Checkpoint, CheckpointMeta, PlacementService, ServeOptions, Server,
+};
+use hsdag::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
-    let n_requests: usize =
-        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let n_loadgen: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let timeout = Duration::from_secs(30);
 
-    for testbed_id in ["cpu_gpu", "paper3", "cpu_gpu_tight"] {
-        let cfg = Config { seed: 9, testbed: testbed_id.to_string(), ..Default::default() };
-        // The serving path: batched requests over the configured pool
-        // width (`Config::eval_workers`, 0 = one per core).
-        let model = ParallelCostModel::new(AnalyticCostModel, cfg.eval_workers);
+    // --- 1. Train a small policy and persist it. --------------------------
+    let cfg = Config {
+        seed: 9,
+        backend: "native".to_string(),
+        hidden: 32,
+        update_timestep: 8,
+        ..Default::default()
+    };
+    let train_spec = "random:48:7";
+    let env = Env::for_workload(Workload::resolve(train_spec)?, &cfg)?;
+    let mut agent = HsdagAgent::new(&env, &cfg)?;
+    println!("training on {train_spec} ({} groups, testbed {})...", env.n_nodes, env.testbed.id);
+    let res = agent.search(&env, 8)?;
+    println!(
+        "  best {:.5}s ({:+.1}% vs reference {:.5}s)",
+        res.best_latency,
+        res.speedup_vs(env.ref_latency),
+        env.ref_latency
+    );
 
-        for bench in [Benchmark::BertBase, Benchmark::ResNet50] {
-            let env = Env::new(bench, &cfg)?;
-            println!(
-                "\n=== serving {} x{} requests on testbed {} ({} placement targets) ===",
-                bench.display(),
-                n_requests,
-                env.testbed.id,
-                env.n_actions()
-            );
+    let ckpt_path = std::env::temp_dir().join("hsdag_serving_sweep.ckpt.json");
+    Checkpoint::new(
+        agent.export_params(),
+        CheckpointMeta {
+            hidden: cfg.hidden,
+            feature_dim: FeatureConfig::dim(),
+            actions: env.n_actions(),
+            testbed: env.testbed.id.clone(),
+            workload: train_spec.to_string(),
+            best_latency: Some(res.best_latency),
+        },
+    )
+    .save(&ckpt_path)?;
+    println!("checkpoint written to {}", ckpt_path.display());
 
-            // Learn a placement over this testbed's action space (short
-            // budget — this is a demo driver). The native backend trains
-            // at any width; pjrt needs artifacts lowered at this width —
-            // when the agent cannot construct, serve the static
-            // deployments only.
-            let learned: Option<Placement> = match HsdagAgent::new(&env, &cfg) {
-                Ok(mut agent) => {
-                    let res = agent.search(&env, 10)?;
-                    if res.best_actions.is_empty() {
-                        None
-                    } else {
-                        Some(env.expand(&res.best_actions)?)
-                    }
-                }
-                Err(e) => {
-                    println!("  (no learned deployment: {e:#})");
-                    None
-                }
-            };
+    // --- 2. Load it back (fresh object) and serve it. ---------------------
+    let ckpt = Checkpoint::load(&ckpt_path)?;
+    let serve_cfg = Config { testbed: ckpt.meta.testbed.clone(), seed: 9, ..Default::default() };
+    let service = Arc::new(PlacementService::new(ckpt, &serve_cfg, ServeOptions::default())?);
+    let server = Server::bind(Arc::clone(&service), "127.0.0.1:0")?;
+    let addr = server.local_addr().to_string();
+    let handle = server.spawn(4)?;
+    println!("server up on {addr}\n");
 
-            // One single-device deployment per placeable device, the two
-            // greedies, then the learned placement if available.
-            let mut deployments: Vec<(String, Placement)> = env
-                .testbed
-                .placeable
-                .iter()
-                .map(|&d| {
-                    (env.testbed.devices[d].name.clone(), Placement::all(env.graph.n(), d))
-                })
-                .collect();
-            deployments.push((
-                "Greedy".to_string(),
-                baselines::greedy_placement(&env.graph, &env.testbed),
-            ));
-            deployments.push((
-                "Memory-greedy".to_string(),
-                baselines::memory_greedy_placement(&env.graph, &env.testbed),
-            ));
-            if let Some(p) = learned {
-                deployments.push(("HSDAG".to_string(), p));
-            }
-
-            println!(
-                "{:<22} {:>9} {:>9} {:>9} {:>11}  {:>4}  {:<14} {}",
-                "deployment", "p50 ms", "p99 ms", "mean ms", "req/s", "feas", "util %/dev", "mem MB/dev"
-            );
-            for (i, (name, placement)) in deployments.iter().enumerate() {
-                let rep = model.evaluate(&env.graph, placement, &env.testbed);
-                // Serve the stream off the one simulation above (the
-                // noise model is multiplicative on its makespan).
-                let seed = 123 ^ ((i as u64) << 32);
-                let lats = model.measure_many_from(rep.makespan, 0.03, seed, n_requests);
-                let p50 = stats::percentile(&lats, 50.0);
-                let p99 = stats::percentile(&lats, 99.0);
-                let mean = stats::mean(&lats);
-                let util = rep
-                    .utilization(&env.testbed)
-                    .iter()
-                    .map(|u| format!("{:.0}", 100.0 * u))
-                    .collect::<Vec<_>>()
-                    .join("/");
-                let mem = rep
-                    .mem_peak
-                    .iter()
-                    .map(|m| format!("{:.0}", m / 1e6))
-                    .collect::<Vec<_>>()
-                    .join("/");
-                println!(
-                    "{name:<22} {:>9.3} {:>9.3} {:>9.3} {:>11.1}  {:>4}  {util:<14} {mem}",
-                    p50 * 1e3,
-                    p99 * 1e3,
-                    mean * 1e3,
-                    1.0 / mean,
-                    if rep.feasible() { "yes" } else { "OOM" },
-                );
-            }
-        }
+    // --- 3. A mixed request stream through the client plumbing. -----------
+    // Repeats demonstrate the fingerprint cache; the inline graph shows a
+    // client shipping its own hsdag-graph-v1 document; budget 0 forces
+    // the baseline fallback.
+    let inline = Workload::resolve("layered:5x4:3")?.graph;
+    let requests: Vec<(String, String)> = vec![
+        ("trained workload (cold)".into(), place_spec(train_spec, None)),
+        ("trained workload (repeat)".into(), place_spec(train_spec, None)),
+        ("unseen workload (cold)".into(), place_spec("layered:8x8", None)),
+        ("unseen workload (repeat)".into(), place_spec("layered:8x8", None)),
+        ("inline graph (cold)".into(), protocol::render_place_request(
+            None,
+            Some(&inline),
+            None,
+            None,
+            None,
+            false,
+        )),
+        ("inline graph (repeat)".into(), protocol::render_place_request(
+            None,
+            Some(&inline),
+            None,
+            None,
+            None,
+            false,
+        )),
+        ("budget 0 ms (fallback)".into(), place_spec("transformer:2:2", Some(0.0))),
+    ];
+    println!(
+        "{:<28} {:<24} {:>11} {:>9} {:>11}",
+        "request", "provenance", "latency ms", "speedup", "service ms"
+    );
+    for (label, line) in &requests {
+        let response = client::roundtrip(&addr, line, timeout)?;
+        let doc = protocol::parse_response(&response)?;
+        let f = |k: &str| doc.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+        println!(
+            "{label:<28} {:<24} {:>11.3} {:>8.1}% {:>11.3}",
+            doc.get("provenance").and_then(Json::as_str).unwrap_or("?"),
+            f("latency_s") * 1e3,
+            f("speedup_pct"),
+            f("service_ms"),
+        );
     }
+
+    // --- 4. Loadgen: hammer the cache-hit path. ---------------------------
+    let line = place_spec(train_spec, None);
+    let t0 = Instant::now();
+    let mut conn = client::Connection::open(&addr, timeout)?;
+    for _ in 0..n_loadgen {
+        let response = conn.send(&line)?;
+        protocol::parse_response(&response)?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "\nloadgen: {n_loadgen} pipelined cache-hit requests in {secs:.3}s \
+         ({:.0} req/s over one connection)",
+        n_loadgen as f64 / secs
+    );
+
+    // --- 5. Live metrics, then a clean shutdown. --------------------------
+    let stats = client::roundtrip(&addr, &protocol::render_stats_request(), timeout)?;
+    println!("stats: {stats}");
+    let bye = client::roundtrip(&addr, &protocol::render_shutdown_request(), timeout)?;
+    println!("shutdown: {bye}");
+    handle.join()?;
+    let s = service.stats_view();
+    println!(
+        "served {} placements, cache hit rate {:.0}%, p50 {:.3} ms, p99 {:.3} ms",
+        s.placements,
+        100.0 * s.cache_hit_rate,
+        s.p50_ms,
+        s.p99_ms
+    );
     Ok(())
+}
+
+/// A `place` request line for a registry workload spec.
+fn place_spec(spec: &str, budget_ms: Option<f64>) -> String {
+    protocol::render_place_request(Some(spec), None, None, budget_ms, None, false)
 }

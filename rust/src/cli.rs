@@ -32,10 +32,21 @@ COMMANDS
   table5                 search runtime (Table 5)          [--episodes N]
   figure2                partition DOT dumps (Figure 2)    [--out-dir D] [--episodes N]
   train                  run one HSDAG search              [--workload W] [--episodes N]
+                                                           [--save CKPT] [--load CKPT]
   place                  evaluate a fixed placement        [--workload W] [--method M]
-                                                           [--dump-dot F]
+                         (or a loaded policy's)            [--load CKPT] [--dump-dot F]
   generalize             train one policy on a workload    [--train A,B,..] [--eval C,D,..]
                          suite, zero-shot eval held-out    [--episodes N] [--rollouts N]
+                                                           [--save CKPT]
+                                                           [--eval-only --load CKPT]
+  serve                  placement server over a trained   --load CKPT [--addr IP:PORT]
+                         checkpoint (see README "Serving") [--serve-workers N]
+                                                           [--cache-capacity N] [--budget-ms X]
+                                                           [--rollouts N]
+  request                client for a running server       [--addr IP:PORT] [--workload W]
+                                                           [--graph F] [--id X] [--budget-ms X]
+                                                           [--rollouts N] [--no-cache]
+                                                           [--stats] [--shutdown]
   export                 write a workload as v1 JSON       [--workload W] [--out F]
   graph-stats            validate + describe workloads     [--workload W]
   config                 print the Table 6 hyper-parameters
@@ -62,6 +73,11 @@ COMMON FLAGS
   --no-baseline                     disable the EMA reward baseline (paper-literal Eq. 14)
   --no-shape | --no-node-id | --no-structural   feature ablations
   --out-dir DIR                     output directory (default results)
+  --save PATH                       write an hsdag-params-v1 policy checkpoint (train /
+                                    generalize: on best-so-far / per round, and at exit)
+  --load PATH                       read a checkpoint (place / generalize --eval-only / serve,
+                                    or train — warm-start fine-tuning); layout or testbed-width
+                                    mismatches are clear errors
 "
 }
 
@@ -79,7 +95,15 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             // Boolean flags take no value; everything else takes one.
             let boolean = matches!(
                 key,
-                "no-baseline" | "no-shape" | "no-node-id" | "no-structural" | "help"
+                "no-baseline"
+                    | "no-shape"
+                    | "no-node-id"
+                    | "no-structural"
+                    | "help"
+                    | "eval-only"
+                    | "stats"
+                    | "shutdown"
+                    | "no-cache"
             );
             if boolean {
                 flags.insert(key.to_string(), "true".to_string());
@@ -271,6 +295,25 @@ mod tests {
         assert_eq!(c.str_list_flag("eval", ""), vec!["random:12:1"]);
         assert_eq!(c.str_list_flag("missing", "a,b"), vec!["a", "b"]);
         assert!(c.str_list_flag("missing2", "").is_empty());
+    }
+
+    #[test]
+    fn serve_and_request_flags_parse() {
+        let c = parse(&argv(
+            "serve --load ckpt.json --addr 127.0.0.1:0 --serve-workers 2 --cache-capacity 64",
+        ))
+        .unwrap();
+        assert_eq!(c.command, "serve");
+        assert_eq!(c.str_flag("load", ""), "ckpt.json");
+        assert_eq!(c.usize_flag("serve-workers", 4).unwrap(), 2);
+        assert_eq!(c.usize_flag("cache-capacity", 256).unwrap(), 64);
+        // request's boolean flags take no value.
+        let c = parse(&argv("request --addr 127.0.0.1:7477 --stats")).unwrap();
+        assert!(c.flags.contains_key("stats"));
+        let c = parse(&argv("request --workload seq:8 --no-cache --shutdown")).unwrap();
+        assert!(c.flags.contains_key("no-cache") && c.flags.contains_key("shutdown"));
+        let c = parse(&argv("generalize --eval-only --load g.json")).unwrap();
+        assert!(c.flags.contains_key("eval-only"));
     }
 
     #[test]

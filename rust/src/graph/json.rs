@@ -43,6 +43,12 @@ pub const DEFAULT_COST_CLASS: OpKind = OpKind::Relu;
 
 /// Serialize a graph to the pretty-printed v1 JSON document.
 pub fn to_json(g: &CompGraph) -> String {
+    to_value(g).to_string_pretty()
+}
+
+/// Serialize a graph to its v1 [`Json`] value (the serving protocol
+/// embeds graphs inline in request documents).
+pub fn to_value(g: &CompGraph) -> Json {
     let nodes: Vec<Json> = g
         .nodes
         .iter()
@@ -81,12 +87,17 @@ pub fn to_json(g: &CompGraph) -> String {
         ("nodes".to_string(), Json::Arr(nodes)),
         ("edges".to_string(), Json::Arr(edges)),
     ])
-    .to_string_pretty()
 }
 
 /// Parse and validate a v1 JSON document into a [`CompGraph`].
 pub fn from_json(text: &str) -> Result<CompGraph> {
     let doc = Json::parse(text).map_err(|e| anyhow!("invalid JSON: {e}"))?;
+    from_value(&doc)
+}
+
+/// Parse and validate an already-parsed v1 [`Json`] value (inline graphs
+/// arrive pre-parsed inside serving-protocol requests).
+pub fn from_value(doc: &Json) -> Result<CompGraph> {
     match doc.get("format").and_then(Json::as_str) {
         Some(FORMAT_TAG) => {}
         Some(other) => bail!("unsupported graph format '{other}' (want '{FORMAT_TAG}')"),
@@ -247,6 +258,17 @@ mod tests {
             assert_eq!(a.custom_kind, b.custom_kind);
             assert_eq!(a.feature_slot(), b.feature_slot());
         }
+    }
+
+    #[test]
+    fn value_level_roundtrip_matches_text_level() {
+        // The serving protocol embeds graphs as Json values; the value
+        // path must agree with the text path exactly.
+        let g = sample();
+        let v = to_value(&g);
+        let h = from_value(&v).unwrap();
+        assert_eq!(h.edges, g.edges);
+        assert_eq!(from_json(&v.to_string_compact()).unwrap().edges, g.edges);
     }
 
     #[test]

@@ -21,9 +21,11 @@ use anyhow::{bail, ensure, Result};
 use super::report::{fmt_speedup, Table};
 use crate::baselines;
 use crate::config::Config;
+use crate::features::FeatureConfig;
 use crate::models::Workload;
 use crate::rl::{Env, HsdagAgent, NativeBackend, PolicyBackend};
 use crate::runtime::ParamStore;
+use crate::serve::checkpoint::{Checkpoint, CheckpointMeta};
 
 /// One evaluated workload in the generalization table.
 #[derive(Debug, Clone)]
@@ -45,13 +47,17 @@ pub struct GeneralizeOutcome {
 /// Run the harness: train on `train_specs`, zero-shot evaluate on
 /// `eval_specs`. `episodes` is the number of round-robin rounds (one
 /// episode per training workload per round); `rollouts` the number of
-/// stochastic evaluation rollouts on top of the greedy one.
+/// stochastic evaluation rollouts on top of the greedy one. When `save`
+/// names a path, the shared policy is checkpointed there after every
+/// round (and therefore at exit) in the `hsdag-params-v1` format, ready
+/// for `hsdag serve --load` / `generalize --eval-only --load`.
 pub fn run(
     cfg: &Config,
     train_specs: &[String],
     eval_specs: &[String],
     episodes: usize,
     rollouts: usize,
+    save: Option<&str>,
 ) -> Result<(Table, Vec<GeneralizeOutcome>)> {
     ensure!(!train_specs.is_empty(), "generalization needs at least one training workload");
     ensure!(episodes >= 1, "generalization needs at least one round-robin round");
@@ -99,6 +105,11 @@ pub fn run(
             agent.search(env, 1)?;
             shared = Some(agent.export_params());
         }
+        if let Some(path) = save {
+            let store = shared.clone().expect("at least one training workload");
+            Checkpoint::new(store, meta_for(&cfg, &train_envs[0], train_specs))
+                .save(std::path::Path::new(path))?;
+        }
     }
     let trained = shared.expect("at least one training workload");
 
@@ -110,6 +121,41 @@ pub fn run(
         outcomes.push(evaluate(env, spec, true, &trained, &cfg, rollouts)?);
     }
     Ok((render(&cfg, episodes, &outcomes), outcomes))
+}
+
+/// Checkpoint metadata for the shared policy (layout is graph-free, so
+/// the train-suite spec list is purely informational).
+fn meta_for(cfg: &Config, env: &Env, train_specs: &[String]) -> CheckpointMeta {
+    CheckpointMeta {
+        hidden: cfg.hidden,
+        feature_dim: FeatureConfig::dim(),
+        actions: env.n_actions(),
+        testbed: cfg.testbed.clone(),
+        workload: train_specs.join(","),
+        best_latency: None,
+    }
+}
+
+/// Zero-shot evaluate an already-trained snapshot (the
+/// `generalize --eval-only --load <ckpt>` path): no training, every row
+/// held-out by definition.
+pub fn eval_only(
+    cfg: &Config,
+    eval_specs: &[String],
+    snapshot: &ParamStore,
+    rollouts: usize,
+) -> Result<(Table, Vec<GeneralizeOutcome>)> {
+    ensure!(!eval_specs.is_empty(), "eval-only needs at least one --eval workload");
+    if cfg.backend == "pjrt" {
+        bail!("checkpoint evaluation runs on the native backend — drop --backend pjrt");
+    }
+    let cfg = Config { backend: "native".to_string(), ..cfg.clone() };
+    let mut outcomes = Vec::new();
+    for spec in eval_specs {
+        let env = Env::for_workload(Workload::resolve(spec)?, &cfg)?;
+        outcomes.push(evaluate(&env, spec, true, snapshot, &cfg, rollouts)?);
+    }
+    Ok((render(&cfg, 0, &outcomes), outcomes))
 }
 
 /// Whether two resolved graphs are structurally identical (same wiring,
@@ -136,8 +182,7 @@ fn evaluate(
     cfg: &Config,
     rollouts: usize,
 ) -> Result<GeneralizeOutcome> {
-    let mut backend = NativeBackend::new(env, cfg)?;
-    backend.import_params(trained)?;
+    let backend = NativeBackend::from_snapshot(env, cfg, trained)?;
     let mut agent = HsdagAgent::with_backend(env, Box::new(backend), cfg)?;
     let mut best = f64::INFINITY;
     agent.reset_episode();
@@ -176,13 +221,21 @@ fn evaluate(
 
 /// Render the generalization table.
 pub fn render(cfg: &Config, episodes: usize, outcomes: &[GeneralizeOutcome]) -> Table {
-    let mut t = Table::new(
-        &format!(
-            "Generalization: one policy, {} workloads, {episodes} round-robin rounds \
-             (testbed {}; zero-shot on held-out rows)",
-            outcomes.iter().filter(|o| !o.held_out).count(),
+    let n_train = outcomes.iter().filter(|o| !o.held_out).count();
+    let title = if n_train == 0 {
+        format!(
+            "Zero-shot evaluation of a loaded checkpoint (testbed {}; no training)",
             cfg.testbed
-        ),
+        )
+    } else {
+        format!(
+            "Generalization: one policy, {n_train} workloads, {episodes} round-robin rounds \
+             (testbed {}; zero-shot on held-out rows)",
+            cfg.testbed
+        )
+    };
+    let mut t = Table::new(
+        &title,
         &[
             "Workload",
             "Role",
@@ -233,7 +286,7 @@ mod tests {
         let cfg = tiny_cfg();
         let train = vec!["seq:12".to_string(), "layered:3x3:1".to_string()];
         let eval = vec!["layered:4x2:2".to_string()];
-        let (table, outcomes) = run(&cfg, &train, &eval, 1, 2).unwrap();
+        let (table, outcomes) = run(&cfg, &train, &eval, 1, 2, None).unwrap();
         assert_eq!(outcomes.len(), 3);
         assert_eq!(table.rows.len(), 3);
         let held: Vec<_> = outcomes.iter().filter(|o| o.held_out).collect();
@@ -251,17 +304,40 @@ mod tests {
     fn rejects_pjrt_and_overlapping_sets() {
         let cfg = Config { backend: "pjrt".to_string(), ..tiny_cfg() };
         let train = vec!["seq:8".to_string()];
-        assert!(run(&cfg, &train, &[], 1, 0).is_err());
+        assert!(run(&cfg, &train, &[], 1, 0, None).is_err());
         let cfg = tiny_cfg();
-        let err = run(&cfg, &train, &train.clone(), 1, 0).unwrap_err();
+        let err = run(&cfg, &train, &train.clone(), 1, 0, None).unwrap_err();
         assert!(format!("{err:#}").contains("zero-shot"), "{err:#}");
-        assert!(run(&cfg, &[], &[], 1, 0).is_err());
+        assert!(run(&cfg, &[], &[], 1, 0, None).is_err());
         // Overlap is detected on the resolved graph, not the spec string:
         // `random:14` is `random:14:0` under another name.
         let train = vec!["random:14:0".to_string()];
         let eval = vec!["random:14".to_string()];
-        let err = run(&cfg, &train, &eval, 1, 0).unwrap_err();
+        let err = run(&cfg, &train, &eval, 1, 0, None).unwrap_err();
         assert!(format!("{err:#}").contains("same graph"), "{err:#}");
+    }
+
+    #[test]
+    fn save_writes_a_loadable_checkpoint_and_eval_only_consumes_it() {
+        let cfg = tiny_cfg();
+        let dir = std::env::temp_dir().join("hsdag_generalize_save");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gen.json");
+        let train = vec!["seq:12".to_string()];
+        let eval = vec!["layered:3x2:4".to_string()];
+        run(&cfg, &train, &eval, 1, 1, Some(path.to_str().unwrap())).unwrap();
+        let ckpt = crate::serve::Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt.meta.hidden, cfg.hidden);
+        assert_eq!(ckpt.meta.actions, 2);
+        assert_eq!(ckpt.meta.workload, "seq:12");
+        // Eval-only: zero-shot rows from the loaded snapshot, no training.
+        let (t, outcomes) = eval_only(&cfg, &eval, &ckpt.store, 2).unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].held_out);
+        assert!(outcomes[0].policy_latency.is_finite());
+        assert!(t.title.contains("loaded checkpoint"), "{}", t.title);
+        // Empty eval list is an error.
+        assert!(eval_only(&cfg, &[], &ckpt.store, 1).is_err());
     }
 
     #[test]

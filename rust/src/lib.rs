@@ -25,6 +25,11 @@
 //! `--backend {native,pjrt,auto}` selects one; `auto` picks pjrt exactly
 //! when `artifacts/` holds compiled artifacts. See DESIGN.md for the
 //! system inventory.
+//!
+//! Trained policies outlive their process through the [`serve`]
+//! subsystem: `hsdag-params-v1` checkpoints (`--save` / `--load`),
+//! structural graph fingerprints, an LRU placement cache, and the
+//! multi-threaded `hsdag serve` daemon with its `hsdag request` client.
 
 pub mod baselines;
 pub mod coarsen;
@@ -37,5 +42,6 @@ pub mod models;
 pub mod parsing;
 pub mod rl;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;

@@ -3,14 +3,24 @@
 //! Reproduces "A Structure-Aware Framework for Learning Device Placements
 //! on Computation Graphs" (NeurIPS 2024). See `hsdag --help` / README.md.
 
-use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
 use hsdag::baselines;
 use hsdag::cli::{self, Cli};
-use hsdag::graph::dot;
+use hsdag::config::Config;
+use hsdag::features::FeatureConfig;
+use hsdag::graph::{dot, CompGraph};
 use hsdag::harness::{figure2, generalize, table1, table2, table3, table4, table5};
 use hsdag::models::{Benchmark, Workload};
-use hsdag::rl::{BackendFactory, Env, HsdagAgent};
-use hsdag::sim::execute;
+use hsdag::rl::{BackendFactory, Env, HsdagAgent, NativeBackend};
+use hsdag::serve::{
+    client, protocol, Checkpoint, CheckpointMeta, PlacementService, ServeOptions, Server,
+};
+use hsdag::sim::{execute, ExecReport, Placement, Testbed};
+use hsdag::util::json::Json;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -59,9 +69,22 @@ fn run(c: Cli) -> Result<()> {
         "train" => {
             let workload = c.workload()?;
             let episodes = c.usize_flag("episodes", 30)?;
+            let save = c.flags.get("save").cloned();
             let mut factory = BackendFactory::new(&cfg)?;
             let env = Env::for_workload(workload, &cfg)?;
             let mut agent = HsdagAgent::with_backend(&env, factory.create(&env, &cfg)?, &cfg)?;
+            // Warm start: resume / fine-tune from a saved checkpoint
+            // (full Adam state travels with it). The run's own
+            // --testbed / hidden must match the checkpoint's layout.
+            if let Some(path) = c.flags.get("load") {
+                let ckpt = Checkpoint::load(Path::new(path))?;
+                ckpt.check_compatible(cfg.hidden, env.n_actions(), &cfg.testbed)?;
+                agent.import_params(&ckpt.store)?;
+                println!(
+                    "resumed from {path} (trained on {}, Adam step {})",
+                    ckpt.meta.workload, ckpt.store.step
+                );
+            }
             println!(
                 "searching {} ({} working nodes, {} edges) on testbed {} ({} placement targets) \
                  for {episodes} episodes on backend {}",
@@ -72,88 +95,124 @@ fn run(c: Cli) -> Result<()> {
                 env.n_actions(),
                 agent.backend_desc(),
             );
-            let res = agent.search(&env, episodes)?;
-            for p in &res.curve {
-                println!(
-                    "  episode {:>3}  best {:.5}s  mean-reward {:.3}  loss {:+.4}",
-                    p.episode, p.best_latency, p.mean_reward, p.loss
-                );
+            // One search call per episode so --save can checkpoint every
+            // best-so-far improvement. The trajectory is identical to a
+            // single search(episodes) call: the tracker is per-call
+            // bookkeeping, and the interleaved greedy evaluations draw
+            // no RNG.
+            let mut best_latency = f64::INFINITY;
+            let mut wall = 0.0;
+            for ep in 0..episodes.max(1) {
+                let res = agent.search(&env, episodes.min(1))?;
+                wall += res.wall_secs;
+                for p in &res.curve {
+                    println!(
+                        "  episode {:>3}  best {:.5}s  mean-reward {:.3}  loss {:+.4}",
+                        ep,
+                        p.best_latency.min(best_latency),
+                        p.mean_reward,
+                        p.loss
+                    );
+                }
+                if res.best_latency < best_latency {
+                    best_latency = res.best_latency;
+                    if let Some(path) = &save {
+                        save_checkpoint(path, &agent, &env, Some(best_latency))?;
+                    }
+                }
             }
             println!(
                 "best latency {:.5}s  (speedup {:.1}% vs reference {:.5}s)  wall {:.1}s",
-                res.best_latency,
-                res.speedup_vs(env.ref_latency),
+                best_latency,
+                100.0 * (1.0 - best_latency / env.ref_latency),
                 env.ref_latency,
-                res.wall_secs
+                wall
             );
+            if let Some(path) = &save {
+                save_checkpoint(path, &agent, &env, Some(best_latency))?;
+                println!("checkpoint written to {path} (hsdag-params-v1)");
+            }
         }
         "place" => {
             let workload = c.workload()?;
-            let method = c.str_flag("method", "gpu");
-            let g = &workload.graph;
-            let tb = cfg.resolve_testbed()?;
-            match baselines::baseline_latency(&method, g, &tb) {
-                Some(lat) => {
-                    let cpu = baselines::baseline_latency("cpu", g, &tb).unwrap();
-                    println!(
-                        "{} under {method} on testbed {}: {lat:.5}s ({:+.1}% vs reference)",
-                        workload.display,
-                        tb.id,
-                        100.0 * (1.0 - lat / cpu)
-                    );
-                    // Feasibility / utilization / memory of the method's
-                    // representative placement.
-                    if method == "random" {
+            if let Some(path) = c.flags.get("load") {
+                // A loaded checkpoint IS the method: the learned policy's
+                // greedy placement.
+                anyhow::ensure!(
+                    !c.flags.contains_key("method"),
+                    "--load places with the learned policy; drop --method"
+                );
+                let (ckpt, run_cfg) = load_run_config(&c, &cfg)?;
+                let env = Env::for_workload(workload, &run_cfg)?;
+                let backend = NativeBackend::from_snapshot(&env, &run_cfg, &ckpt.store)?;
+                let mut agent = HsdagAgent::with_backend(&env, Box::new(backend), &run_cfg)?;
+                agent.reset_episode();
+                let o = agent.step(&env, false)?;
+                let p = env.expand(&o.actions)?;
+                let rep = env.cost.evaluate(&env.graph, &p, &env.testbed);
+                println!(
+                    "{} under policy({path}) on testbed {}: {:.5}s ({:+.1}% vs reference)",
+                    env.workload.display,
+                    env.testbed.id,
+                    rep.makespan,
+                    100.0 * (1.0 - rep.makespan / env.ref_latency)
+                );
+                print_exec_report(&env.graph, &env.testbed, &p, &rep, c.flags.get("dump-dot"))?;
+            } else {
+                let method = c.str_flag("method", "gpu");
+                let g = &workload.graph;
+                let tb = cfg.resolve_testbed()?;
+                match baselines::baseline_latency(&method, g, &tb) {
+                    Some(lat) => {
+                        let cpu = baselines::baseline_latency("cpu", g, &tb).unwrap();
                         println!(
-                            "(latency above is the mean over several fixed-seed draws; the \
-                             report below describes one representative draw)"
+                            "{} under {method} on testbed {}: {lat:.5}s ({:+.1}% vs reference)",
+                            workload.display,
+                            tb.id,
+                            100.0 * (1.0 - lat / cpu)
                         );
-                    }
-                    let p = baselines::baseline_placement(&method, g, &tb).unwrap();
-                    let rep = execute(g, &p, &tb);
-                    println!(
-                        "feasible: {}",
-                        if rep.feasible() {
-                            "yes".to_string()
-                        } else {
-                            format!("NO (OOM on devices {:?})", rep.oom_devices)
+                        // Feasibility / utilization / memory of the
+                        // method's representative placement.
+                        if method == "random" {
+                            println!(
+                                "(latency above is the mean over several fixed-seed draws; the \
+                                 report below describes one representative draw)"
+                            );
                         }
-                    );
-                    let util = rep.utilization(&tb);
-                    for (d, dev) in tb.devices.iter().enumerate() {
-                        let cap = if dev.mem_capacity.is_finite() {
-                            format!("{:.0} MB cap", dev.mem_capacity / 1e6)
-                        } else {
-                            "unbounded".to_string()
-                        };
-                        println!(
-                            "  {:<22} util {:>5.1}%  mem high-water {:>8.1} MB ({cap})",
-                            dev.name,
-                            100.0 * util[d],
-                            rep.mem_peak[d] / 1e6
-                        );
+                        let p = baselines::baseline_placement(&method, g, &tb).unwrap();
+                        let rep = execute(g, &p, &tb);
+                        print_exec_report(g, &tb, &p, &rep, c.flags.get("dump-dot"))?;
                     }
-                    // Placement-aware DOT dump for visual inspection.
-                    if let Some(path) = c.flags.get("dump-dot") {
-                        let names: Vec<String> =
-                            tb.devices.iter().map(|dev| dev.name.clone()).collect();
-                        std::fs::write(path, dot::to_dot_placed(g, &p.0, &names))?;
-                        println!("placement DOT written to {path}");
-                    }
+                    None => anyhow::bail!(
+                        "unknown method '{method}' ({})",
+                        baselines::BASELINE_NAMES.join("|")
+                    ),
                 }
-                None => anyhow::bail!(
-                    "unknown method '{method}' ({})",
-                    baselines::BASELINE_NAMES.join("|")
-                ),
             }
         }
         "generalize" => {
-            let train = c.str_list_flag("train", "seq:48,layered:6x4,random:48:7");
             let eval = c.str_list_flag("eval", "layered:8x8,transformer:2:2");
-            let episodes = c.usize_flag("episodes", 10)?;
             let rollouts = c.usize_flag("rollouts", 8)?;
-            let (t, _) = generalize::run(&cfg, &train, &eval, episodes, rollouts)?;
-            println!("{}", t.render());
+            if c.flags.contains_key("eval-only") {
+                // Zero-shot evaluate a loaded checkpoint, no training.
+                let (ckpt, run_cfg) = load_run_config(&c, &cfg)?;
+                let (t, _) = generalize::eval_only(&run_cfg, &eval, &ckpt.store, rollouts)?;
+                println!("{}", t.render());
+                println!(
+                    "(policy loaded from {}; trained on {})",
+                    c.str_flag("load", "?"),
+                    ckpt.meta.workload
+                );
+            } else {
+                let train = c.str_list_flag("train", "seq:48,layered:6x4,random:48:7");
+                let episodes = c.usize_flag("episodes", 10)?;
+                let save = c.flags.get("save").map(String::as_str);
+                let (t, _) = generalize::run(&cfg, &train, &eval, episodes, rollouts, save)?;
+                println!("{}", t.render());
+                if let Some(path) = save {
+                    println!("checkpoint written to {path} (hsdag-params-v1)");
+                }
+            }
         }
         "export" => {
             let workload = c.workload()?;
@@ -198,8 +257,181 @@ fn run(c: Cli) -> Result<()> {
                 );
             }
         }
+        "serve" => {
+            let (ckpt, run_cfg) = load_run_config(&c, &cfg)?;
+            let addr = c.str_flag("addr", "127.0.0.1:7477");
+            let workers = c.usize_flag("serve-workers", 4)?.max(1);
+            let budget_ms = match c.flags.get("budget-ms") {
+                None => None,
+                Some(v) => {
+                    let b: f64 = v.parse().context("--budget-ms must be a number")?;
+                    anyhow::ensure!(b.is_finite() && b >= 0.0, "--budget-ms must be >= 0");
+                    Some(b)
+                }
+            };
+            let opts = ServeOptions {
+                cache_capacity: c.usize_flag("cache-capacity", 256)?,
+                budget_ms,
+                rollouts: c.usize_flag("rollouts", 4)?,
+            };
+            let trained_on = ckpt.meta.workload.clone();
+            let cache_capacity = opts.cache_capacity;
+            let service = Arc::new(PlacementService::new(ckpt, &run_cfg, opts)?);
+            let server = Server::bind(Arc::clone(&service), &addr)?;
+            // The banner is the contract scripts parse for the (possibly
+            // ephemeral) port — keep "listening on <addr>" stable.
+            println!(
+                "hsdag-serve listening on {} (testbed {}, hidden {}, trained on {}, \
+                 {workers} workers, cache {cache_capacity})",
+                server.local_addr(),
+                run_cfg.testbed,
+                run_cfg.hidden,
+                trained_on,
+            );
+            server.run(workers)?;
+            let s = service.stats_view();
+            println!(
+                "shutdown after {:.1}s: {} requests ({} placements, {} cache hits, \
+                 {} fallbacks, {} errors), hit rate {:.0}%, p50 {:.2} ms, p99 {:.2} ms",
+                s.uptime_s,
+                s.requests,
+                s.placements,
+                s.cache_hits,
+                s.fallbacks,
+                s.errors,
+                100.0 * s.cache_hit_rate,
+                s.p50_ms,
+                s.p99_ms
+            );
+        }
+        "request" => {
+            let addr = c.str_flag("addr", "127.0.0.1:7477");
+            let timeout = Duration::from_secs_f64(c.f64_flag("timeout-s", 10.0)?);
+            let line = if c.flags.contains_key("stats") {
+                protocol::render_stats_request()
+            } else if c.flags.contains_key("shutdown") {
+                protocol::render_shutdown_request()
+            } else {
+                // --graph reuses the `file:` workload source (one
+                // format-sniffing loader for .json / .dot / .gv).
+                let graph: Option<CompGraph> = match c.flags.get("graph") {
+                    Some(path) => Some(Workload::resolve(&format!("file:{path}"))?.graph),
+                    None => None,
+                };
+                let spec = c.flags.get("workload").or_else(|| c.flags.get("bench"));
+                anyhow::ensure!(
+                    graph.is_some() != spec.is_some(),
+                    "request needs exactly one of --workload <spec> or --graph <file> \
+                     (or --stats / --shutdown)"
+                );
+                let id = c.flags.get("id").map(|s| Json::Str(s.clone()));
+                let budget_ms = match c.flags.get("budget-ms") {
+                    None => None,
+                    Some(v) => Some(v.parse::<f64>().context("--budget-ms must be a number")?),
+                };
+                let rollouts = match c.flags.get("rollouts") {
+                    None => None,
+                    Some(v) => Some(v.parse::<usize>().context("--rollouts must be an integer")?),
+                };
+                protocol::render_place_request(
+                    spec.map(String::as_str),
+                    graph.as_ref(),
+                    id.as_ref(),
+                    budget_ms,
+                    rollouts,
+                    c.flags.contains_key("no-cache"),
+                )
+            };
+            let response = client::roundtrip(&addr, &line, timeout)?;
+            println!("{response}");
+            // Exit non-zero (with the server's message) on an error
+            // response, so scripts can just check the status.
+            protocol::parse_response(&response)?;
+        }
         "config" => print!("{}", cfg.table6()),
         other => anyhow::bail!("unknown command '{other}'\n\n{}", cli::usage()),
+    }
+    Ok(())
+}
+
+/// Write the agent's current learning state as an hsdag-params-v1
+/// checkpoint for `env`'s deployment (testbed id, action width).
+fn save_checkpoint(
+    path: &str,
+    agent: &HsdagAgent,
+    env: &Env,
+    best_latency: Option<f64>,
+) -> Result<()> {
+    Checkpoint::new(
+        agent.export_params(),
+        CheckpointMeta {
+            hidden: agent.cfg.hidden,
+            feature_dim: FeatureConfig::dim(),
+            actions: env.n_actions(),
+            testbed: env.testbed.id.clone(),
+            workload: env.workload.spec.clone(),
+            best_latency,
+        },
+    )
+    .save(Path::new(path))
+}
+
+/// Load `--load <ckpt>` and derive the run config it pins: native
+/// backend, the checkpoint's hidden size, and (unless `--testbed`
+/// overrides it) the checkpoint's testbed — with the width pre-flight
+/// that turns a mismatched deployment into a clear error.
+fn load_run_config(c: &Cli, cfg: &Config) -> Result<(Checkpoint, Config)> {
+    let path = c
+        .flags
+        .get("load")
+        .ok_or_else(|| anyhow::anyhow!("this mode needs --load <checkpoint.json>"))?;
+    let ckpt = Checkpoint::load(Path::new(path))?;
+    let mut run_cfg = cfg.clone();
+    run_cfg.backend = "native".to_string();
+    run_cfg.hidden = ckpt.meta.hidden;
+    if !c.flags.contains_key("testbed") {
+        run_cfg.testbed = ckpt.meta.testbed.clone();
+    }
+    let tb = run_cfg.resolve_testbed()?;
+    ckpt.check_compatible(run_cfg.hidden, tb.n_actions(), &run_cfg.testbed)?;
+    Ok((ckpt, run_cfg))
+}
+
+/// Shared feasibility / utilization / memory report of one placement,
+/// plus the optional placement-aware DOT dump.
+fn print_exec_report(
+    g: &CompGraph,
+    tb: &Testbed,
+    p: &Placement,
+    rep: &ExecReport,
+    dump_dot: Option<&String>,
+) -> Result<()> {
+    println!(
+        "feasible: {}",
+        if rep.feasible() {
+            "yes".to_string()
+        } else {
+            format!("NO (OOM on devices {:?})", rep.oom_devices)
+        }
+    );
+    let util = rep.utilization(tb);
+    for (d, dev) in tb.devices.iter().enumerate() {
+        let cap = if dev.mem_capacity.is_finite() {
+            format!("{:.0} MB cap", dev.mem_capacity / 1e6)
+        } else {
+            "unbounded".to_string()
+        };
+        println!(
+            "  {:<22} util {:>5.1}%  mem high-water {:>8.1} MB ({cap})",
+            dev.name,
+            100.0 * util[d],
+            rep.mem_peak[d] / 1e6
+        );
+    }
+    if let Some(path) = dump_dot {
+        let names: Vec<String> = tb.devices.iter().map(|dev| dev.name.clone()).collect();
+        std::fs::write(path, dot::to_dot_placed(g, &p.0, &names))?;
+        println!("placement DOT written to {path}");
     }
     Ok(())
 }

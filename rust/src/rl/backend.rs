@@ -200,6 +200,20 @@ impl NativeBackend {
         Ok(NativeBackend { policy, hidden: cfg.hidden })
     }
 
+    /// Construct bound to `env` with the parameters (and Adam state) of a
+    /// previously exported snapshot installed in place of fresh Glorot
+    /// draws — the construct-from-checkpoint path used by `--load` and
+    /// the placement server. Errors (clearly, never panics) when the
+    /// snapshot's layout disagrees with this env/config's hidden size or
+    /// action-space width.
+    pub fn from_snapshot(env: &Env, cfg: &Config, snapshot: &ParamStore) -> Result<NativeBackend> {
+        let mut backend = NativeBackend::new(env, cfg)?;
+        backend
+            .import_params(snapshot)
+            .context("installing checkpoint parameters on the native backend")?;
+        Ok(backend)
+    }
+
     /// The underlying policy (benches probe the kernels directly).
     pub fn policy(&self) -> &NativePolicy {
         &self.policy
@@ -607,6 +621,22 @@ mod tests {
         let cfg32 = Config { backend: "native".to_string(), hidden: 32, ..Config::default() };
         let backend_c = NativeBackend::new(&env_a, &cfg32).unwrap();
         let err = backend_b.import_params(&backend_c.export_params()).unwrap_err();
+        assert!(format!("{err:#}").contains("shape mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn from_snapshot_installs_params_or_errors_clearly() {
+        let cfg = Config { backend: "native".to_string(), hidden: 16, ..Config::default() };
+        let w = crate::models::Workload::resolve("layered:3x3:2").unwrap();
+        let env = Env::for_workload(w, &cfg).unwrap();
+        let snap = NativeBackend::new(&env, &cfg).unwrap().export_params();
+        let restored = NativeBackend::from_snapshot(&env, &cfg, &snap).unwrap();
+        for (a, b) in snap.params.iter().zip(restored.policy().params.params.iter()) {
+            assert_eq!(a.as_f32(), b.as_f32());
+        }
+        // Wrong hidden size: a message, not a panic.
+        let cfg32 = Config { backend: "native".to_string(), hidden: 32, ..Config::default() };
+        let err = NativeBackend::from_snapshot(&env, &cfg32, &snap).unwrap_err();
         assert!(format!("{err:#}").contains("shape mismatch"), "{err:#}");
     }
 

@@ -91,6 +91,52 @@ impl ParamStore {
         ParamStore { params, m, v, step: 0.0, names }
     }
 
+    /// Reassemble a store from deserialized parts (the on-disk checkpoint
+    /// path), validating the alignment invariants the rest of the store
+    /// relies on: one m/v moment tensor per parameter with identical
+    /// dims, everything f32, a finite non-negative step counter.
+    pub fn from_parts(
+        params: Vec<Tensor>,
+        m: Vec<Tensor>,
+        v: Vec<Tensor>,
+        step: f32,
+        names: Vec<String>,
+    ) -> Result<ParamStore> {
+        if params.is_empty() {
+            bail!("parameter store has no tensors");
+        }
+        if m.len() != params.len() || v.len() != params.len() || names.len() != params.len() {
+            bail!(
+                "misaligned store: {} params, {} m, {} v, {} names",
+                params.len(),
+                m.len(),
+                v.len(),
+                names.len()
+            );
+        }
+        for i in 0..params.len() {
+            if params[i].dtype() != DType::F32
+                || m[i].dtype() != DType::F32
+                || v[i].dtype() != DType::F32
+            {
+                bail!("tensor '{}' is not f32", names[i]);
+            }
+            if m[i].dims() != params[i].dims() || v[i].dims() != params[i].dims() {
+                bail!(
+                    "tensor '{}': moment dims {:?}/{:?} do not match param dims {:?}",
+                    names[i],
+                    m[i].dims(),
+                    v[i].dims(),
+                    params[i].dims()
+                );
+            }
+        }
+        if !step.is_finite() || step < 0.0 {
+            bail!("bad Adam step counter {step}");
+        }
+        Ok(ParamStore { params, m, v, step, names })
+    }
+
     /// One Adam step over per-parameter gradients (aligned with `params`),
     /// matching the artifact train-step's update rule bit-for-bit in
     /// structure: bias-corrected moments, float32 step counter.
@@ -254,6 +300,46 @@ out loss
             ps2.params[2].as_f32().to_vec()
         }
         .as_slice());
+    }
+
+    #[test]
+    fn from_parts_validates_alignment() {
+        let mut rng = Rng::new(8);
+        let ps = ParamStore::init_hsdag(4, 4, 2, &mut rng);
+        let ok = ParamStore::from_parts(
+            ps.params.clone(),
+            ps.m.clone(),
+            ps.v.clone(),
+            3.0,
+            ps.names.clone(),
+        )
+        .unwrap();
+        assert_eq!(ok.step, 3.0);
+        assert_eq!(ok.n(), ps.n());
+        // Dropped moment tensor.
+        let err = ParamStore::from_parts(
+            ps.params.clone(),
+            ps.m[..ps.n() - 1].to_vec(),
+            ps.v.clone(),
+            0.0,
+            ps.names.clone(),
+        );
+        assert!(format!("{:#}", err.unwrap_err()).contains("misaligned"));
+        // Moment dims diverge from the param's.
+        let mut bad_m = ps.m.clone();
+        bad_m[0] = Tensor::zeros(DType::F32, &[2, 2]);
+        let err =
+            ParamStore::from_parts(ps.params.clone(), bad_m, ps.v.clone(), 0.0, ps.names.clone());
+        assert!(format!("{:#}", err.unwrap_err()).contains("moment dims"));
+        // Negative / non-finite step counters are rejected.
+        assert!(ParamStore::from_parts(
+            ps.params.clone(),
+            ps.m.clone(),
+            ps.v.clone(),
+            -1.0,
+            ps.names.clone()
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Bounded LRU placement cache.
+//!
+//! The serving daemon keys this by graph [`fingerprint`] so a repeat
+//! request skips workload resolution, env construction and policy
+//! inference entirely — the dominant cost of a request. The
+//! implementation is a classic O(1) LRU (hash map into an index-linked
+//! slab ordered most- to least-recently used); it is single-threaded on
+//! purpose and sits behind a `Mutex` in the server, whose critical
+//! sections are a handful of pointer updates.
+//!
+//! `capacity == 0` is a valid configuration meaning "caching disabled":
+//! every `get` misses and every `put` is dropped.
+//!
+//! [`fingerprint`]: super::fingerprint::fingerprint
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+const NONE: usize = usize::MAX;
+
+struct Slot<K, V> {
+    key: K,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+/// A bounded most-recently-used cache.
+pub struct LruCache<K: Eq + Hash + Clone, V> {
+    map: HashMap<K, usize>,
+    slots: Vec<Slot<K, V>>,
+    free: Vec<usize>,
+    /// Most-recently-used slot (NONE when empty).
+    head: usize,
+    /// Least-recently-used slot (NONE when empty).
+    tail: usize,
+    capacity: usize,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    pub fn new(capacity: usize) -> LruCache<K, V> {
+        LruCache {
+            map: HashMap::with_capacity(capacity),
+            slots: Vec::with_capacity(capacity),
+            free: Vec::new(),
+            head: NONE,
+            tail: NONE,
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Unlink slot `i` from the recency list.
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev == NONE {
+            self.head = next;
+        } else {
+            self.slots[prev].next = next;
+        }
+        if next == NONE {
+            self.tail = prev;
+        } else {
+            self.slots[next].prev = prev;
+        }
+    }
+
+    /// Link slot `i` at the head (most recently used).
+    fn link_front(&mut self, i: usize) {
+        self.slots[i].prev = NONE;
+        self.slots[i].next = self.head;
+        if self.head != NONE {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NONE {
+            self.tail = i;
+        }
+    }
+
+    /// Look up `key`, marking it most recently used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        let i = *self.map.get(key)?;
+        if i != self.head {
+            self.unlink(i);
+            self.link_front(i);
+        }
+        Some(&self.slots[i].value)
+    }
+
+    /// Look up without touching recency (stats endpoints, tests).
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.map.get(key).map(|&i| &self.slots[i].value)
+    }
+
+    /// Insert (or refresh) `key`, evicting the least-recently-used entry
+    /// on overflow. Returns the evicted (key, value), if any.
+    pub fn put(&mut self, key: K, value: V) -> Option<(K, V)> {
+        if self.capacity == 0 {
+            return None;
+        }
+        if let Some(&i) = self.map.get(&key) {
+            self.slots[i].value = value;
+            if i != self.head {
+                self.unlink(i);
+                self.link_front(i);
+            }
+            return None;
+        }
+        let evicted = if self.map.len() == self.capacity {
+            let lru = self.tail;
+            self.unlink(lru);
+            self.map.remove(&self.slots[lru].key);
+            self.free.push(lru);
+            // Move the dead payload out by swapping in the new one below.
+            Some(lru)
+        } else {
+            None
+        };
+        let i = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(Slot { key: key.clone(), value, prev: NONE, next: NONE });
+                let i = self.slots.len() - 1;
+                self.map.insert(key, i);
+                self.link_front(i);
+                return None;
+            }
+        };
+        let old = std::mem::replace(
+            &mut self.slots[i],
+            Slot { key: key.clone(), value, prev: NONE, next: NONE },
+        );
+        self.map.insert(key, i);
+        self.link_front(i);
+        evicted.map(|_| (old.key, old.value))
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.slots.clear();
+        self.free.clear();
+        self.head = NONE;
+        self.tail = NONE;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Keys from MRU to LRU, by walking the recency list.
+    fn order(c: &LruCache<u64, u64>) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut i = c.head;
+        while i != NONE {
+            out.push(c.slots[i].key);
+            i = c.slots[i].next;
+        }
+        assert_eq!(out.len(), c.len(), "list and map disagree");
+        out
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(3);
+        for k in [1u64, 2, 3] {
+            assert!(c.put(k, k * 10).is_none());
+        }
+        assert_eq!(order(&c), vec![3, 2, 1]);
+        // Touch 1 -> 2 becomes LRU and falls out on the next insert.
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(order(&c), vec![1, 3, 2]);
+        let evicted = c.put(4, 40).unwrap();
+        assert_eq!(evicted, (2, 20));
+        assert_eq!(c.len(), 3);
+        assert!(c.peek(&2).is_none());
+        assert_eq!(order(&c), vec![4, 1, 3]);
+    }
+
+    #[test]
+    fn put_refreshes_value_and_recency() {
+        let mut c = LruCache::new(2);
+        c.put(1, 10);
+        c.put(2, 20);
+        assert!(c.put(1, 11).is_none(), "refresh is not an eviction");
+        assert_eq!(order(&c), vec![1, 2]);
+        assert_eq!(c.get(&1), Some(&11));
+        // 2 is now LRU.
+        assert_eq!(c.put(3, 30).unwrap().0, 2);
+    }
+
+    #[test]
+    fn capacity_edges() {
+        // capacity 0: caching disabled.
+        let mut c: LruCache<u64, u64> = LruCache::new(0);
+        assert!(c.put(1, 10).is_none());
+        assert!(c.get(&1).is_none());
+        assert_eq!(c.len(), 0);
+        // capacity 1: every distinct insert evicts the previous entry.
+        let mut c = LruCache::new(1);
+        assert!(c.put(1, 10).is_none());
+        assert_eq!(c.put(2, 20).unwrap(), (1, 10));
+        assert_eq!(c.get(&2), Some(&20));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut c = LruCache::new(2);
+        c.put(1, 10);
+        c.put(2, 20);
+        c.clear();
+        assert!(c.is_empty());
+        assert!(c.get(&1).is_none());
+        c.put(3, 30);
+        assert_eq!(order(&c), vec![3]);
+    }
+
+    #[test]
+    fn churn_keeps_invariants() {
+        // Deterministic mixed get/put churn; `order` checks list/map
+        // agreement at every step.
+        let mut c = LruCache::new(8);
+        let mut model: Vec<u64> = Vec::new(); // MRU -> LRU reference model
+        for i in 0..500u64 {
+            let k = (i * 7 + i / 3) % 20;
+            if i % 3 == 0 {
+                if c.get(&k).is_some() {
+                    model.retain(|&x| x != k);
+                    model.insert(0, k);
+                }
+            } else {
+                let evicted = c.put(k, k);
+                if let Some(pos) = model.iter().position(|&x| x == k) {
+                    model.remove(pos);
+                    assert!(evicted.is_none());
+                } else if model.len() == 8 {
+                    let lru = model.pop().unwrap();
+                    assert_eq!(evicted.unwrap().0, lru);
+                } else {
+                    assert!(evicted.is_none());
+                }
+                model.insert(0, k);
+            }
+            assert_eq!(order(&c), model, "step {i}");
+        }
+    }
+}

@@ -1,0 +1,371 @@
+//! On-disk policy checkpoints: the `hsdag-params-v1` JSON format.
+//!
+//! A checkpoint is the full learning state of one HSDAG policy — every
+//! parameter tensor plus its Adam moments and the step counter — together
+//! with the metadata needed to refuse a mismatched deployment *before*
+//! any tensor math runs: the hidden size, the feature width, the
+//! action-space width and the testbed id the policy was trained against.
+//! The layout is graph-independent (see [`crate::rl::PolicyBackend`]),
+//! so a checkpoint trained on one workload serves placements for any
+//! graph on a layout-compatible testbed.
+//!
+//! ```json
+//! {
+//!   "format": "hsdag-params-v1",
+//!   "hidden": 128, "feature_dim": 69, "actions": 2,
+//!   "testbed": "cpu_gpu", "workload": "resnet50",
+//!   "best_latency": 0.01234,
+//!   "step": 40,
+//!   "tensors": [
+//!     {"name": "trans_w0", "dims": [69, 128],
+//!      "data": [...], "m": [...], "v": [...]},
+//!     ...
+//!   ]
+//! }
+//! ```
+//!
+//! Serialization goes through the hand-rolled [`crate::util::json`]
+//! layer (no serde offline). Scalars are written with rust's
+//! shortest-round-trip float formatting: every f32 survives the
+//! f32 → f64 → text → f64 → f32 trip bit-identically, which the
+//! `tests/serve.rs` round-trip test pins. Loading validates the format
+//! tag, the per-tensor dims/data/moment alignment (via
+//! [`ParamStore::from_parts`]) and the metadata's consistency with the
+//! tensors themselves, and every failure is a located error message —
+//! a truncated or hand-mangled checkpoint never panics the loader.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{ParamStore, Tensor};
+use crate::util::json::Json;
+
+/// Format tag written into (and required from) every checkpoint.
+pub const FORMAT_TAG: &str = "hsdag-params-v1";
+
+/// Deployment metadata stored next to the tensors.
+#[derive(Debug, Clone)]
+pub struct CheckpointMeta {
+    /// Policy hidden width (loaders adopt it — `hidden` is not a CLI
+    /// flag, the checkpoint is the source of truth).
+    pub hidden: usize,
+    /// Node-feature width the first transform layer was built for.
+    pub feature_dim: usize,
+    /// Action-space width of the placer head (testbed placement targets).
+    pub actions: usize,
+    /// Testbed registry id the policy was trained on.
+    pub testbed: String,
+    /// Workload spec(s) the policy was trained on (informational).
+    pub workload: String,
+    /// Best deterministic latency observed during training, if tracked.
+    pub best_latency: Option<f64>,
+}
+
+/// A loaded (or about-to-be-saved) checkpoint.
+#[derive(Clone)]
+pub struct Checkpoint {
+    pub meta: CheckpointMeta,
+    pub store: ParamStore,
+}
+
+impl Checkpoint {
+    pub fn new(store: ParamStore, meta: CheckpointMeta) -> Checkpoint {
+        Checkpoint { meta, store }
+    }
+
+    /// Render the v1 JSON document (pretty: one scalar array per line,
+    /// so checkpoints diff sanely under version control).
+    pub fn to_json(&self) -> String {
+        let f32s = |xs: &[f32]| Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect());
+        let tensors: Vec<Json> = (0..self.store.n())
+            .map(|i| {
+                Json::Obj(vec![
+                    ("name".to_string(), Json::Str(self.store.names[i].clone())),
+                    (
+                        "dims".to_string(),
+                        Json::Arr(
+                            self.store.params[i].dims().iter().map(|&d| Json::Num(d as f64)).collect(),
+                        ),
+                    ),
+                    ("data".to_string(), f32s(self.store.params[i].as_f32())),
+                    ("m".to_string(), f32s(self.store.m[i].as_f32())),
+                    ("v".to_string(), f32s(self.store.v[i].as_f32())),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("format".to_string(), Json::Str(FORMAT_TAG.to_string())),
+            ("hidden".to_string(), Json::Num(self.meta.hidden as f64)),
+            ("feature_dim".to_string(), Json::Num(self.meta.feature_dim as f64)),
+            ("actions".to_string(), Json::Num(self.meta.actions as f64)),
+            ("testbed".to_string(), Json::Str(self.meta.testbed.clone())),
+            ("workload".to_string(), Json::Str(self.meta.workload.clone())),
+        ];
+        if let Some(l) = self.meta.best_latency {
+            fields.push(("best_latency".to_string(), Json::Num(l)));
+        }
+        fields.push(("step".to_string(), Json::Num(self.store.step as f64)));
+        fields.push(("tensors".to_string(), Json::Arr(tensors)));
+        Json::Obj(fields).to_string_pretty()
+    }
+
+    /// Parse and validate a v1 document.
+    pub fn parse(text: &str) -> Result<Checkpoint> {
+        let doc = Json::parse(text).map_err(|e| anyhow!("invalid checkpoint JSON: {e}"))?;
+        match doc.get("format").and_then(Json::as_str) {
+            Some(FORMAT_TAG) => {}
+            Some(other) => bail!("unsupported checkpoint format '{other}' (want '{FORMAT_TAG}')"),
+            None => bail!("missing \"format\" field (want '{FORMAT_TAG}')"),
+        }
+        let field_usize = |key: &str| -> Result<usize> {
+            doc.get(key)
+                .and_then(Json::as_usize)
+                .filter(|&x| x >= 1)
+                .ok_or_else(|| anyhow!("missing or invalid \"{key}\" (want a positive integer)"))
+        };
+        let meta = CheckpointMeta {
+            hidden: field_usize("hidden")?,
+            feature_dim: field_usize("feature_dim")?,
+            actions: field_usize("actions")?,
+            testbed: doc
+                .get("testbed")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing string \"testbed\""))?
+                .to_string(),
+            workload: doc.get("workload").and_then(Json::as_str).unwrap_or("?").to_string(),
+            best_latency: doc.get("best_latency").and_then(Json::as_f64),
+        };
+        let step = doc
+            .get("step")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("missing numeric \"step\""))?;
+        let tensors = doc
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing \"tensors\" array"))?;
+        if tensors.is_empty() {
+            bail!("checkpoint has no tensors");
+        }
+
+        let mut params = Vec::with_capacity(tensors.len());
+        let mut m = Vec::with_capacity(tensors.len());
+        let mut v = Vec::with_capacity(tensors.len());
+        let mut names = Vec::with_capacity(tensors.len());
+        for (i, t) in tensors.iter().enumerate() {
+            let name = t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensors[{i}]: missing string \"name\""))?
+                .to_string();
+            let dims_json = t
+                .get("dims")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensors[{i}] '{name}': missing \"dims\" array"))?;
+            let mut dims = Vec::with_capacity(dims_json.len());
+            for (di, d) in dims_json.iter().enumerate() {
+                dims.push(d.as_usize().filter(|&x| x >= 1).ok_or_else(|| {
+                    anyhow!("tensors[{i}] '{name}': dims[{di}] is not a positive integer")
+                })?);
+            }
+            let numel = dims.iter().product::<usize>().max(1);
+            let plane = |key: &str| -> Result<Tensor> {
+                let arr = t
+                    .get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("tensors[{i}] '{name}': missing \"{key}\" array"))?;
+                if arr.len() != numel {
+                    bail!(
+                        "tensors[{i}] '{name}': \"{key}\" holds {} scalars but dims {:?} \
+                         want {numel} (truncated checkpoint?)",
+                        arr.len(),
+                        dims
+                    );
+                }
+                let mut data = Vec::with_capacity(numel);
+                for (k, x) in arr.iter().enumerate() {
+                    let x = x
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("tensors[{i}] '{name}': {key}[{k}] not a number"))?;
+                    let x32 = x as f32;
+                    if !x32.is_finite() {
+                        bail!("tensors[{i}] '{name}': {key}[{k}] = {x} out of f32 range");
+                    }
+                    data.push(x32);
+                }
+                Ok(Tensor::f32(&dims, data))
+            };
+            params.push(plane("data")?);
+            m.push(plane("m")?);
+            v.push(plane("v")?);
+            names.push(name);
+        }
+        let store = ParamStore::from_parts(params, m, v, step as f32, names)?;
+        let ckpt = Checkpoint { meta, store };
+        ckpt.self_check()?;
+        Ok(ckpt)
+    }
+
+    /// Metadata must agree with the tensors it travels with (the HSDAG
+    /// layout names are stable across both backends — see
+    /// `ParamStore::init_hsdag` / `hsdag_param_spec`): a checkpoint whose
+    /// header promises one shape while its tensors carry another is
+    /// corrupt, not merely incompatible.
+    fn self_check(&self) -> Result<()> {
+        for (name, want) in [
+            ("trans_w0", vec![self.meta.feature_dim, self.meta.hidden]),
+            ("place_w1", vec![self.meta.hidden, self.meta.actions]),
+        ] {
+            if let Some(i) = self.store.names.iter().position(|n| n == name) {
+                let got = self.store.params[i].dims();
+                if got != want.as_slice() {
+                    bail!(
+                        "checkpoint metadata (hidden {}, feature_dim {}, actions {}) \
+                         disagrees with tensor '{name}' dims {:?} (want {:?})",
+                        self.meta.hidden,
+                        self.meta.feature_dim,
+                        self.meta.actions,
+                        got,
+                        want
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pre-flight a deployment: does this checkpoint fit a run at
+    /// `hidden` / `actions` on `testbed_id`? The error names both sides
+    /// (the classic failure is serving a 2-device checkpoint on a wider
+    /// `--testbed`).
+    pub fn check_compatible(&self, hidden: usize, actions: usize, testbed_id: &str) -> Result<()> {
+        if self.meta.hidden != hidden {
+            bail!(
+                "checkpoint was trained at hidden {}, this run wants hidden {hidden}",
+                self.meta.hidden
+            );
+        }
+        if self.meta.actions != actions {
+            bail!(
+                "checkpoint places onto {} targets (trained on testbed '{}'), but testbed \
+                 '{testbed_id}' exposes {actions} — pick a testbed of matching width or \
+                 retrain with --testbed {testbed_id}",
+                self.meta.actions,
+                self.meta.testbed
+            );
+        }
+        Ok(())
+    }
+
+    /// Write atomically-ish: temp file in the same directory, then
+    /// rename, so a crash mid-write never leaves a torn checkpoint at
+    /// `path` (best-so-far saves overwrite it repeatedly).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json())
+            .with_context(|| format!("writing checkpoint '{}'", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming checkpoint into '{}'", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint '{}'", path.display()))?;
+        Self::parse(&text).with_context(|| format!("checkpoint '{}'", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample() -> Checkpoint {
+        let mut rng = Rng::new(11);
+        let mut store = ParamStore::init_hsdag(9, 8, 3, &mut rng);
+        store.step = 7.0;
+        // Non-trivial moments so the round-trip covers all three planes.
+        store.m[0].as_f32_mut()[0] = 0.125;
+        store.v[2].as_f32_mut()[1] = 3.5e-7;
+        Checkpoint::new(
+            store,
+            CheckpointMeta {
+                hidden: 8,
+                feature_dim: 9,
+                actions: 3,
+                testbed: "paper3".to_string(),
+                workload: "layered:4x3".to_string(),
+                best_latency: Some(0.0125),
+            },
+        )
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let ckpt = sample();
+        let text = ckpt.to_json();
+        let back = Checkpoint::parse(&text).unwrap();
+        assert_eq!(back.meta.hidden, 8);
+        assert_eq!(back.meta.actions, 3);
+        assert_eq!(back.meta.testbed, "paper3");
+        assert_eq!(back.meta.workload, "layered:4x3");
+        assert_eq!(back.meta.best_latency, Some(0.0125));
+        assert_eq!(back.store.step, 7.0);
+        assert_eq!(back.store.names, ckpt.store.names);
+        for i in 0..ckpt.store.n() {
+            assert_eq!(back.store.params[i].dims(), ckpt.store.params[i].dims());
+            assert_eq!(back.store.params[i].as_f32(), ckpt.store.params[i].as_f32(), "params {i}");
+            assert_eq!(back.store.m[i].as_f32(), ckpt.store.m[i].as_f32(), "m {i}");
+            assert_eq!(back.store.v[i].as_f32(), ckpt.store.v[i].as_f32(), "v {i}");
+        }
+    }
+
+    #[test]
+    fn corrupt_documents_error_with_a_message() {
+        let good = sample().to_json();
+        // Truncation at any midpoint is a parse error, never a panic.
+        for frac in [4, 2] {
+            let cut = &good[..good.len() / frac];
+            assert!(Checkpoint::parse(cut).is_err(), "truncated at 1/{frac} parsed");
+        }
+        // Wrong format tag.
+        let wrong = good.replace(FORMAT_TAG, "hsdag-params-v9");
+        let msg = format!("{:#}", Checkpoint::parse(&wrong).unwrap_err());
+        assert!(msg.contains("hsdag-params-v9"), "{msg}");
+        // A dims/data mismatch is caught with the tensor named.
+        let mangled = good.replace("\"dims\": [9, 8]", "\"dims\": [9, 4]");
+        let msg = format!("{:#}", Checkpoint::parse(&mangled).unwrap_err());
+        assert!(msg.contains("trans_w0"), "{msg}");
+        // Metadata that disagrees with the tensors is corrupt.
+        let lied = good.replace("\"actions\": 3", "\"actions\": 2");
+        let msg = format!("{:#}", Checkpoint::parse(&lied).unwrap_err());
+        assert!(msg.contains("disagrees"), "{msg}");
+        assert!(Checkpoint::parse("").is_err());
+        assert!(Checkpoint::parse("{}").is_err());
+    }
+
+    #[test]
+    fn compatibility_preflight_names_both_sides() {
+        let ckpt = sample();
+        ckpt.check_compatible(8, 3, "paper3").unwrap();
+        let msg = format!("{:#}", ckpt.check_compatible(8, 2, "cpu_gpu").unwrap_err());
+        assert!(msg.contains("paper3") && msg.contains("cpu_gpu"), "{msg}");
+        let msg = format!("{:#}", ckpt.check_compatible(128, 3, "paper3").unwrap_err());
+        assert!(msg.contains("hidden"), "{msg}");
+    }
+
+    #[test]
+    fn save_and_load_via_tempfile() {
+        let dir = std::env::temp_dir().join("hsdag_checkpoint_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        let ckpt = sample();
+        ckpt.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.store.params[0].as_f32(), ckpt.store.params[0].as_f32());
+        // Load errors carry the path.
+        let missing = Checkpoint::load(&dir.join("nope.json")).unwrap_err();
+        assert!(format!("{missing:#}").contains("nope.json"));
+    }
+}

@@ -1,0 +1,60 @@
+//! Client-side plumbing for the placement server: one request line in,
+//! one response line out, over a fresh TCP connection.
+//!
+//! This is what `hsdag request` (and the serving example, the loadgen
+//! bench, and the loopback tests) use — one code path for every writer
+//! of the wire protocol. Connections are intentionally per-request:
+//! the protocol is stateless, a placement response is several orders of
+//! magnitude more expensive than a TCP handshake on loopback, and a
+//! crashed client can never wedge a worker. The server side does accept
+//! pipelined requests on one connection; [`Connection`] exposes that
+//! for the loadgen.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// Send one request line, wait for the one response line.
+pub fn roundtrip(addr: &str, request_line: &str, timeout: Duration) -> Result<String> {
+    let mut conn = Connection::open(addr, timeout)?;
+    conn.send(request_line)
+}
+
+/// A pipelined connection: many request/response exchanges, one stream.
+pub struct Connection {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Connection {
+    pub fn open(addr: &str, timeout: Duration) -> Result<Connection> {
+        let sockaddr: SocketAddr = addr
+            .parse()
+            .with_context(|| format!("bad server address '{addr}' (want IP:PORT)"))?;
+        let stream = TcpStream::connect_timeout(&sockaddr, timeout)
+            .with_context(|| format!("connecting to hsdag server at {addr}"))?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Connection { reader: BufReader::new(stream), writer })
+    }
+
+    /// One exchange: write `request_line`, read the response line.
+    pub fn send(&mut self, request_line: &str) -> Result<String> {
+        self.writer.write_all(request_line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .context("reading response from hsdag server")?;
+        if n == 0 {
+            bail!("server closed the connection without responding");
+        }
+        Ok(line.trim_end().to_string())
+    }
+}

@@ -1,0 +1,188 @@
+//! Structural graph fingerprints: the placement-cache key.
+//!
+//! Two placement requests may serve the *same* graph under different node
+//! names (every tracing frontend generates its own layer paths), and the
+//! *same* graph on two testbeds is two different placement problems. The
+//! fingerprint therefore hashes exactly what the policy and the simulator
+//! can observe, and nothing else:
+//!
+//! - topology: node count plus the sorted edge list (node ids are dense
+//!   and meaningful — they index the feature matrix — so no further
+//!   canonicalization is needed, and *renaming* nodes never changes the
+//!   hash);
+//! - per-node op identity: the feature one-hot slot (built-in kind index,
+//!   or the hash bucket of a custom kind label — what the policy sees)
+//!   AND the cost class (what the simulator sees; two custom labels can
+//!   share a feature bucket yet cost differently);
+//! - per-node output shape and cost attrs (taps / reduce_dim / groups);
+//! - the testbed id.
+//!
+//! The hash is 64-bit FNV-1a over an unambiguous byte encoding (every
+//! variable-length run is length-prefixed), so it is deterministic across
+//! processes, platforms and runs — a checkpoint-serving daemon restarted
+//! tomorrow computes the same keys it computed today.
+
+use crate::graph::CompGraph;
+
+/// 64-bit FNV-1a running hash.
+struct Fnv(u64);
+
+impl Fnv {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    fn new() -> Fnv {
+        Fnv(Self::OFFSET)
+    }
+
+    fn bytes(&mut self, data: &[u8]) {
+        for &b in data {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+
+    /// Length-prefixed string (two strings can never collide by
+    /// concatenation ambiguity).
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.bytes(s.as_bytes());
+    }
+}
+
+/// Deterministic structural fingerprint of (graph, testbed) — see the
+/// module docs for exactly what is (and is not) hashed.
+pub fn fingerprint(g: &CompGraph, testbed_id: &str) -> u64 {
+    let mut h = Fnv::new();
+    h.str("hsdag-fp-v1");
+    h.str(testbed_id);
+    h.usize(g.n());
+    for node in &g.nodes {
+        h.usize(node.feature_slot());
+        h.usize(node.kind.index());
+        h.usize(node.output_shape.len());
+        for &d in &node.output_shape {
+            h.usize(d);
+        }
+        h.usize(node.attrs.taps);
+        h.usize(node.attrs.reduce_dim);
+        h.usize(node.attrs.groups);
+    }
+    // Edge order is a construction artifact, not structure: hash sorted.
+    let mut edges = g.edges.clone();
+    edges.sort_unstable();
+    h.usize(edges.len());
+    for (s, t) in edges {
+        h.usize(s);
+        h.usize(t);
+    }
+    h.0
+}
+
+/// The fingerprint rendered the way the wire protocol reports it
+/// (16 lowercase hex digits).
+pub fn fingerprint_hex(g: &CompGraph, testbed_id: &str) -> String {
+    format!("{:016x}", fingerprint(g, testbed_id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpAttrs, OpKind, OpNode};
+    use crate::models::Workload;
+
+    fn base() -> CompGraph {
+        let mut g = CompGraph::new("base");
+        let i = g.add_node(OpNode::new("in", OpKind::Parameter, vec![1, 8]));
+        let a = g.add_node(OpNode::new("a", OpKind::Relu, vec![1, 8]));
+        let b = g.add_node(
+            OpNode::new("b", OpKind::MatMul, vec![1, 8])
+                .with_attrs(OpAttrs { taps: 1, reduce_dim: 8, groups: 1 }),
+        );
+        let o = g.add_node(OpNode::new("out", OpKind::Result, vec![1, 8]));
+        g.add_edge(i, a);
+        g.add_edge(i, b);
+        g.add_edge(a, o);
+        g.add_edge(b, o);
+        g
+    }
+
+    #[test]
+    fn deterministic_across_builds_and_resolves() {
+        assert_eq!(fingerprint(&base(), "cpu_gpu"), fingerprint(&base(), "cpu_gpu"));
+        let w1 = Workload::resolve("layered:4x3:2").unwrap();
+        let w2 = Workload::resolve("layered:4x3:2").unwrap();
+        assert_eq!(fingerprint(&w1.graph, "cpu_gpu"), fingerprint(&w2.graph, "cpu_gpu"));
+        let hex = fingerprint_hex(&w1.graph, "cpu_gpu");
+        assert_eq!(hex.len(), 16);
+        assert_eq!(u64::from_str_radix(&hex, 16).unwrap(), fingerprint(&w1.graph, "cpu_gpu"));
+    }
+
+    #[test]
+    fn node_renaming_does_not_change_the_hash() {
+        let g = base();
+        let mut renamed = g.clone();
+        for (i, node) in renamed.nodes.iter_mut().enumerate() {
+            node.name = format!("totally_different_{i}");
+        }
+        assert_eq!(fingerprint(&g, "cpu_gpu"), fingerprint(&renamed, "cpu_gpu"));
+    }
+
+    #[test]
+    fn edge_order_is_canonicalized() {
+        let g = base();
+        let mut reordered = g.clone();
+        reordered.edges.reverse();
+        assert_eq!(fingerprint(&g, "cpu_gpu"), fingerprint(&reordered, "cpu_gpu"));
+    }
+
+    #[test]
+    fn structure_kind_shape_and_testbed_all_flip_the_hash() {
+        let g = base();
+        let fp = fingerprint(&g, "cpu_gpu");
+
+        // Edge flip: rewire a -> out into b's slot. (Mutating the edge
+        // list alone is fine — adjacency is not hashed.)
+        let mut edge_flip = g.clone();
+        edge_flip.edges[2] = (2, 1);
+        // Kind change.
+        let mut kind_change = g.clone();
+        kind_change.nodes[1].kind = OpKind::Sigmoid;
+        // Custom label: feature slot moves even though the cost class
+        // stays.
+        let mut label_change = g.clone();
+        label_change.nodes[1] = label_change.nodes[1].clone().with_custom_kind("FusedGate");
+        // Shape change.
+        let mut shape_change = g.clone();
+        shape_change.nodes[2].output_shape = vec![1, 16];
+        // Attr change.
+        let mut attr_change = g.clone();
+        attr_change.nodes[2].attrs.reduce_dim = 4;
+
+        let variants = [
+            fingerprint(&edge_flip, "cpu_gpu"),
+            fingerprint(&kind_change, "cpu_gpu"),
+            fingerprint(&label_change, "cpu_gpu"),
+            fingerprint(&shape_change, "cpu_gpu"),
+            fingerprint(&attr_change, "cpu_gpu"),
+            fingerprint(&g, "paper3"),
+        ];
+        for (i, v) in variants.iter().enumerate() {
+            assert_ne!(*v, fp, "variant {i} collided with the base graph");
+        }
+        // And the variants are pairwise distinct among themselves.
+        for i in 0..variants.len() {
+            for j in i + 1..variants.len() {
+                assert_ne!(variants[i], variants[j], "variants {i} and {j} collided");
+            }
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! The placement service subsystem: everything between a *trained*
+//! policy and a *deployed* one.
+//!
+//! The paper's framework ends at training — the learned HSDAG policy
+//! lives and dies with its process. This layer makes the policy a
+//! persistent, reusable artifact (GDP / Placeto's "train once, place
+//! many" regime) and puts it behind a long-lived daemon:
+//!
+//! - [`checkpoint`] — the `hsdag-params-v1` on-disk format: the full
+//!   `ParamStore` (params + Adam state) plus deployment metadata, with
+//!   layout validation on load. Written by `train --save` /
+//!   `generalize --save`, consumed by every `--load` path.
+//! - [`fingerprint`] — deterministic structural hashes over graph
+//!   topology, op identity, shapes and the testbed id; node *names* are
+//!   excluded, so the same model re-traced under different layer paths
+//!   keys identically.
+//! - [`cache`] — a bounded LRU keyed by fingerprint: a repeat graph is
+//!   answered without touching the policy at all.
+//! - [`protocol`] — the line-delimited JSON wire format (`place`,
+//!   `stats`, `ctrl` requests) spoken over TCP.
+//! - [`server`] — the `hsdag serve` daemon: a worker pool over a TCP
+//!   listener, per-request latency budgets with baseline fallback, live
+//!   metrics and graceful shutdown.
+//! - [`client`] — the `hsdag request` plumbing (one line in, one line
+//!   out), shared by the CLI, the serving example, the loadgen bench and
+//!   the loopback tests.
+
+pub mod cache;
+pub mod checkpoint;
+pub mod client;
+pub mod fingerprint;
+pub mod protocol;
+pub mod server;
+
+pub use cache::LruCache;
+pub use checkpoint::{Checkpoint, CheckpointMeta};
+pub use fingerprint::{fingerprint, fingerprint_hex};
+pub use protocol::{PlaceOutcome, Provenance, Request, StatsView};
+pub use server::{PlacementService, ServeOptions, Server, ServerHandle};

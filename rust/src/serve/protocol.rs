@@ -1,0 +1,413 @@
+//! Wire protocol of the placement server: one JSON document per line,
+//! both directions, over TCP.
+//!
+//! Requests (`op` selects the handler):
+//!
+//! ```json
+//! {"op": "place", "workload": "resnet"}
+//! {"op": "place", "graph": {"format": "hsdag-graph-v1", ...},
+//!  "id": 7, "budget_ms": 5.0, "rollouts": 8, "no_cache": true}
+//! {"op": "stats"}
+//! {"op": "ctrl", "action": "shutdown"}
+//! ```
+//!
+//! A `place` request names its graph exactly one way: `workload` (a
+//! registry spec resolved server-side, see [`crate::models::Workload`])
+//! or `graph` (an inline `hsdag-graph-v1` document). Optional fields:
+//! `id` (any JSON value, echoed verbatim into the response), `budget_ms`
+//! (per-request policy-inference budget overriding the server default),
+//! `rollouts` (stochastic policy rollouts on top of the greedy one) and
+//! `no_cache` (bypass the placement cache in both directions).
+//!
+//! Responses always carry `ok`; placements report the structural
+//! fingerprint, the placement (device id per original graph node), the
+//! device names, predicted/reference latency, the speedup vs the
+//! testbed's reference device, feasibility, the `provenance` of the
+//! served placement (`policy`, `cache`, or `fallback:<name>` — see the
+//! server docs for the semantics) and the service time:
+//!
+//! ```json
+//! {"ok": true, "op": "place", "id": 7, "fingerprint": "91b0c3...",
+//!  "provenance": "policy", "feasible": true, "latency_s": 0.0123,
+//!  "ref_latency_s": 0.0456, "speedup_pct": 73.0,
+//!  "placement": [0, 1, 1], "devices": ["Xeon-8358 CPU", "A5000 dGPU"],
+//!  "service_ms": 2.31}
+//! {"ok": false, "error": "unknown workload 'warehouse'"}
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::{json as graph_json, CompGraph};
+use crate::util::json::Json;
+
+/// A parsed request line.
+pub enum Request {
+    Place(PlaceRequest),
+    Stats,
+    Shutdown,
+}
+
+/// The graph a `place` request wants placed.
+pub enum PlaceSource {
+    /// Registry spec, resolved server-side.
+    Spec(String),
+    /// Inline `hsdag-graph-v1` graph (already parsed and validated).
+    Inline(CompGraph),
+}
+
+pub struct PlaceRequest {
+    pub source: PlaceSource,
+    /// Echoed verbatim into the response.
+    pub id: Option<Json>,
+    pub budget_ms: Option<f64>,
+    pub rollouts: Option<usize>,
+    pub no_cache: bool,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let doc = Json::parse(line.trim()).map_err(|e| anyhow!("invalid request JSON: {e}"))?;
+    let op = doc
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing string \"op\" (place | stats | ctrl)"))?;
+    match op {
+        "stats" => Ok(Request::Stats),
+        "ctrl" => match doc.get("action").and_then(Json::as_str) {
+            Some("shutdown") => Ok(Request::Shutdown),
+            Some(other) => bail!("unknown ctrl action '{other}' (known: shutdown)"),
+            None => bail!("ctrl request needs a string \"action\""),
+        },
+        "place" => {
+            let spec = doc.get("workload").and_then(Json::as_str);
+            let inline = doc.get("graph");
+            let source = match (spec, inline) {
+                (Some(s), None) => PlaceSource::Spec(s.to_string()),
+                (None, Some(v)) => PlaceSource::Inline(
+                    graph_json::from_value(v).map_err(|e| anyhow!("inline graph: {e:#}"))?,
+                ),
+                (Some(_), Some(_)) => bail!("give \"workload\" or \"graph\", not both"),
+                (None, None) => bail!("place request needs \"workload\" or \"graph\""),
+            };
+            let budget_ms = match doc.get("budget_ms") {
+                None => None,
+                Some(v) => Some(
+                    v.as_f64()
+                        .filter(|b| b.is_finite() && *b >= 0.0)
+                        .ok_or_else(|| anyhow!("\"budget_ms\" must be a non-negative number"))?,
+                ),
+            };
+            let rollouts = match doc.get("rollouts") {
+                None => None,
+                Some(v) => Some(
+                    v.as_usize().ok_or_else(|| anyhow!("\"rollouts\" must be an integer"))?,
+                ),
+            };
+            let no_cache = match doc.get("no_cache") {
+                None => false,
+                Some(v) => {
+                    v.as_bool().ok_or_else(|| anyhow!("\"no_cache\" must be a boolean"))?
+                }
+            };
+            Ok(Request::Place(PlaceRequest {
+                source,
+                id: doc.get("id").cloned(),
+                budget_ms,
+                rollouts,
+                no_cache,
+            }))
+        }
+        other => bail!("unknown op '{other}' (known: place | stats | ctrl)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request builders (the `hsdag request` client and the tests use these so
+// every writer emits the exact grammar `parse_request` accepts).
+// ---------------------------------------------------------------------------
+
+/// Render a `place` request line for a registry spec or an inline graph.
+pub fn render_place_request(
+    workload: Option<&str>,
+    graph: Option<&CompGraph>,
+    id: Option<&Json>,
+    budget_ms: Option<f64>,
+    rollouts: Option<usize>,
+    no_cache: bool,
+) -> String {
+    let mut fields = vec![("op".to_string(), Json::Str("place".to_string()))];
+    if let Some(v) = id {
+        fields.push(("id".to_string(), v.clone()));
+    }
+    if let Some(s) = workload {
+        fields.push(("workload".to_string(), Json::Str(s.to_string())));
+    }
+    if let Some(g) = graph {
+        fields.push(("graph".to_string(), graph_json::to_value(g)));
+    }
+    if let Some(b) = budget_ms {
+        fields.push(("budget_ms".to_string(), Json::Num(b)));
+    }
+    if let Some(r) = rollouts {
+        fields.push(("rollouts".to_string(), Json::Num(r as f64)));
+    }
+    if no_cache {
+        fields.push(("no_cache".to_string(), Json::Bool(true)));
+    }
+    Json::Obj(fields).to_string_compact()
+}
+
+pub fn render_stats_request() -> String {
+    Json::Obj(vec![("op".to_string(), Json::Str("stats".to_string()))]).to_string_compact()
+}
+
+pub fn render_shutdown_request() -> String {
+    Json::Obj(vec![
+        ("op".to_string(), Json::Str("ctrl".to_string())),
+        ("action".to_string(), Json::Str("shutdown".to_string())),
+    ])
+    .to_string_compact()
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// Where a served placement came from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Provenance {
+    /// Fresh policy inference won the candidate comparison.
+    Policy,
+    /// Answered from the LRU placement cache, no inference run.
+    Cache,
+    /// A non-learned candidate was served: the latency budget was
+    /// exhausted, no policy rollout was feasible, or a baseline beat
+    /// every rollout. The string names the winner (`memory-greedy`,
+    /// `single:<device>`).
+    Fallback(String),
+}
+
+impl Provenance {
+    pub fn label(&self) -> String {
+        match self {
+            Provenance::Policy => "policy".to_string(),
+            Provenance::Cache => "cache".to_string(),
+            Provenance::Fallback(name) => format!("fallback:{name}"),
+        }
+    }
+}
+
+/// One served placement, ready to render.
+#[derive(Debug, Clone)]
+pub struct PlaceOutcome {
+    /// Structural fingerprint (hex) — the cache key.
+    pub fingerprint: String,
+    /// Device id per original graph node.
+    pub placement: Vec<usize>,
+    /// Testbed device names, indexed by device id.
+    pub devices: Vec<String>,
+    /// Predicted (simulated, deterministic) latency of the placement.
+    pub latency_s: f64,
+    /// Latency of the testbed's reference device (speedup denominator).
+    pub ref_latency_s: f64,
+    pub feasible: bool,
+    pub provenance: Provenance,
+}
+
+impl PlaceOutcome {
+    pub fn speedup_pct(&self) -> f64 {
+        100.0 * (1.0 - self.latency_s / self.ref_latency_s)
+    }
+}
+
+/// Render a `place` response line.
+pub fn render_place_response(id: Option<&Json>, o: &PlaceOutcome, service_ms: f64) -> String {
+    let mut fields = vec![
+        ("ok".to_string(), Json::Bool(true)),
+        ("op".to_string(), Json::Str("place".to_string())),
+    ];
+    if let Some(v) = id {
+        fields.push(("id".to_string(), v.clone()));
+    }
+    fields.extend([
+        ("fingerprint".to_string(), Json::Str(o.fingerprint.clone())),
+        ("provenance".to_string(), Json::Str(o.provenance.label())),
+        ("feasible".to_string(), Json::Bool(o.feasible)),
+        ("latency_s".to_string(), Json::Num(o.latency_s)),
+        ("ref_latency_s".to_string(), Json::Num(o.ref_latency_s)),
+        ("speedup_pct".to_string(), Json::Num(o.speedup_pct())),
+        (
+            "placement".to_string(),
+            Json::Arr(o.placement.iter().map(|&d| Json::Num(d as f64)).collect()),
+        ),
+        (
+            "devices".to_string(),
+            Json::Arr(o.devices.iter().map(|d| Json::Str(d.clone())).collect()),
+        ),
+        ("service_ms".to_string(), Json::Num(service_ms)),
+    ]);
+    Json::Obj(fields).to_string_compact()
+}
+
+/// Live service metrics, as reported by a `stats` response.
+#[derive(Debug, Clone)]
+pub struct StatsView {
+    pub uptime_s: f64,
+    pub requests: u64,
+    pub placements: u64,
+    pub cache_hits: u64,
+    pub fallbacks: u64,
+    pub errors: u64,
+    pub cache_len: usize,
+    pub cache_capacity: usize,
+    pub qps: f64,
+    pub cache_hit_rate: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+pub fn render_stats_response(s: &StatsView) -> String {
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(true)),
+        ("op".to_string(), Json::Str("stats".to_string())),
+        ("uptime_s".to_string(), Json::Num(s.uptime_s)),
+        ("requests".to_string(), Json::Num(s.requests as f64)),
+        ("placements".to_string(), Json::Num(s.placements as f64)),
+        ("cache_hits".to_string(), Json::Num(s.cache_hits as f64)),
+        ("fallbacks".to_string(), Json::Num(s.fallbacks as f64)),
+        ("errors".to_string(), Json::Num(s.errors as f64)),
+        ("cache_len".to_string(), Json::Num(s.cache_len as f64)),
+        ("cache_capacity".to_string(), Json::Num(s.cache_capacity as f64)),
+        ("qps".to_string(), Json::Num(s.qps)),
+        ("cache_hit_rate".to_string(), Json::Num(s.cache_hit_rate)),
+        ("p50_ms".to_string(), Json::Num(s.p50_ms)),
+        ("p99_ms".to_string(), Json::Num(s.p99_ms)),
+    ])
+    .to_string_compact()
+}
+
+/// Render the acknowledgment of a `ctrl` request.
+pub fn render_ctrl_response(action: &str) -> String {
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(true)),
+        ("op".to_string(), Json::Str("ctrl".to_string())),
+        ("action".to_string(), Json::Str(action.to_string())),
+    ])
+    .to_string_compact()
+}
+
+/// Render an error response line.
+pub fn render_error_response(id: Option<&Json>, message: &str) -> String {
+    let mut fields = vec![("ok".to_string(), Json::Bool(false))];
+    if let Some(v) = id {
+        fields.push(("id".to_string(), v.clone()));
+    }
+    fields.push(("error".to_string(), Json::Str(message.to_string())));
+    Json::Obj(fields).to_string_compact()
+}
+
+/// Parse a response line, erroring when the server reported a failure
+/// (the `hsdag request` client's exit-status contract).
+pub fn parse_response(line: &str) -> Result<Json> {
+    let doc = Json::parse(line.trim()).map_err(|e| anyhow!("invalid response JSON: {e}"))?;
+    match doc.get("ok").and_then(Json::as_bool) {
+        Some(true) => Ok(doc),
+        Some(false) => bail!(
+            "server error: {}",
+            doc.get("error").and_then(Json::as_str).unwrap_or("(no message)")
+        ),
+        None => bail!("malformed response (no \"ok\" field): {line}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Workload;
+
+    #[test]
+    fn place_request_roundtrip_spec_and_inline() {
+        let line = render_place_request(Some("seq:8"), None, None, None, None, false);
+        match parse_request(&line).unwrap() {
+            Request::Place(p) => {
+                assert!(matches!(p.source, PlaceSource::Spec(ref s) if s == "seq:8"));
+                assert!(p.id.is_none() && p.budget_ms.is_none() && !p.no_cache);
+            }
+            _ => panic!("wrong op"),
+        }
+        let g = Workload::resolve("layered:3x2:1").unwrap().graph;
+        let id = Json::Num(7.0);
+        let line =
+            render_place_request(None, Some(&g), Some(&id), Some(2.5), Some(8), true);
+        match parse_request(&line).unwrap() {
+            Request::Place(p) => {
+                match p.source {
+                    PlaceSource::Inline(h) => {
+                        assert_eq!(h.n(), g.n());
+                        assert_eq!(h.edges, g.edges);
+                    }
+                    PlaceSource::Spec(_) => panic!("expected inline graph"),
+                }
+                assert_eq!(p.id, Some(Json::Num(7.0)));
+                assert_eq!(p.budget_ms, Some(2.5));
+                assert_eq!(p.rollouts, Some(8));
+                assert!(p.no_cache);
+            }
+            _ => panic!("wrong op"),
+        }
+    }
+
+    #[test]
+    fn stats_and_shutdown_roundtrip() {
+        assert!(matches!(parse_request(&render_stats_request()).unwrap(), Request::Stats));
+        assert!(matches!(parse_request(&render_shutdown_request()).unwrap(), Request::Shutdown));
+    }
+
+    #[test]
+    fn malformed_requests_error_with_a_message() {
+        for (line, needle) in [
+            ("not json", "invalid request"),
+            (r#"{"op": "fly"}"#, "unknown op"),
+            (r#"{"workload": "seq:8"}"#, "missing string \"op\""),
+            (r#"{"op": "place"}"#, "needs \"workload\" or \"graph\""),
+            (r#"{"op": "place", "workload": "a", "graph": {}}"#, "not both"),
+            (r#"{"op": "place", "graph": {"format": "wrong"}}"#, "inline graph"),
+            (r#"{"op": "place", "workload": "a", "budget_ms": -1}"#, "budget_ms"),
+            (r#"{"op": "place", "workload": "a", "no_cache": 1}"#, "no_cache"),
+            (r#"{"op": "ctrl", "action": "reboot"}"#, "unknown ctrl action"),
+            (r#"{"op": "ctrl"}"#, "needs a string"),
+        ] {
+            let err = parse_request(line).expect_err(line);
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "{line}: {msg}");
+        }
+    }
+
+    #[test]
+    fn responses_render_and_parse() {
+        let o = PlaceOutcome {
+            fingerprint: "00ff00ff00ff00ff".to_string(),
+            placement: vec![0, 1, 1],
+            devices: vec!["CPU".to_string(), "GPU".to_string()],
+            latency_s: 0.01,
+            ref_latency_s: 0.04,
+            feasible: true,
+            provenance: Provenance::Cache,
+        };
+        let id = Json::Str("req-1".to_string());
+        let line = render_place_response(Some(&id), &o, 1.5);
+        let doc = parse_response(&line).unwrap();
+        assert_eq!(doc.get("provenance").unwrap().as_str(), Some("cache"));
+        assert_eq!(doc.get("id").unwrap().as_str(), Some("req-1"));
+        assert_eq!(doc.get("latency_s").unwrap().as_f64(), Some(0.01));
+        assert!((doc.get("speedup_pct").unwrap().as_f64().unwrap() - 75.0).abs() < 1e-9);
+        assert_eq!(doc.get("placement").unwrap().as_arr().unwrap().len(), 3);
+        // Error responses fail parse_response with the server's message.
+        let err_line = render_error_response(None, "boom");
+        let msg = format!("{:#}", parse_response(&err_line).unwrap_err());
+        assert!(msg.contains("boom"), "{msg}");
+        // Provenance labels.
+        assert_eq!(Provenance::Policy.label(), "policy");
+        assert_eq!(Provenance::Fallback("memory-greedy".to_string()).label(), "fallback:memory-greedy");
+    }
+}

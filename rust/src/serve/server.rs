@@ -1,0 +1,532 @@
+//! The placement server: a long-lived, multi-threaded daemon that turns
+//! one on-disk policy checkpoint into a placement-as-a-service endpoint.
+//!
+//! [`PlacementService`] is the transport-free core (the benches and the
+//! in-process tests drive it directly); [`Server`] puts it behind a TCP
+//! listener with a fixed worker pool speaking the line-delimited
+//! [`protocol`]. Per `place` request the service:
+//!
+//! 1. resolves the graph (registry spec or inline document) and computes
+//!    its structural [`fingerprint`] — the cache key;
+//! 2. answers from the bounded LRU [`cache`] on a hit (`provenance:
+//!    "cache"`), skipping inference entirely; only complete
+//!    server-default answers are ever *written* to the cache — a
+//!    budget-truncated result or one computed under per-request knob
+//!    overrides is returned but not stored, so it can never poison
+//!    later unconstrained requests for the same graph;
+//! 3. otherwise builds the placement environment and runs policy
+//!    inference — one greedy rollout plus a few stochastic ones — under
+//!    the per-request latency budget; when the budget is exhausted the
+//!    policy stage is skipped or cut short;
+//! 4. always evaluates the cheap non-learned candidates (every
+//!    single-device deployment plus the capacity-aware memory-greedy) and
+//!    serves the fastest *feasible* candidate overall, preferring the
+//!    policy on exact ties. The service never returns a placement worse
+//!    than the trivial ones it can check in microseconds; `provenance`
+//!    reports truthfully whether the policy won (`"policy"`) or a
+//!    baseline was served (`"fallback:memory-greedy"`,
+//!    `"fallback:single:<device>"`).
+//!
+//! A `stats` request reports live metrics (qps, cache hit rate, p50/p99
+//! service time over a sliding window); a `ctrl: shutdown` message
+//! acknowledges, stops the accept loop, drains the workers and joins
+//! them — a clean exit, suitable for CI.
+//!
+//! [`protocol`]: super::protocol
+//! [`fingerprint`]: super::fingerprint::fingerprint
+//! [`cache`]: super::cache
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::cache::LruCache;
+use super::checkpoint::Checkpoint;
+use super::fingerprint::fingerprint;
+use super::protocol::{
+    self, PlaceOutcome, PlaceRequest, PlaceSource, Provenance, Request, StatsView,
+};
+use crate::baselines;
+use crate::config::Config;
+use crate::models::Workload;
+use crate::rl::{Env, HsdagAgent, NativeBackend};
+use crate::runtime::ParamStore;
+use crate::sim::Placement;
+use crate::util::stats;
+
+/// Service-time sliding window for the p50/p99 metrics.
+const SERVICE_TIME_WINDOW: usize = 4096;
+
+/// Serving knobs (the `hsdag serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Placement-cache capacity (entries; 0 disables caching).
+    pub cache_capacity: usize,
+    /// Default per-request policy-inference budget in milliseconds
+    /// (None = unbounded); requests may override it.
+    pub budget_ms: Option<f64>,
+    /// Stochastic policy rollouts on top of the greedy one; requests may
+    /// override it.
+    pub rollouts: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { cache_capacity: 256, budget_ms: None, rollouts: 4 }
+    }
+}
+
+/// What the cache remembers per fingerprint.
+#[derive(Clone)]
+struct CachedPlacement {
+    placement: Vec<usize>,
+    latency_s: f64,
+    ref_latency_s: f64,
+    feasible: bool,
+}
+
+#[derive(Default)]
+struct StatsInner {
+    requests: u64,
+    placements: u64,
+    cache_hits: u64,
+    fallbacks: u64,
+    errors: u64,
+    service_ms: Vec<f64>,
+    ring_idx: usize,
+}
+
+/// The transport-free placement service.
+pub struct PlacementService {
+    cfg: Config,
+    params: ParamStore,
+    /// Informational: what the checkpoint says it was trained on.
+    trained_on: String,
+    device_names: Vec<String>,
+    opts: ServeOptions,
+    cache: Mutex<LruCache<u64, CachedPlacement>>,
+    stats: Mutex<StatsInner>,
+    started: Instant,
+}
+
+impl PlacementService {
+    /// Stand the service up from a loaded checkpoint. `cfg` supplies the
+    /// testbed (defaulting upstream to the checkpoint's), seed and eval
+    /// workers; the checkpoint supplies the parameters and pins the
+    /// hidden size. Refuses a checkpoint whose placer width disagrees
+    /// with the testbed before any request is served.
+    pub fn new(ckpt: Checkpoint, cfg: &Config, opts: ServeOptions) -> Result<PlacementService> {
+        let mut cfg = cfg.clone();
+        cfg.backend = "native".to_string();
+        cfg.hidden = ckpt.meta.hidden;
+        // Serving never trains: a 1-step replay buffer keeps per-request
+        // agents from allocating a full training window per graph.
+        cfg.update_timestep = 1;
+        let tb = cfg.resolve_testbed()?;
+        ckpt.check_compatible(cfg.hidden, tb.n_actions(), &cfg.testbed)?;
+        Ok(PlacementService {
+            device_names: tb.devices.iter().map(|d| d.name.clone()).collect(),
+            trained_on: ckpt.meta.workload.clone(),
+            params: ckpt.store,
+            cache: Mutex::new(LruCache::new(opts.cache_capacity)),
+            stats: Mutex::new(StatsInner::default()),
+            started: Instant::now(),
+            cfg,
+            opts,
+        })
+    }
+
+    /// The resolved run configuration (testbed id, hidden size, seed).
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// What the checkpoint was trained on (banner text).
+    pub fn trained_on(&self) -> &str {
+        &self.trained_on
+    }
+
+    /// Serve one placement request (the cache-or-infer-or-fallback core).
+    pub fn handle_place(&self, req: &PlaceRequest) -> Result<PlaceOutcome> {
+        let t0 = Instant::now();
+        let deadline = req
+            .budget_ms
+            .or(self.opts.budget_ms)
+            .map(|ms| t0 + Duration::from_secs_f64(ms / 1e3));
+        let over = |d: &Option<Instant>| d.map(|d| Instant::now() >= d).unwrap_or(false);
+
+        let workload = match &req.source {
+            PlaceSource::Spec(s) => Workload::resolve(s)?,
+            PlaceSource::Inline(g) => Workload::from_graph(g.clone(), None),
+        };
+        let fp = fingerprint(&workload.graph, &self.cfg.testbed);
+        let fp_hex = format!("{fp:016x}");
+
+        if !req.no_cache {
+            let mut cache = self.cache.lock().unwrap();
+            if let Some(hit) = cache.get(&fp) {
+                return Ok(PlaceOutcome {
+                    fingerprint: fp_hex,
+                    placement: hit.placement.clone(),
+                    devices: self.device_names.clone(),
+                    latency_s: hit.latency_s,
+                    ref_latency_s: hit.ref_latency_s,
+                    feasible: hit.feasible,
+                    provenance: Provenance::Cache,
+                });
+            }
+        }
+
+        let env = Env::for_workload(workload, &self.cfg)?;
+
+        // Candidates, policy first (ties between a policy rollout and an
+        // identical baseline placement resolve toward the policy).
+        let mut candidates: Vec<(f64, bool, Placement, Provenance)> = Vec::new();
+        let mut policy_complete = false;
+        if !over(&deadline) {
+            let backend = NativeBackend::from_snapshot(&env, &self.cfg, &self.params)?;
+            let mut agent = HsdagAgent::with_backend(&env, Box::new(backend), &self.cfg)?;
+            agent.reset_episode();
+            let o = agent.step(&env, false)?;
+            candidates.push((o.det_latency, o.feasible, env.expand(&o.actions)?, Provenance::Policy));
+            policy_complete = true;
+            for _ in 0..req.rollouts.unwrap_or(self.opts.rollouts) {
+                if over(&deadline) {
+                    policy_complete = false;
+                    break;
+                }
+                let o = agent.step(&env, true)?;
+                candidates.push((
+                    o.det_latency,
+                    o.feasible,
+                    env.expand(&o.actions)?,
+                    Provenance::Policy,
+                ));
+            }
+        }
+        // The trivial candidates are microseconds of simulator time: the
+        // service never returns a placement worse than these, and they
+        // are the whole answer when the budget was exhausted.
+        let mut trivial: Vec<(Placement, String)> = env
+            .testbed
+            .placeable
+            .iter()
+            .map(|&d| {
+                (
+                    Placement::all(env.graph.n(), d),
+                    format!("single:{}", env.testbed.devices[d].name),
+                )
+            })
+            .collect();
+        trivial.push((
+            baselines::memory_greedy_placement(&env.graph, &env.testbed),
+            "memory-greedy".to_string(),
+        ));
+        for (p, name) in trivial {
+            let rep = env.cost.evaluate(&env.graph, &p, &env.testbed);
+            candidates.push((rep.makespan, rep.feasible(), p, Provenance::Fallback(name)));
+        }
+
+        // Fastest feasible candidate (fastest overall when nothing is
+        // feasible — the response's `feasible: false` says so); strictly
+        // better wins, so earlier (policy) candidates take exact ties.
+        let any_feasible = candidates.iter().any(|c| c.1);
+        let mut best: Option<&(f64, bool, Placement, Provenance)> = None;
+        for c in &candidates {
+            if any_feasible && !c.1 {
+                continue;
+            }
+            if best.map(|b| c.0 < b.0).unwrap_or(true) {
+                best = Some(c);
+            }
+        }
+        let (latency_s, feasible, placement, provenance) =
+            best.ok_or_else(|| anyhow!("no placement candidate produced"))?;
+
+        let outcome = PlaceOutcome {
+            fingerprint: fp_hex,
+            placement: placement.0.clone(),
+            devices: self.device_names.clone(),
+            latency_s: *latency_s,
+            ref_latency_s: env.ref_latency,
+            feasible: *feasible,
+            provenance: provenance.clone(),
+        };
+        // Only the server-default answer may enter the cache: a
+        // budget-truncated result, or one computed under per-request
+        // knob overrides, must never be served to later unconstrained
+        // requests for the same graph (cache poisoning).
+        let cacheable = !req.no_cache
+            && policy_complete
+            && req.budget_ms.is_none()
+            && req.rollouts.is_none();
+        if cacheable {
+            self.cache.lock().unwrap().put(
+                fp,
+                CachedPlacement {
+                    placement: outcome.placement.clone(),
+                    latency_s: outcome.latency_s,
+                    ref_latency_s: outcome.ref_latency_s,
+                    feasible: outcome.feasible,
+                },
+            );
+        }
+        Ok(outcome)
+    }
+
+    /// Handle one protocol line; returns the response line and whether a
+    /// shutdown was requested.
+    pub fn handle_line(&self, line: &str) -> (String, bool) {
+        let t0 = Instant::now();
+        match protocol::parse_request(line) {
+            Err(e) => {
+                let mut s = self.stats.lock().unwrap();
+                s.requests += 1;
+                s.errors += 1;
+                (protocol::render_error_response(None, &format!("{e:#}")), false)
+            }
+            Ok(Request::Stats) => {
+                self.stats.lock().unwrap().requests += 1;
+                (protocol::render_stats_response(&self.stats_view()), false)
+            }
+            Ok(Request::Shutdown) => {
+                self.stats.lock().unwrap().requests += 1;
+                (protocol::render_ctrl_response("shutdown"), true)
+            }
+            Ok(Request::Place(req)) => {
+                let result = self.handle_place(&req);
+                let service_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let mut s = self.stats.lock().unwrap();
+                s.requests += 1;
+                match result {
+                    Ok(outcome) => {
+                        s.placements += 1;
+                        match outcome.provenance {
+                            Provenance::Cache => s.cache_hits += 1,
+                            Provenance::Fallback(_) => s.fallbacks += 1,
+                            Provenance::Policy => {}
+                        }
+                        if s.service_ms.len() < SERVICE_TIME_WINDOW {
+                            s.service_ms.push(service_ms);
+                        } else {
+                            let i = s.ring_idx;
+                            s.service_ms[i] = service_ms;
+                            s.ring_idx = (i + 1) % SERVICE_TIME_WINDOW;
+                        }
+                        (
+                            protocol::render_place_response(req.id.as_ref(), &outcome, service_ms),
+                            false,
+                        )
+                    }
+                    Err(e) => {
+                        s.errors += 1;
+                        (
+                            protocol::render_error_response(req.id.as_ref(), &format!("{e:#}")),
+                            false,
+                        )
+                    }
+                }
+            }
+        }
+    }
+
+    /// Snapshot the live metrics.
+    pub fn stats_view(&self) -> StatsView {
+        let s = self.stats.lock().unwrap();
+        let cache = self.cache.lock().unwrap();
+        let uptime_s = self.started.elapsed().as_secs_f64();
+        StatsView {
+            uptime_s,
+            requests: s.requests,
+            placements: s.placements,
+            cache_hits: s.cache_hits,
+            fallbacks: s.fallbacks,
+            errors: s.errors,
+            cache_len: cache.len(),
+            cache_capacity: cache.capacity(),
+            qps: s.requests as f64 / uptime_s.max(1e-9),
+            cache_hit_rate: s.cache_hits as f64 / (s.placements.max(1)) as f64,
+            p50_ms: stats::percentile(&s.service_ms, 50.0),
+            p99_ms: stats::percentile(&s.service_ms, 99.0),
+        }
+    }
+
+    /// Drop every cached placement (benches isolate cold/hit paths).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP front end
+// ---------------------------------------------------------------------------
+
+/// A bound-but-not-yet-running server. `addr` may use port 0 for an
+/// ephemeral port; [`Server::local_addr`] reports what was bound.
+pub struct Server {
+    listener: TcpListener,
+    service: Arc<PlacementService>,
+    addr: SocketAddr,
+}
+
+/// Handle to a server running on a background thread (tests, examples).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    thread: thread::JoinHandle<Result<()>>,
+}
+
+impl ServerHandle {
+    /// Wait for the server to shut down (a `ctrl: shutdown` request).
+    pub fn join(self) -> Result<()> {
+        self.thread.join().map_err(|_| anyhow!("server thread panicked"))?
+    }
+}
+
+impl Server {
+    pub fn bind(service: Arc<PlacementService>, addr: &str) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding serve address '{addr}'"))?;
+        let addr = listener.local_addr()?;
+        Ok(Server { listener, service, addr })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accept and serve until a shutdown request arrives, then drain and
+    /// join the `workers`-wide pool. Blocks the calling thread.
+    pub fn run(self, workers: usize) -> Result<()> {
+        self.listener
+            .set_nonblocking(true)
+            .context("setting the listener non-blocking")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut pool = Vec::with_capacity(workers.max(1));
+        for i in 0..workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let service = Arc::clone(&self.service);
+            let shutdown = Arc::clone(&shutdown);
+            pool.push(
+                thread::Builder::new()
+                    .name(format!("hsdag-serve-{i}"))
+                    .spawn(move || worker_loop(&rx, &service, &shutdown))
+                    .context("spawning serve worker")?,
+            );
+        }
+        loop {
+            if shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    // A send can only fail once every worker has exited,
+                    // which only happens on shutdown.
+                    let _ = tx.send(stream);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    shutdown.store(true, Ordering::Relaxed);
+                    drop(tx);
+                    for t in pool {
+                        let _ = t.join();
+                    }
+                    return Err(e).context("accepting connections");
+                }
+            }
+        }
+        drop(tx);
+        for t in pool {
+            let _ = t.join();
+        }
+        Ok(())
+    }
+
+    /// Run on a background thread; returns once the listener is live.
+    pub fn spawn(self, workers: usize) -> Result<ServerHandle> {
+        let addr = self.addr;
+        let thread = thread::Builder::new()
+            .name("hsdag-serve-accept".to_string())
+            .spawn(move || self.run(workers))
+            .context("spawning server thread")?;
+        Ok(ServerHandle { addr, thread })
+    }
+}
+
+/// One pool worker: pull connections off the shared queue until the
+/// channel closes (all senders dropped at shutdown).
+fn worker_loop(
+    rx: &Mutex<mpsc::Receiver<TcpStream>>,
+    service: &PlacementService,
+    shutdown: &AtomicBool,
+) {
+    loop {
+        // Holding the lock while blocked in recv is fine: connection
+        // *handling* happens after the guard drops, so the pool still
+        // serves concurrently; dispatch itself is serial and cheap.
+        let stream = match rx.lock().unwrap().recv() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        handle_conn(stream, service, shutdown);
+    }
+}
+
+/// Serve one connection: line in, line out, until EOF / shutdown. The
+/// short read timeout keeps the worker responsive to a shutdown raised
+/// elsewhere while this client idles.
+fn handle_conn(stream: TcpStream, service: &PlacementService, shutdown: &AtomicBool) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) if buf.is_empty() => return, // clean EOF
+            Ok(n) => {
+                // n == 0 here means EOF cut a buffered line short (a
+                // timeout left partial bytes behind) — still answer it,
+                // then return.
+                let line = String::from_utf8_lossy(&buf).trim().to_string();
+                buf.clear();
+                if !line.is_empty() {
+                    let (response, shut) = service.handle_line(&line);
+                    if writer
+                        .write_all(response.as_bytes())
+                        .and_then(|_| writer.write_all(b"\n"))
+                        .and_then(|_| writer.flush())
+                        .is_err()
+                    {
+                        return;
+                    }
+                    if shut {
+                        shutdown.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                }
+                if n == 0 {
+                    return;
+                }
+            }
+            // Timeout mid-line: partial bytes stay in `buf`; keep
+            // accumulating (and re-check the shutdown flag).
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => continue,
+            Err(_) => return,
+        }
+    }
+}

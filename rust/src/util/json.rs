@@ -28,7 +28,7 @@ impl Json {
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
-        if p.pos != bytes.len() {
+        if p.pos != p.bytes.len() {
             return Err(format!("trailing characters at byte {}", p.pos));
         }
         Ok(v)
@@ -52,6 +52,13 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
@@ -468,6 +475,14 @@ mod tests {
         // Moderate (in-bounds) nesting still parses.
         let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
         assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn as_bool_is_strict() {
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Bool(false).as_bool(), Some(false));
+        assert_eq!(Json::Num(1.0).as_bool(), None);
+        assert_eq!(Json::Str("true".into()).as_bool(), None);
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Placement-service integration tests: the persistence contract.
+//!
+//! - checkpoint save → load is a bit-identical `ParamStore` round-trip,
+//!   and corrupt / truncated files are located errors, never panics;
+//! - fingerprints are deterministic across runs and sensitive to exactly
+//!   the structure they hash (edge flip, kind change, shape change,
+//!   testbed change — but NOT node renaming);
+//! - the in-process service serves policy placements, answers repeats
+//!   from the cache, falls back under an exhausted budget, and counts it
+//!   all in its stats;
+//! - the TCP server round-trips the wire protocol and shuts down cleanly;
+//! - the acceptance proof: a policy trained and saved by one *process* is
+//!   loaded by `hsdag serve` in a fresh process, beats-or-ties every
+//!   static single-device deployment on the training workload (the
+//!   service's structural guarantee — provenance reports whether the
+//!   policy itself won), and answers the repeated identical request from
+//!   the cache without re-running inference.
+
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+use hsdag::config::Config;
+use hsdag::features::FeatureConfig;
+use hsdag::models::Workload;
+use hsdag::rl::{Env, HsdagAgent};
+use hsdag::serve::{
+    client, fingerprint, protocol, Checkpoint, CheckpointMeta, PlacementService, ServeOptions,
+    Server,
+};
+use hsdag::sim::{execute, Placement, Testbed};
+use hsdag::util::json::Json;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hsdag_serve_test_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Train a small native policy and wrap it as a checkpoint.
+fn tiny_checkpoint(train_spec: &str, episodes: usize) -> (Checkpoint, Config) {
+    let cfg = Config {
+        backend: "native".to_string(),
+        hidden: 16,
+        update_timestep: 4,
+        seed: 5,
+        ..Default::default()
+    };
+    let env = Env::for_workload(Workload::resolve(train_spec).unwrap(), &cfg).unwrap();
+    let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+    agent.search(&env, episodes).unwrap();
+    let ckpt = Checkpoint::new(
+        agent.export_params(),
+        CheckpointMeta {
+            hidden: cfg.hidden,
+            feature_dim: FeatureConfig::dim(),
+            actions: env.n_actions(),
+            testbed: env.testbed.id.clone(),
+            workload: train_spec.to_string(),
+            best_latency: None,
+        },
+    );
+    (ckpt, cfg)
+}
+
+#[test]
+fn checkpoint_roundtrips_bit_identically_through_disk() {
+    let (ckpt, _) = tiny_checkpoint("layered:3x3:1", 2);
+    // Training ran, so params moved and the Adam moments are non-zero —
+    // the round-trip is exercised on non-trivial float values.
+    assert!(ckpt.store.step > 0.0);
+    assert!(ckpt.store.m.iter().any(|t| t.as_f32().iter().any(|&x| x != 0.0)));
+    let path = tmp_dir("roundtrip").join("ckpt.json");
+    ckpt.save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    assert_eq!(back.store.step, ckpt.store.step);
+    assert_eq!(back.store.names, ckpt.store.names);
+    for i in 0..ckpt.store.n() {
+        // Bit-identical: f32 -> JSON text -> f32 must be exact.
+        assert_eq!(back.store.params[i].as_f32(), ckpt.store.params[i].as_f32(), "params {i}");
+        assert_eq!(back.store.m[i].as_f32(), ckpt.store.m[i].as_f32(), "m {i}");
+        assert_eq!(back.store.v[i].as_f32(), ckpt.store.v[i].as_f32(), "v {i}");
+    }
+}
+
+#[test]
+fn corrupt_and_truncated_checkpoint_files_are_errors() {
+    let (ckpt, _) = tiny_checkpoint("seq:8", 1);
+    let dir = tmp_dir("corrupt");
+    let good = ckpt.to_json();
+    for (name, text) in [
+        ("truncated.json", &good[..good.len() / 3]),
+        ("garbage.json", "not even json {"),
+        ("empty.json", ""),
+    ] {
+        let path = dir.join(name);
+        std::fs::write(&path, text).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(name), "{name}: {msg}");
+    }
+    // A wrong-format file names the expected tag.
+    let path = dir.join("wrong_tag.json");
+    std::fs::write(&path, good.replace("hsdag-params-v1", "hsdag-params-v0")).unwrap();
+    let msg = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+    assert!(msg.contains("hsdag-params-v1"), "{msg}");
+}
+
+#[test]
+fn fingerprints_are_deterministic_and_structure_sensitive() {
+    // Determinism across independent resolves of the same spec.
+    let a = Workload::resolve("transformer:2:2").unwrap().graph;
+    let b = Workload::resolve("transformer:2:2").unwrap().graph;
+    assert_eq!(fingerprint(&a, "cpu_gpu"), fingerprint(&b, "cpu_gpu"));
+
+    // Renaming every node does not move the hash...
+    let mut renamed = a.clone();
+    for (i, n) in renamed.nodes.iter_mut().enumerate() {
+        n.name = format!("renamed_{i}");
+    }
+    assert_eq!(fingerprint(&a, "cpu_gpu"), fingerprint(&renamed, "cpu_gpu"));
+
+    // ...but structure, op identity, shapes and the testbed all do.
+    let base = fingerprint(&a, "cpu_gpu");
+    let mut edge_flip = a.clone();
+    let (s, t) = edge_flip.edges[0];
+    edge_flip.edges[0] = (s, (t + 1) % edge_flip.n());
+    let mut kind_change = a.clone();
+    kind_change.nodes[1].kind = if kind_change.nodes[1].kind == hsdag::graph::OpKind::Softmax {
+        hsdag::graph::OpKind::Relu
+    } else {
+        hsdag::graph::OpKind::Softmax
+    };
+    let mut shape_change = a.clone();
+    shape_change.nodes[1].output_shape.push(2);
+    for (label, fp) in [
+        ("edge flip", fingerprint(&edge_flip, "cpu_gpu")),
+        ("kind change", fingerprint(&kind_change, "cpu_gpu")),
+        ("shape change", fingerprint(&shape_change, "cpu_gpu")),
+        ("testbed change", fingerprint(&a, "paper3")),
+    ] {
+        assert_ne!(fp, base, "{label} did not change the fingerprint");
+    }
+}
+
+#[test]
+fn service_serves_caches_falls_back_and_counts() {
+    let (ckpt, cfg) = tiny_checkpoint("layered:4x3:2", 2);
+    let service =
+        PlacementService::new(ckpt, &cfg, ServeOptions { cache_capacity: 8, ..Default::default() })
+            .unwrap();
+
+    let place = |line: &str| -> Json {
+        let (resp, shut) = service.handle_line(line);
+        assert!(!shut);
+        Json::parse(&resp).unwrap()
+    };
+
+    // Cold: inference runs; the exact provenance (policy vs fallback)
+    // depends on training quality, but it is never "cache".
+    let line = protocol::render_place_request(Some("layered:4x3:2"), None, None, None, None, false);
+    let d1 = place(&line);
+    assert_eq!(d1.get("ok").unwrap().as_bool(), Some(true));
+    let prov1 = d1.get("provenance").unwrap().as_str().unwrap().to_string();
+    assert_ne!(prov1, "cache");
+    assert_eq!(d1.get("feasible").unwrap().as_bool(), Some(true));
+    let lat1 = d1.get("latency_s").unwrap().as_f64().unwrap();
+    let ref1 = d1.get("ref_latency_s").unwrap().as_f64().unwrap();
+    assert!(lat1.is_finite() && lat1 > 0.0 && ref1 > 0.0);
+    // Structural guarantee: never worse than any single-device deployment.
+    let g = Workload::resolve("layered:4x3:2").unwrap().graph;
+    let tb = Testbed::by_id(&service.config().testbed).unwrap();
+    let best_single = tb
+        .placeable
+        .iter()
+        .map(|&d| execute(&g, &Placement::all(g.n(), d), &tb).makespan)
+        .fold(f64::INFINITY, f64::min);
+    assert!(lat1 <= best_single + 1e-12, "served {lat1}, best single {best_single}");
+
+    // Repeat: answered from the cache, same numbers.
+    let d2 = place(&line);
+    assert_eq!(d2.get("provenance").unwrap().as_str(), Some("cache"));
+    assert_eq!(d2.get("latency_s").unwrap().as_f64(), Some(lat1));
+    assert_eq!(
+        d2.get("fingerprint").unwrap().as_str(),
+        d1.get("fingerprint").unwrap().as_str()
+    );
+
+    // no_cache bypasses the cache in both directions.
+    let line_nc =
+        protocol::render_place_request(Some("layered:4x3:2"), None, None, None, None, true);
+    let d3 = place(&line_nc);
+    assert_ne!(d3.get("provenance").unwrap().as_str(), Some("cache"));
+
+    // Budget 0: the policy stage is skipped, a baseline is served — and
+    // the degraded answer must NOT enter the cache.
+    let line_b0 =
+        protocol::render_place_request(Some("random:24:4"), None, None, Some(0.0), None, false);
+    let d4 = place(&line_b0);
+    let prov4 = d4.get("provenance").unwrap().as_str().unwrap();
+    assert!(prov4.starts_with("fallback:"), "{prov4}");
+    // The same graph without a budget runs the full pipeline (no cache
+    // poisoning by the truncated request above).
+    let line_full =
+        protocol::render_place_request(Some("random:24:4"), None, None, None, None, false);
+    let d5 = place(&line_full);
+    assert_ne!(d5.get("provenance").unwrap().as_str(), Some("cache"));
+
+    // Unknown workloads are error responses naming the registry problem.
+    let bad = place(&protocol::render_place_request(
+        Some("warehouse"),
+        None,
+        None,
+        None,
+        None,
+        false,
+    ));
+    assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+    assert!(bad.get("error").unwrap().as_str().unwrap().contains("workload"));
+
+    // Stats saw all of it.
+    let s = service.stats_view();
+    assert_eq!(s.requests, 6);
+    assert_eq!(s.placements, 5);
+    assert_eq!(s.cache_hits, 1);
+    assert!(s.fallbacks >= 1);
+    assert_eq!(s.errors, 1);
+    // Cached: the layered cold answer and the full random:24:4 answer —
+    // not the no_cache repeat, not the budget-truncated one.
+    assert_eq!(s.cache_len, 2);
+    assert!(s.p99_ms >= s.p50_ms);
+
+    // The ctrl message acknowledges and raises the shutdown flag.
+    let (resp, shut) = service.handle_line(&protocol::render_shutdown_request());
+    assert!(shut);
+    assert!(Json::parse(&resp).unwrap().get("ok").unwrap().as_bool().unwrap());
+}
+
+#[test]
+fn tcp_server_roundtrips_and_shuts_down_cleanly() {
+    let (ckpt, cfg) = tiny_checkpoint("seq:12", 1);
+    let service =
+        Arc::new(PlacementService::new(ckpt, &cfg, ServeOptions::default()).unwrap());
+    let server = Server::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = server.spawn(2).unwrap();
+    let timeout = Duration::from_secs(30);
+
+    let line = protocol::render_place_request(Some("seq:12"), None, None, None, None, false);
+    let d1 = protocol::parse_response(&client::roundtrip(&addr, &line, timeout).unwrap()).unwrap();
+    assert_ne!(d1.get("provenance").unwrap().as_str(), Some("cache"));
+    // Pipelined second exchange over one connection hits the cache.
+    let mut conn = client::Connection::open(&addr, timeout).unwrap();
+    let d2 = protocol::parse_response(&conn.send(&line).unwrap()).unwrap();
+    assert_eq!(d2.get("provenance").unwrap().as_str(), Some("cache"));
+    let st =
+        protocol::parse_response(&conn.send(&protocol::render_stats_request()).unwrap()).unwrap();
+    assert_eq!(st.get("placements").unwrap().as_usize(), Some(2));
+    // Malformed lines come back as error responses, not dropped conns.
+    let bad = conn.send("{oops").unwrap();
+    assert!(protocol::parse_response(&bad).is_err());
+
+    let bye = client::roundtrip(&addr, &protocol::render_shutdown_request(), timeout).unwrap();
+    assert!(protocol::parse_response(&bye).is_ok());
+    handle.join().unwrap();
+    assert!(service.stats_view().requests >= 4);
+}
+
+/// Kill the serve daemon if the test dies before the clean shutdown.
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn persistence_proof_across_processes() {
+    let bin = env!("CARGO_BIN_EXE_hsdag");
+    let dir = tmp_dir("e2e");
+    let ckpt_path = dir.join("trained.ckpt.json");
+    let train_spec = "random:48:7";
+
+    // Process 1: train and save.
+    let out = Command::new(bin)
+        .args([
+            "train",
+            "--backend",
+            "native",
+            "--workload",
+            train_spec,
+            "--episodes",
+            "8",
+            "--seed",
+            "3",
+            "--save",
+            ckpt_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "train failed: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(ckpt_path.exists());
+
+    // Process 2: serve the checkpoint on an ephemeral port.
+    let mut child = KillOnDrop(
+        Command::new(bin)
+            .args([
+                "serve",
+                "--load",
+                ckpt_path.to_str().unwrap(),
+                "--addr",
+                "127.0.0.1:0",
+                "--serve-workers",
+                "2",
+                "--rollouts",
+                "8",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap(),
+    );
+    let mut reader = BufReader::new(child.0.stdout.take().unwrap());
+    let mut banner = String::new();
+    reader.read_line(&mut banner).unwrap();
+    assert!(banner.contains("listening on"), "unexpected banner: {banner}");
+    let addr = banner
+        .split("listening on ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap()
+        .to_string();
+
+    // Cold request for the very workload the policy was trained on.
+    let timeout = Duration::from_secs(60);
+    let line = protocol::render_place_request(Some(train_spec), None, None, None, None, false);
+    let d1 = protocol::parse_response(&client::roundtrip(&addr, &line, timeout).unwrap()).unwrap();
+    let prov1 = d1.get("provenance").unwrap().as_str().unwrap().to_string();
+    assert_ne!(prov1, "cache", "first request cannot be a cache hit");
+    assert_eq!(d1.get("feasible").unwrap().as_bool(), Some(true));
+    let lat = d1.get("latency_s").unwrap().as_f64().unwrap();
+    let ref_lat = d1.get("ref_latency_s").unwrap().as_f64().unwrap();
+    let speedup = d1.get("speedup_pct").unwrap().as_f64().unwrap();
+    assert!(lat.is_finite() && lat > 0.0);
+    assert!((speedup - 100.0 * (1.0 - lat / ref_lat)).abs() < 1e-6);
+
+    // The served placement never loses to a static single-device
+    // deployment (and with this training budget the learned placement
+    // should be at least as fast as the best of them).
+    let g = Workload::resolve(train_spec).unwrap().graph;
+    let tb = Testbed::by_id("cpu_gpu").unwrap();
+    let cpu = execute(&g, &Placement::all(g.n(), tb.reference), &tb).makespan;
+    assert!((ref_lat - cpu).abs() / cpu < 1e-9, "reference drifted: {ref_lat} vs {cpu}");
+    let best_single = tb
+        .placeable
+        .iter()
+        .map(|&d| execute(&g, &Placement::all(g.n(), d), &tb).makespan)
+        .fold(f64::INFINITY, f64::min);
+    assert!(lat <= best_single + 1e-12, "served {lat}, best single-device {best_single}");
+
+    // The identical repeat is answered from the cache with the same
+    // numbers — no inference re-run.
+    let d2 = protocol::parse_response(&client::roundtrip(&addr, &line, timeout).unwrap()).unwrap();
+    assert_eq!(d2.get("provenance").unwrap().as_str(), Some("cache"));
+    assert_eq!(d2.get("latency_s").unwrap().as_f64(), Some(lat));
+    assert_eq!(d2.get("fingerprint").unwrap().as_str(), d1.get("fingerprint").unwrap().as_str());
+
+    // Live metrics agree, then shut down cleanly.
+    let st = protocol::parse_response(
+        &client::roundtrip(&addr, &protocol::render_stats_request(), timeout).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(st.get("cache_hits").unwrap().as_usize(), Some(1));
+    assert_eq!(st.get("placements").unwrap().as_usize(), Some(2));
+    let bye = client::roundtrip(&addr, &protocol::render_shutdown_request(), timeout).unwrap();
+    assert!(protocol::parse_response(&bye).is_ok());
+    let status = child.0.wait().unwrap();
+    assert!(status.success(), "serve did not exit cleanly");
+}
+
+#[test]
+fn mismatched_checkpoints_are_clear_errors_not_panics() {
+    let (ckpt, cfg) = tiny_checkpoint("seq:8", 1);
+    // Serving a 2-action checkpoint on a 3-action testbed is refused
+    // with both testbeds named.
+    let wide = Config { testbed: "paper3".to_string(), ..cfg.clone() };
+    let err = PlacementService::new(ckpt.clone(), &wide, ServeOptions::default()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("cpu_gpu") && msg.contains("paper3"), "{msg}");
+    // The matching testbed constructs fine.
+    assert!(PlacementService::new(ckpt, &cfg, ServeOptions::default()).is_ok());
+}

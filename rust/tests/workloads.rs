@@ -185,7 +185,7 @@ fn generalization_trains_on_suite_and_zero_shots_held_out() {
     let cfg = native_cfg();
     let train = vec!["seq:12".to_string(), "layered:3x2:1".to_string(), "random:14:2".to_string()];
     let eval = vec!["layered:4x3:5".to_string(), "transformer:1:1".to_string()];
-    let (table, outcomes) = generalize::run(&cfg, &train, &eval, 1, 2).unwrap();
+    let (table, outcomes) = generalize::run(&cfg, &train, &eval, 1, 2, None).unwrap();
     assert_eq!(outcomes.len(), 5);
     assert_eq!(table.rows.len(), 5);
     assert_eq!(outcomes.iter().filter(|o| o.held_out).count(), 2);
