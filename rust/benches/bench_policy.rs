@@ -1,35 +1,43 @@
 //! `cargo bench` target for the native policy backend: per-call timings
 //! of the three PolicyBackend entry points (fwd / placer / train) on each
-//! paper benchmark, so future kernel optimizations (blocking, SIMD,
-//! sparsity) have a recorded baseline to beat.
+//! paper benchmark, plus the batched multi-rollout path, so kernel
+//! optimizations (blocking, SIMD, sparsity, arenas) have a recorded
+//! baseline to beat.
 //!
 //! The train timing measures one full Eq. 14 window: `update_timestep`
 //! re-forwards with dropout, the hand-written backward pass, and Adam.
+//!
+//! Flags (after `--`): `--json` emits one `hsdag-bench-v1` document on
+//! stdout (the BENCH_POLICY.json snapshot format); `--quick` trims the
+//! iteration counts for CI smoke runs:
+//!
+//!   cargo bench --bench bench_policy -- --json > BENCH_POLICY.json
 
 use hsdag::config::Config;
 use hsdag::models::Benchmark;
 use hsdag::parsing::parse;
 use hsdag::rl::{Env, NativeBackend, PolicyBackend, TrainBatch};
-use hsdag::util::bench::bench_fn;
+use hsdag::util::bench::BenchSession;
 
 fn main() {
-    println!("== native policy backend (fwd / placer / train per call) ==");
+    let mut session = BenchSession::from_args("bench_policy");
+    session.note("== native policy backend (fwd / placer / train per call) ==");
     let cfg = Config { backend: "native".to_string(), seed: 3, ..Default::default() };
     for b in Benchmark::ALL {
         let env = Env::new(b, &cfg).unwrap();
         let mut backend = NativeBackend::new(&env, &cfg).unwrap();
-        println!(
+        session.note(&format!(
             "-- {} ({} working nodes, {} edges, {} actions) --",
             b.id(),
             env.n_nodes,
             env.n_edges,
             env.n_actions()
-        );
+        ));
         let h = cfg.hidden;
         let fb = vec![0f32; env.v_pad * h];
 
         // fwd: encoder + edge scorer at the real graph size.
-        bench_fn(&format!("policy/fwd/{}", b.id()), 1, 10, || {
+        session.run(&format!("policy/fwd/{}", b.id()), 1, 10, || {
             backend.fwd(&env, &fb).unwrap()
         });
 
@@ -44,8 +52,19 @@ fn main() {
         for m in gmask.iter_mut().take(part.n_groups) {
             *m = 1.0;
         }
-        bench_fn(&format!("policy/placer/{}", b.id()), 1, 20, || {
+        session.run(&format!("policy/placer/{}", b.id()), 1, 20, || {
             backend.placer(&env, &out, &cids, &gmask).unwrap()
+        });
+
+        // placer_many: the serve daemon's batched path — 1 greedy + 4
+        // stochastic rollouts through one stacked weight pass, vs five
+        // independent placer calls above.
+        let roll = 5usize;
+        let fwds: Vec<&hsdag::rl::PolicyFwd> = vec![&out; roll];
+        let cids_refs: Vec<&[i32]> = vec![&cids; roll];
+        let gmask_refs: Vec<&[f32]> = vec![&gmask; roll];
+        session.run(&format!("policy/placer_many:5/{}", b.id()), 1, 20, || {
+            backend.placer_many(&env, &fwds, &cids_refs, &gmask_refs).unwrap()
         });
 
         // train: one full buffered window built from the partition above
@@ -70,7 +89,7 @@ fn main() {
             }
         }
         let coeff: Vec<f32> = (0..t).map(|i| 0.5 - 0.02 * i as f32).collect();
-        bench_fn(&format!("policy/train/{}", b.id()), 0, 3, || {
+        session.run(&format!("policy/train/{}", b.id()), 0, 3, || {
             let batch = TrainBatch {
                 t,
                 v,
@@ -86,4 +105,5 @@ fn main() {
             backend.train(&env, &batch).unwrap()
         });
     }
+    session.finish();
 }

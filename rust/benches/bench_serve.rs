@@ -1,14 +1,16 @@
 //! Serving-layer micro-bench: what does one placement request cost on
 //! each of the three service paths, and how fast do checkpoints move?
 //!
-//!   cargo bench --bench bench_serve
+//!   cargo bench --bench bench_serve [-- --json --quick]
 //!
 //! Covers: the cold path (workload resolution + env construction +
-//! policy inference), the cache-hit path (fingerprint + LRU lookup), the
-//! budget-exhausted fallback path (baselines only), raw fingerprint
-//! throughput, checkpoint serialize / parse / disk round-trip, and a
-//! TCP loadgen against a live server on an ephemeral loopback port —
-//! the end-to-end req/s number the ROADMAP's serving goal cares about.
+//! batched policy inference), the cache-hit path (fingerprint + LRU
+//! lookup), the budget-exhausted fallback path (baselines only), raw
+//! fingerprint throughput, checkpoint serialize / parse / disk
+//! round-trip, and a TCP loadgen against a live server on an ephemeral
+//! loopback port — the end-to-end req/s number the ROADMAP's serving
+//! goal cares about. `--json` renders everything as one `hsdag-bench-v1`
+//! document; `--quick` trims iteration counts for CI smoke runs.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -21,9 +23,10 @@ use hsdag::serve::{
     client, fingerprint, protocol, Checkpoint, CheckpointMeta, PlacementService, ServeOptions,
     Server,
 };
-use hsdag::util::bench::bench_fn;
+use hsdag::util::bench::{BenchResult, BenchSession};
 
 fn main() {
+    let mut session = BenchSession::from_args("bench_serve");
     // One small trained policy drives every case.
     let cfg = Config {
         backend: "native".to_string(),
@@ -48,80 +51,100 @@ fn main() {
         },
     );
 
-    println!("== request paths (in-process service, {train_spec}) ==");
+    session.note(&format!("== request paths (in-process service, {train_spec}) =="));
     let service = Arc::new(
         PlacementService::new(ckpt.clone(), &cfg, ServeOptions::default()).unwrap(),
     );
     let cold_line =
         protocol::render_place_request(Some(train_spec), None, None, None, None, true);
-    bench_fn("serve/place/cold (no_cache)", 2, 12, || {
+    session.run("serve/place/cold (no_cache)", 2, 12, || {
         let (resp, _) = service.handle_line(&cold_line);
         resp.len()
     });
     let warm_line =
         protocol::render_place_request(Some(train_spec), None, None, None, None, false);
     let (_, _) = service.handle_line(&warm_line); // prime the cache
-    bench_fn("serve/place/cache-hit", 3, 200, || {
+    session.run("serve/place/cache-hit", 3, 200, || {
         let (resp, _) = service.handle_line(&warm_line);
         resp.len()
     });
     let fallback_line =
         protocol::render_place_request(Some(train_spec), None, None, Some(0.0), None, true);
-    bench_fn("serve/place/fallback (budget 0)", 2, 20, || {
+    session.run("serve/place/fallback (budget 0)", 2, 20, || {
         let (resp, _) = service.handle_line(&fallback_line);
         resp.len()
     });
 
-    println!("== fingerprinting ==");
+    session.note("== fingerprinting ==");
     for spec in ["layered:6x4:1", "resnet"] {
         let g = Workload::resolve(spec).unwrap().graph;
-        let r = bench_fn(&format!("serve/fingerprint/{spec}"), 3, 50, || {
+        let r = session.run(&format!("serve/fingerprint/{spec}"), 3, 50, || {
             fingerprint(&g, "cpu_gpu")
         });
-        println!("  -> {spec}: {} nodes, {:.1} ns/node", g.n(), r.median_ns / g.n() as f64);
+        session.note(&format!(
+            "  -> {spec}: {} nodes, {:.1} ns/node",
+            g.n(),
+            r.median_ns / g.n() as f64
+        ));
     }
 
-    println!("== checkpoint serialize / parse ==");
+    session.note("== checkpoint serialize / parse ==");
     let text = ckpt.to_json();
     let scalars = 3 * ckpt.store.n_scalars() + 1;
-    println!("  checkpoint document: {} bytes for {scalars} scalars", text.len());
-    bench_fn("serve/checkpoint/serialize", 2, 10, || ckpt.to_json().len());
-    bench_fn("serve/checkpoint/parse", 2, 10, || {
+    session.note(&format!(
+        "  checkpoint document: {} bytes for {scalars} scalars",
+        text.len()
+    ));
+    session.run("serve/checkpoint/serialize", 2, 10, || ckpt.to_json().len());
+    session.run("serve/checkpoint/parse", 2, 10, || {
         Checkpoint::parse(&text).unwrap().store.n()
     });
     let dir = std::env::temp_dir().join("hsdag_bench_serve");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("bench.ckpt.json");
-    bench_fn("serve/checkpoint/save+load (disk)", 2, 6, || {
+    session.run("serve/checkpoint/save+load (disk)", 2, 6, || {
         ckpt.save(&path).unwrap();
         Checkpoint::load(&path).unwrap().store.n()
     });
 
-    println!("== TCP loadgen (ephemeral loopback server, cache-hit path) ==");
+    session.note("== TCP loadgen (ephemeral loopback server, cache-hit path) ==");
     let server = Server::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
     let addr = server.local_addr().to_string();
     let handle = server.spawn(4).unwrap();
     let timeout = Duration::from_secs(30);
-    let n = 500;
+    let n = if session.is_quick() { 25 } else { 500 };
     let t0 = Instant::now();
     let mut conn = client::Connection::open(&addr, timeout).unwrap();
     for _ in 0..n {
         conn.send(&warm_line).unwrap();
     }
     let secs = t0.elapsed().as_secs_f64();
-    println!(
+    let per_req_ns = secs / n as f64 * 1e9;
+    session.note(&format!(
         "  {n} pipelined requests in {secs:.3}s ({:.0} req/s, {:.1} us/req)",
         n as f64 / secs,
-        secs / n as f64 * 1e6
-    );
+        per_req_ns / 1e3
+    ));
+    // The loadgen is one aggregate measurement, so the three summary
+    // statistics collapse to the per-request mean.
+    session.push(BenchResult {
+        name: "serve/tcp/pipelined-request".to_string(),
+        iters: n,
+        median_ns: per_req_ns,
+        mean_ns: per_req_ns,
+        min_ns: per_req_ns,
+    });
     client::roundtrip(&addr, &protocol::render_shutdown_request(), timeout).unwrap();
     handle.join().unwrap();
     let s = service.stats_view();
-    println!(
-        "  server counters: {} placements, hit rate {:.1}%, p50 {:.3} ms, p99 {:.3} ms",
+    session.note(&format!(
+        "  server counters: {} placements, hit rate {:.1}%, {} trivial evals, \
+         p50 {:.3} ms, p99 {:.3} ms",
         s.placements,
         100.0 * s.cache_hit_rate,
+        s.trivial_evals,
         s.p50_ms,
         s.p99_ms
-    );
+    ));
+    session.finish();
 }

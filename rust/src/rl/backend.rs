@@ -135,6 +135,28 @@ pub trait PolicyBackend {
         gmask: &[f32],
     ) -> Result<Vec<f32>>;
 
+    /// Batched forward over B independent feedback states. Backends that
+    /// can stack the weight passes (native) override this; the default
+    /// just loops. Results are element-wise identical to B [`Self::fwd`]
+    /// calls.
+    fn fwd_many(&mut self, env: &Env, fbs: &[&[f32]]) -> Result<Vec<PolicyFwd>> {
+        fbs.iter().map(|fb| self.fwd(env, fb)).collect()
+    }
+
+    /// Batched placer over B rollouts (each with its own partition, and
+    /// possibly its own forward). Element-wise identical to B
+    /// [`Self::placer`] calls; the native backend runs the head as one
+    /// stacked `[Σ groups, h]` weight pass.
+    fn placer_many(
+        &mut self,
+        env: &Env,
+        fwds: &[&PolicyFwd],
+        cids: &[&[i32]],
+        gmasks: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        (0..fwds.len()).map(|i| self.placer(env, fwds[i], cids[i], gmasks[i])).collect()
+    }
+
     /// One Eq. 14 REINFORCE/Adam update over `batch`. Returns the loss.
     fn train(&mut self, env: &Env, batch: &TrainBatch) -> Result<f32>;
 
@@ -232,18 +254,27 @@ impl PolicyBackend for NativeBackend {
     fn describe(&self) -> String {
         format!(
             "native (pure-rust kernels, {} params, hidden {})",
-            self.policy.params.n_scalars(),
+            self.policy.params().n_scalars(),
             self.hidden
         )
     }
 
     fn params(&self) -> &ParamStore {
-        &self.policy.params
+        self.policy.params()
     }
 
     fn fwd(&mut self, _env: &Env, fb: &[f32]) -> Result<PolicyFwd> {
         let (z, scores) = self.policy.fwd(fb);
         Ok(PolicyFwd { z, scores, z_lit: None })
+    }
+
+    fn fwd_many(&mut self, _env: &Env, fbs: &[&[f32]]) -> Result<Vec<PolicyFwd>> {
+        Ok(self
+            .policy
+            .fwd_many(fbs)
+            .into_iter()
+            .map(|(z, scores)| PolicyFwd { z, scores, z_lit: None })
+            .collect())
     }
 
     fn placer(
@@ -254,6 +285,17 @@ impl PolicyBackend for NativeBackend {
         gmask: &[f32],
     ) -> Result<Vec<f32>> {
         Ok(self.policy.placer(&fwd.z, cids, gmask))
+    }
+
+    fn placer_many(
+        &mut self,
+        _env: &Env,
+        fwds: &[&PolicyFwd],
+        cids: &[&[i32]],
+        gmasks: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let zs: Vec<&[f32]> = fwds.iter().map(|f| f.z.as_slice()).collect();
+        Ok(self.policy.placer_many(&zs, cids, gmasks))
     }
 
     fn train(&mut self, _env: &Env, batch: &TrainBatch) -> Result<f32> {
@@ -273,12 +315,14 @@ impl PolicyBackend for NativeBackend {
     }
 
     fn export_params(&self) -> ParamStore {
-        self.policy.params.clone()
+        self.policy.params().clone()
     }
 
     fn import_params(&mut self, snapshot: &ParamStore) -> Result<()> {
-        check_layout(&self.policy.params, snapshot)?;
-        self.policy.params = snapshot.clone();
+        check_layout(self.policy.params(), snapshot)?;
+        // set_params bumps the policy's version counter, invalidating the
+        // memoized input-MLP activations.
+        self.policy.set_params(snapshot.clone());
         Ok(())
     }
 }
@@ -614,7 +658,7 @@ mod tests {
         let env_b = Env::for_workload(w, &cfg).unwrap();
         let mut backend_b = NativeBackend::new(&env_b, &cfg).unwrap();
         backend_b.import_params(&snap).unwrap();
-        for (a, b) in snap.params.iter().zip(backend_b.policy().params.params.iter()) {
+        for (a, b) in snap.params.iter().zip(backend_b.policy().params().params.iter()) {
             assert_eq!(a.as_f32(), b.as_f32());
         }
         // A snapshot from a different hidden size is rejected.
@@ -631,7 +675,7 @@ mod tests {
         let env = Env::for_workload(w, &cfg).unwrap();
         let snap = NativeBackend::new(&env, &cfg).unwrap().export_params();
         let restored = NativeBackend::from_snapshot(&env, &cfg, &snap).unwrap();
-        for (a, b) in snap.params.iter().zip(restored.policy().params.params.iter()) {
+        for (a, b) in snap.params.iter().zip(restored.policy().params().params.iter()) {
             assert_eq!(a.as_f32(), b.as_f32());
         }
         // Wrong hidden size: a message, not a panic.

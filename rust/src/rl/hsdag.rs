@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 
-use super::backend::{BackendFactory, PolicyBackend, TrainBatch};
+use super::backend::{BackendFactory, PolicyBackend, PolicyFwd, TrainBatch};
 use super::env::Env;
 use super::search::{reinforce_coefficients, SearchResult, Tracker};
 use crate::config::Config;
@@ -110,6 +110,12 @@ pub struct HsdagAgent {
     rng: Rng,
     /// Last partition (exposed for Figure 2 dumps).
     pub last_partition: Option<Partition>,
+    // Reusable per-step buffers (PR 6: the hot step loop allocates
+    // nothing beyond the simulator report).
+    step_cids: Vec<i32>,  // [V] — padded tail stays zero
+    step_gmask: Vec<f32>, // [V]
+    gsum: Vec<f32>,       // [n_groups, H], grow-only
+    gcount: Vec<f32>,     // [n_groups], grow-only
 }
 
 impl HsdagAgent {
@@ -137,6 +143,10 @@ impl HsdagAgent {
             baseline: Ema::new(0.1),
             rng: Rng::new(cfg.seed ^ 0xA6E27),
             last_partition: None,
+            step_cids: vec![0; env.v_pad],
+            step_gmask: vec![0.0; env.v_pad],
+            gsum: Vec::new(),
+            gcount: Vec::new(),
         })
     }
 
@@ -171,11 +181,16 @@ impl HsdagAgent {
     /// One Alg. 1 step. `explore` enables sampling + edge dropout;
     /// greedy argmax otherwise.
     pub fn step(&mut self, env: &Env, explore: bool) -> Result<StepOutcome> {
-        let v_pad = env.v_pad;
         let h = self.h;
+        let will_buffer = explore && !self.buffer.full();
 
         // (1) Forward: Z + edge scores on the current feedback state.
-        let fb_used = self.fb.clone();
+        // Stash the fb this forward sees straight into its replay plane
+        // (pre-update), instead of a temporary clone.
+        if will_buffer {
+            let (t, v) = (self.buffer.len, self.buffer.v);
+            self.buffer.fb[t * v * h..(t + 1) * v * h].copy_from_slice(&self.fb);
+        }
         let out = self.backend.fwd(env, &self.fb)?;
 
         // (2) Parse on real edges, with exploration dropout.
@@ -189,16 +204,17 @@ impl HsdagAgent {
         }
         let part = parse(env.working_graph(), &scores);
 
-        // (3) Placer: group logits.
-        let mut cids = vec![0i32; v_pad];
-        let mut gmask = vec![0f32; v_pad];
+        // (3) Placer: group logits. The cids/gmask planes are reusable
+        // agent buffers: every real node slot is overwritten, the padded
+        // tail stays zero, and the group mask is re-zeroed per step.
         for (node, &c) in part.cluster_of.iter().enumerate() {
-            cids[node] = c as i32;
+            self.step_cids[node] = c as i32;
         }
-        for m in gmask.iter_mut().take(part.n_groups) {
+        self.step_gmask.iter_mut().for_each(|m| *m = 0.0);
+        for m in self.step_gmask.iter_mut().take(part.n_groups) {
             *m = 1.0;
         }
-        let logits = self.backend.placer(env, &out, &cids, &gmask)?;
+        let logits = self.backend.placer(env, &out, &self.step_cids, &self.step_gmask)?;
         // Action-space width comes from the env's testbed, not the config:
         // the backend contract was validated against it at construction.
         let nd = env.n_actions();
@@ -224,36 +240,43 @@ impl HsdagAgent {
         // OOM placements earn the flat penalty, never a latency reward.
         let reward = env.reward_with_penalty(&report, latency, self.cfg.oom_penalty);
 
-        // (5) Feedback update: fb_v += mean Z of v's group.
-        let mut gsum = vec![0f32; part.n_groups * h];
-        let mut gcount = vec![0f32; part.n_groups];
+        // (5) Feedback update: fb_v += mean Z of v's group (grow-only
+        // group accumulators, zeroed per step).
+        let ng = part.n_groups;
+        if self.gsum.len() < ng * h {
+            self.gsum.resize(ng * h, 0.0);
+        }
+        if self.gcount.len() < ng {
+            self.gcount.resize(ng, 0.0);
+        }
+        self.gsum[..ng * h].iter_mut().for_each(|x| *x = 0.0);
+        self.gcount[..ng].iter_mut().for_each(|x| *x = 0.0);
         for (node, &c) in part.cluster_of.iter().enumerate() {
-            gcount[c] += 1.0;
+            self.gcount[c] += 1.0;
             for k in 0..h {
-                gsum[c * h + k] += out.z[node * h + k];
+                self.gsum[c * h + k] += out.z[node * h + k];
             }
         }
         for (node, &c) in part.cluster_of.iter().enumerate() {
-            let cnt = gcount[c].max(1.0);
+            let cnt = self.gcount[c].max(1.0);
             for k in 0..h {
-                self.fb[node * h + k] += gsum[c * h + k] / cnt;
+                self.fb[node * h + k] += self.gsum[c * h + k] / cnt;
             }
         }
 
         // (6) Buffer (skip when full: the caller decides when to flush
         // via `update`; extra exploration steps are still valid rollouts).
-        if explore && !self.buffer.full() {
+        // The fb plane was already stored before the forward.
+        if will_buffer {
             let t = self.buffer.len;
             let (v, e) = (self.buffer.v, self.buffer.e);
-            // Store the fb that THIS forward actually saw (pre-update).
-            self.buffer.fb[t * v * h..(t + 1) * v * h].copy_from_slice(&fb_used);
-            self.buffer.cids[t * v..(t + 1) * v].copy_from_slice(&cids);
+            self.buffer.cids[t * v..(t + 1) * v].copy_from_slice(&self.step_cids);
             for g in 0..part.n_groups {
                 // Store per-group actions in group-slot order (the loss
                 // indexes logits by group id).
                 self.buffer.actions[t * v + g] = group_devices[g] as i32;
             }
-            self.buffer.gmask[t * v..(t + 1) * v].copy_from_slice(&gmask);
+            self.buffer.gmask[t * v..(t + 1) * v].copy_from_slice(&self.step_gmask);
             for (ei, &r) in part.retained.iter().enumerate() {
                 self.buffer.retained[t * e + ei] = if r { 1.0 } else { 0.0 };
             }
@@ -270,6 +293,90 @@ impl HsdagAgent {
             n_groups: part.n_groups,
             feasible,
         })
+    }
+
+    /// Execute `1 + n_stochastic` *independent* single-step rollouts from
+    /// a fresh (zero) feedback state: rollout 0 is greedy, the rest
+    /// sample with exploration edge dropout. Because every rollout sees
+    /// the same zero feedback, ONE backend forward serves all of them;
+    /// the per-rollout partitions then go through one batched
+    /// [`PolicyBackend::placer_many`] weight pass. This is the serve
+    /// daemon's per-request policy path: B rollouts cost one encoder pass
+    /// + one stacked placer pass instead of B of each.
+    ///
+    /// Nothing is buffered for training and the feedback state is left
+    /// reset; `last_partition` reflects the greedy rollout.
+    pub fn rollout_batch(&mut self, env: &Env, n_stochastic: usize) -> Result<Vec<StepOutcome>> {
+        let b = 1 + n_stochastic;
+        let v_pad = env.v_pad;
+        let nd = env.n_actions();
+        self.reset_episode();
+        let out = self.backend.fwd(env, &self.fb)?;
+
+        // Parse each rollout (rollout 0 greedy: raw scores; the rest with
+        // exploration edge dropout on a scratch copy).
+        let mut parts = Vec::with_capacity(b);
+        let mut cids_all = vec![0i32; b * v_pad];
+        let mut gmask_all = vec![0f32; b * v_pad];
+        let mut scores = out.scores.clone();
+        for bi in 0..b {
+            if bi > 0 {
+                scores.copy_from_slice(&out.scores);
+                if self.cfg.dropout_network > 0.0 {
+                    for s in scores.iter_mut() {
+                        if self.rng.next_f64() < self.cfg.dropout_network {
+                            *s = -1.0;
+                        }
+                    }
+                }
+            }
+            let part = parse(env.working_graph(), &scores);
+            let cids = &mut cids_all[bi * v_pad..(bi + 1) * v_pad];
+            for (node, &c) in part.cluster_of.iter().enumerate() {
+                cids[node] = c as i32;
+            }
+            gmask_all[bi * v_pad..bi * v_pad + part.n_groups].fill(1.0);
+            parts.push(part);
+        }
+
+        // One stacked placer pass over all rollouts (shared Z).
+        let fwds: Vec<&PolicyFwd> = vec![&out; b];
+        let cids_refs: Vec<&[i32]> =
+            cids_all.chunks_exact(v_pad).take(b).collect();
+        let gmask_refs: Vec<&[f32]> =
+            gmask_all.chunks_exact(v_pad).take(b).collect();
+        let logits_all = self.backend.placer_many(env, &fwds, &cids_refs, &gmask_refs)?;
+
+        // Sample / argmax, expand and simulate per rollout. Serving ranks
+        // placements by deterministic makespan, so no measurement noise.
+        let mut outs = Vec::with_capacity(b);
+        for (bi, part) in parts.iter().enumerate() {
+            let logits = &logits_all[bi];
+            let mut group_devices = vec![0usize; part.n_groups];
+            for g in 0..part.n_groups {
+                let row = &logits[g * nd..(g + 1) * nd];
+                group_devices[g] = if bi > 0 {
+                    sample_softmax(row, self.cfg.temperature, &mut self.rng)
+                } else {
+                    argmax(row)
+                };
+            }
+            let actions: Vec<usize> =
+                part.cluster_of.iter().map(|&c| group_devices[c]).collect();
+            let report = env.report(&actions)?;
+            let feasible = report.feasible();
+            let reward = env.reward_with_penalty(&report, report.makespan, self.cfg.oom_penalty);
+            outs.push(StepOutcome {
+                actions,
+                latency: report.makespan,
+                det_latency: report.makespan,
+                reward,
+                n_groups: part.n_groups,
+                feasible,
+            });
+        }
+        self.last_partition = parts.into_iter().next();
+        Ok(outs)
     }
 
     /// Flush the buffer through the backend's train step (Eq. 14).

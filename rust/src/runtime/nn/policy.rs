@@ -5,19 +5,39 @@
 //! update runs with zero external dependencies.
 //!
 //! Unlike the PJRT path, everything here works at the *real* working-graph
-//! sizes (no static padding) and the GCN aggregation is sparse (COO over
+//! sizes (no static padding) and the GCN aggregation is sparse (CSR over
 //! A+I), so a training step costs O((V + E) · H + V · H²) instead of
 //! O(V_pad² · H). Parameter layout and initialization mirror
 //! `python/compile/model.py::hsdag_param_spec` exactly (Glorot-uniform
 //! weights, zero biases) via [`ParamStore::init_hsdag`], drawn from the
 //! deterministic seeded [`Rng`], so runs reproduce bit-for-bit from a
 //! fixed seed.
+//!
+//! ## Hot-path memory discipline (PR 6)
+//!
+//! The policy owns a [`Scratch`] arena: every forward/backward
+//! intermediate lives in a pre-sized reusable buffer, so steady-state
+//! `fwd` / `placer` / `loss_and_grads` calls allocate nothing (buffers
+//! grow monotonically to the largest batch seen). Three consequences:
+//!
+//! - The hot entry points take `&mut self` (they scribble in the arena).
+//! - Parameters are private behind [`NativePolicy::params`] /
+//!   [`NativePolicy::params_mut`]: the arena memoizes the input-MLP
+//!   activations `h0`/`h1` (which depend only on X⁰ and the TRANS
+//!   weights, *not* on feedback), keyed by a version counter that every
+//!   mutable access bumps. During rollouts and serving — where weights
+//!   are frozen — the first two matmuls of every forward are free.
+//! - [`NativePolicy::fwd_many`] / [`NativePolicy::placer_many`] stack B
+//!   rollouts into single `[B·n, h]` weight passes. Row independence of
+//!   the matmul kernels makes the batched results bit-identical to B
+//!   separate calls.
 
 use anyhow::{ensure, Result};
 
 use super::{
-    add_bias, aggregate, colsum_acc, log_softmax, matmul, matmul_a_bt, matmul_at_b_acc,
-    normalized_adjacency_coo, relu, relu_bwd, segment_mean, sigmoid,
+    add_bias, aggregate_bias_relu_into, aggregate_into, colsum_acc, log_softmax_into,
+    matmul_a_bt_into, matmul_at_b_acc, matmul_at_b_acc_sparse, matmul_into, matmul_sparse_rows,
+    normalized_adjacency_coo, relu, relu_bwd, segment_mean_into, sigmoid, Csr,
 };
 use crate::runtime::params::ParamStore;
 use crate::util::Rng;
@@ -81,54 +101,82 @@ pub struct NativeBatch<'a> {
     pub key: [u32; 2],
 }
 
-/// Forward caches of the encoder (kept for the backward pass).
-struct Encode {
+/// Grow-only buffer grab: returns `&mut v[..len]` without zeroing (the
+/// `_into` kernels fully overwrite their output; accumulation buffers
+/// `fill(0.0)` explicitly at the use site).
+fn take(v: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+    &mut v[..len]
+}
+
+/// Reusable workspace for every forward/backward intermediate: grown on
+/// first use (and when a larger rollout batch arrives), then reused so
+/// steady-state policy calls allocate nothing.
+///
+/// Also holds the memoized input-MLP activations: `h0`/`h1` depend only
+/// on X⁰ and the TRANS parameters, so they are recomputed only when
+/// `trans_version` falls behind the policy's parameter version.
+#[derive(Default)]
+pub struct Scratch {
+    /// Parameter version `h0`/`h1` were computed at (0 = never).
+    trans_version: u64,
     h0: Vec<f32>,
     h1: Vec<f32>,
-    /// Per-element dropout multiplier (0 or 1/(1−p)); None outside train.
-    keep: Option<Vec<f32>>,
+    /// Dropout multipliers (0 or 1/(1−p)) for the last train forward.
+    keep: Vec<f32>,
+    // Stacked encoder/edge-scorer activations, `[B·n, h]` / `[B·e, h]`.
     f: Vec<f32>,
+    g: Vec<f32>,
     z1: Vec<f32>,
     z: Vec<f32>,
-}
-
-/// Forward caches of the edge scorer.
-struct EdgeFwd {
     pr: Vec<f32>,
     eh: Vec<f32>,
-    s: Vec<f32>,
-}
-
-/// Forward caches of the placer head (raw, unmasked logits).
-struct PlacerFwd {
-    /// Group slots actually computed (`max(cids) + 1` — with the dense
-    /// group ids the parser produces, exactly `n_groups`).
-    slots: usize,
+    scores: Vec<f32>,
+    // Stacked placer-head activations, `[Σ slots, ·]`.
     pooled: Vec<f32>,
     counts: Vec<f32>,
     ph: Vec<f32>,
     logits: Vec<f32>,
+    lsm: Vec<f32>,
+    // Backward temporaries.
+    dz: Vec<f32>,
+    dg: Vec<f32>,
+    dq: Vec<f32>,
+    dh0: Vec<f32>,
+    dlogits: Vec<f32>,
+    dph: Vec<f32>,
+    dpooled: Vec<f32>,
+    deh: Vec<f32>,
+    dpr: Vec<f32>,
 }
 
-/// The pure-rust HSDAG policy (parameters + graph constants).
+/// The pure-rust HSDAG policy (parameters + graph constants + arena).
 pub struct NativePolicy {
-    /// Parameters + Adam state, `hsdag_param_spec` order.
-    pub params: ParamStore,
+    /// Parameters + Adam state, `hsdag_param_spec` order. Private: all
+    /// mutation goes through [`Self::params_mut`] so the memoized
+    /// input-MLP cache can never go stale.
+    params: ParamStore,
+    /// Bumped on every mutable parameter access / train step.
+    version: u64,
     n: usize,
     d: usize,
     h: usize,
     nd: usize,
-    /// Node features X⁰, `[n, d]` (unpadded).
+    /// Node features X⁰, `[n, d]` (unpadded, genuinely sparse rows).
     x0: Vec<f32>,
     /// Real working-graph edges.
     edges: Vec<(usize, usize)>,
-    /// Â = D̂^{-1/2}(A+I)D̂^{-1/2} in COO form (symmetric).
-    coo: Vec<(u32, u32, f32)>,
+    /// Â = D̂^{-1/2}(A+I)D̂^{-1/2}, CSR with COO-stable row order
+    /// (symmetric, so forward and backward share it).
+    csr: Csr,
     /// Adam learning rate.
     lr: f64,
     /// Train-forward dropout probability (0 disables; tests use 0 for
     /// finite-difference gradient checks).
     pub train_dropout: f64,
+    scratch: Scratch,
 }
 
 impl NativePolicy {
@@ -152,18 +200,21 @@ impl NativePolicy {
             ensure!(s < n && t < n, "edge ({s},{t}) out of range for {n} nodes");
         }
         let coo = normalized_adjacency_coo(n, &edges);
+        let csr = Csr::from_coo(n, &coo);
         let params = ParamStore::init_hsdag(d, h, nd, rng);
         Ok(NativePolicy {
             params,
+            version: 1,
             n,
             d,
             h,
             nd,
             x0,
             edges,
-            coo,
+            csr,
             lr,
             train_dropout: TRAIN_DROPOUT,
+            scratch: Scratch::default(),
         })
     }
 
@@ -175,115 +226,264 @@ impl NativePolicy {
         self.edges.len()
     }
 
-    fn p(&self, i: usize) -> &[f32] {
-        self.params.params[i].as_f32()
+    /// Read-only parameter access.
+    pub fn params(&self) -> &ParamStore {
+        &self.params
     }
 
-    /// Encoder: MLP → (optional dropout) → +fb → 2 GCN layers.
-    /// `fb` is the evolving feedback state, at least `[n, h]` row-major.
-    fn encode(&self, fb: &[f32], mut drop_rng: Option<&mut Rng>) -> Encode {
+    /// Mutable parameter access. Bumps the version counter so the
+    /// memoized input-MLP activations are recomputed on the next forward
+    /// — required for correctness, cheap when called around real updates.
+    pub fn params_mut(&mut self) -> &mut ParamStore {
+        self.version = self.version.wrapping_add(1);
+        &mut self.params
+    }
+
+    /// Replace the whole parameter store (checkpoint import).
+    pub fn set_params(&mut self, ps: ParamStore) {
+        self.version = self.version.wrapping_add(1);
+        self.params = ps;
+    }
+
+    /// Encoder over `B = fbs.len()` stacked rollouts (shared graph,
+    /// per-rollout feedback): fills `scratch.{f, z1, z}` as `[B·n, h]`
+    /// planes. The input MLP is memoized (feedback enters *after* it);
+    /// the GCN matmuls run as single stacked `[B·n, h] @ [h, h]` passes
+    /// and the sparse aggregation runs per `[n, h]` block. Dropout
+    /// (train path) is only meaningful for B = 1.
+    fn encode_stack(&mut self, fbs: &[&[f32]], mut drop_rng: Option<&mut Rng>) {
         let (n, d, h) = (self.n, self.d, self.h);
-        let mut h0 = matmul(&self.x0, self.p(TRANS_W0), n, d, h);
-        add_bias(&mut h0, self.p(TRANS_B0), n, h);
-        relu(&mut h0);
-        let mut h1 = matmul(&h0, self.p(TRANS_W1), n, h, h);
-        add_bias(&mut h1, self.p(TRANS_B1), n, h);
-        relu(&mut h1);
-        let (mut f, keep) = match drop_rng.as_deref_mut() {
-            Some(rng) if self.train_dropout > 0.0 => {
-                let inv = (1.0 / (1.0 - self.train_dropout)) as f32;
-                let keep: Vec<f32> = (0..n * h)
-                    .map(|_| if rng.next_f64() < self.train_dropout { 0.0 } else { inv })
-                    .collect();
-                (h1.iter().zip(&keep).map(|(a, k)| a * k).collect::<Vec<f32>>(), Some(keep))
-            }
-            _ => (h1.clone(), None),
-        };
-        for (fi, fbv) in f.iter_mut().zip(&fb[..n * h]) {
-            *fi += fbv;
+        let b = fbs.len();
+        debug_assert!(drop_rng.is_none() || b == 1, "dropout is a train-path (B=1) feature");
+        // Memoized input MLP: h0 = relu(X⁰ W + b), h1 = relu(h0 W + b).
+        if self.scratch.trans_version != self.version {
+            let s = &mut self.scratch;
+            let ps = &self.params;
+            matmul_sparse_rows(
+                &self.x0,
+                ps.params[TRANS_W0].as_f32(),
+                n,
+                d,
+                h,
+                take(&mut s.h0, n * h),
+            );
+            add_bias(&mut s.h0[..n * h], ps.params[TRANS_B0].as_f32(), n, h);
+            relu(&mut s.h0[..n * h]);
+            matmul_into(
+                &s.h0[..n * h],
+                ps.params[TRANS_W1].as_f32(),
+                n,
+                h,
+                h,
+                take(&mut s.h1, n * h),
+            );
+            add_bias(&mut s.h1[..n * h], ps.params[TRANS_B1].as_f32(), n, h);
+            relu(&mut s.h1[..n * h]);
+            s.trans_version = self.version;
         }
-        let g0 = matmul(&f, self.p(GCN_W0), n, h, h);
-        let mut z1 = aggregate(&self.coo, &g0, n, h);
-        add_bias(&mut z1, self.p(GCN_B0), n, h);
-        relu(&mut z1);
-        let g1 = matmul(&z1, self.p(GCN_W1), n, h, h);
-        let mut z = aggregate(&self.coo, &g1, n, h);
-        add_bias(&mut z, self.p(GCN_B1), n, h);
-        relu(&mut z);
-        Encode { h0, h1, keep, f, z1, z }
+        let s = &mut self.scratch;
+        let ps = &self.params;
+        // f_b = h1 (·keep) + fb_b, stacked.
+        let use_drop = drop_rng.is_some() && self.train_dropout > 0.0;
+        if use_drop {
+            let rng = drop_rng.as_deref_mut().expect("checked");
+            let inv = (1.0 / (1.0 - self.train_dropout)) as f32;
+            let keep = take(&mut s.keep, n * h);
+            for k in keep.iter_mut() {
+                *k = if rng.next_f64() < self.train_dropout { 0.0 } else { inv };
+            }
+        }
+        let f = take(&mut s.f, b * n * h);
+        for (bi, fb) in fbs.iter().enumerate() {
+            let dst = &mut f[bi * n * h..(bi + 1) * n * h];
+            if use_drop {
+                for ((o, (&h1v, &kv)), fbv) in
+                    dst.iter_mut().zip(s.h1.iter().zip(&s.keep)).zip(&fb[..n * h])
+                {
+                    *o = h1v * kv + fbv;
+                }
+            } else {
+                for ((o, &h1v), fbv) in dst.iter_mut().zip(&s.h1[..n * h]).zip(&fb[..n * h]) {
+                    *o = h1v + fbv;
+                }
+            }
+        }
+        // GCN layer 1: stacked weight pass, per-block fused aggregation.
+        matmul_into(f, ps.params[GCN_W0].as_f32(), b * n, h, h, take(&mut s.g, b * n * h));
+        let z1 = take(&mut s.z1, b * n * h);
+        for bi in 0..b {
+            aggregate_bias_relu_into(
+                &self.csr,
+                &s.g[bi * n * h..(bi + 1) * n * h],
+                ps.params[GCN_B0].as_f32(),
+                h,
+                &mut z1[bi * n * h..(bi + 1) * n * h],
+            );
+        }
+        // GCN layer 2.
+        matmul_into(z1, ps.params[GCN_W1].as_f32(), b * n, h, h, &mut s.g[..b * n * h]);
+        let z = take(&mut s.z, b * n * h);
+        for bi in 0..b {
+            aggregate_bias_relu_into(
+                &self.csr,
+                &s.g[bi * n * h..(bi + 1) * n * h],
+                ps.params[GCN_B1].as_f32(),
+                h,
+                &mut z[bi * n * h..(bi + 1) * n * h],
+            );
+        }
     }
 
-    /// GPN edge scorer: sigmoid(MLP(z_s ⊙ z_d)) per real edge.
-    fn edge_fwd(&self, z: &[f32]) -> EdgeFwd {
-        let (e, h) = (self.edges.len(), self.h);
-        let mut pr = vec![0f32; e * h];
-        for (ei, &(s, t)) in self.edges.iter().enumerate() {
-            let zs = &z[s * h..(s + 1) * h];
-            let zd = &z[t * h..(t + 1) * h];
-            for (k, out) in pr[ei * h..(ei + 1) * h].iter_mut().enumerate() {
-                *out = zs[k] * zd[k];
+    /// GPN edge scorer over the stacked embeddings in `scratch.z`: fills
+    /// `scratch.{pr, eh, scores}` (`[B·e, h]` / `[B·e]`).
+    fn edge_fwd_stack(&mut self, b: usize) {
+        let (e, h, n) = (self.edges.len(), self.h, self.n);
+        let s = &mut self.scratch;
+        let ps = &self.params;
+        let pr = take(&mut s.pr, b * e * h);
+        for bi in 0..b {
+            let z = &s.z[bi * n * h..(bi + 1) * n * h];
+            for (ei, &(src, dst)) in self.edges.iter().enumerate() {
+                let zs = &z[src * h..(src + 1) * h];
+                let zd = &z[dst * h..(dst + 1) * h];
+                let row = &mut pr[(bi * e + ei) * h..(bi * e + ei + 1) * h];
+                for ((o, a), c) in row.iter_mut().zip(zs).zip(zd) {
+                    *o = a * c;
+                }
             }
         }
-        let mut eh = matmul(&pr, self.p(EDGE_W0), e, h, h);
-        add_bias(&mut eh, self.p(EDGE_B0), e, h);
-        relu(&mut eh);
-        let w1 = self.p(EDGE_W1); // [h, 1]
-        let b1 = self.p(EDGE_B1)[0];
-        let mut s = vec![0f32; e];
-        for ei in 0..e {
-            let logit: f32 =
-                eh[ei * h..(ei + 1) * h].iter().zip(w1).map(|(a, b)| a * b).sum::<f32>() + b1;
-            s[ei] = sigmoid(logit);
+        matmul_into(pr, ps.params[EDGE_W0].as_f32(), b * e, h, h, take(&mut s.eh, b * e * h));
+        add_bias(&mut s.eh[..b * e * h], ps.params[EDGE_B0].as_f32(), b * e, h);
+        relu(&mut s.eh[..b * e * h]);
+        let w1 = ps.params[EDGE_W1].as_f32(); // [h, 1]
+        let b1 = ps.params[EDGE_B1].as_f32()[0];
+        let scores = take(&mut s.scores, b * e);
+        for (row, out) in s.eh.chunks_exact(h).take(b * e).zip(scores.iter_mut()) {
+            let logit: f32 = row.iter().zip(w1).map(|(a, w)| a * w).sum::<f32>() + b1;
+            *out = sigmoid(logit);
         }
-        EdgeFwd { pr, eh, s }
-    }
-
-    /// Placer head over group slots (raw logits, no validity mask).
-    /// Only slots up to `max(cids) + 1` are computed — with dense group
-    /// ids that is exactly `n_groups`, so the head skips the (often ~10x
-    /// more numerous) empty padding slots on every step and every train
-    /// re-forward.
-    fn placer_fwd(&self, z: &[f32], cids: &[i32]) -> PlacerFwd {
-        let (n, h, nd) = (self.n, self.h, self.nd);
-        let slots = cids[..n].iter().map(|&c| c.max(0) as usize + 1).max().unwrap_or(1);
-        let (pooled, counts) = segment_mean(z, &cids[..n], n, h, slots);
-        let mut ph = matmul(&pooled, self.p(PLACE_W0), slots, h, h);
-        add_bias(&mut ph, self.p(PLACE_B0), slots, h);
-        relu(&mut ph);
-        let mut logits = matmul(&ph, self.p(PLACE_W1), slots, h, nd);
-        add_bias(&mut logits, self.p(PLACE_B1), slots, nd);
-        PlacerFwd { slots, pooled, counts, ph, logits }
     }
 
     /// Search-path forward: node embeddings Z `[n, h]` and edge scores
     /// `[e]` over the real edges. No dropout (greedy/sampling path).
-    pub fn fwd(&self, fb: &[f32]) -> (Vec<f32>, Vec<f32>) {
-        let enc = self.encode(fb, None);
-        let ef = self.edge_fwd(&enc.z);
-        (enc.z, ef.s)
+    pub fn fwd(&mut self, fb: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        self.encode_stack(&[fb], None);
+        self.edge_fwd_stack(1);
+        let s = &self.scratch;
+        (s.z[..self.n * self.h].to_vec(), s.scores[..self.edges.len()].to_vec())
+    }
+
+    /// Batched search-path forward: B rollouts' feedback states through
+    /// one stacked weight pass. Bit-identical to B separate [`Self::fwd`]
+    /// calls (matmul rows are independent), ~B× cheaper on weights and
+    /// with the input MLP computed zero times (memoized) instead of B.
+    pub fn fwd_many(&mut self, fbs: &[&[f32]]) -> Vec<(Vec<f32>, Vec<f32>)> {
+        if fbs.is_empty() {
+            return Vec::new();
+        }
+        let (n, h, e) = (self.n, self.h, self.edges.len());
+        self.encode_stack(fbs, None);
+        self.edge_fwd_stack(fbs.len());
+        let s = &self.scratch;
+        (0..fbs.len())
+            .map(|bi| {
+                (
+                    s.z[bi * n * h..(bi + 1) * n * h].to_vec(),
+                    s.scores[bi * e..(bi + 1) * e].to_vec(),
+                )
+            })
+            .collect()
+    }
+
+    /// Placer head over the stacked per-rollout groupings: segment-means
+    /// each rollout's `z` by its `cids` into a shared `[Σ slots, h]` row
+    /// block, runs the head MLP as single stacked matmuls, then splits
+    /// and masks per rollout. Returns `slots_b` row offsets via the
+    /// per-rollout logits lengths (`slots_b · nd` each).
+    fn placer_fwd_stack(&mut self, zs: &[&[f32]], cids: &[&[i32]]) -> Vec<usize> {
+        let (n, h, nd) = (self.n, self.h, self.nd);
+        let b = zs.len();
+        let slots_per: Vec<usize> = cids
+            .iter()
+            .map(|c| c[..n].iter().map(|&x| x.max(0) as usize + 1).max().unwrap_or(1))
+            .collect();
+        let total: usize = slots_per.iter().sum();
+        let s = &mut self.scratch;
+        let ps = &self.params;
+        let pooled = take(&mut s.pooled, total * h);
+        let counts = take(&mut s.counts, total);
+        let mut off = 0usize;
+        for bi in 0..b {
+            let sl = slots_per[bi];
+            segment_mean_into(
+                &zs[bi][..n * h],
+                &cids[bi][..n],
+                n,
+                h,
+                sl,
+                &mut pooled[off * h..(off + sl) * h],
+                &mut counts[off..off + sl],
+            );
+            off += sl;
+        }
+        matmul_into(pooled, ps.params[PLACE_W0].as_f32(), total, h, h, take(&mut s.ph, total * h));
+        add_bias(&mut s.ph[..total * h], ps.params[PLACE_B0].as_f32(), total, h);
+        relu(&mut s.ph[..total * h]);
+        matmul_into(
+            &s.ph[..total * h],
+            ps.params[PLACE_W1].as_f32(),
+            total,
+            h,
+            nd,
+            take(&mut s.logits, total * nd),
+        );
+        add_bias(&mut s.logits[..total * nd], ps.params[PLACE_B1].as_f32(), total, nd);
+        slots_per
     }
 
     /// Placer: per-group-slot device logits, row-major `[slots, nd]`
     /// with `slots = max(cids) + 1` (== `n_groups` for the parser's
     /// dense ids, so every valid group has a row); slots with
     /// `gmask <= 0` get −1e9 so softmax mass stays on valid groups.
-    pub fn placer(&self, z: &[f32], cids: &[i32], gmask: &[f32]) -> Vec<f32> {
+    pub fn placer(&mut self, z: &[f32], cids: &[i32], gmask: &[f32]) -> Vec<f32> {
+        self.placer_many(&[z], &[cids], &[gmask]).pop().expect("one rollout in, one out")
+    }
+
+    /// Batched placer over B rollouts (shared weights, per-rollout
+    /// partitions). Bit-identical to B separate [`Self::placer`] calls.
+    pub fn placer_many(
+        &mut self,
+        zs: &[&[f32]],
+        cids: &[&[i32]],
+        gmasks: &[&[f32]],
+    ) -> Vec<Vec<f32>> {
+        debug_assert!(zs.len() == cids.len() && zs.len() == gmasks.len());
+        if zs.is_empty() {
+            return Vec::new();
+        }
         let nd = self.nd;
-        let pf = self.placer_fwd(z, cids);
-        let mut logits = pf.logits;
-        for g in 0..pf.slots {
-            if gmask[g] <= 0.0 {
-                for l in logits[g * nd..(g + 1) * nd].iter_mut() {
-                    *l = -1e9;
+        let slots_per = self.placer_fwd_stack(zs, cids);
+        let s = &self.scratch;
+        let mut out = Vec::with_capacity(zs.len());
+        let mut off = 0usize;
+        for (bi, &sl) in slots_per.iter().enumerate() {
+            let mut logits = s.logits[off * nd..(off + sl) * nd].to_vec();
+            for g in 0..sl {
+                if gmasks[bi][g] <= 0.0 {
+                    for l in logits[g * nd..(g + 1) * nd].iter_mut() {
+                        *l = -1e9;
+                    }
                 }
             }
+            out.push(logits);
+            off += sl;
         }
-        logits
+        out
     }
 
     /// Eq. 14 loss over a buffered window, forward only (tests and
     /// gradient checks). `with_dropout` matches the train-step forward.
-    pub fn loss(&self, batch: &NativeBatch, with_dropout: bool) -> f32 {
+    pub fn loss(&mut self, batch: &NativeBatch, with_dropout: bool) -> f32 {
         self.loss_and_grads(batch, with_dropout).0
     }
 
@@ -292,14 +492,17 @@ impl NativePolicy {
     pub fn train(&mut self, batch: &NativeBatch) -> Result<f32> {
         let (loss, grads) = self.loss_and_grads(batch, true);
         ensure!(loss.is_finite(), "non-finite native training loss {loss}");
-        self.params.adam_step(&grads, self.lr, ADAM_B1, ADAM_B2, ADAM_EPS);
+        let lr = self.lr;
+        self.params_mut().adam_step(&grads, lr, ADAM_B1, ADAM_B2, ADAM_EPS);
         Ok(loss)
     }
 
     /// loss = −Σ_t coeff[t] · log p(P_t | G'; θ), with log p = placer
     /// log-likelihood + λ · partition (GPN) log-likelihood; gradients for
-    /// every parameter by hand-written reverse-mode over the caches.
-    fn loss_and_grads(&self, batch: &NativeBatch, with_dropout: bool) -> (f32, Vec<Vec<f32>>) {
+    /// every parameter by hand-written reverse-mode over the arena
+    /// caches. Only the returned gradient vectors are allocated; all
+    /// intermediates run through [`Scratch`].
+    pub fn loss_and_grads(&mut self, batch: &NativeBatch, with_dropout: bool) -> (f32, Vec<Vec<f32>>) {
         let (n, d, h, nd) = (self.n, self.d, self.h, self.nd);
         let e = self.edges.len();
         debug_assert!(batch.v_stride >= n && batch.e_stride >= e);
@@ -321,123 +524,227 @@ impl NativePolicy {
             let gmask_t = &batch.gmask[base_v..base_v + n];
             let ret_t = &batch.retained[t * batch.e_stride..t * batch.e_stride + e];
 
-            let enc = self.encode(fb_t, if with_dropout { Some(&mut rng) } else { None });
-            let ef = self.edge_fwd(&enc.z);
-            let pf = self.placer_fwd(&enc.z, cids_t);
+            // Re-forward this step through the arena. The placer stack
+            // needs `z` as an input slice while writing other arena
+            // fields, so run it via the stacked helper on split borrows.
+            self.encode_stack(&[fb_t], if with_dropout { Some(&mut rng) } else { None });
+            self.edge_fwd_stack(1);
+            let used_dropout = with_dropout && self.train_dropout > 0.0;
+            {
+                let (n_, h_, nd_) = (n, h, nd);
+                let s = &mut self.scratch;
+                let ps = &self.params;
+                let slots =
+                    cids_t.iter().map(|&x| x.max(0) as usize + 1).max().unwrap_or(1);
+                segment_mean_into(
+                    &s.z[..n_ * h_],
+                    cids_t,
+                    n_,
+                    h_,
+                    slots,
+                    take(&mut s.pooled, slots * h_),
+                    take(&mut s.counts, slots),
+                );
+                matmul_into(
+                    &s.pooled[..slots * h_],
+                    ps.params[PLACE_W0].as_f32(),
+                    slots,
+                    h_,
+                    h_,
+                    take(&mut s.ph, slots * h_),
+                );
+                add_bias(&mut s.ph[..slots * h_], ps.params[PLACE_B0].as_f32(), slots, h_);
+                relu(&mut s.ph[..slots * h_]);
+                matmul_into(
+                    &s.ph[..slots * h_],
+                    ps.params[PLACE_W1].as_f32(),
+                    slots,
+                    h_,
+                    nd_,
+                    take(&mut s.logits, slots * nd_),
+                );
+                add_bias(&mut s.logits[..slots * nd_], ps.params[PLACE_B1].as_f32(), slots, nd_);
 
-            // d loss / d logp_t.
-            let w = -c;
+                // d loss / d logp_t.
+                let w = -c;
 
-            // Placer log-likelihood + dlogits = w · (onehot − softmax).
-            // Valid groups live in slots 0..pf.slots (dense ids), so the
-            // gmask scan stops there too.
-            let slots = pf.slots;
-            let mut lp_place = 0f64;
-            let mut dlogits = vec![0f32; slots * nd];
-            for g in 0..slots {
-                if gmask_t[g] <= 0.0 {
-                    continue;
+                // Placer log-likelihood + dlogits = w · (onehot − softmax).
+                // Valid groups live in slots 0..slots (dense ids), so the
+                // gmask scan stops there too.
+                let mut lp_place = 0f64;
+                let dlogits = take(&mut s.dlogits, slots * nd_);
+                dlogits.fill(0.0);
+                let lsm = take(&mut s.lsm, nd_);
+                for g in 0..slots {
+                    if gmask_t[g] <= 0.0 {
+                        continue;
+                    }
+                    let row = &s.logits[g * nd_..(g + 1) * nd_];
+                    log_softmax_into(row, lsm);
+                    let a = actions_t[g] as usize;
+                    lp_place += lsm[a] as f64;
+                    for (j, lpj) in lsm.iter().enumerate() {
+                        let onehot = if j == a { 1.0 } else { 0.0 };
+                        dlogits[g * nd_ + j] = w * (onehot - lpj.exp());
+                    }
                 }
-                let row = &pf.logits[g * nd..(g + 1) * nd];
-                let logp = log_softmax(row);
-                let a = actions_t[g] as usize;
-                lp_place += logp[a] as f64;
-                for (j, lpj) in logp.iter().enumerate() {
-                    let onehot = if j == a { 1.0 } else { 0.0 };
-                    dlogits[g * nd + j] = w * (onehot - lpj.exp());
-                }
-            }
 
-            // Partition (GPN) log-likelihood + per-edge logit gradients.
-            let mut lp_part = 0f64;
-            let mut dlogit_e = vec![0f32; e];
-            let wl = w * LAMBDA / denom;
-            for ei in 0..e {
-                let r = ret_t[ei];
-                let sr = ef.s[ei];
-                let sc = sr.clamp(SCORE_EPS, 1.0 - SCORE_EPS);
-                lp_part += (r * sc.ln() + (1.0 - r) * (1.0 - sc).ln()) as f64;
-                // Clip gradient: flat outside the clamp window.
-                if sr > SCORE_EPS && sr < 1.0 - SCORE_EPS {
-                    let ds = wl * (r / sc - (1.0 - r) / (1.0 - sc));
-                    dlogit_e[ei] = ds * sr * (1.0 - sr);
+                // Partition (GPN) log-likelihood + per-edge logit grads.
+                let mut lp_part = 0f64;
+                let dlogit_e = take(&mut s.dpr, e); // reuse before dpr's real job
+                dlogit_e.fill(0.0);
+                let wl = w * LAMBDA / denom;
+                for ei in 0..e {
+                    let r = ret_t[ei];
+                    let sr = s.scores[ei];
+                    let sc = sr.clamp(SCORE_EPS, 1.0 - SCORE_EPS);
+                    lp_part += (r * sc.ln() + (1.0 - r) * (1.0 - sc).ln()) as f64;
+                    // Clip gradient: flat outside the clamp window.
+                    if sr > SCORE_EPS && sr < 1.0 - SCORE_EPS {
+                        let ds = wl * (r / sc - (1.0 - r) / (1.0 - sc));
+                        dlogit_e[ei] = ds * sr * (1.0 - sr);
+                    }
                 }
-            }
-            lp_part /= denom as f64;
-            loss += -(c as f64) * (lp_place + LAMBDA as f64 * lp_part);
+                lp_part /= denom as f64;
+                loss += -(c as f64) * (lp_place + LAMBDA as f64 * lp_part);
 
-            // ---- backward: placer head → dz ----
-            let mut dz = vec![0f32; n * h];
-            matmul_at_b_acc(&pf.ph, &dlogits, slots, h, nd, &mut grads[PLACE_W1]);
-            colsum_acc(&dlogits, slots, nd, &mut grads[PLACE_B1]);
-            let mut dph = matmul_a_bt(&dlogits, self.p(PLACE_W1), slots, nd, h);
-            relu_bwd(&mut dph, &pf.ph);
-            matmul_at_b_acc(&pf.pooled, &dph, slots, h, h, &mut grads[PLACE_W0]);
-            colsum_acc(&dph, slots, h, &mut grads[PLACE_B0]);
-            let dpooled = matmul_a_bt(&dph, self.p(PLACE_W0), slots, h, h);
-            for (node, &cid) in cids_t.iter().enumerate() {
-                let c = cid as usize;
-                let cnt = pf.counts[c].max(1.0);
-                let src = &dpooled[c * h..(c + 1) * h];
-                for (o, s) in dz[node * h..(node + 1) * h].iter_mut().zip(src) {
-                    *o += s / cnt;
+                // ---- backward: placer head → dz ----
+                let dz = take(&mut s.dz, n_ * h_);
+                dz.fill(0.0);
+                matmul_at_b_acc(
+                    &s.ph[..slots * h_],
+                    &s.dlogits[..slots * nd_],
+                    slots,
+                    h_,
+                    nd_,
+                    &mut grads[PLACE_W1],
+                );
+                colsum_acc(&s.dlogits[..slots * nd_], slots, nd_, &mut grads[PLACE_B1]);
+                let dph = take(&mut s.dph, slots * h_);
+                matmul_a_bt_into(
+                    &s.dlogits[..slots * nd_],
+                    ps.params[PLACE_W1].as_f32(),
+                    slots,
+                    nd_,
+                    h_,
+                    dph,
+                );
+                relu_bwd(dph, &s.ph[..slots * h_]);
+                matmul_at_b_acc(
+                    &s.pooled[..slots * h_],
+                    dph,
+                    slots,
+                    h_,
+                    h_,
+                    &mut grads[PLACE_W0],
+                );
+                colsum_acc(dph, slots, h_, &mut grads[PLACE_B0]);
+                let dpooled = take(&mut s.dpooled, slots * h_);
+                matmul_a_bt_into(
+                    &s.dph[..slots * h_],
+                    ps.params[PLACE_W0].as_f32(),
+                    slots,
+                    h_,
+                    h_,
+                    dpooled,
+                );
+                for (node, &cid) in cids_t.iter().enumerate() {
+                    let cg = cid as usize;
+                    let cnt = s.counts[cg].max(1.0);
+                    let src = &s.dpooled[cg * h_..(cg + 1) * h_];
+                    for (o, sv) in s.dz[node * h_..(node + 1) * h_].iter_mut().zip(src) {
+                        *o += sv / cnt;
+                    }
                 }
-            }
 
-            // ---- backward: edge scorer → dz ----
-            let w1 = self.p(EDGE_W1);
-            let mut deh = vec![0f32; e * h];
-            for (ei, &dl) in dlogit_e.iter().enumerate() {
-                if dl == 0.0 {
-                    continue;
+                // ---- backward: edge scorer → dz ----
+                let w1 = ps.params[EDGE_W1].as_f32();
+                let deh = take(&mut s.deh, e * h_);
+                deh.fill(0.0);
+                for ei in 0..e {
+                    let dl = s.dpr[ei]; // dlogit_e alias
+                    if dl == 0.0 {
+                        continue;
+                    }
+                    for (k, out) in deh[ei * h_..(ei + 1) * h_].iter_mut().enumerate() {
+                        *out = dl * w1[k];
+                    }
+                    for (k, g) in grads[EDGE_W1].iter_mut().enumerate() {
+                        *g += s.eh[ei * h_ + k] * dl;
+                    }
+                    grads[EDGE_B1][0] += dl;
                 }
-                for (k, out) in deh[ei * h..(ei + 1) * h].iter_mut().enumerate() {
-                    *out = dl * w1[k];
+                relu_bwd(deh, &s.eh[..e * h_]);
+                matmul_at_b_acc(&s.pr[..e * h_], deh, e, h_, h_, &mut grads[EDGE_W0]);
+                colsum_acc(deh, e, h_, &mut grads[EDGE_B0]);
+                let dpr = take(&mut s.dpr, e * h_);
+                matmul_a_bt_into(
+                    &s.deh[..e * h_],
+                    ps.params[EDGE_W0].as_f32(),
+                    e,
+                    h_,
+                    h_,
+                    dpr,
+                );
+                for (ei, &(src, t2)) in self.edges.iter().enumerate() {
+                    let dpr_row = &s.dpr[ei * h_..(ei + 1) * h_];
+                    for k in 0..h_ {
+                        let zs = s.z[src * h_ + k];
+                        let zd = s.z[t2 * h_ + k];
+                        s.dz[src * h_ + k] += dpr_row[k] * zd;
+                        s.dz[t2 * h_ + k] += dpr_row[k] * zs;
+                    }
                 }
-                for (k, g) in grads[EDGE_W1].iter_mut().enumerate() {
-                    *g += ef.eh[ei * h + k] * dl;
-                }
-                grads[EDGE_B1][0] += dl;
-            }
-            relu_bwd(&mut deh, &ef.eh);
-            matmul_at_b_acc(&ef.pr, &deh, e, h, h, &mut grads[EDGE_W0]);
-            colsum_acc(&deh, e, h, &mut grads[EDGE_B0]);
-            let dpr = matmul_a_bt(&deh, self.p(EDGE_W0), e, h, h);
-            for (ei, &(s, t2)) in self.edges.iter().enumerate() {
-                let dpr_row = &dpr[ei * h..(ei + 1) * h];
-                for k in 0..h {
-                    let zs = enc.z[s * h + k];
-                    let zd = enc.z[t2 * h + k];
-                    dz[s * h + k] += dpr_row[k] * zd;
-                    dz[t2 * h + k] += dpr_row[k] * zs;
-                }
-            }
 
-            // ---- backward: encoder ----
-            let mut dq1 = dz;
-            relu_bwd(&mut dq1, &enc.z);
-            colsum_acc(&dq1, n, h, &mut grads[GCN_B1]);
-            let dg1 = aggregate(&self.coo, &dq1, n, h); // Â symmetric
-            matmul_at_b_acc(&enc.z1, &dg1, n, h, h, &mut grads[GCN_W1]);
-            let mut dq0 = matmul_a_bt(&dg1, self.p(GCN_W1), n, h, h);
-            relu_bwd(&mut dq0, &enc.z1);
-            colsum_acc(&dq0, n, h, &mut grads[GCN_B0]);
-            let dg0 = aggregate(&self.coo, &dq0, n, h);
-            matmul_at_b_acc(&enc.f, &dg0, n, h, h, &mut grads[GCN_W0]);
-            let mut df = matmul_a_bt(&dg0, self.p(GCN_W0), n, h, h);
-            if let Some(keep) = &enc.keep {
-                for (x, k) in df.iter_mut().zip(keep) {
-                    *x *= k;
+                // ---- backward: encoder ----
+                relu_bwd(&mut s.dz[..n_ * h_], &s.z[..n_ * h_]); // dq1, in place
+                colsum_acc(&s.dz[..n_ * h_], n_, h_, &mut grads[GCN_B1]);
+                let dg = take(&mut s.dg, n_ * h_);
+                aggregate_into(&self.csr, &s.dz[..n_ * h_], h_, dg); // Â symmetric
+                matmul_at_b_acc(&s.z1[..n_ * h_], dg, n_, h_, h_, &mut grads[GCN_W1]);
+                let dq = take(&mut s.dq, n_ * h_);
+                matmul_a_bt_into(&s.dg[..n_ * h_], ps.params[GCN_W1].as_f32(), n_, h_, h_, dq);
+                relu_bwd(dq, &s.z1[..n_ * h_]);
+                colsum_acc(dq, n_, h_, &mut grads[GCN_B0]);
+                aggregate_into(&self.csr, &s.dq[..n_ * h_], h_, &mut s.dg[..n_ * h_]);
+                matmul_at_b_acc(&s.f[..n_ * h_], &s.dg[..n_ * h_], n_, h_, h_, &mut grads[GCN_W0]);
+                // df reuses dz (the encoder's dz is fully consumed above).
+                matmul_a_bt_into(
+                    &s.dg[..n_ * h_],
+                    ps.params[GCN_W0].as_f32(),
+                    n_,
+                    h_,
+                    h_,
+                    &mut s.dz[..n_ * h_],
+                );
+                if used_dropout {
+                    for (x, k) in s.dz[..n_ * h_].iter_mut().zip(&s.keep) {
+                        *x *= k;
+                    }
                 }
+                relu_bwd(&mut s.dz[..n_ * h_], &s.h1[..n_ * h_]); // dp1, in place
+                matmul_at_b_acc(
+                    &s.h0[..n_ * h_],
+                    &s.dz[..n_ * h_],
+                    n_,
+                    h_,
+                    h_,
+                    &mut grads[TRANS_W1],
+                );
+                colsum_acc(&s.dz[..n_ * h_], n_, h_, &mut grads[TRANS_B1]);
+                let dh0 = take(&mut s.dh0, n_ * h_);
+                matmul_a_bt_into(
+                    &s.dz[..n_ * h_],
+                    ps.params[TRANS_W1].as_f32(),
+                    n_,
+                    h_,
+                    h_,
+                    dh0,
+                );
+                relu_bwd(dh0, &s.h0[..n_ * h_]);
+                matmul_at_b_acc_sparse(&self.x0, dh0, n_, d, h_, &mut grads[TRANS_W0]);
+                colsum_acc(dh0, n_, h_, &mut grads[TRANS_B0]);
             }
-            let mut dp1 = df;
-            relu_bwd(&mut dp1, &enc.h1);
-            matmul_at_b_acc(&enc.h0, &dp1, n, h, h, &mut grads[TRANS_W1]);
-            colsum_acc(&dp1, n, h, &mut grads[TRANS_B1]);
-            let mut dh0 = matmul_a_bt(&dp1, self.p(TRANS_W1), n, h, h);
-            relu_bwd(&mut dh0, &enc.h0);
-            matmul_at_b_acc(&self.x0, &dh0, n, d, h, &mut grads[TRANS_W0]);
-            colsum_acc(&dh0, n, h, &mut grads[TRANS_B0]);
         }
         (loss as f32, grads)
     }
@@ -509,7 +816,7 @@ mod tests {
 
     #[test]
     fn fwd_shapes_and_score_range() {
-        let p = tiny_policy(1);
+        let mut p = tiny_policy(1);
         let fb = vec![0f32; 6 * 4];
         let (z, s) = p.fwd(&fb);
         assert_eq!(z.len(), 6 * 4);
@@ -520,7 +827,7 @@ mod tests {
 
     #[test]
     fn placer_masks_invalid_slots() {
-        let p = tiny_policy(2);
+        let mut p = tiny_policy(2);
         let fb = vec![0f32; 6 * 4];
         let (z, _) = p.fwd(&fb);
         // Three referenced group slots, but only the first two valid:
@@ -531,6 +838,81 @@ mod tests {
         assert_eq!(logits.len(), 3 * 2);
         assert!(logits[..4].iter().all(|&l| l > -1e8));
         assert!(logits[4..].iter().all(|&l| l <= -1e8));
+    }
+
+    #[test]
+    fn fwd_many_matches_independent_fwd_calls_bitwise() {
+        // The batched stacked pass must be observationally identical to
+        // N separate forwards — down to the last bit.
+        let mut p = tiny_policy(21);
+        let (n, h) = (6usize, 4usize);
+        let mut rng = Rng::new(33);
+        let fbs: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..n * h).map(|_| rng.next_f32() * 0.2 - 0.1).collect()).collect();
+        let singles: Vec<(Vec<f32>, Vec<f32>)> = fbs.iter().map(|fb| p.fwd(fb)).collect();
+        let views: Vec<&[f32]> = fbs.iter().map(|v| v.as_slice()).collect();
+        let batched = p.fwd_many(&views);
+        assert_eq!(batched.len(), singles.len());
+        for (bi, ((zb, sb), (zs, ss))) in batched.iter().zip(&singles).enumerate() {
+            assert_eq!(zb, zs, "z mismatch in rollout {bi}");
+            assert_eq!(sb, ss, "score mismatch in rollout {bi}");
+        }
+        // And a second batched call (arena reuse) still agrees.
+        let again = p.fwd_many(&views);
+        for ((za, sa), (zb, sb)) in again.iter().zip(&batched) {
+            assert_eq!(za, zb);
+            assert_eq!(sa, sb);
+        }
+    }
+
+    #[test]
+    fn placer_many_matches_independent_placer_calls_bitwise() {
+        let mut p = tiny_policy(22);
+        let fb = vec![0f32; 6 * 4];
+        let fb2: Vec<f32> = (0..6 * 4).map(|i| (i as f32) * 0.01).collect();
+        let rollouts = [
+            (p.fwd(&fb).0, vec![0, 0, 1, 1, 2, 2], vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]),
+            (p.fwd(&fb2).0, vec![0, 1, 1, 2, 3, 3], vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0]),
+            (p.fwd(&fb).0, vec![0, 0, 0, 0, 0, 1], vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0]),
+        ];
+        let singles: Vec<Vec<f32>> =
+            rollouts.iter().map(|(z, c, m)| p.placer(z, c, m)).collect();
+        let zs: Vec<&[f32]> = rollouts.iter().map(|(z, _, _)| z.as_slice()).collect();
+        let cs: Vec<&[i32]> = rollouts.iter().map(|(_, c, _)| c.as_slice()).collect();
+        let ms: Vec<&[f32]> = rollouts.iter().map(|(_, _, m)| m.as_slice()).collect();
+        let batched = p.placer_many(&zs, &cs, &ms);
+        assert_eq!(batched, singles);
+    }
+
+    #[test]
+    fn param_mutation_invalidates_memoized_input_mlp() {
+        // The memoized h0/h1 must be recomputed after any parameter
+        // mutation — a stale cache would silently freeze the input MLP.
+        // Twin policies: `a` forwards first (priming its memo), `b` never
+        // does; after the same mutation both must still agree bit-for-bit.
+        let mut a = tiny_policy(23);
+        let mut b = tiny_policy(23);
+        let fb = vec![0f32; 6 * 4];
+        let (z0, _) = a.fwd(&fb);
+        let (z0b, _) = a.fwd(&fb); // memo hit: identical
+        assert_eq!(z0, z0b);
+        for p in [&mut a, &mut b] {
+            for v in p.params_mut().params[TRANS_B1].as_f32_mut() {
+                *v += 10.0; // large shift: guaranteed visible through ReLU
+            }
+        }
+        let (za, sa) = a.fwd(&fb);
+        let (zb, sb) = b.fwd(&fb);
+        assert_eq!(za, zb, "stale memoized input MLP after params_mut");
+        assert_eq!(sa, sb);
+        assert_ne!(za, z0, "TRANS_B1 shift must reach the output");
+        // set_params also invalidates: import b's snapshot into a after
+        // perturbing a further, then both must agree again.
+        a.params_mut().params[TRANS_W1].as_f32_mut()[0] -= 3.0;
+        let _ = a.fwd(&fb);
+        a.set_params(b.params().clone());
+        let (za2, _) = a.fwd(&fb);
+        assert_eq!(za2, zb, "stale memoized input MLP after set_params");
     }
 
     #[test]
@@ -545,16 +927,16 @@ mod tests {
         // wrong transpose / missing term / sign error fails loudly.
         let mut rng = Rng::new(17);
         let eps = 5e-3f32;
-        for pi in 0..p.params.n() {
-            let numel = p.params.params[pi].numel();
+        for pi in 0..p.params().n() {
+            let numel = p.params().params[pi].numel();
             for _ in 0..3.min(numel) {
                 let idx = rng.below(numel);
-                let orig = p.params.params[pi].as_f32()[idx];
-                p.params.params[pi].as_f32_mut()[idx] = orig + eps;
+                let orig = p.params().params[pi].as_f32()[idx];
+                p.params_mut().params[pi].as_f32_mut()[idx] = orig + eps;
                 let lp = p.loss(&batch, false);
-                p.params.params[pi].as_f32_mut()[idx] = orig - eps;
+                p.params_mut().params[pi].as_f32_mut()[idx] = orig - eps;
                 let lm = p.loss(&batch, false);
-                p.params.params[pi].as_f32_mut()[idx] = orig;
+                p.params_mut().params[pi].as_f32_mut()[idx] = orig;
                 let fd = (lp - lm) / (2.0 * eps);
                 let an = grads[pi][idx];
                 let tol = (0.1 * (1.0 + fd.abs().max(an.abs()))).max(1e-2);
@@ -584,20 +966,20 @@ mod tests {
         };
         assert!(l1.is_finite() && l0.is_finite());
         assert!(l1 < l0, "loss should descend: {l0} -> {l1}");
-        assert_eq!(p.params.step, 30.0);
+        assert_eq!(p.params().step, 30.0);
     }
 
     #[test]
     fn zero_coefficients_leave_params_untouched() {
         let mut p = tiny_policy(5);
-        let before: Vec<f32> = p.params.params[TRANS_W0].as_f32().to_vec();
+        let before: Vec<f32> = p.params().params[TRANS_W0].as_f32().to_vec();
         let mut bufs = tiny_bufs();
         bufs.coeff = vec![0.0, 0.0];
         let batch = tiny_batch(&bufs);
         let loss = p.train(&batch).unwrap();
         assert_eq!(loss, 0.0);
         // Adam still counts the step, but zero grads move nothing.
-        assert_eq!(p.params.params[TRANS_W0].as_f32(), &before[..]);
+        assert_eq!(p.params().params[TRANS_W0].as_f32(), &before[..]);
     }
 
     #[test]
@@ -611,8 +993,8 @@ mod tests {
         let lb = b.train(&tiny_batch(&bufs)).unwrap();
         assert_eq!(la, lb);
         assert_eq!(
-            a.params.params[PLACE_W1].as_f32(),
-            b.params.params[PLACE_W1].as_f32()
+            a.params().params[PLACE_W1].as_f32(),
+            b.params().params[PLACE_W1].as_f32()
         );
     }
 }

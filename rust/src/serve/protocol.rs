@@ -258,6 +258,10 @@ pub struct StatsView {
     pub cache_hits: u64,
     pub fallbacks: u64,
     pub errors: u64,
+    /// Fresh trivial-candidate evaluation passes (single-device +
+    /// memory-greedy); repeats for a known fingerprint reuse the cached
+    /// evaluations instead.
+    pub trivial_evals: u64,
     pub cache_len: usize,
     pub cache_capacity: usize,
     pub qps: f64,
@@ -276,6 +280,7 @@ pub fn render_stats_response(s: &StatsView) -> String {
         ("cache_hits".to_string(), Json::Num(s.cache_hits as f64)),
         ("fallbacks".to_string(), Json::Num(s.fallbacks as f64)),
         ("errors".to_string(), Json::Num(s.errors as f64)),
+        ("trivial_evals".to_string(), Json::Num(s.trivial_evals as f64)),
         ("cache_len".to_string(), Json::Num(s.cache_len as f64)),
         ("cache_capacity".to_string(), Json::Num(s.cache_capacity as f64)),
         ("qps".to_string(), Json::Num(s.qps)),

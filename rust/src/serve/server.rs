@@ -36,10 +36,11 @@
 //! [`fingerprint`]: super::fingerprint::fingerprint
 //! [`cache`]: super::cache
 
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -62,6 +63,11 @@ use crate::util::stats;
 /// Service-time sliding window for the p50/p99 metrics.
 const SERVICE_TIME_WINDOW: usize = 4096;
 
+/// Stochastic rollouts per batched policy pass when a latency budget is
+/// set (between chunks the deadline is re-checked; unbounded requests
+/// run every rollout in a single pass).
+const ROLLOUT_CHUNK: usize = 2;
+
 /// Serving knobs (the `hsdag serve` flags).
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
@@ -81,13 +87,35 @@ impl Default for ServeOptions {
     }
 }
 
-/// What the cache remembers per fingerprint.
+/// A complete, server-default answer for one fingerprint.
 #[derive(Clone)]
 struct CachedPlacement {
     placement: Vec<usize>,
     latency_s: f64,
     ref_latency_s: f64,
     feasible: bool,
+}
+
+/// One evaluated non-learned candidate (a single-device deployment or
+/// the memory-greedy baseline). These depend only on the graph and the
+/// testbed — exactly what the fingerprint hashes — so they are computed
+/// once per fingerprint and shared across requests.
+#[derive(Clone)]
+struct TrivialCandidate {
+    makespan: f64,
+    feasible: bool,
+    placement: Placement,
+    name: String,
+}
+
+/// What the cache remembers per fingerprint. `answer` is only filled by
+/// a complete server-default request (the poisoning rules below), but
+/// `trivial` is knob-independent: a budget-truncated or knob-overridden
+/// request may still reuse and refresh it.
+#[derive(Clone, Default)]
+struct CacheEntry {
+    answer: Option<CachedPlacement>,
+    trivial: Option<Arc<Vec<TrivialCandidate>>>,
 }
 
 #[derive(Default)]
@@ -97,6 +125,9 @@ struct StatsInner {
     cache_hits: u64,
     fallbacks: u64,
     errors: u64,
+    /// Fresh single-device + memory-greedy evaluation passes (misses of
+    /// the per-fingerprint trivial-candidate cache).
+    trivial_evals: u64,
     service_ms: Vec<f64>,
     ring_idx: usize,
 }
@@ -109,9 +140,28 @@ pub struct PlacementService {
     trained_on: String,
     device_names: Vec<String>,
     opts: ServeOptions,
-    cache: Mutex<LruCache<u64, CachedPlacement>>,
+    cache: Mutex<LruCache<u64, CacheEntry>>,
+    /// Fingerprints with a server-default inference currently running
+    /// (single-flight: concurrent identical requests wait for the leader
+    /// and answer from the cache instead of duplicating the inference).
+    inflight: Mutex<HashSet<u64>>,
+    inflight_cv: Condvar,
     stats: Mutex<StatsInner>,
     started: Instant,
+}
+
+/// Removes a fingerprint from the in-flight set on scope exit (including
+/// the error paths) and wakes every waiter.
+struct FlightGuard<'a> {
+    svc: &'a PlacementService,
+    fp: u64,
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        self.svc.inflight.lock().unwrap().remove(&self.fp);
+        self.svc.inflight_cv.notify_all();
+    }
 }
 
 impl PlacementService {
@@ -134,6 +184,8 @@ impl PlacementService {
             trained_on: ckpt.meta.workload.clone(),
             params: ckpt.store,
             cache: Mutex::new(LruCache::new(opts.cache_capacity)),
+            inflight: Mutex::new(HashSet::new()),
+            inflight_cv: Condvar::new(),
             stats: Mutex::new(StatsInner::default()),
             started: Instant::now(),
             cfg,
@@ -149,6 +201,63 @@ impl PlacementService {
     /// What the checkpoint was trained on (banner text).
     pub fn trained_on(&self) -> &str {
         &self.trained_on
+    }
+
+    /// Evaluate the non-learned candidates for one environment: every
+    /// single-device deployment plus the capacity-aware memory-greedy.
+    fn eval_trivial(env: &Env) -> Vec<TrivialCandidate> {
+        let mut out: Vec<TrivialCandidate> = env
+            .testbed
+            .placeable
+            .iter()
+            .map(|&d| {
+                (
+                    Placement::all(env.graph.n(), d),
+                    format!("single:{}", env.testbed.devices[d].name),
+                )
+            })
+            .chain(std::iter::once((
+                baselines::memory_greedy_placement(&env.graph, &env.testbed),
+                "memory-greedy".to_string(),
+            )))
+            .map(|(p, name)| {
+                let rep = env.cost.evaluate(&env.graph, &p, &env.testbed);
+                TrivialCandidate {
+                    makespan: rep.makespan,
+                    feasible: rep.feasible(),
+                    placement: p,
+                    name,
+                }
+            })
+            .collect();
+        out.shrink_to_fit();
+        out
+    }
+
+    /// One cache probe: the complete answer for `fp` (ready to return as
+    /// a `provenance: "cache"` outcome) and/or the reusable
+    /// trivial-candidate evaluations.
+    #[allow(clippy::type_complexity)]
+    fn cache_lookup(
+        &self,
+        fp: u64,
+        fp_hex: &str,
+    ) -> (Option<PlaceOutcome>, Option<Arc<Vec<TrivialCandidate>>>) {
+        let mut cache = self.cache.lock().unwrap();
+        let Some(entry) = cache.get(&fp) else {
+            return (None, None);
+        };
+        let trivial = entry.trivial.clone();
+        let answer = entry.answer.as_ref().map(|hit| PlaceOutcome {
+            fingerprint: fp_hex.to_string(),
+            placement: hit.placement.clone(),
+            devices: self.device_names.clone(),
+            latency_s: hit.latency_s,
+            ref_latency_s: hit.ref_latency_s,
+            feasible: hit.feasible,
+            provenance: Provenance::Cache,
+        });
+        (answer, trivial)
     }
 
     /// Serve one placement request (the cache-or-infer-or-fallback core).
@@ -167,18 +276,48 @@ impl PlacementService {
         let fp = fingerprint(&workload.graph, &self.cfg.testbed);
         let fp_hex = format!("{fp:016x}");
 
+        // A request with server-default knobs: its answer may be cached,
+        // so concurrent duplicates can single-flight behind one leader.
+        // (With caching disabled the leader's answer could never reach
+        // the followers, so single-flight would only serialize them.)
+        let default_shaped = !req.no_cache
+            && req.budget_ms.is_none()
+            && req.rollouts.is_none()
+            && self.opts.cache_capacity > 0;
+
+        // Cache lookup + single-flight admission. `no_cache` bypasses the
+        // cache in both directions, including the trivial-candidate reuse.
+        let mut cached_trivial: Option<Arc<Vec<TrivialCandidate>>> = None;
+        let mut _flight: Option<FlightGuard<'_>> = None;
         if !req.no_cache {
-            let mut cache = self.cache.lock().unwrap();
-            if let Some(hit) = cache.get(&fp) {
-                return Ok(PlaceOutcome {
-                    fingerprint: fp_hex,
-                    placement: hit.placement.clone(),
-                    devices: self.device_names.clone(),
-                    latency_s: hit.latency_s,
-                    ref_latency_s: hit.ref_latency_s,
-                    feasible: hit.feasible,
-                    provenance: Provenance::Cache,
-                });
+            loop {
+                let (answer, trivial) = self.cache_lookup(fp, &fp_hex);
+                cached_trivial = trivial;
+                if let Some(hit) = answer {
+                    return Ok(hit);
+                }
+                if !default_shaped {
+                    break;
+                }
+                let mut infl = self.inflight.lock().unwrap();
+                if infl.insert(fp) {
+                    drop(infl);
+                    _flight = Some(FlightGuard { svc: self, fp });
+                    // Re-check as leader: a previous leader may have
+                    // completed between our miss and the insert; its put
+                    // happens-before our successful insert, so this
+                    // lookup is guaranteed to see the answer.
+                    let (answer, trivial) = self.cache_lookup(fp, &fp_hex);
+                    cached_trivial = trivial;
+                    if let Some(hit) = answer {
+                        return Ok(hit);
+                    }
+                    break;
+                }
+                // An identical default-shaped request is mid-inference on
+                // another worker: wait for it and re-read the cache (its
+                // answer lands there) instead of duplicating the work.
+                let _woken = self.inflight_cv.wait(infl).unwrap();
             }
         }
 
@@ -191,45 +330,72 @@ impl PlacementService {
         if !over(&deadline) {
             let backend = NativeBackend::from_snapshot(&env, &self.cfg, &self.params)?;
             let mut agent = HsdagAgent::with_backend(&env, Box::new(backend), &self.cfg)?;
-            agent.reset_episode();
-            let o = agent.step(&env, false)?;
-            candidates.push((o.det_latency, o.feasible, env.expand(&o.actions)?, Provenance::Policy));
+            let n_roll = req.rollouts.unwrap_or(self.opts.rollouts);
+            // The greedy rollout plus every stochastic one go through ONE
+            // batched policy pass when the request is unbounded (the
+            // server-default fast path). Under a deadline, rollouts run
+            // in bounded chunks so the budget can still cut the stage
+            // short between chunks.
             policy_complete = true;
-            for _ in 0..req.rollouts.unwrap_or(self.opts.rollouts) {
+            let mut remaining = n_roll;
+            let mut greedy_done = false;
+            loop {
+                let chunk = if deadline.is_none() {
+                    remaining
+                } else {
+                    remaining.min(ROLLOUT_CHUNK)
+                };
+                let outs = agent.rollout_batch(&env, chunk)?;
+                for (i, o) in outs.into_iter().enumerate() {
+                    if i == 0 && greedy_done {
+                        // Later chunks re-run the deterministic greedy
+                        // rollout; its candidate is already recorded.
+                        continue;
+                    }
+                    candidates.push((
+                        o.det_latency,
+                        o.feasible,
+                        env.expand(&o.actions)?,
+                        Provenance::Policy,
+                    ));
+                }
+                greedy_done = true;
+                remaining -= chunk;
+                if remaining == 0 {
+                    break;
+                }
                 if over(&deadline) {
                     policy_complete = false;
                     break;
                 }
-                let o = agent.step(&env, true)?;
-                candidates.push((
-                    o.det_latency,
-                    o.feasible,
-                    env.expand(&o.actions)?,
-                    Provenance::Policy,
-                ));
             }
         }
-        // The trivial candidates are microseconds of simulator time: the
-        // service never returns a placement worse than these, and they
-        // are the whole answer when the budget was exhausted.
-        let mut trivial: Vec<(Placement, String)> = env
-            .testbed
-            .placeable
-            .iter()
-            .map(|&d| {
-                (
-                    Placement::all(env.graph.n(), d),
-                    format!("single:{}", env.testbed.devices[d].name),
-                )
-            })
-            .collect();
-        trivial.push((
-            baselines::memory_greedy_placement(&env.graph, &env.testbed),
-            "memory-greedy".to_string(),
-        ));
-        for (p, name) in trivial {
-            let rep = env.cost.evaluate(&env.graph, &p, &env.testbed);
-            candidates.push((rep.makespan, rep.feasible(), p, Provenance::Fallback(name)));
+        // The trivial candidates: the service never returns a placement
+        // worse than these, and they are the whole answer when the budget
+        // was exhausted. They depend only on the fingerprinted structure,
+        // so they are computed once per fingerprint and reused from the
+        // cache entry afterwards.
+        let trivial: Arc<Vec<TrivialCandidate>> = match cached_trivial {
+            Some(t) => t,
+            None => {
+                let t = Arc::new(Self::eval_trivial(&env));
+                self.stats.lock().unwrap().trivial_evals += 1;
+                if !req.no_cache {
+                    let mut cache = self.cache.lock().unwrap();
+                    let mut entry = cache.peek(&fp).cloned().unwrap_or_default();
+                    entry.trivial = Some(Arc::clone(&t));
+                    cache.put(fp, entry);
+                }
+                t
+            }
+        };
+        for c in trivial.iter() {
+            candidates.push((
+                c.makespan,
+                c.feasible,
+                c.placement.clone(),
+                Provenance::Fallback(c.name.clone()),
+            ));
         }
 
         // Fastest feasible candidate (fastest overall when nothing is
@@ -266,15 +432,16 @@ impl PlacementService {
             && req.budget_ms.is_none()
             && req.rollouts.is_none();
         if cacheable {
-            self.cache.lock().unwrap().put(
-                fp,
-                CachedPlacement {
-                    placement: outcome.placement.clone(),
-                    latency_s: outcome.latency_s,
-                    ref_latency_s: outcome.ref_latency_s,
-                    feasible: outcome.feasible,
-                },
-            );
+            let mut cache = self.cache.lock().unwrap();
+            let mut entry = cache.peek(&fp).cloned().unwrap_or_default();
+            entry.answer = Some(CachedPlacement {
+                placement: outcome.placement.clone(),
+                latency_s: outcome.latency_s,
+                ref_latency_s: outcome.ref_latency_s,
+                feasible: outcome.feasible,
+            });
+            entry.trivial = Some(trivial);
+            cache.put(fp, entry);
         }
         Ok(outcome)
     }
@@ -347,6 +514,7 @@ impl PlacementService {
             cache_hits: s.cache_hits,
             fallbacks: s.fallbacks,
             errors: s.errors,
+            trivial_evals: s.trivial_evals,
             cache_len: cache.len(),
             cache_capacity: cache.capacity(),
             qps: s.requests as f64 / uptime_s.max(1e-9),

@@ -4,9 +4,18 @@
 //! `bench_fn` per measured case: warmup, then N timed iterations, then a
 //! median/mean/min report line. Output is stable, grep-able text the
 //! EXPERIMENTS.md perf log quotes directly.
+//!
+//! [`BenchSession`] wraps a whole bench binary run and adds two flags
+//! every target shares (`cargo bench --bench <t> -- --json --quick`):
+//! `--json` replaces the human report with exactly one
+//! `hsdag-bench-v1` JSON document on stdout (the BENCH_POLICY.json
+//! snapshot format, also what CI's bench smoke step validates);
+//! `--quick` trims warmup and iteration counts so CI can prove the
+//! measured paths run without paying full measurement cost.
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats;
 
 /// Result of one benchmark case.
@@ -47,7 +56,15 @@ fn fmt_ns(ns: f64) -> String {
 /// Time `f` for `iters` iterations after `warmup` runs; prints and returns
 /// the result. `f` should return something observable to keep the
 /// optimizer honest (its value is black-boxed here).
-pub fn bench_fn<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+pub fn bench_fn<T>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> T) -> BenchResult {
+    let r = time_fn(name, warmup, iters, f);
+    println!("{}", r.report());
+    r
+}
+
+/// [`bench_fn`] without the report line (the JSON mode measures the same
+/// way but stdout must stay a single document).
+fn time_fn<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
     for _ in 0..warmup {
         std::hint::black_box(f());
     }
@@ -57,15 +74,112 @@ pub fn bench_fn<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() 
         std::hint::black_box(f());
         samples.push(t0.elapsed().as_nanos() as f64);
     }
-    let r = BenchResult {
+    BenchResult {
         name: name.to_string(),
         iters,
         median_ns: stats::median(&samples),
         mean_ns: stats::mean(&samples),
         min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
-    };
-    println!("{}", r.report());
-    r
+    }
+}
+
+/// One bench-binary run: flag parsing, per-case timing, and the final
+/// `--json` document. See the module docs for the flag semantics.
+pub struct BenchSession {
+    bench: String,
+    json: bool,
+    quick: bool,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSession {
+    /// Parse the flags `cargo bench -- …` forwards to the target binary.
+    /// Unrecognized arguments are ignored (cargo's own harness flags,
+    /// e.g. `--bench`, arrive here too).
+    pub fn from_args(bench: &str) -> BenchSession {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        BenchSession {
+            bench: bench.to_string(),
+            json: args.iter().any(|a| a == "--json"),
+            quick: args.iter().any(|a| a == "--quick"),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn is_json(&self) -> bool {
+        self.json
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Print a human report line (section header, context) — suppressed
+    /// in JSON mode, where stdout is exactly one document.
+    pub fn note(&self, line: &str) {
+        if !self.json {
+            println!("{line}");
+        }
+    }
+
+    /// Time one case. `--quick` drops the warmup and caps iterations at
+    /// two; `--json` suppresses the per-case report line.
+    pub fn run<T>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        f: impl FnMut() -> T,
+    ) -> BenchResult {
+        let (w, i) = if self.quick { (0, iters.clamp(1, 2)) } else { (warmup, iters) };
+        let r = time_fn(name, w, i, f);
+        if !self.json {
+            println!("{}", r.report());
+        }
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Record a case measured outside [`BenchSession::run`] (e.g. a
+    /// loadgen loop that times N requests as one aggregate).
+    pub fn push(&mut self, r: BenchResult) {
+        if !self.json {
+            println!("{}", r.report());
+        }
+        self.results.push(r);
+    }
+
+    /// In JSON mode, emit the single `hsdag-bench-v1` document; a no-op
+    /// otherwise. Call this last.
+    pub fn finish(self) {
+        if !self.json {
+            return;
+        }
+        println!("{}", self.to_json().to_string_compact());
+    }
+
+    /// The `hsdag-bench-v1` document for the results so far.
+    pub fn to_json(&self) -> Json {
+        let results = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::Obj(vec![
+                    ("name".to_string(), Json::Str(r.name.clone())),
+                    ("iters".to_string(), Json::Num(r.iters as f64)),
+                    ("median_ns".to_string(), Json::Num(r.median_ns)),
+                    ("mean_ns".to_string(), Json::Num(r.mean_ns)),
+                    ("min_ns".to_string(), Json::Num(r.min_ns)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("format".to_string(), Json::Str("hsdag-bench-v1".to_string())),
+            ("bench".to_string(), Json::Str(self.bench.clone())),
+            ("quick".to_string(), Json::Bool(self.quick)),
+            ("results".to_string(), Json::Arr(results)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -78,6 +192,28 @@ mod tests {
         assert_eq!(r.iters, 16);
         assert!(r.min_ns <= r.median_ns);
         assert!(r.median_ns > 0.0);
+    }
+
+    #[test]
+    fn session_json_document_roundtrips() {
+        let mut s = BenchSession {
+            bench: "unit".to_string(),
+            json: true,
+            quick: true,
+            results: Vec::new(),
+        };
+        s.run("case/a", 3, 64, || (0..100).sum::<usize>());
+        let text = s.to_json().to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("format").unwrap().as_str(), Some("hsdag-bench-v1"));
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("unit"));
+        assert_eq!(back.get("quick").unwrap().as_bool(), Some(true));
+        let rs = back.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("case/a"));
+        // --quick caps iterations at two.
+        assert_eq!(rs[0].get("iters").unwrap().as_usize(), Some(2));
+        assert!(rs[0].get("median_ns").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

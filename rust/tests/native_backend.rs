@@ -12,8 +12,13 @@ use hsdag::features::FeatureConfig;
 use hsdag::graph::{CompGraph, OpKind};
 use hsdag::models::builder::GraphBuilder;
 use hsdag::models::Benchmark;
-use hsdag::rl::{Env, HsdagAgent};
+use hsdag::parsing::parse;
+use hsdag::rl::{Env, HsdagAgent, NativeBackend, PolicyBackend};
 use hsdag::sim::Testbed;
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
 
 /// A small two-branch network (~20 ops with their weight constants):
 /// enough structure for non-trivial partitions, tiny enough for debug
@@ -147,6 +152,94 @@ fn native_backend_steps_on_a_real_benchmark() {
     assert_eq!(o.actions.len(), env.n_nodes);
     assert!(o.latency.is_finite() && o.latency > 0.0);
     assert!(o.n_groups > 1 && o.n_groups < env.n_nodes);
+}
+
+#[test]
+fn batched_fwd_and_placer_match_independent_calls_bitwise() {
+    let cfg = small_cfg();
+    let env = small_env();
+    let mut backend = NativeBackend::new(&env, &cfg).unwrap();
+    let h = cfg.hidden;
+
+    // Three distinct feedback states: zero, a ramp, an alternating sign
+    // pattern — the batched path must reproduce each row exactly.
+    let fb0 = vec![0f32; env.v_pad * h];
+    let fb1: Vec<f32> = (0..env.v_pad * h).map(|i| (i % 7) as f32 * 0.125).collect();
+    let fb2: Vec<f32> =
+        (0..env.v_pad * h).map(|i| if i % 2 == 0 { 0.5 } else { -0.25 }).collect();
+    let fbs: Vec<&[f32]> = vec![&fb0, &fb1, &fb2];
+    let batched = backend.fwd_many(&env, &fbs).unwrap();
+    assert_eq!(batched.len(), 3);
+    for (fb, b) in fbs.iter().zip(&batched) {
+        let solo = backend.fwd(&env, fb).unwrap();
+        assert_eq!(bits(&solo.z), bits(&b.z));
+        assert_eq!(bits(&solo.scores), bits(&b.scores));
+    }
+
+    // placer_many over two different partitions of the same forward: the
+    // raw-score parse and a coarser one with a third of the edges cut.
+    let out = backend.fwd(&env, &fb0).unwrap();
+    let mut cut = out.scores.clone();
+    for s in cut.iter_mut().step_by(3) {
+        *s = -1.0;
+    }
+    let mut cids_all = Vec::new();
+    let mut gmask_all = Vec::new();
+    for scores in [&out.scores, &cut] {
+        let part = parse(env.working_graph(), scores);
+        let mut cids = vec![0i32; env.v_pad];
+        for (node, &c) in part.cluster_of.iter().enumerate() {
+            cids[node] = c as i32;
+        }
+        let mut gmask = vec![0f32; env.v_pad];
+        for m in gmask.iter_mut().take(part.n_groups) {
+            *m = 1.0;
+        }
+        cids_all.push(cids);
+        gmask_all.push(gmask);
+    }
+    let many = backend
+        .placer_many(
+            &env,
+            &[&out, &out],
+            &[cids_all[0].as_slice(), cids_all[1].as_slice()],
+            &[gmask_all[0].as_slice(), gmask_all[1].as_slice()],
+        )
+        .unwrap();
+    for i in 0..2 {
+        let solo = backend.placer(&env, &out, &cids_all[i], &gmask_all[i]).unwrap();
+        assert_eq!(bits(&solo), bits(&many[i]), "partition {i}");
+    }
+}
+
+#[test]
+fn rollout_batch_is_deterministic_and_greedy_matches_step() {
+    let cfg = small_cfg();
+    let env = small_env();
+    let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+    let outs = agent.rollout_batch(&env, 3).unwrap();
+    assert_eq!(outs.len(), 4, "1 greedy + 3 stochastic rollouts");
+    for o in &outs {
+        assert_eq!(o.actions.len(), env.n_nodes);
+        assert!(o.latency.is_finite() && o.latency > 0.0);
+        // Serving ranks by deterministic makespan: no measurement noise.
+        assert_eq!(o.latency.to_bits(), o.det_latency.to_bits());
+        assert!(o.feasible, "unbounded default testbed can never OOM");
+    }
+    // Rollout 0 is the greedy rollout: bit-identical to a fresh greedy
+    // step through the sequential path.
+    let mut fresh = HsdagAgent::new(&env, &cfg).unwrap();
+    let g = fresh.step(&env, false).unwrap();
+    assert_eq!(outs[0].actions, g.actions);
+    assert_eq!(outs[0].latency.to_bits(), g.latency.to_bits());
+    // The whole batch is deterministic from the seed.
+    let mut twin = HsdagAgent::new(&env, &cfg).unwrap();
+    let outs2 = twin.rollout_batch(&env, 3).unwrap();
+    for (a, b) in outs.iter().zip(&outs2) {
+        assert_eq!(a.actions, b.actions);
+        assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+        assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+    }
 }
 
 #[test]

@@ -239,6 +239,80 @@ fn service_serves_caches_falls_back_and_counts() {
 }
 
 #[test]
+fn trivial_candidates_evaluate_once_per_fingerprint() {
+    let (ckpt, cfg) = tiny_checkpoint("layered:3x3:1", 2);
+    let service = PlacementService::new(
+        ckpt,
+        &cfg,
+        ServeOptions { cache_capacity: 8, ..Default::default() },
+    )
+    .unwrap();
+
+    // A knob-overridden request: its *answer* must never be cached, but
+    // the single-device + memory-greedy evaluations are knob-independent
+    // and enter the fingerprint's cache entry.
+    let line =
+        protocol::render_place_request(Some("layered:3x3:1"), None, None, None, Some(1), false);
+    let (resp, _) = service.handle_line(&line);
+    assert_eq!(Json::parse(&resp).unwrap().get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(service.stats_view().trivial_evals, 1);
+
+    // The repeat re-runs inference (no cached answer) yet reuses the
+    // trivial evaluations instead of recomputing them.
+    let (resp, _) = service.handle_line(&line);
+    let doc = Json::parse(&resp).unwrap();
+    assert_ne!(doc.get("provenance").unwrap().as_str(), Some("cache"));
+    assert_eq!(service.stats_view().trivial_evals, 1);
+
+    // A different graph is a fresh fingerprint and a fresh evaluation;
+    // no_cache bypasses the reuse in both directions.
+    let other = protocol::render_place_request(Some("seq:8"), None, None, None, None, true);
+    service.handle_line(&other);
+    service.handle_line(&other);
+    assert_eq!(service.stats_view().trivial_evals, 3);
+}
+
+#[test]
+fn concurrent_identical_requests_single_flight() {
+    let (ckpt, cfg) = tiny_checkpoint("layered:3x3:1", 2);
+    let service = Arc::new(
+        PlacementService::new(
+            ckpt,
+            &cfg,
+            ServeOptions { cache_capacity: 8, ..Default::default() },
+        )
+        .unwrap(),
+    );
+
+    // N identical default-shaped requests in parallel: exactly one leader
+    // runs the inference and the trivial evaluation; every other request
+    // waits for it (or arrives later) and answers from the cache.
+    let line = protocol::render_place_request(Some("seq:12"), None, None, None, None, false);
+    let n = 6;
+    let handles: Vec<_> = (0..n)
+        .map(|_| {
+            let svc = Arc::clone(&service);
+            let l = line.clone();
+            std::thread::spawn(move || svc.handle_line(&l).0)
+        })
+        .collect();
+    let mut cached = 0;
+    for h in handles {
+        let doc = Json::parse(&h.join().unwrap()).unwrap();
+        assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true));
+        if doc.get("provenance").unwrap().as_str() == Some("cache") {
+            cached += 1;
+        }
+    }
+    assert_eq!(cached, n - 1, "exactly one request may run inference");
+    let s = service.stats_view();
+    assert_eq!(s.placements, n as u64);
+    assert_eq!(s.cache_hits, (n - 1) as u64);
+    assert_eq!(s.trivial_evals, 1);
+    assert_eq!(s.cache_len, 1);
+}
+
+#[test]
 fn tcp_server_roundtrips_and_shuts_down_cleanly() {
     let (ckpt, cfg) = tiny_checkpoint("seq:12", 1);
     let service =
