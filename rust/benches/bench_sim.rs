@@ -3,68 +3,68 @@
 //! on the three paper benchmarks across every registered testbed plus a
 //! wide synthetic DAG where the ready set actually gets large (the
 //! re-scan is O(|ready|) per scheduled op, so wide graphs are where the
-//! heap pays off) — and the batched cost-model paths: parallel
+//! heap pays off) — the batched cost-model paths: parallel
 //! `evaluate_many` / `measure_many` against their serial loops, asserted
-//! bit-identical.
+//! bit-identical — and the incremental re-simulation scaling curve
+//! (`IncrementalEvaluator` after a small placement edit vs a full
+//! re-simulation, asserted report-identical).
 //!
 //!   cargo bench --bench bench_sim
+//!   cargo bench --bench bench_sim -- --json --quick   # hsdag-bench-v1 doc
 //!
 //! Quote the heap/ vs scan/ and serial/ vs parallel/ lines as the
 //! before/after in perf notes.
 
 use hsdag::baselines::random_placement;
 use hsdag::graph::CompGraph;
-use hsdag::models::Benchmark;
+use hsdag::models::{Benchmark, Workload};
 use hsdag::sim::{
     execute, execute_reference, measure, request_rng, AnalyticCostModel, CostModel,
-    ParallelCostModel, Testbed,
+    IncrementalEvaluator, ParallelCostModel, Placement, Testbed,
 };
-use hsdag::util::bench::bench_fn;
+use hsdag::util::bench::BenchSession;
 use hsdag::util::Rng;
 
 fn main() {
-    println!("== benchmark graphs ==");
+    let mut s = BenchSession::from_args("bench_sim");
+
+    s.note("== benchmark graphs ==");
     for tb in Testbed::registered() {
         for b in Benchmark::ALL {
             let g = b.build();
             let mut rng = Rng::new(11);
             let p = random_placement(&g, &tb, &mut rng);
-            let heap = bench_fn(&format!("sim/heap/{}/{}", tb.id, b.id()), 3, 30, || {
+            let heap = s.run(&format!("sim/heap/{}/{}", tb.id, b.id()), 3, 30, || {
                 execute(&g, &p, &tb).makespan
             });
-            let scan = bench_fn(&format!("sim/scan/{}/{}", tb.id, b.id()), 3, 30, || {
+            let scan = s.run(&format!("sim/scan/{}/{}", tb.id, b.id()), 3, 30, || {
                 execute_reference(&g, &p, &tb).makespan
             });
-            println!(
+            s.note(&format!(
                 "  -> heap/scan median ratio {:.2}x",
                 scan.median_ns / heap.median_ns.max(1.0)
-            );
+            ));
             // The two schedulers must agree exactly (also enforced by the
             // differential tests in sim::scheduler).
-            assert_eq!(
-                execute(&g, &p, &tb).makespan,
-                execute_reference(&g, &p, &tb).makespan
-            );
+            assert_eq!(execute(&g, &p, &tb).makespan, execute_reference(&g, &p, &tb).makespan);
         }
     }
 
-    println!("\n== wide synthetic DAG (large ready set) ==");
+    s.note("\n== wide synthetic DAG (large ready set) ==");
     let mut rng = Rng::new(5);
     let g = CompGraph::random(&mut rng, 3000, 1500);
     let tb = Testbed::multi_gpu(8);
     let p = random_placement(&g, &tb, &mut rng);
-    let heap = bench_fn("sim/heap/random3k/multi_gpu:8", 2, 15, || {
-        execute(&g, &p, &tb).makespan
-    });
-    let scan = bench_fn("sim/scan/random3k/multi_gpu:8", 2, 15, || {
+    let heap = s.run("sim/heap/random3k/multi_gpu:8", 2, 15, || execute(&g, &p, &tb).makespan);
+    let scan = s.run("sim/scan/random3k/multi_gpu:8", 2, 15, || {
         execute_reference(&g, &p, &tb).makespan
     });
-    println!(
+    s.note(&format!(
         "  -> heap/scan median ratio {:.2}x",
         scan.median_ns / heap.median_ns.max(1.0)
-    );
+    ));
 
-    println!("\n== batched evaluation: serial loop vs parallel worker pool ==");
+    s.note("\n== batched evaluation: serial loop vs parallel worker pool ==");
     let serial = AnalyticCostModel;
     let parallel = ParallelCostModel::new(AnalyticCostModel, 0);
     let g = Benchmark::ResNet50.build();
@@ -72,13 +72,13 @@ fn main() {
     let mut rng = Rng::new(17);
     let placements: Vec<_> = (0..64).map(|_| random_placement(&g, &tb, &mut rng)).collect();
 
-    let s = bench_fn("sim/evaluate_many/serial/resnet50 x64", 1, 8, || {
+    let ser = s.run("sim/evaluate_many/serial/resnet50 x64", 1, 8, || {
         serial.evaluate_many(&g, &placements, &tb).len()
     });
-    let p = bench_fn("sim/evaluate_many/parallel/resnet50 x64", 1, 8, || {
+    let par = s.run("sim/evaluate_many/parallel/resnet50 x64", 1, 8, || {
         parallel.evaluate_many(&g, &placements, &tb).len()
     });
-    println!("  -> parallel speedup {:.2}x", s.median_ns / p.median_ns.max(1.0));
+    s.note(&format!("  -> parallel speedup {:.2}x", ser.median_ns / par.median_ns.max(1.0)));
     // Identical results, report for report (also enforced in the tests).
     assert_eq!(
         serial.evaluate_many(&g, &placements, &tb),
@@ -89,17 +89,60 @@ fn main() {
     // full simulation per request — the pre-cost-model serving path)
     // against `measure_many`, which simulates the invariant base once.
     let p0 = &placements[0];
-    let s = bench_fn("sim/measure_stream/per-request-loop/resnet50 x256", 1, 8, || {
-        (0..256)
-            .map(|i| measure(&g, p0, &tb, 0.03, &mut request_rng(7, i)))
-            .sum::<f64>()
+    let ser = s.run("sim/measure_stream/per-request-loop/resnet50 x256", 1, 8, || {
+        (0..256).map(|i| measure(&g, p0, &tb, 0.03, &mut request_rng(7, i))).sum::<f64>()
     });
-    let p = bench_fn("sim/measure_stream/measure_many/resnet50 x256", 1, 8, || {
+    let par = s.run("sim/measure_stream/measure_many/resnet50 x256", 1, 8, || {
         parallel.measure_many(&g, p0, &tb, 0.03, 7, 256).iter().sum::<f64>()
     });
-    println!("  -> measure_many speedup {:.2}x", s.median_ns / p.median_ns.max(1.0));
+    s.note(&format!("  -> measure_many speedup {:.2}x", ser.median_ns / par.median_ns.max(1.0)));
     let naive: Vec<f64> =
         (0..256).map(|i| measure(&g, p0, &tb, 0.03, &mut request_rng(7, i))).collect();
     assert_eq!(naive, serial.measure_many(&g, p0, &tb, 0.03, 7, 256));
     assert_eq!(naive, parallel.measure_many(&g, p0, &tb, 0.03, 7, 256));
+
+    // ---------------------------------------------------------------
+    // Incremental re-simulation scaling: flip one late node's device
+    // and re-evaluate. The incremental path replays the memoized event
+    // prefix and only re-simulates the affected suffix; the full path
+    // re-runs the whole schedule. Reports are asserted identical.
+    // ---------------------------------------------------------------
+    s.note("\n== incremental re-simulation after a one-node edit ==");
+    let sizes: &[usize] = if s.is_quick() { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+    let tb = Testbed::cpu_gpu();
+    for &n in sizes {
+        let spec = format!("random:{n}:1");
+        let g = Workload::resolve(&spec).unwrap().graph;
+        let base: Vec<usize> = (0..g.n()).map(|v| tb.placeable[v % tb.placeable.len()]).collect();
+        // Edit a node near the sink so the unaffected prefix is long.
+        let victim = g.n() - 2;
+        let mut edited = base.clone();
+        edited[victim] =
+            if edited[victim] == tb.placeable[0] { tb.placeable[1] } else { tb.placeable[0] };
+
+        let (warmup, iters) = if n >= 100_000 { (1, 3) } else { (1, 5) };
+        let mut eval = IncrementalEvaluator::new(g.clone(), tb.clone());
+        eval.evaluate(&base); // prime the memo
+        let mut flip = false;
+        let inc = s.run(&format!("sim/incremental/edit1/{spec}"), warmup, iters, || {
+            // Alternate between the two placements so every iteration
+            // really is a one-node delta against the previous memo.
+            flip = !flip;
+            eval.evaluate(if flip { &edited } else { &base }).makespan
+        });
+        let full = s.run(&format!("sim/full/edit1/{spec}"), warmup, iters, || {
+            execute(&g, &Placement(edited.clone()), &tb).makespan
+        });
+        s.note(&format!(
+            "  -> incremental/full median ratio {:.2}x",
+            full.median_ns / inc.median_ns.max(1.0)
+        ));
+        // Bit-identical to full re-evaluation (also property-tested in
+        // sim::scheduler).
+        let mut eval = IncrementalEvaluator::new(g.clone(), tb.clone());
+        eval.evaluate(&base);
+        assert_eq!(eval.evaluate(&edited), execute(&g, &Placement(edited.clone()), &tb));
+    }
+
+    s.finish();
 }

@@ -1,8 +1,16 @@
 //! Workload-subsystem micro-bench: graph load / generate / feature-extract
 //! throughput for the registry sources — how fast can the system open a
-//! new workload?
+//! new workload? — plus the pipeline scaling curve (generate -> features
+//! -> coarsen -> evaluate at n = 1k / 10k / 100k) behind
+//! BENCH_SCALING.json.
 //!
-//!   cargo bench --bench bench_workloads
+//!   cargo bench --bench bench_workloads               # human report
+//!   cargo bench --bench bench_workloads -- --json --quick
+//!                                                     # hsdag-bench-v1 doc
+//!
+//! `--quick` trims the scaling tier to 1k / 10k so CI can assert the
+//! growth stays near-linear in seconds; the full run adds the 100k tier
+//! (regenerate BENCH_SCALING.json from it, never by hand).
 //!
 //! Covers: the synthetic generators (pure CPU), JSON serialize + parse of
 //! a paper-sized graph, the `file:` source end to end (disk read + parse
@@ -10,52 +18,93 @@
 //! on the loaded graphs — the per-workload setup cost that fronts every
 //! search.
 
-use hsdag::coarsen::colocate;
+use hsdag::coarsen::{coarsen_to_budget, colocate, DEFAULT_COARSEN_BUDGET};
 use hsdag::features::{extract, FeatureConfig};
 use hsdag::graph::{dot, json};
 use hsdag::models::{Benchmark, Workload};
-use hsdag::util::bench::bench_fn;
+use hsdag::runtime::nn::normalized_adjacency_csr;
+use hsdag::sim::{execute, Placement, Testbed};
+use hsdag::util::bench::BenchSession;
 
 fn main() {
-    println!("== synthetic generators ==");
+    let mut s = BenchSession::from_args("bench_workloads");
+
+    s.note("== synthetic generators ==");
     for spec in ["seq:256", "layered:16x8:3", "transformer:4:4", "random:256:9"] {
-        let r = bench_fn(&format!("workload/generate/{spec}"), 3, 20, || {
+        let r = s.run(&format!("workload/generate/{spec}"), 3, 20, || {
             Workload::resolve(spec).unwrap().graph.n()
         });
         let n = Workload::resolve(spec).unwrap().graph.n();
-        println!("  -> {spec}: {n} nodes, {:.1} us/node", r.median_ns / 1e3 / n as f64);
+        s.note(&format!("  -> {spec}: {n} nodes, {:.1} us/node", r.median_ns / 1e3 / n as f64));
     }
 
-    println!("== serialize / parse (ResNet-50, Table-1 size) ==");
+    s.note("== serialize / parse (ResNet-50, Table-1 size) ==");
     let g = Benchmark::ResNet50.build();
     let text = json::to_json(&g);
-    println!("  JSON document: {} bytes for {} nodes", text.len(), g.n());
-    bench_fn("workload/json/serialize/resnet50", 3, 20, || json::to_json(&g).len());
-    bench_fn("workload/json/parse/resnet50", 3, 20, || json::from_json(&text).unwrap().n());
+    s.note(&format!("  JSON document: {} bytes for {} nodes", text.len(), g.n()));
+    s.run("workload/json/serialize/resnet50", 3, 20, || json::to_json(&g).len());
+    s.run("workload/json/parse/resnet50", 3, 20, || json::from_json(&text).unwrap().n());
     let dot_text = dot::to_dot(&g);
-    bench_fn("workload/dot/serialize/resnet50", 3, 20, || dot::to_dot(&g).len());
-    bench_fn("workload/dot/parse/resnet50", 3, 20, || dot::from_dot(&dot_text).unwrap().n());
+    s.run("workload/dot/serialize/resnet50", 3, 20, || dot::to_dot(&g).len());
+    s.run("workload/dot/parse/resnet50", 3, 20, || dot::from_dot(&dot_text).unwrap().n());
     // Parsers must reproduce the graph they serialized.
     assert_eq!(json::from_json(&text).unwrap().edges, g.edges);
     assert_eq!(dot::from_dot(&dot_text).unwrap().edges, g.edges);
 
-    println!("== file source end to end (disk read + parse + validate) ==");
+    s.note("== file source end to end (disk read + parse + validate) ==");
     let dir = std::env::temp_dir().join("hsdag_bench_workloads");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("resnet50.json");
     std::fs::write(&path, &text).unwrap();
     let spec = format!("file:{}", path.display());
-    bench_fn("workload/file/resnet50.json", 3, 20, || {
-        Workload::resolve(&spec).unwrap().graph.n()
-    });
+    s.run("workload/file/resnet50.json", 3, 20, || Workload::resolve(&spec).unwrap().graph.n());
 
-    println!("== per-workload setup: coarsen + feature extraction ==");
+    s.note("== per-workload setup: coarsen + feature extraction ==");
     for spec in ["resnet", "layered:16x8:3", "transformer:4:4"] {
         let w = Workload::resolve(spec).unwrap();
-        bench_fn(&format!("workload/coarsen/{spec}"), 3, 20, || colocate(&w.graph).n_sets);
+        s.run(&format!("workload/coarsen/{spec}"), 3, 20, || colocate(&w.graph).n_sets);
         let colo = colocate(&w.graph);
-        bench_fn(&format!("workload/features/{spec}"), 3, 20, || {
+        s.run(&format!("workload/features/{spec}"), 3, 20, || {
             extract(&colo.coarse, FeatureConfig::default()).x.len()
         });
     }
+
+    // ---------------------------------------------------------------
+    // Pipeline scaling curve: every stage at 1k / 10k (/ 100k without
+    // --quick). Each stage must grow near-linearly — the snapshot (and
+    // CI's growth gate on the quick tier) is the regression fence
+    // against anything O(n^2) sneaking back onto the default path.
+    // ---------------------------------------------------------------
+    s.note("== pipeline scaling curve (generate / features / coarsen / evaluate) ==");
+    let sizes: &[usize] = if s.is_quick() { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+    let tb = Testbed::cpu_gpu();
+    for &n in sizes {
+        let spec = format!("random:{n}:1");
+        let (warmup, iters) = if n >= 100_000 { (1, 3) } else { (1, 5) };
+        s.run(&format!("scaling/generate/{spec}"), warmup, iters, || {
+            Workload::resolve(&spec).unwrap().graph.n()
+        });
+        let g = Workload::resolve(&spec).unwrap().graph;
+        // Feature extraction on the raw graph: exercises the sampled
+        // (landmark) fractal path past FRACTAL_EXACT_THRESHOLD.
+        s.run(&format!("scaling/features/{spec}"), warmup, iters, || {
+            extract(&g, FeatureConfig::default()).x.len()
+        });
+        s.run(&format!("scaling/coarsen/{spec}"), warmup, iters, || {
+            coarsen_to_budget(&g, DEFAULT_COARSEN_BUDGET).flatten().n_sets
+        });
+        let p = Placement((0..g.n()).map(|v| tb.placeable[v % tb.placeable.len()]).collect());
+        s.run(&format!("scaling/evaluate/{spec}"), warmup, iters, || {
+            execute(&g, &p, &tb).makespan
+        });
+        // Peak-memory proxies: the sparse operator and the feature
+        // matrix are the two largest live buffers on the native path.
+        let csr = normalized_adjacency_csr(g.n(), &g.edges);
+        s.counter(&format!("scaling/bytes/csr/{spec}"), csr.bytes() as f64);
+        let feats = extract(&g, FeatureConfig::default());
+        s.counter(&format!("scaling/bytes/features/{spec}"), (feats.x.len() * 4) as f64);
+        s.counter(&format!("scaling/edges/{spec}"), g.m() as f64);
+    }
+
+    s.finish();
 }

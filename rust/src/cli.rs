@@ -35,12 +35,13 @@ COMMANDS
                                                            [--save CKPT] [--load CKPT]
   place                  evaluate a fixed placement        [--workload W] [--method M]
                          (or a loaded policy's)            [--load CKPT] [--dump-dot F]
+                                                           [--refine-cap N]
   generalize             train one policy on a workload    [--train A,B,..] [--eval C,D,..]
                          suite, zero-shot eval held-out    [--episodes N] [--rollouts N]
                                                            [--save CKPT]
                                                            [--eval-only --load CKPT]
   serve                  placement server over a trained   --load CKPT [--addr IP:PORT]
-                         checkpoint (see README "Serving") [--serve-workers N]
+                         checkpoint (see README \"Serving\") [--serve-workers N]
                                                            [--cache-capacity N] [--budget-ms X]
                                                            [--rollouts N]
   request                client for a running server       [--addr IP:PORT] [--workload W]
@@ -72,6 +73,10 @@ COMMON FLAGS
   --artifacts DIR                   artifacts directory (default artifacts)
   --no-baseline                     disable the EMA reward baseline (paper-literal Eq. 14)
   --no-shape | --no-node-id | --no-structural   feature ablations
+  --coarsen-budget N                working-graph node budget for multi-level coarsening
+                                    (default 8192; see README \"Scaling\")
+  --exact-fractal                   pin exact per-node fractal dimensions (disables the
+                                    sampled landmark estimator on large graphs)
   --out-dir DIR                     output directory (default results)
   --save PATH                       write an hsdag-params-v1 policy checkpoint (train /
                                     generalize: on best-so-far / per round, and at exit)
@@ -99,6 +104,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                     | "no-shape"
                     | "no-node-id"
                     | "no-structural"
+                    | "exact-fractal"
                     | "help"
                     | "eval-only"
                     | "stats"
@@ -174,10 +180,14 @@ impl Cli {
             oom_penalty: self.f64_flag("oom-penalty", 0.0)?,
             eval_workers: self.usize_flag("workers", 0)?,
             use_baseline: !self.flags.contains_key("no-baseline"),
+            coarsen_budget: self
+                .usize_flag("coarsen-budget", crate::coarsen::DEFAULT_COARSEN_BUDGET)?
+                .max(1),
             features: FeatureConfig {
                 no_shape: self.flags.contains_key("no-shape"),
                 no_node_id: self.flags.contains_key("no-node-id"),
                 no_structural: self.flags.contains_key("no-structural"),
+                exact_fractal: self.flags.contains_key("exact-fractal"),
             },
             ..Config::default()
         };
@@ -263,6 +273,22 @@ mod tests {
         assert_eq!(cfg.eval_workers, 0);
         // Malformed values are errors, not silent defaults.
         assert!(parse(&argv("train --oom-penalty x")).unwrap().config().is_err());
+    }
+
+    #[test]
+    fn scaling_flags_parse() {
+        let c = parse(&argv("train --coarsen-budget 512 --exact-fractal")).unwrap();
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.coarsen_budget, 512);
+        assert!(cfg.features.exact_fractal);
+        // Defaults: the multi-level budget, sampled fractal auto mode.
+        let cfg = parse(&argv("train")).unwrap().config().unwrap();
+        assert_eq!(cfg.coarsen_budget, crate::coarsen::DEFAULT_COARSEN_BUDGET);
+        assert!(!cfg.features.exact_fractal);
+        // A zero budget is clamped, not a panic in the coarsener.
+        let cfg = parse(&argv("train --coarsen-budget 0")).unwrap().config().unwrap();
+        assert_eq!(cfg.coarsen_budget, 1);
+        assert!(parse(&argv("train --coarsen-budget x")).unwrap().config().is_err());
     }
 
     #[test]

@@ -14,10 +14,25 @@
 //! from its op, and folding removes placement-rule violations by
 //! construction (§2.2 "co-locating heuristics eliminate certain execution
 //! failures").
+//!
+//! **Multi-level coarsening** ([`coarsen_to_budget`]): one co-location
+//! pass rarely shrinks a 100k-node graph below what the policy can
+//! afford, so levels stack — each level re-runs co-location on the
+//! previous coarse graph and, when that stalls, a *layer-matching* pass
+//! pairs nodes within one longest-path depth layer. Same-layer merges
+//! can never create a cycle: every edge strictly increases the layer, so
+//! any coarse edge between layer-homogeneous sets strictly increases the
+//! layer too. Placements over the coarsest graph expand back down via
+//! [`MultiLevel::expand_placement`] (composition of per-level
+//! expansions) and refine greedily per level via
+//! [`MultiLevel::refine_placement`]; [`MultiLevel::flatten`] collapses
+//! the stack to a single [`Coarsening`] so downstream consumers (the
+//! RL env, the serve daemon) stay single-level-shaped.
 
 use anyhow::{ensure, Result};
 
 use crate::graph::{CompGraph, OpKind, OpNode};
+use crate::sim::{DeviceId, IncrementalEvaluator, Testbed};
 
 /// Result of the co-location pass.
 #[derive(Debug, Clone)]
@@ -48,25 +63,27 @@ impl Coarsening {
     }
 }
 
+/// Union-find root with path compression (shared by the coarsening
+/// passes and the set assembly).
+fn find(parent: &mut [usize], x: usize) -> usize {
+    let mut r = x;
+    while parent[r] != r {
+        r = parent[r];
+    }
+    let mut c = x;
+    while parent[c] != r {
+        let nxt = parent[c];
+        parent[c] = r;
+        c = nxt;
+    }
+    r
+}
+
 /// Apply the Appendix-G co-location heuristic to `g`.
 pub fn colocate(g: &CompGraph) -> Coarsening {
     let n = g.n();
     // Union-find over original nodes.
     let mut parent: Vec<usize> = (0..n).collect();
-    fn find(parent: &mut Vec<usize>, x: usize) -> usize {
-        let mut r = x;
-        while parent[r] != r {
-            r = parent[r];
-        }
-        // Path compression.
-        let mut c = x;
-        while parent[c] != r {
-            let nxt = parent[c];
-            parent[c] = r;
-            c = nxt;
-        }
-        r
-    }
 
     // 1. Fold constants into their (unique) consumer.
     for v in 0..n {
@@ -105,10 +122,18 @@ pub fn colocate(g: &CompGraph) -> Coarsening {
         }
     }
 
-    // Dense set ids in topological order of each set's first member.
+    assemble(g, parent, &order)
+}
+
+/// Turn a union-find `parent` forest over `g`'s nodes into a
+/// [`Coarsening`]: dense set ids in topological order of each set's
+/// first member, coarse nodes under the mean-kind/terminal-member rules,
+/// deduplicated coarse edges.
+fn assemble(g: &CompGraph, mut parent: Vec<usize>, order: &[usize]) -> Coarsening {
+    let n = g.n();
     let mut set_of = vec![usize::MAX; n];
     let mut members: Vec<Vec<usize>> = Vec::new();
-    for &v in &order {
+    for &v in order {
         let r = find(&mut parent, v);
         if set_of[r] == usize::MAX {
             set_of[r] = members.len();
@@ -151,6 +176,192 @@ pub fn colocate(g: &CompGraph) -> Coarsening {
     }
 
     Coarsening { set_of, n_sets, coarse, members }
+}
+
+/// Layer-matching coarsening pass: pair nodes within one longest-path
+/// depth layer (preferring siblings — nodes sharing their first
+/// in-neighbor). Cycle-safe by construction: every edge strictly
+/// increases the layer, so no directed path connects two same-layer
+/// nodes, and every coarse edge between layer-homogeneous sets still
+/// strictly increases the layer.
+fn colocate_layers(g: &CompGraph) -> Coarsening {
+    let n = g.n();
+    let order = g.topo_order().expect("DAG");
+    let mut layer = vec![0usize; n];
+    for &v in &order {
+        for &w in g.out_neighbors(v) {
+            layer[w] = layer[w].max(layer[v] + 1);
+        }
+    }
+    let max_layer = layer.iter().copied().max().unwrap_or(0);
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); max_layer + 1];
+    for v in 0..n {
+        buckets[layer[v]].push(v);
+    }
+    let mut parent: Vec<usize> = (0..n).collect();
+    for bucket in buckets.iter_mut() {
+        bucket.sort_by_key(|&v| (g.in_neighbors(v).first().copied().unwrap_or(v), v));
+        for pair in bucket.chunks(2) {
+            if let [a, b] = *pair {
+                parent[b] = a;
+            }
+        }
+    }
+    assemble(g, parent, &order)
+}
+
+/// Default working-graph budget for multi-level coarsening
+/// (`Config::coarsen_budget`, `--coarsen-budget`). Paper-scale
+/// benchmarks (≤ ~1k nodes) stay single-level under it.
+pub const DEFAULT_COARSEN_BUDGET: usize = 8192;
+
+/// A stack of coarsening levels: `levels[0]` coarsens the original
+/// graph, `levels[i]` coarsens `levels[i-1].coarse`. The policy places
+/// the coarsest graph; placements expand back down level by level.
+#[derive(Debug, Clone)]
+pub struct MultiLevel {
+    pub levels: Vec<Coarsening>,
+}
+
+impl MultiLevel {
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// The coarsest (policy-facing) graph.
+    pub fn coarsest(&self) -> &CompGraph {
+        &self.levels.last().expect("at least one level").coarse
+    }
+
+    /// Group count of the coarsest level.
+    pub fn n_sets(&self) -> usize {
+        self.levels.last().expect("at least one level").n_sets
+    }
+
+    /// Expand a coarsest-level placement to original nodes by composing
+    /// every level's expansion top-down.
+    pub fn expand_placement(&self, coarse_placement: &[usize]) -> Result<Vec<usize>> {
+        let mut p = coarse_placement.to_vec();
+        for lvl in self.levels.iter().rev() {
+            p = lvl.expand_placement(&p)?;
+        }
+        Ok(p)
+    }
+
+    /// Collapse the stack to one [`Coarsening`] mapping original nodes
+    /// straight to coarsest sets, so single-level consumers (the RL env,
+    /// serving) need no code changes. A one-level stack flattens to
+    /// exactly that level.
+    pub fn flatten(&self) -> Coarsening {
+        if self.levels.len() == 1 {
+            return self.levels[0].clone();
+        }
+        let mut set_of = self.levels[0].set_of.clone();
+        for lvl in &self.levels[1..] {
+            for s in set_of.iter_mut() {
+                *s = lvl.set_of[*s];
+            }
+        }
+        let last = self.levels.last().expect("at least one level");
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); last.n_sets];
+        for (v, &s) in set_of.iter().enumerate() {
+            members[s].push(v);
+        }
+        Coarsening { set_of, n_sets: last.n_sets, coarse: last.coarse.clone(), members }
+    }
+
+    /// Greedy V-cycle refinement: walk levels coarsest → finest; at each
+    /// level with at most `cap` groups, sweep the groups once, moving
+    /// each group to the device (out of `devices`) that minimizes the
+    /// makespan of the *fully expanded* placement on the original graph
+    /// — evaluated incrementally, so each trial only re-simulates from
+    /// the first affected event. Infeasible (OOM) candidates never win
+    /// over feasible ones. The result is never worse than the plain
+    /// expansion of `coarse_actions`.
+    pub fn refine_placement(
+        &self,
+        g: &CompGraph,
+        tb: &Testbed,
+        coarse_actions: &[usize],
+        devices: &[DeviceId],
+        cap: usize,
+    ) -> Result<Vec<usize>> {
+        ensure!(!devices.is_empty(), "refinement needs at least one candidate device");
+        let mut eval = IncrementalEvaluator::new(g.clone(), tb.clone());
+        // Per-level group placement, starting at the coarsest level.
+        let mut p = coarse_actions.to_vec();
+        for (k, lvl) in self.levels.iter().enumerate().rev() {
+            ensure!(
+                p.len() == lvl.n_sets,
+                "level {k} placement covers {} groups, want {}",
+                p.len(),
+                lvl.n_sets
+            );
+            if lvl.n_sets <= cap {
+                let expand_full = |pk: &[usize]| -> Result<Vec<usize>> {
+                    let mut q = pk.to_vec();
+                    for l in self.levels[..=k].iter().rev() {
+                        q = l.expand_placement(&q)?;
+                    }
+                    Ok(q)
+                };
+                let base = expand_full(&p)?;
+                let r = eval.evaluate(&base);
+                let (mut best_mk, mut best_ok) = (r.makespan, r.feasible());
+                for s in 0..lvl.n_sets {
+                    for &d in devices {
+                        if d == p[s] {
+                            continue;
+                        }
+                        let prev = p[s];
+                        p[s] = d;
+                        let full = expand_full(&p)?;
+                        let r = eval.evaluate(&full);
+                        let better = if r.feasible() {
+                            !best_ok || r.makespan < best_mk
+                        } else {
+                            false
+                        };
+                        if better {
+                            best_mk = r.makespan;
+                            best_ok = true;
+                        } else {
+                            p[s] = prev;
+                        }
+                    }
+                }
+            }
+            // Descend one level: group placement over the next-finer set.
+            p = lvl.expand_placement(&p)?;
+        }
+        Ok(p)
+    }
+}
+
+/// Recursively coarsen `g` until the working graph fits `budget` nodes
+/// (or no pass makes progress — the budget is best-effort on adversarial
+/// layerings). Each round tries a fresh co-location pass first (merging
+/// exposes new chains), then falls back to the layer-matching pass.
+pub fn coarsen_to_budget(g: &CompGraph, budget: usize) -> MultiLevel {
+    let budget = budget.max(1);
+    let mut levels = vec![colocate(g)];
+    loop {
+        let next = {
+            let top = &levels.last().expect("seeded").coarse;
+            let n = top.n();
+            if n <= budget || levels.len() >= 64 {
+                break;
+            }
+            let c = colocate(top);
+            let c = if c.n_sets < n { c } else { colocate_layers(top) };
+            if c.n_sets >= n {
+                break; // no progress possible
+            }
+            c
+        };
+        levels.push(next);
+    }
+    MultiLevel { levels }
 }
 
 #[cfg(test)]
@@ -305,6 +516,110 @@ mod tests {
                     if mem.iter().any(|&v| p[v] != p[mem[0]]) {
                         return Err(format!("set {s} split across devices"));
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn multi_level_hits_budget_on_wide_graphs() {
+        let g = crate::models::synth::layered(48, 24, 7);
+        let ml = coarsen_to_budget(&g, 64);
+        assert!(ml.n_levels() > 1, "wide graph should need several levels");
+        assert!(ml.coarsest().n() <= 64, "coarsest has {} nodes", ml.coarsest().n());
+        for lvl in &ml.levels {
+            assert!(lvl.coarse.is_dag());
+        }
+    }
+
+    #[test]
+    fn flatten_of_single_level_is_colocate() {
+        let g = Benchmark::ResNet50.build();
+        let ml = coarsen_to_budget(&g, DEFAULT_COARSEN_BUDGET);
+        assert_eq!(ml.n_levels(), 1, "paper-scale graphs stay single-level");
+        let flat = ml.flatten();
+        let c = colocate(&g);
+        assert_eq!(flat.set_of, c.set_of);
+        assert_eq!(flat.n_sets, c.n_sets);
+        assert_eq!(flat.coarse.n(), c.coarse.n());
+        assert_eq!(flat.coarse.edges, c.coarse.edges);
+    }
+
+    #[test]
+    fn multi_level_invariants_per_level_prop() {
+        // At EVERY level: the sets are an exact cover of that level's
+        // input graph and the coarse graph is a DAG; composed expansion
+        // agrees with the flattened expansion node for node.
+        check(
+            "coarsen-multilevel",
+            PropConfig { cases: 32, max_size: 120, ..Default::default() },
+            |rng, size| {
+                let g = CompGraph::random(rng, size, size / 3);
+                let budget = 1 + rng.below(16);
+                let ml = coarsen_to_budget(&g, budget);
+                let mut n_in = g.n();
+                for (k, lvl) in ml.levels.iter().enumerate() {
+                    if lvl.set_of.len() != n_in {
+                        return Err(format!("level {k}: set_of len {}", lvl.set_of.len()));
+                    }
+                    let mut count = vec![0usize; n_in];
+                    for mem in &lvl.members {
+                        if mem.is_empty() {
+                            return Err(format!("level {k}: empty set"));
+                        }
+                        for &v in mem {
+                            count[v] += 1;
+                        }
+                    }
+                    if count.iter().any(|&c| c != 1) {
+                        return Err(format!("level {k}: not an exact cover"));
+                    }
+                    if !lvl.coarse.is_dag() {
+                        return Err(format!("level {k}: coarse graph not a DAG"));
+                    }
+                    if lvl.coarse.n() != lvl.n_sets {
+                        return Err(format!("level {k}: coarse n != n_sets"));
+                    }
+                    n_in = lvl.n_sets;
+                }
+                // Composed vs flattened expansion.
+                let k_dev = 2 + rng.below(3);
+                let actions: Vec<usize> = (0..ml.n_sets()).map(|_| rng.below(k_dev)).collect();
+                let composed = ml.expand_placement(&actions).map_err(|e| format!("{e:#}"))?;
+                let flat = ml.flatten();
+                let direct = flat.expand_placement(&actions).map_err(|e| format!("{e:#}"))?;
+                if composed != direct {
+                    return Err("composed expansion != flattened expansion".into());
+                }
+                if composed.len() != g.n() {
+                    return Err("expansion misses nodes".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn refine_never_worse_than_plain_expansion() {
+        use crate::sim::{execute, Placement, Testbed};
+        let tb = Testbed::paper();
+        check(
+            "coarsen-refine",
+            PropConfig { cases: 12, max_size: 70, ..Default::default() },
+            |rng, size| {
+                let g = CompGraph::random(rng, size, size / 3);
+                let ml = coarsen_to_budget(&g, 8);
+                let actions: Vec<usize> =
+                    (0..ml.n_sets()).map(|_| tb.placeable[rng.below(tb.placeable.len())]).collect();
+                let base = ml.expand_placement(&actions).map_err(|e| format!("{e:#}"))?;
+                let refined = ml
+                    .refine_placement(&g, &tb, &actions, &tb.placeable, 64)
+                    .map_err(|e| format!("{e:#}"))?;
+                let mk_base = execute(&g, &Placement(base), &tb).makespan;
+                let mk_ref = execute(&g, &Placement(refined), &tb).makespan;
+                if mk_ref > mk_base {
+                    return Err(format!("refinement regressed: {mk_ref} > {mk_base}"));
                 }
                 Ok(())
             },

@@ -59,6 +59,12 @@ pub struct Config {
     /// Worker threads for batched placement evaluation
     /// (`evaluate_many` / `measure_many`); 0 = one per available core.
     pub eval_workers: usize,
+    /// Working-graph node budget for multi-level coarsening
+    /// (`--coarsen-budget`): the co-location pass is re-applied (with a
+    /// layer-matching fallback) until the policy-facing graph has at
+    /// most this many nodes. Paper benchmarks stay single-level under
+    /// the default; 100k+-node graphs coarsen recursively.
+    pub coarsen_budget: usize,
     /// RNG seed.
     pub seed: u64,
     /// Feature ablation switches (Table 3).
@@ -84,6 +90,7 @@ impl Default for Config {
             temperature: 1.0,
             oom_penalty: 0.0,
             eval_workers: 0,
+            coarsen_budget: crate::coarsen::DEFAULT_COARSEN_BUDGET,
             seed: 0,
             features: FeatureConfig::default(),
             artifacts_dir: "artifacts".to_string(),
@@ -163,6 +170,7 @@ mod tests {
         assert_eq!(c.dropout_network, 0.2);
         assert_eq!(c.oom_penalty, 0.0);
         assert_eq!(c.eval_workers, 0);
+        assert_eq!(c.coarsen_budget, crate::coarsen::DEFAULT_COARSEN_BUDGET);
     }
 
     #[test]

@@ -10,8 +10,20 @@
 //!
 //! Degenerate cases (isolated nodes, eccentricity < 2) get D(v) = 0 — no
 //! multi-scale structure to measure.
+//!
+//! Two evaluation paths share the per-node estimator:
+//!   * exact — one undirected BFS per node, O(n·(n+m)). Bit-exact, used
+//!     for every graph at or below [`FRACTAL_EXACT_THRESHOLD`] nodes (or
+//!     always, when pinned via `FeatureConfig::exact_fractal`).
+//!   * sampled — BFS from O(√n·log n) landmark seeds (capped at
+//!     [`LANDMARK_CAP`] so 100k+-node extraction stays near-linear);
+//!     landmarks get their exact dimension, every other node an
+//!     inverse-distance-weighted blend of its nearest landmarks. With
+//!     every node as a landmark the sampled path degenerates to the
+//!     exact one bit-for-bit, which is what the differential tests pin.
 
 use crate::graph::CompGraph;
+use crate::util::Rng;
 
 /// Fractal dimension of a single node given its undirected BFS distances.
 pub fn fractal_dimension_from_dists(dists: &[usize]) -> f64 {
@@ -47,6 +59,123 @@ pub fn fractal_dimension_from_dists(dists: &[usize]) -> f64 {
 /// Fractal dimension for every node of `g` (Eq. 4), via per-node BFS.
 pub fn fractal_dimensions(g: &CompGraph) -> Vec<f64> {
     (0..g.n()).map(|v| fractal_dimension_from_dists(&g.bfs_undirected(v))).collect()
+}
+
+/// Graphs at or below this size always take the exact per-node BFS path.
+pub const FRACTAL_EXACT_THRESHOLD: usize = 4096;
+
+/// Ceiling on the landmark budget. √n·ln n is the nominal seed count;
+/// the cap keeps total BFS work near-linear at 100k+ nodes.
+pub const LANDMARK_CAP: usize = 512;
+
+/// How many non-landmark interpolation anchors each node keeps.
+const NEAR_SLOTS: usize = 3;
+
+/// Landmark budget for an `n`-node graph: min(n, ⌈√n·ln n⌉, cap).
+pub fn landmark_count(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let nf = n as f64;
+    let k = (nf.sqrt() * nf.ln().max(1.0)).ceil() as usize;
+    k.clamp(1, LANDMARK_CAP).min(n)
+}
+
+/// Exact below [`FRACTAL_EXACT_THRESHOLD`] (or when `pin_exact`), sampled
+/// landmarks above — the default feature-extraction entry point.
+pub fn fractal_dimensions_auto(g: &CompGraph, pin_exact: bool) -> Vec<f64> {
+    if pin_exact || g.n() <= FRACTAL_EXACT_THRESHOLD {
+        fractal_dimensions(g)
+    } else {
+        fractal_dimensions_sampled(g, landmark_count(g.n()))
+    }
+}
+
+/// Sampled fractal dimensions from `n_landmarks` BFS seeds.
+///
+/// Landmarks keep their exact per-node dimension; every other node blends
+/// the dimensions of its [`NEAR_SLOTS`] nearest landmarks with weights
+/// 1/(1+dist). Nodes no landmark reaches (landmarks all in other
+/// undirected components) fall back to their own exact BFS, so coverage
+/// never silently degrades to a constant. With `n_landmarks >= n` every
+/// node is a landmark and the result equals [`fractal_dimensions`]
+/// bit-for-bit.
+pub fn fractal_dimensions_sampled(g: &CompGraph, n_landmarks: usize) -> Vec<f64> {
+    let n = g.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = n_landmarks.clamp(1, n);
+    let landmarks = pick_landmarks(n, k);
+    let mut is_landmark = vec![false; n];
+    let mut exact = vec![0.0f64; n];
+    // Per-node (distance, landmark dimension) anchors, ascending by
+    // distance; usize::MAX marks an empty slot.
+    let mut near = vec![[(usize::MAX, 0.0f64); NEAR_SLOTS]; n];
+    for &l in &landmarks {
+        is_landmark[l] = true;
+        let dists = g.bfs_undirected(l);
+        let dim = fractal_dimension_from_dists(&dists);
+        exact[l] = dim;
+        for (v, &d) in dists.iter().enumerate() {
+            if d != usize::MAX {
+                insert_anchor(&mut near[v], d, dim);
+            }
+        }
+    }
+    (0..n)
+        .map(|v| {
+            if is_landmark[v] {
+                return exact[v];
+            }
+            let anchors = &near[v];
+            if anchors[0].0 == usize::MAX {
+                // Unreached: isolated pocket without a landmark.
+                return fractal_dimension_from_dists(&g.bfs_undirected(v));
+            }
+            let mut wsum = 0.0;
+            let mut acc = 0.0;
+            for &(d, dim) in anchors.iter() {
+                if d == usize::MAX {
+                    break;
+                }
+                let w = 1.0 / (1.0 + d as f64);
+                wsum += w;
+                acc += w * dim;
+            }
+            acc / wsum
+        })
+        .collect()
+}
+
+/// Keep the slot array sorted ascending by distance; ties keep the
+/// earlier landmark (landmark iteration order is deterministic).
+fn insert_anchor(slots: &mut [(usize, f64); NEAR_SLOTS], d: usize, dim: f64) {
+    let mut i = NEAR_SLOTS;
+    while i > 0 && d < slots[i - 1].0 {
+        i -= 1;
+    }
+    if i < NEAR_SLOTS {
+        for j in (i..NEAR_SLOTS - 1).rev() {
+            slots[j + 1] = slots[j];
+        }
+        slots[i] = (d, dim);
+    }
+}
+
+/// Deterministic landmark choice: a seeded partial Fisher–Yates over
+/// 0..n keyed on n, so the same graph size always samples the same
+/// seed set (results are reproducible run to run).
+fn pick_landmarks(n: usize, k: usize) -> Vec<usize> {
+    let mut rng = Rng::new(0x5EED_F2AC ^ (n as u64));
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + rng.below(n - i);
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
 }
 
 #[cfg(test)]
@@ -135,5 +264,69 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn sampled_with_all_landmarks_is_exact() {
+        // The differential anchor: k >= n makes every node a landmark,
+        // so the sampled path must reproduce the exact one bit-for-bit.
+        use crate::util::prop::{check, PropConfig};
+        check("fractal-sampled-exact", PropConfig { cases: 16, max_size: 60, ..Default::default() }, |rng, size| {
+            let g = CompGraph::random(rng, size, size / 3);
+            let exact = fractal_dimensions(&g);
+            let sampled = fractal_dimensions_sampled(&g, g.n());
+            if exact != sampled {
+                return Err("sampled(k=n) diverged from exact".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sampled_is_deterministic_and_finite() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(11);
+        let g = CompGraph::random(&mut rng, 120, 40);
+        let a = fractal_dimensions_sampled(&g, landmark_count(g.n()));
+        let b = fractal_dimensions_sampled(&g, landmark_count(g.n()));
+        assert_eq!(a, b);
+        assert!(a.iter().all(|d| d.is_finite()));
+    }
+
+    #[test]
+    fn sampled_tracks_exact_on_paths() {
+        // On a long path the exact dimension is ~1 everywhere away from
+        // the ends; the landmark blend must stay close.
+        let g = path(200);
+        let exact = fractal_dimensions(&g);
+        let sampled = fractal_dimensions_sampled(&g, 24);
+        let mae: f64 = exact
+            .iter()
+            .zip(&sampled)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / exact.len() as f64;
+        assert!(mae < 0.25, "mean abs err {mae}");
+    }
+
+    #[test]
+    fn landmark_budget_envelope() {
+        assert_eq!(landmark_count(0), 0);
+        assert_eq!(landmark_count(1), 1);
+        assert!(landmark_count(100) <= 100);
+        // √n·ln n at 1e4 is ~921, already above the cap.
+        assert_eq!(landmark_count(10_000), LANDMARK_CAP);
+        assert_eq!(landmark_count(100_000), LANDMARK_CAP);
+        // Below the cap the nominal √n·ln n budget applies.
+        let k = landmark_count(1000);
+        assert!((200..=250).contains(&k), "k(1000) = {k}");
+    }
+
+    #[test]
+    fn auto_switches_on_threshold() {
+        // Small graph: auto == exact regardless of the pin flag.
+        let g = path(32);
+        assert_eq!(fractal_dimensions_auto(&g, false), fractal_dimensions(&g));
+        assert_eq!(fractal_dimensions_auto(&g, true), fractal_dimensions(&g));
     }
 }

@@ -25,6 +25,8 @@
 
 pub mod fractal;
 
+pub use fractal::{FRACTAL_EXACT_THRESHOLD, LANDMARK_CAP};
+
 use crate::graph::{CompGraph, OpKind};
 
 /// Degree one-hot bucket count (bucket 7 = "7 or more").
@@ -43,6 +45,10 @@ pub struct FeatureConfig {
     pub no_node_id: bool,
     /// "w/o graph structural features": zero degrees + fractal dimension.
     pub no_structural: bool,
+    /// Pin the exact per-node-BFS fractal path even above
+    /// [`fractal::FRACTAL_EXACT_THRESHOLD`] nodes (`--exact-fractal`).
+    /// Off by default: big graphs take the sampled landmark path.
+    pub exact_fractal: bool,
 }
 
 impl FeatureConfig {
@@ -102,7 +108,7 @@ pub fn extract(g: &CompGraph, cfg: FeatureConfig) -> Features {
         topo_index[v] = i;
     }
 
-    let fractal_dim = fractal::fractal_dimensions(g);
+    let fractal_dim = fractal::fractal_dimensions_auto(g, cfg.exact_fractal);
 
     let mut x = vec![0f32; n * d];
     let mut pe = vec![0f32; D_POS];
@@ -153,6 +159,14 @@ pub fn extract(g: &CompGraph, cfg: FeatureConfig) -> Features {
 /// Symmetric-normalized adjacency with self-loops (Eq. 6):
 /// Â_norm = D̂^{-1/2} (A + I) D̂^{-1/2}, dense row-major [n, n].
 /// Degrees here follow GCN convention on the *undirected* support of A+I.
+///
+/// **Small-graph reference only.** The default pipeline never
+/// materializes this O(n²) matrix: the native policy and the serving
+/// path build Â in CSR form via
+/// [`crate::runtime::nn::normalized_adjacency_csr`], and the
+/// differential tests here and in `runtime/nn` pin the sparse values to
+/// this dense construction bit-for-bit. Only the AOT artifact path
+/// (fixed-shape PJRT benchmarks, n ≤ ~1k) still consumes a dense Â.
 pub fn normalized_adjacency(g: &CompGraph) -> Vec<f32> {
     let n = g.n();
     let mut a = vec![0f32; n * n];
@@ -334,6 +348,24 @@ mod tests {
         }
         // Self-loop entries present.
         assert!(a[0] > 0.0);
+    }
+
+    #[test]
+    fn sparse_adjacency_matches_dense_reference() {
+        // The sparse hot path (CSR straight from the edge list) must
+        // reproduce the dense Eq. 6 reference bit-for-bit.
+        use crate::runtime::nn::normalized_adjacency_csr;
+        use crate::util::prop::{check, PropConfig};
+        check("sparse-ahat-dense", PropConfig { cases: 20, max_size: 48, ..Default::default() }, |rng, size| {
+            let g = CompGraph::random(rng, size, size / 3);
+            let dense = normalized_adjacency(&g);
+            let csr = normalized_adjacency_csr(g.n(), &g.edges);
+            let back = csr.to_dense(g.n());
+            if dense != back {
+                return Err("CSR Â diverged from dense reference".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -10,10 +10,15 @@ use crate::models::Benchmark;
 use crate::rl::{BackendFactory, Env, HsdagAgent};
 
 pub const VARIANTS: [FeatureConfig; 4] = [
-    FeatureConfig { no_shape: false, no_node_id: false, no_structural: false },
-    FeatureConfig { no_shape: true, no_node_id: false, no_structural: false },
-    FeatureConfig { no_shape: false, no_node_id: true, no_structural: false },
-    FeatureConfig { no_shape: false, no_node_id: false, no_structural: true },
+    FeatureConfig {
+        no_shape: false,
+        no_node_id: false,
+        no_structural: false,
+        exact_fractal: false,
+    },
+    FeatureConfig { no_shape: true, no_node_id: false, no_structural: false, exact_fractal: false },
+    FeatureConfig { no_shape: false, no_node_id: true, no_structural: false, exact_fractal: false },
+    FeatureConfig { no_shape: false, no_node_id: false, no_structural: true, exact_fractal: false },
 ];
 
 pub fn run(cfg: &Config, episodes: usize) -> Result<Table> {

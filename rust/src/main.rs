@@ -148,8 +148,34 @@ fn run(c: Cli) -> Result<()> {
                 let mut agent = HsdagAgent::with_backend(&env, Box::new(backend), &run_cfg)?;
                 agent.reset_episode();
                 let o = agent.step(&env, false)?;
-                let p = env.expand(&o.actions)?;
-                let rep = env.cost.evaluate(&env.graph, &p, &env.testbed);
+                let mut p = env.expand(&o.actions)?;
+                let mut rep = env.cost.evaluate(&env.graph, &p, &env.testbed);
+                // Multi-level stacks (graphs coarsened past --coarsen-budget)
+                // get a V-cycle refinement sweep: the policy's coarse
+                // placement is locally improved level by level, each trial
+                // re-simulated incrementally. Never worse than the plain
+                // expansion.
+                if env.levels.n_levels() > 1 {
+                    let coarse: Vec<usize> =
+                        o.actions.iter().map(|&a| env.testbed.action_device(a)).collect();
+                    let refined = env.levels.refine_placement(
+                        &env.graph,
+                        &env.testbed,
+                        &coarse,
+                        &env.testbed.placeable,
+                        c.usize_flag("refine-cap", 512)?,
+                    )?;
+                    let refined = Placement(refined);
+                    let r2 = env.cost.evaluate(&env.graph, &refined, &env.testbed);
+                    println!(
+                        "multi-level refinement ({} levels): {:.5}s -> {:.5}s",
+                        env.levels.n_levels(),
+                        rep.makespan,
+                        r2.makespan
+                    );
+                    p = refined;
+                    rep = r2;
+                }
                 println!(
                     "{} under policy({path}) on testbed {}: {:.5}s ({:+.1}% vs reference)",
                     env.workload.display,
@@ -255,6 +281,31 @@ fn run(c: Cli) -> Result<()> {
                     g.critical_path_len(),
                     g.total_flops() / 1e9
                 );
+                // Total-degree histogram in power-of-two buckets — the
+                // quick eyeball check that a generated graph has the
+                // intended shape before a long run.
+                let mut hist: Vec<usize> = Vec::new();
+                for v in 0..g.n() {
+                    let deg = g.in_degree(v) + g.out_degree(v);
+                    let bucket = (usize::BITS - deg.leading_zeros()) as usize; // 0 -> 0, 1 -> 1, 2-3 -> 2, ...
+                    if bucket >= hist.len() {
+                        hist.resize(bucket + 1, 0);
+                    }
+                    hist[bucket] += 1;
+                }
+                let mut line = String::from("  degree histogram:");
+                for (b, &count) in hist.iter().enumerate() {
+                    if count == 0 {
+                        continue;
+                    }
+                    let (lo, hi) = if b == 0 { (0, 0) } else { (1usize << (b - 1), (1 << b) - 1) };
+                    if lo == hi {
+                        line.push_str(&format!("  [{lo}]={count}"));
+                    } else {
+                        line.push_str(&format!("  [{lo}-{hi}]={count}"));
+                    }
+                }
+                println!("{line}");
             }
         }
         "serve" => {

@@ -23,6 +23,32 @@ const C: usize = 64;
 /// Spatial extent of the generator activations.
 const S: usize = 28;
 
+/// Append `x`'s decimal digits to `s` without the `format!` machinery.
+/// The generators build one name per node; at 100k+ nodes the formatter
+/// overhead (width/precision plumbing, trait dispatch) is measurable, so
+/// the scale-sensitive generators render digits directly.
+fn push_usize(s: &mut String, mut x: usize) {
+    let mut buf = [0u8; 20];
+    let mut i = buf.len();
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (x % 10) as u8;
+        x /= 10;
+        if x == 0 {
+            break;
+        }
+    }
+    s.push_str(std::str::from_utf8(&buf[i..]).expect("ascii digits"));
+}
+
+/// `<prefix><x>` built with one exact-capacity allocation.
+fn numbered(prefix: &str, x: usize) -> String {
+    let mut s = String::with_capacity(prefix.len() + 20);
+    s.push_str(prefix);
+    push_usize(&mut s, x);
+    s
+}
+
 /// Kind palette for the layered / series-parallel generators, with the
 /// attrs that make each op's cost non-trivial.
 fn palette_node(name: String, pick: usize) -> OpNode {
@@ -50,8 +76,8 @@ pub fn seq(n: usize) -> CompGraph {
     let mut g = CompGraph::new(format!("seq_{n}"));
     let mut prev = g.add_node(OpNode::new("input", OpKind::Parameter, vec![1, C, S, S]));
     for i in 0..n {
-        let v = g.add_node(palette_node(format!("op{i}"), i));
-        g.add_edge(prev, v);
+        let v = g.add_node(palette_node(numbered("op", i), i));
+        g.add_edge_unchecked(prev, v);
         prev = v;
     }
     let out = g.add_node(OpNode::new("output", OpKind::Result, vec![1, C, S, S]));
@@ -63,6 +89,12 @@ pub fn seq(n: usize) -> CompGraph {
 /// its same-column successor (so each has at least one producer and one
 /// consumer) plus a seeded random cross-link into the next layer, giving
 /// the partitioner real branching structure to cut.
+///
+/// The construction is O(n + m): every edge targets the brand-new node
+/// `v`, whose only possible prior in-edge is the same-column link — so
+/// the duplicate check collapses to one comparison and the generic
+/// `add_edge` scan is skipped. The emitted edge list is identical to the
+/// scan-based construction for every seed.
 pub fn layered(depth: usize, width: usize, seed: u64) -> CompGraph {
     let mut rng = Rng::new(seed ^ 0x1A7E3ED);
     let mut g = CompGraph::new(format!("layered_{depth}x{width}"));
@@ -71,10 +103,18 @@ pub fn layered(depth: usize, width: usize, seed: u64) -> CompGraph {
     for l in 0..depth {
         let mut layer = Vec::with_capacity(width);
         for w in 0..width {
-            let v = g.add_node(palette_node(format!("l{l}_n{w}"), rng.below(6)));
-            g.add_edge(prev_layer[w], v);
+            let mut name = String::with_capacity(24);
+            name.push('l');
+            push_usize(&mut name, l);
+            name.push_str("_n");
+            push_usize(&mut name, w);
+            let v = g.add_node(palette_node(name, rng.below(6)));
+            g.add_edge_unchecked(prev_layer[w], v);
             if width > 1 {
-                g.add_edge(prev_layer[rng.below(width)], v);
+                let r = prev_layer[rng.below(width)];
+                if r != prev_layer[w] {
+                    g.add_edge_unchecked(r, v);
+                }
             }
             layer.push(v);
         }
@@ -82,6 +122,8 @@ pub fn layered(depth: usize, width: usize, seed: u64) -> CompGraph {
     }
     let out = g.add_node(OpNode::new("output", OpKind::Result, vec![1, C, S, S]));
     for &v in &prev_layer {
+        // With depth >= 1 the last layer's ids are distinct; with depth 0
+        // every slot is the input node, so keep the checked insert.
         g.add_edge(v, out);
     }
     g
@@ -196,10 +238,16 @@ pub fn series_parallel(n: usize, seed: u64) -> CompGraph {
     g.add_node(OpNode::new("input", OpKind::Parameter, vec![1, C, S, S]));
     g.add_node(OpNode::new("output", OpKind::Result, vec![1, C, S, S]));
     for i in 2..count {
-        g.add_node(palette_node(format!("op{i}"), rng.below(6)));
+        g.add_node(palette_node(numbered("op", i), rng.below(6)));
     }
+    // Every edge in the SP construction is unique: a series step replaces
+    // an edge with two edges into/out of a fresh node, and a parallel
+    // step adds a branch through a fresh node — so one endpoint is always
+    // brand-new. The unchecked insert makes materialization O(n + m)
+    // where the duplicate scan was O(sum of out-degrees^2) on hub-heavy
+    // draws.
     for (a, b) in edges {
-        g.add_edge(a, b);
+        g.add_edge_unchecked(a, b);
     }
     g
 }
@@ -250,6 +298,21 @@ mod tests {
         let n_mm = g.nodes.iter().filter(|n| n.kind == OpKind::MatMul).count();
         assert_eq!(n_mm, 2 * 8, "8 matmuls per block (qkv, scores, ctx, proj, ffn1, ffn2)");
         assert!(g.total_flops() > 1e7);
+    }
+
+    #[test]
+    fn fast_path_edge_lists_have_no_duplicates() {
+        // The unchecked inserts rest on a uniqueness-by-construction
+        // argument; pin it (release builds skip the debug_assert).
+        for g in [seq(50), layered(10, 6, 3), layered(1, 4, 0), series_parallel(200, 5)] {
+            let mut e = g.edges.clone();
+            e.sort_unstable();
+            e.dedup();
+            assert_eq!(e.len(), g.m(), "{}: duplicate edges", g.name);
+            g.validate().unwrap();
+        }
+        assert_eq!(numbered("op", 0), "op0");
+        assert_eq!(numbered("x", 1_234_567_890), "x1234567890");
     }
 
     #[test]

@@ -234,6 +234,7 @@ impl GraphSource for SeqSource {
     fn build(&self, arg: &str) -> Result<CompGraph> {
         let n: usize = arg.parse().map_err(|_| anyhow!("want seq:<n>, got ':{arg}'"))?;
         ensure!(n >= 1, "seq needs at least one op");
+        ensure!(n <= MAX_SYNTH_NODES, "seq:<n> capped at {MAX_SYNTH_NODES} ops (got {n})");
         Ok(synth::seq(n))
     }
 }
@@ -262,6 +263,10 @@ impl GraphSource for LayeredSource {
         let depth: usize = d.parse().map_err(|_| anyhow!("bad depth '{d}'"))?;
         let width: usize = w.parse().map_err(|_| anyhow!("bad width '{w}'"))?;
         ensure!(depth >= 1 && width >= 1, "layered needs depth >= 1 and width >= 1");
+        ensure!(
+            depth.checked_mul(width).is_some_and(|n| n <= MAX_SYNTH_NODES),
+            "layered:<depth>x<width> capped at {MAX_SYNTH_NODES} ops (got {depth}x{width})"
+        );
         Ok(synth::layered(depth, width, seed))
     }
 }
@@ -319,9 +324,17 @@ impl GraphSource for RandomSource {
             .parse()
             .map_err(|_| anyhow!("want random:<n>[:<seed>], got ':{arg}'"))?;
         ensure!(n >= 3, "random needs n >= 3 (source, sink, one op)");
+        ensure!(n <= MAX_SYNTH_NODES, "random:<n> capped at {MAX_SYNTH_NODES} ops (got {n})");
         Ok(synth::series_parallel(n, seed))
     }
 }
+
+/// Upper bound on parametric generator sizes: large enough for the
+/// 100k+-node scaling tier with headroom, small enough that a typo'd
+/// `random:999999999` is a clear error instead of an OOM.
+const MAX_SYNTH_NODES: usize = 2_000_000;
+// The cap must admit the 100k scaling tier (compile-time check).
+const _: () = assert!(MAX_SYNTH_NODES >= 100_000);
 
 /// Split a trailing `:<seed>` off a generator argument (seed 0 default).
 fn split_seed(arg: &str) -> Result<(&str, u64)> {
@@ -386,6 +399,15 @@ mod tests {
         let msg = format!("{:#}", Workload::resolve("warehouse").unwrap_err());
         assert!(msg.contains("layered:<depth>x<width>"), "{msg}");
         assert!(msg.contains("file:<path>"), "{msg}");
+    }
+
+    #[test]
+    fn oversized_generator_specs_are_clear_errors() {
+        for spec in ["random:999999999", "seq:999999999", "layered:100000x100000"] {
+            let err = Workload::resolve(spec).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("capped"), "{spec}: {msg}");
+        }
     }
 
     #[test]

@@ -28,11 +28,12 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coarsen::{colocate, Coarsening};
+use crate::coarsen::{coarsen_to_budget, Coarsening, MultiLevel, DEFAULT_COARSEN_BUDGET};
 use crate::config::Config;
-use crate::features::{extract, normalized_adjacency, FeatureConfig, Features};
+use crate::features::{extract, FeatureConfig, Features};
 use crate::graph::CompGraph;
 use crate::models::{Benchmark, Workload};
+use crate::runtime::nn::normalized_adjacency_coo;
 use crate::runtime::Tensor;
 use crate::sim::{
     execute, measure_from, AnalyticCostModel, CostModel, ExecReport, ParallelCostModel, Placement,
@@ -65,8 +66,15 @@ pub struct Env {
     pub workload: WorkloadInfo,
     /// Original computation graph.
     pub graph: CompGraph,
-    /// Co-location coarsening original -> working graph.
+    /// Co-location coarsening original -> working graph. For multi-level
+    /// stacks this is the *flattened* composition (original node ->
+    /// coarsest set), so every single-level consumer keeps working.
     pub colo: Coarsening,
+    /// The full coarsening stack ([`coarsen_to_budget`]); one level on
+    /// paper-scale graphs, deeper on 100k+-node graphs whose co-located
+    /// form still exceeds `Config::coarsen_budget`. Kept for V-cycle
+    /// refinement ([`MultiLevel::refine_placement`]).
+    pub levels: MultiLevel,
     /// Feature extraction output on the working (co-located) graph.
     pub features: Features,
     /// The device set this environment places onto (action space + links).
@@ -136,7 +144,7 @@ impl Env {
         cfg: &Config,
         fcfg: FeatureConfig,
     ) -> Result<Env> {
-        let mut env = Self::build(workload, fcfg, cfg.resolve_testbed()?)?;
+        let mut env = Self::build(workload, fcfg, cfg.resolve_testbed()?, cfg.coarsen_budget)?;
         env.set_cost_model(Box::new(ParallelCostModel::new(AnalyticCostModel, cfg.eval_workers)));
         Ok(env)
     }
@@ -158,15 +166,22 @@ impl Env {
         fcfg: FeatureConfig,
         testbed: Testbed,
     ) -> Result<Env> {
-        Self::build(Workload::from_graph(graph, Some(bench)), fcfg, testbed)
+        Self::build(Workload::from_graph(graph, Some(bench)), fcfg, testbed, DEFAULT_COARSEN_BUDGET)
     }
 
-    /// Core constructor: coarsen, featurize, pad, and simulate the
-    /// reference placement for any workload.
-    fn build(workload: Workload, fcfg: FeatureConfig, testbed: Testbed) -> Result<Env> {
+    /// Core constructor: coarsen (multi-level, to `budget` working
+    /// nodes), featurize, pad, and simulate the reference placement for
+    /// any workload.
+    fn build(
+        workload: Workload,
+        fcfg: FeatureConfig,
+        testbed: Testbed,
+        budget: usize,
+    ) -> Result<Env> {
         let Workload { spec, display, bench, graph } = workload;
         let info = WorkloadInfo { spec, display, bench };
-        let colo = colocate(&graph);
+        let levels = coarsen_to_budget(&graph, budget);
+        let colo = levels.flatten();
         let wg = &colo.coarse;
         let (v_pad, e_pad) = match info.bench {
             Some(b) => {
@@ -196,16 +211,16 @@ impl Env {
 
         // Dense Â [v_pad, v_pad] exists for the AOT artifact contract
         // only — the native backend (the only one that can run registry
-        // workloads) message-passes over sparse COO at real size, so
+        // workloads) message-passes over sparse CSR at real size, so
         // workloads without an artifact bench skip the O(v_pad²)
         // allocation (a 1x1 placeholder stands in; every consumer sits
-        // behind `artifact_bench()`).
+        // behind `artifact_bench()`). Even on the artifact path the
+        // padded buffer is scattered straight from COO — no second
+        // dense [n, n] intermediate.
         let a_norm = if info.bench.is_some() {
-            let a_small = normalized_adjacency(wg);
             let mut a = vec![0f32; v_pad * v_pad];
-            for r in 0..wg.n() {
-                a[r * v_pad..r * v_pad + wg.n()]
-                    .copy_from_slice(&a_small[r * wg.n()..(r + 1) * wg.n()]);
+            for &(r, c, w) in &normalized_adjacency_coo(wg.n(), &wg.edges) {
+                a[r as usize * v_pad + c as usize] = w;
             }
             a
         } else {
@@ -252,6 +267,7 @@ impl Env {
             n_edges: wg.m(),
             features,
             colo,
+            levels,
             graph,
             testbed,
             cost: Box::new(AnalyticCostModel),
@@ -428,6 +444,25 @@ mod tests {
         assert_eq!(e.e_pad, 64, "zero-edge graphs keep a non-empty edge capacity");
         let lat = e.latency(&[1]).unwrap();
         assert!(lat < e.ref_latency, "all-on-accelerator beats the reference CPU");
+    }
+
+    #[test]
+    fn multi_level_budget_bounds_the_working_graph() {
+        let cfg = Config { coarsen_budget: 64, ..Config::default() };
+        let e = Env::for_workload(Workload::resolve("layered:48x24:7").unwrap(), &cfg).unwrap();
+        assert!(e.n_nodes <= 64, "working graph has {} nodes", e.n_nodes);
+        assert!(e.levels.n_levels() > 1, "expected a multi-level stack");
+        assert_eq!(e.n_nodes, e.levels.n_sets());
+        // The flattened expansion still covers every original node, and
+        // the whole place path works on the coarsest graph.
+        let actions = vec![1usize; e.n_nodes];
+        let p = e.expand(&actions).unwrap();
+        assert_eq!(p.0.len(), e.graph.n());
+        assert!(e.latency(&actions).unwrap().is_finite());
+        // Paper benchmarks stay single-level under the default budget, so
+        // every artifact-contract test upstream is untouched.
+        let e = env(Benchmark::ResNet50);
+        assert_eq!(e.levels.n_levels(), 1);
     }
 
     #[test]

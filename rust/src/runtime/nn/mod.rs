@@ -307,6 +307,24 @@ impl Csr {
     pub fn nnz(&self) -> usize {
         self.col.len()
     }
+
+    /// Heap bytes held by the operator — the scaling benches report this
+    /// as a peak-RSS proxy alongside throughput.
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col.len() * 4 + self.w.len() * 4
+    }
+
+    /// Materialize as a dense row-major `[rows, cols]` matrix. Test and
+    /// diagnostics helper only — the hot paths never call this.
+    pub fn to_dense(&self, cols: usize) -> Vec<f32> {
+        let mut a = vec![0f32; self.rows * cols];
+        for i in 0..self.rows {
+            for e in self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize {
+                a[i * cols + self.col[e] as usize] += self.w[e];
+            }
+        }
+        a
+    }
 }
 
 /// out = Â @ x over the CSR operator (overwrites `out`). One pass over
@@ -384,6 +402,14 @@ pub fn normalized_adjacency_coo(n: usize, edges: &[(usize, usize)]) -> Vec<(u32,
         coo.push((b as u32, a as u32, w));
     }
     coo
+}
+
+/// Â in CSR form straight from the edge list — the sparse hot path used
+/// by the native policy and the serving pipeline. The dense
+/// `features::normalized_adjacency` remains only as the small-graph
+/// differential-test reference.
+pub fn normalized_adjacency_csr(n: usize, edges: &[(usize, usize)]) -> Csr {
+    Csr::from_coo(n, &normalized_adjacency_coo(n, edges))
 }
 
 /// Mean-pool rows of `z` into `slots` segments by id (the segment_mean of

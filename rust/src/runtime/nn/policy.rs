@@ -37,7 +37,7 @@ use anyhow::{ensure, Result};
 use super::{
     add_bias, aggregate_bias_relu_into, aggregate_into, colsum_acc, log_softmax_into,
     matmul_a_bt_into, matmul_at_b_acc, matmul_at_b_acc_sparse, matmul_into, matmul_sparse_rows,
-    normalized_adjacency_coo, relu, relu_bwd, segment_mean_into, sigmoid, Csr,
+    normalized_adjacency_csr, relu, relu_bwd, segment_mean_into, sigmoid, Csr,
 };
 use crate::runtime::params::ParamStore;
 use crate::util::Rng;
@@ -199,8 +199,7 @@ impl NativePolicy {
         for &(s, t) in &edges {
             ensure!(s < n && t < n, "edge ({s},{t}) out of range for {n} nodes");
         }
-        let coo = normalized_adjacency_coo(n, &edges);
-        let csr = Csr::from_coo(n, &coo);
+        let csr = normalized_adjacency_csr(n, &edges);
         let params = ParamStore::init_hsdag(d, h, nd, rng);
         Ok(NativePolicy {
             params,

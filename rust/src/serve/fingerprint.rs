@@ -93,6 +93,130 @@ pub fn fingerprint_hex(g: &CompGraph, testbed_id: &str) -> String {
     format!("{:016x}", fingerprint(g, testbed_id))
 }
 
+/// Position-mix for combining per-node subhashes order-independently:
+/// the combined value is a wrapping *sum* of `mix(id, subhash)` terms, so
+/// updating one node is a subtract-old / add-new in O(1) instead of a
+/// full O(n + m) re-hash. The mix binds each subhash to its node id so
+/// swapping two nodes' contents changes the sum.
+fn mix(id: usize, subhash: u64) -> u64 {
+    let x = subhash ^ (id as u64).wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    (x ^ (x >> 31)).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+}
+
+/// Everything the fingerprint observes about one node: op identity,
+/// shape, cost attrs, and its *out-edge list* (sorted — adjacency push
+/// order is a construction artifact). In-edges are deliberately absent:
+/// every edge is covered exactly once, by its source's subhash, so the
+/// dirty set for an edge edit is just the source node.
+fn node_subhash(g: &CompGraph, v: usize) -> u64 {
+    let node = &g.nodes[v];
+    let mut h = Fnv::new();
+    h.usize(node.feature_slot());
+    h.usize(node.kind.index());
+    h.usize(node.output_shape.len());
+    for &d in &node.output_shape {
+        h.usize(d);
+    }
+    h.usize(node.attrs.taps);
+    h.usize(node.attrs.reduce_dim);
+    h.usize(node.attrs.groups);
+    let mut outs = g.out_neighbors(v).to_vec();
+    outs.sort_unstable();
+    h.usize(outs.len());
+    for t in outs {
+        h.usize(t);
+    }
+    h.0
+}
+
+/// Incrementally maintainable structural fingerprint ("hsdag-fpd-v1").
+///
+/// The serve daemon re-keys its placement cache on every request; for a
+/// 100k-node graph where an editing frontend touched three nodes, a full
+/// `fingerprint` walk is 100k node hashes plus an O(m log m) edge sort
+/// per request. `FingerprintState` holds one subhash per node and a
+/// running order-independent combination; [`fingerprint_delta`] re-hashes
+/// only the dirty nodes (plus any appended ones) and patches the
+/// combination in O(|dirty| + out-degree) — bit-identical, by
+/// construction and by differential test, to rebuilding the state from
+/// scratch with [`FingerprintState::full`].
+///
+/// This is a *separate* hash family from the wire-protocol
+/// `fingerprint` ("hsdag-fp-v1"), which stays byte-for-byte stable for
+/// existing caches; both discriminate exactly the same observations.
+///
+/// Supported edits: node field mutations (kind / shape / attrs), edge
+/// insertions (dirty = the source node), and node appends (ids are dense
+/// and append-only — the state grows to match the graph). Deletions are
+/// not modeled; graphs here only grow.
+pub struct FingerprintState {
+    /// FNV over (version tag, testbed id) — fixed for the state's life.
+    header: u64,
+    node_hash: Vec<u64>,
+    /// Wrapping sum of `mix(v, node_hash[v])` over all nodes.
+    sum: u64,
+}
+
+impl FingerprintState {
+    /// Build the state from scratch in O(n + m).
+    pub fn full(g: &CompGraph, testbed_id: &str) -> FingerprintState {
+        let mut h = Fnv::new();
+        h.str("hsdag-fpd-v1");
+        h.str(testbed_id);
+        let header = h.0;
+        let node_hash: Vec<u64> = (0..g.n()).map(|v| node_subhash(g, v)).collect();
+        let sum = node_hash
+            .iter()
+            .enumerate()
+            .fold(0u64, |acc, (v, &nh)| acc.wrapping_add(mix(v, nh)));
+        FingerprintState { header, node_hash, sum }
+    }
+
+    /// The current fingerprint value. O(1).
+    pub fn value(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.u64(self.header);
+        h.usize(self.node_hash.len());
+        h.u64(self.sum);
+        h.0
+    }
+
+    /// Number of nodes the state currently covers.
+    pub fn n(&self) -> usize {
+        self.node_hash.len()
+    }
+
+    /// Re-hash exactly the `dirty` nodes against the current graph and
+    /// patch the combined value; appended nodes (ids at or past the old
+    /// length) are picked up automatically. Listing a node twice is
+    /// harmless (the second update is a no-op). Returns the new value.
+    pub fn apply_delta(&mut self, g: &CompGraph, dirty: &[usize]) -> u64 {
+        // Appended nodes are always dirty: they had no subhash before.
+        let old_len = self.node_hash.len();
+        for v in old_len..g.n() {
+            let nh = node_subhash(g, v);
+            self.node_hash.push(nh);
+            self.sum = self.sum.wrapping_add(mix(v, nh));
+        }
+        for &v in dirty {
+            assert!(v < g.n(), "dirty node {v} out of range");
+            if v >= old_len {
+                continue; // freshly appended: already hashed above
+            }
+            let nh = node_subhash(g, v);
+            let old = std::mem::replace(&mut self.node_hash[v], nh);
+            self.sum = self.sum.wrapping_sub(mix(v, old)).wrapping_add(mix(v, nh));
+        }
+        self.value()
+    }
+}
+
+/// Free-function form of the incremental update: patch `state` for the
+/// given dirty nodes and return the new fingerprint value.
+pub fn fingerprint_delta(state: &mut FingerprintState, g: &CompGraph, dirty: &[usize]) -> u64 {
+    state.apply_delta(g, dirty)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +308,98 @@ mod tests {
                 assert_ne!(variants[i], variants[j], "variants {i} and {j} collided");
             }
         }
+    }
+
+    #[test]
+    fn delta_state_discriminates_like_the_full_fingerprint() {
+        let g = base();
+        let fp = FingerprintState::full(&g, "cpu_gpu").value();
+        let mut kind_change = g.clone();
+        kind_change.nodes[1].kind = OpKind::Sigmoid;
+        let mut shape_change = g.clone();
+        shape_change.nodes[2].output_shape = vec![1, 16];
+        for (label, variant) in [
+            ("kind", FingerprintState::full(&kind_change, "cpu_gpu").value()),
+            ("shape", FingerprintState::full(&shape_change, "cpu_gpu").value()),
+            ("testbed", FingerprintState::full(&g, "paper3").value()),
+        ] {
+            assert_ne!(variant, fp, "{label} variant collided with the base graph");
+        }
+        // Renaming still never changes the hash.
+        let mut renamed = g.clone();
+        for (i, node) in renamed.nodes.iter_mut().enumerate() {
+            node.name = format!("other_{i}");
+        }
+        assert_eq!(FingerprintState::full(&renamed, "cpu_gpu").value(), fp);
+    }
+
+    /// The tentpole differential test: a long randomized edit sequence
+    /// (field mutations, edge inserts, node appends) where after every
+    /// edit the incrementally patched state must equal a from-scratch
+    /// rebuild, bit for bit.
+    #[test]
+    fn delta_matches_full_recompute_on_randomized_edit_sequences() {
+        use crate::util::Rng;
+        for case in 0..12u64 {
+            let mut rng = Rng::new(0xF19E_0001 ^ case.wrapping_mul(0x9E37_79B9));
+            let w = Workload::resolve(&format!("layered:6x4:{case}")).unwrap();
+            let mut g = w.graph;
+            let mut state = FingerprintState::full(&g, "cpu_gpu");
+            assert_eq!(state.value(), FingerprintState::full(&g, "cpu_gpu").value());
+            for _ in 0..30 {
+                let mut dirty: Vec<usize> = Vec::new();
+                match rng.below(4) {
+                    0 => {
+                        // Mutate a node's cost attrs / shape.
+                        let v = rng.below(g.n());
+                        g.nodes[v].attrs.taps = rng.below(5);
+                        g.nodes[v].output_shape = vec![1, 1 + rng.below(64)];
+                        dirty.push(v);
+                    }
+                    1 => {
+                        // Insert a forward edge src -> dst (src < dst keeps
+                        // it acyclic); only the source is dirty.
+                        let src = rng.below(g.n() - 1);
+                        let dst = src + 1 + rng.below(g.n() - src - 1);
+                        g.add_edge(src, dst);
+                        dirty.push(src);
+                    }
+                    2 => {
+                        // Append a node and wire an existing node into it.
+                        let src = rng.below(g.n());
+                        let v = g.add_node(OpNode::new("appended", OpKind::Relu, vec![1, 4]));
+                        g.add_edge(src, v);
+                        dirty.push(src);
+                        // `v` itself is picked up by the append path.
+                    }
+                    _ => {
+                        // Relabel a node: must NOT change the hash, and an
+                        // empty dirty set must keep the state consistent.
+                        let v = rng.below(g.n());
+                        g.nodes[v].name.push('x');
+                    }
+                }
+                let patched = state.apply_delta(&g, &dirty);
+                let rebuilt = FingerprintState::full(&g, "cpu_gpu");
+                assert_eq!(
+                    patched,
+                    rebuilt.value(),
+                    "case {case}: delta diverged from full recompute (n={})",
+                    g.n()
+                );
+                assert_eq!(state.n(), g.n());
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_delta_free_function_and_duplicate_dirty_entries() {
+        let mut g = base();
+        let mut state = FingerprintState::full(&g, "cpu_gpu");
+        g.nodes[2].attrs.groups = 7;
+        // Same node listed twice: second update is a no-op.
+        let v = fingerprint_delta(&mut state, &g, &[2, 2]);
+        assert_eq!(v, FingerprintState::full(&g, "cpu_gpu").value());
+        assert_eq!(v, state.value());
     }
 }

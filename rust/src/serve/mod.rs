@@ -34,6 +34,6 @@ pub mod server;
 
 pub use cache::LruCache;
 pub use checkpoint::{Checkpoint, CheckpointMeta};
-pub use fingerprint::{fingerprint, fingerprint_hex};
+pub use fingerprint::{fingerprint, fingerprint_delta, fingerprint_hex, FingerprintState};
 pub use protocol::{PlaceOutcome, Provenance, Request, StatsView};
 pub use server::{PlacementService, ServeOptions, Server, ServerHandle};

@@ -6,8 +6,11 @@
 //! the latency l_P(G) the RL reward is built from plus per-device memory
 //! high-water / feasibility, a pluggable `CostModel` layer with batched
 //! (`evaluate_many`) and parallel request-stream (`measure_many`)
-//! evaluation over a scoped worker pool, and the downstream numeric drift
-//! model behind Table 4.
+//! evaluation over a scoped worker pool, an incremental re-simulation
+//! mode (`IncrementalEvaluator`: memoized schedules replay the
+//! unaffected event prefix and re-simulate only from the first event a
+//! placement edit can reach — bit-identical to full re-evaluation), and
+//! the downstream numeric drift model behind Table 4.
 
 pub mod cost;
 pub mod device;
@@ -17,4 +20,7 @@ pub mod scheduler;
 
 pub use cost::{request_rng, AnalyticCostModel, CostModel, ParallelCostModel, ReferenceCostModel};
 pub use device::{DeviceId, DeviceKind, DeviceModel, LinkModel, Testbed, CPU, DGPU, IGPU};
-pub use scheduler::{execute, execute_reference, measure, measure_from, ExecReport, Placement};
+pub use scheduler::{
+    execute, execute_incremental, execute_reference, execute_with_memo, measure, measure_from,
+    ExecReport, IncrementalEvaluator, Placement, SimMemo,
+};

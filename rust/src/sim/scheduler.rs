@@ -431,6 +431,329 @@ pub fn execute_reference(g: &CompGraph, placement: &Placement, tb: &Testbed) -> 
     ExecReport { makespan, busy, bytes_transferred, n_transfers, mem_peak, oom_devices }
 }
 
+/// Memoized schedule of one completed [`execute_with_memo`] /
+/// [`execute_incremental`] run: the event order plus per-node start,
+/// finish and lane assignment, the placement it describes, and the
+/// (placement-independent) upward rank. Enough state to replay any
+/// prefix of the schedule exactly.
+#[derive(Debug, Clone)]
+pub struct SimMemo {
+    /// Nodes in the exact order the scheduler popped them.
+    order: Vec<usize>,
+    start: Vec<f64>,
+    finish: Vec<f64>,
+    /// Device lane each node occupied.
+    lane: Vec<usize>,
+    rank: Vec<f64>,
+    placement: Vec<DeviceId>,
+}
+
+impl SimMemo {
+    pub fn n(&self) -> usize {
+        self.order.len()
+    }
+}
+
+/// [`execute`] that additionally records a [`SimMemo`] for later
+/// incremental re-evaluation. The report is bit-identical to `execute`'s
+/// (same loop, same accumulation order); the differential tests pin it.
+pub fn execute_with_memo(
+    g: &CompGraph,
+    placement: &Placement,
+    tb: &Testbed,
+) -> (ExecReport, SimMemo) {
+    assert_eq!(placement.0.len(), g.n(), "one device per node");
+    let order = g.topo_order().expect("simulator needs a DAG");
+    let rank = upward_rank(g, tb, &order);
+
+    let n = g.n();
+    let mut indeg: Vec<usize> = (0..n).map(|v| g.in_degree(v)).collect();
+    let mut finish = vec![0f64; n];
+    let mut data_ready = vec![0f64; n];
+    let mut lane_free: Vec<Vec<f64>> =
+        tb.devices.iter().map(|d| vec![0f64; d.lanes.max(1)]).collect();
+    let mut busy = vec![0f64; tb.n_devices()];
+    let mut bytes_transferred = 0.0;
+    let mut n_transfers = 0usize;
+
+    let dev_free = |lane_free: &[Vec<f64>], d: DeviceId| -> f64 {
+        lane_free[d].iter().cloned().fold(f64::INFINITY, f64::min)
+    };
+
+    let mut heap: BinaryHeap<ReadyOp> = BinaryHeap::with_capacity(n);
+    for v in 0..n {
+        if indeg[v] == 0 {
+            heap.push(ReadyOp { start: dev_free(&lane_free, placement.0[v]), rank: rank[v], node: v });
+        }
+    }
+
+    let mut memo_order = Vec::with_capacity(n);
+    let mut memo_start = vec![0f64; n];
+    let mut memo_lane = vec![0usize; n];
+
+    let mut scheduled = 0usize;
+    let mut makespan = 0f64;
+
+    while scheduled < n {
+        let e = heap.pop().expect("ready heap non-empty while ops remain");
+        let v = e.node;
+        let d = placement.0[v];
+        let start = dev_free(&lane_free, d).max(data_ready[v]);
+        if start > e.start {
+            heap.push(ReadyOp { start, rank: e.rank, node: v });
+            continue;
+        }
+
+        for &p in g.in_neighbors(v) {
+            if placement.0[p] != d && g.nodes[p].kind != OpKind::Constant {
+                bytes_transferred += g.nodes[p].out_bytes();
+                n_transfers += 1;
+            }
+        }
+
+        let t = tb.devices[d].op_time(&g.nodes[v]);
+        let end = start + t;
+        finish[v] = end;
+        let lane = (0..lane_free[d].len())
+            .min_by(|&a, &b| lane_free[d][a].partial_cmp(&lane_free[d][b]).unwrap())
+            .unwrap();
+        lane_free[d][lane] = end;
+        busy[d] += t;
+        makespan = makespan.max(end);
+        scheduled += 1;
+        memo_order.push(v);
+        memo_start[v] = start;
+        memo_lane[v] = lane;
+
+        for &w in g.out_neighbors(v) {
+            indeg[w] -= 1;
+            if indeg[w] == 0 {
+                data_ready[w] = data_ready_time(g, placement, tb, &finish, w);
+                heap.push(ReadyOp {
+                    start: dev_free(&lane_free, placement.0[w]).max(data_ready[w]),
+                    rank: rank[w],
+                    node: w,
+                });
+            }
+        }
+    }
+
+    let (mem_peak, oom_devices) = memory_highwater(g, placement, tb, &finish, makespan);
+    let memo = SimMemo {
+        order: memo_order,
+        start: memo_start,
+        finish: finish.clone(),
+        lane: memo_lane,
+        rank,
+        placement: placement.0.clone(),
+    };
+    (ExecReport { makespan, busy, bytes_transferred, n_transfers, mem_peak, oom_devices }, memo)
+}
+
+/// Incremental re-simulation against a [`SimMemo`] of the *same graph
+/// and testbed* under a different placement: replay the memoized event
+/// prefix up to the first event any changed-placement node could have
+/// entered the ready set, then resume the normal scheduler loop for the
+/// suffix only.
+///
+/// Bit-identical to a full re-run, by two invariants the differential
+/// tests pin:
+/// 1. The prefix contains no node whose placement changed (divergence
+///    index = min over changed nodes of their ready position, and a node
+///    schedules no earlier than it becomes ready), and prefix events
+///    depend only on prefix placements — so replaying memoized
+///    (start, finish, lane) values and re-accumulating transfers/busy in
+///    event order reproduces the full run's state at the divergence
+///    point exactly.
+/// 2. The scheduler's lazy heap pops in the exact (start, -rank, node)
+///    order for *any* entry keys that lower-bound the true current start
+///    times (stale entries are re-keyed on pop; device-free times only
+///    grow). The reconstructed heap seeds exact current keys — valid
+///    lower bounds — so the suffix continues exactly as the full run's.
+pub fn execute_incremental(
+    g: &CompGraph,
+    placement: &Placement,
+    tb: &Testbed,
+    memo: &SimMemo,
+) -> (ExecReport, SimMemo) {
+    let n = g.n();
+    assert_eq!(placement.0.len(), n, "one device per node");
+    assert_eq!(memo.placement.len(), n, "memo is for a different graph");
+
+    // Event index of each node in the memoized schedule.
+    let mut pos = vec![0usize; n];
+    for (t, &v) in memo.order.iter().enumerate() {
+        pos[v] = t;
+    }
+    // Divergence: the earliest event at which a changed node is ready
+    // (indeg-0 nodes are ready before event 0).
+    let mut idx = n;
+    for v in 0..n {
+        if placement.0[v] != memo.placement[v] {
+            let ready_pos = if g.in_degree(v) == 0 {
+                0
+            } else {
+                g.in_neighbors(v).iter().map(|&p| pos[p] + 1).max().unwrap_or(0)
+            };
+            idx = idx.min(ready_pos);
+        }
+    }
+
+    let mut indeg: Vec<usize> = (0..n).map(|v| g.in_degree(v)).collect();
+    let mut finish = vec![0f64; n];
+    let mut data_ready = vec![0f64; n];
+    let mut lane_free: Vec<Vec<f64>> =
+        tb.devices.iter().map(|d| vec![0f64; d.lanes.max(1)]).collect();
+    let mut busy = vec![0f64; tb.n_devices()];
+    let mut bytes_transferred = 0.0;
+    let mut n_transfers = 0usize;
+    let mut makespan = 0f64;
+    let mut scheduled = 0usize;
+
+    let mut memo_order = Vec::with_capacity(n);
+    let mut memo_start = vec![0f64; n];
+    let mut memo_lane = vec![0usize; n];
+
+    // Replay the unaffected prefix from the memo (no changed node — and
+    // hence no changed predecessor — appears in it).
+    for &v in memo.order.iter().take(idx) {
+        let d = placement.0[v];
+        debug_assert_eq!(d, memo.placement[v], "changed node inside replay prefix");
+        for &p in g.in_neighbors(v) {
+            if placement.0[p] != d && g.nodes[p].kind != OpKind::Constant {
+                bytes_transferred += g.nodes[p].out_bytes();
+                n_transfers += 1;
+            }
+        }
+        let t = tb.devices[d].op_time(&g.nodes[v]);
+        finish[v] = memo.finish[v];
+        lane_free[d][memo.lane[v]] = memo.finish[v];
+        busy[d] += t;
+        makespan = makespan.max(memo.finish[v]);
+        scheduled += 1;
+        memo_order.push(v);
+        memo_start[v] = memo.start[v];
+        memo_lane[v] = memo.lane[v];
+        for &w in g.out_neighbors(v) {
+            indeg[w] -= 1;
+        }
+    }
+
+    let dev_free = |lane_free: &[Vec<f64>], d: DeviceId| -> f64 {
+        lane_free[d].iter().cloned().fold(f64::INFINITY, f64::min)
+    };
+
+    // Seed the ready set: unscheduled nodes whose producers all finished
+    // in the prefix. Their data-ready times recompute to exactly the
+    // values the full run fixed when they became ready (all producer
+    // finishes are prefix values).
+    let mut heap: BinaryHeap<ReadyOp> = BinaryHeap::with_capacity(n - scheduled);
+    let mut in_prefix = vec![false; n];
+    for &v in memo.order.iter().take(idx) {
+        in_prefix[v] = true;
+    }
+    for v in 0..n {
+        if indeg[v] == 0 && !in_prefix[v] {
+            data_ready[v] = data_ready_time(g, placement, tb, &finish, v);
+            heap.push(ReadyOp {
+                start: dev_free(&lane_free, placement.0[v]).max(data_ready[v]),
+                rank: memo.rank[v],
+                node: v,
+            });
+        }
+    }
+
+    // Resume the normal scheduler loop for the suffix.
+    while scheduled < n {
+        let e = heap.pop().expect("ready heap non-empty while ops remain");
+        let v = e.node;
+        let d = placement.0[v];
+        let start = dev_free(&lane_free, d).max(data_ready[v]);
+        if start > e.start {
+            heap.push(ReadyOp { start, rank: e.rank, node: v });
+            continue;
+        }
+
+        for &p in g.in_neighbors(v) {
+            if placement.0[p] != d && g.nodes[p].kind != OpKind::Constant {
+                bytes_transferred += g.nodes[p].out_bytes();
+                n_transfers += 1;
+            }
+        }
+
+        let t = tb.devices[d].op_time(&g.nodes[v]);
+        let end = start + t;
+        finish[v] = end;
+        let lane = (0..lane_free[d].len())
+            .min_by(|&a, &b| lane_free[d][a].partial_cmp(&lane_free[d][b]).unwrap())
+            .unwrap();
+        lane_free[d][lane] = end;
+        busy[d] += t;
+        makespan = makespan.max(end);
+        scheduled += 1;
+        memo_order.push(v);
+        memo_start[v] = start;
+        memo_lane[v] = lane;
+
+        for &w in g.out_neighbors(v) {
+            indeg[w] -= 1;
+            if indeg[w] == 0 {
+                data_ready[w] = data_ready_time(g, placement, tb, &finish, w);
+                heap.push(ReadyOp {
+                    start: dev_free(&lane_free, placement.0[w]).max(data_ready[w]),
+                    rank: memo.rank[w],
+                    node: w,
+                });
+            }
+        }
+    }
+
+    let (mem_peak, oom_devices) = memory_highwater(g, placement, tb, &finish, makespan);
+    let next = SimMemo {
+        order: memo_order,
+        start: memo_start,
+        finish: finish.clone(),
+        lane: memo_lane,
+        rank: memo.rank.clone(),
+        placement: placement.0.clone(),
+    };
+    (ExecReport { makespan, busy, bytes_transferred, n_transfers, mem_peak, oom_devices }, next)
+}
+
+/// Stateful incremental evaluator over one fixed (graph, testbed) pair:
+/// the first [`IncrementalEvaluator::evaluate`] runs the full scheduler
+/// and memoizes the schedule; every later call re-simulates only from
+/// the first event the placement edit can affect. Reports are
+/// bit-identical to fresh [`execute`] calls (differential-tested); the
+/// win is proportional to how late in the schedule the edit lands —
+/// e.g. the per-group device sweeps of multi-level refinement.
+pub struct IncrementalEvaluator {
+    g: CompGraph,
+    tb: Testbed,
+    memo: Option<SimMemo>,
+}
+
+impl IncrementalEvaluator {
+    pub fn new(g: CompGraph, tb: Testbed) -> IncrementalEvaluator {
+        IncrementalEvaluator { g, tb, memo: None }
+    }
+
+    pub fn graph(&self) -> &CompGraph {
+        &self.g
+    }
+
+    /// Evaluate a placement given as one device id per node.
+    pub fn evaluate(&mut self, actions: &[DeviceId]) -> ExecReport {
+        let p = Placement(actions.to_vec());
+        let (rep, memo) = match self.memo.take() {
+            None => execute_with_memo(&self.g, &p, &self.tb),
+            Some(m) => execute_incremental(&self.g, &p, &self.tb, &m),
+        };
+        self.memo = Some(memo);
+        rep
+    }
+}
+
 /// The paper's measurement protocol applied to an already-simulated
 /// deterministic makespan: 10 runs with multiplicative noise
 /// (~N(1, sigma)), average of the last 5 (Table 2 caption). `sigma = 0`
@@ -749,6 +1072,73 @@ mod tests {
         let mut b = crate::util::Rng::new(42);
         assert_eq!(measure(&g, &p, &tb, 0.05, &mut a), measure_from(base, 0.05, &mut b));
         assert_eq!(measure_from(base, 0.0, &mut b), base);
+    }
+
+    #[test]
+    fn with_memo_report_matches_execute() {
+        for tb in Testbed::registered() {
+            let mut rng = crate::util::Rng::new(0xBEEF);
+            let g = Benchmark::InceptionV3.build();
+            let p = Placement(
+                (0..g.n()).map(|_| tb.placeable[rng.below(tb.n_actions())]).collect(),
+            );
+            let plain = execute(&g, &p, &tb);
+            let (rep, memo) = execute_with_memo(&g, &p, &tb);
+            assert_eq!(plain, rep, "{}", tb.id);
+            assert_eq!(memo.n(), g.n());
+        }
+    }
+
+    #[test]
+    fn incremental_matches_full_on_randomized_edit_sequences() {
+        // THE differential test of the incremental mode: random graphs,
+        // random starting placements, then a sequence of random edits
+        // (single-node flips and small batches); after every edit the
+        // incremental report must equal a fresh full run bit-for-bit,
+        // on every field of the report.
+        check(
+            "incremental-vs-full",
+            PropConfig { cases: 24, max_size: 70, ..Default::default() },
+            |rng, size| {
+                let g = CompGraph::random(rng, size, size / 3);
+                let tbs = Testbed::registered();
+                let tb = tbs[rng.below(tbs.len())].clone();
+                let mut actions: Vec<usize> =
+                    (0..g.n()).map(|_| tb.placeable[rng.below(tb.n_actions())]).collect();
+                let mut eval = IncrementalEvaluator::new(g.clone(), tb.clone());
+                for step in 0..8 {
+                    // Edit: flip 1..4 random nodes (step 0 evaluates the
+                    // unedited placement to seed the memo).
+                    if step > 0 {
+                        for _ in 0..1 + rng.below(3) {
+                            let v = rng.below(g.n());
+                            actions[v] = tb.placeable[rng.below(tb.n_actions())];
+                        }
+                    }
+                    let inc = eval.evaluate(&actions);
+                    let full = execute(&g, &Placement(actions.clone()), &tb);
+                    if inc != full {
+                        return Err(format!(
+                            "step {step}: incremental {:?} != full {:?} ({})",
+                            inc.makespan, full.makespan, tb.id
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn incremental_noop_edit_is_exact() {
+        let g = Benchmark::ResNet50.build();
+        let tb = Testbed::paper();
+        let p: Vec<usize> = (0..g.n()).map(|v| [CPU, DGPU][v % 2]).collect();
+        let mut eval = IncrementalEvaluator::new(g.clone(), tb.clone());
+        let a = eval.evaluate(&p);
+        let b = eval.evaluate(&p); // no edit: pure prefix replay
+        assert_eq!(a, b);
+        assert_eq!(a, execute(&g, &Placement(p), &tb));
     }
 
     #[test]

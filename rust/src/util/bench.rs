@@ -90,6 +90,7 @@ pub struct BenchSession {
     json: bool,
     quick: bool,
     results: Vec<BenchResult>,
+    counters: Vec<(String, f64)>,
 }
 
 impl BenchSession {
@@ -103,6 +104,7 @@ impl BenchSession {
             json: args.iter().any(|a| a == "--json"),
             quick: args.iter().any(|a| a == "--quick"),
             results: Vec::new(),
+            counters: Vec::new(),
         }
     }
 
@@ -149,6 +151,17 @@ impl BenchSession {
         self.results.push(r);
     }
 
+    /// Record a named scalar that is not a timing — byte counts, node
+    /// counts, peak-allocation proxies. Counters ride along in the JSON
+    /// document (`counters` array) so scaling snapshots can prove memory
+    /// growth stayed linear, not just wall time.
+    pub fn counter(&mut self, name: &str, value: f64) {
+        if !self.json {
+            println!("counter {name:<42} {value}");
+        }
+        self.counters.push((name.to_string(), value));
+    }
+
     /// In JSON mode, emit the single `hsdag-bench-v1` document; a no-op
     /// otherwise. Call this last.
     pub fn finish(self) {
@@ -173,11 +186,22 @@ impl BenchSession {
                 ])
             })
             .collect();
+        let counters = self
+            .counters
+            .iter()
+            .map(|(name, value)| {
+                Json::Obj(vec![
+                    ("name".to_string(), Json::Str(name.clone())),
+                    ("value".to_string(), Json::Num(*value)),
+                ])
+            })
+            .collect();
         Json::Obj(vec![
             ("format".to_string(), Json::Str("hsdag-bench-v1".to_string())),
             ("bench".to_string(), Json::Str(self.bench.clone())),
             ("quick".to_string(), Json::Bool(self.quick)),
             ("results".to_string(), Json::Arr(results)),
+            ("counters".to_string(), Json::Arr(counters)),
         ])
     }
 }
@@ -201,8 +225,10 @@ mod tests {
             json: true,
             quick: true,
             results: Vec::new(),
+            counters: Vec::new(),
         };
         s.run("case/a", 3, 64, || (0..100).sum::<usize>());
+        s.counter("bytes/case/a", 4096.0);
         let text = s.to_json().to_string_compact();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("format").unwrap().as_str(), Some("hsdag-bench-v1"));
@@ -214,6 +240,10 @@ mod tests {
         // --quick caps iterations at two.
         assert_eq!(rs[0].get("iters").unwrap().as_usize(), Some(2));
         assert!(rs[0].get("median_ns").unwrap().as_f64().unwrap() > 0.0);
+        let cs = back.get("counters").unwrap().as_arr().unwrap();
+        assert_eq!(cs.len(), 1);
+        assert_eq!(cs[0].get("name").unwrap().as_str(), Some("bytes/case/a"));
+        assert_eq!(cs[0].get("value").unwrap().as_f64(), Some(4096.0));
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! Scale-path integration tests: the whole pipeline (generate -> features
+//! -> multi-level coarsen -> env -> policy-sized working graph ->
+//! evaluate) on graphs far past the paper benchmarks, in debug mode with
+//! a small coarsening budget so `cargo test` stays fast. The 100k tier
+//! runs in release via the bench targets and the CI e2e smoke; here we
+//! pin the structural invariants the speed claims rest on.
+
+use hsdag::coarsen::{coarsen_to_budget, DEFAULT_COARSEN_BUDGET};
+use hsdag::config::Config;
+use hsdag::features::{extract, FeatureConfig, FRACTAL_EXACT_THRESHOLD};
+use hsdag::models::Workload;
+use hsdag::rl::Env;
+use hsdag::sim::{execute, IncrementalEvaluator, Placement, Testbed};
+
+#[test]
+fn twenty_k_pipeline_end_to_end_with_small_budget() {
+    let w = Workload::resolve("random:20000:1").unwrap();
+    let g = &w.graph;
+    assert_eq!(g.n(), 20_000);
+    assert!(g.n() > FRACTAL_EXACT_THRESHOLD, "must exercise the sampled fractal path");
+
+    // Multi-level coarsening drives the working graph under the budget.
+    let ml = coarsen_to_budget(g, 512);
+    assert!(ml.coarsest().n() <= 512, "coarsest has {} nodes", ml.coarsest().n());
+    assert!(ml.n_levels() >= 1);
+    // Composed expansion covers every original node.
+    let coarse = vec![0usize; ml.n_sets()];
+    assert_eq!(ml.expand_placement(&coarse).unwrap().len(), g.n());
+
+    // Feature extraction on the raw 20k graph: sampled fractal, sparse
+    // adjacency only — O(n^2) here would hang the suite, not just slow it.
+    let feats = extract(g, FeatureConfig::default());
+    assert_eq!(feats.x.len(), g.n() * FeatureConfig::dim());
+    assert!(feats.x.iter().all(|v| v.is_finite()));
+
+    // Full env construction + one placement evaluation.
+    let cfg = Config { coarsen_budget: 512, ..Config::default() };
+    let env = Env::for_workload(w, &cfg).unwrap();
+    assert!(env.n_nodes <= 512);
+    assert_eq!(env.a_norm.numel(), 1, "registry workloads must not hold a dense adjacency");
+    let lat = env.latency(&vec![1; env.n_nodes]).unwrap();
+    assert!(lat.is_finite() && lat > 0.0);
+}
+
+#[test]
+fn incremental_evaluator_agrees_with_full_simulation_at_scale() {
+    let g = Workload::resolve("random:5000:3").unwrap().graph;
+    let tb = Testbed::cpu_gpu();
+    let mut actions: Vec<usize> =
+        (0..g.n()).map(|v| tb.placeable[v % tb.placeable.len()]).collect();
+    let mut eval = IncrementalEvaluator::new(g.clone(), tb.clone());
+    let first = eval.evaluate(&actions);
+    assert_eq!(first, execute(&g, &Placement(actions.clone()), &tb));
+    // A short randomized edit walk, each step checked against the full
+    // scheduler (the heavyweight property test lives in sim::scheduler;
+    // this pins the behavior at a size it never reaches).
+    for step in 0..4usize {
+        let v = (step * 1237 + 11) % g.n();
+        actions[v] = if actions[v] == tb.placeable[0] { tb.placeable[1] } else { tb.placeable[0] };
+        let inc = eval.evaluate(&actions);
+        let full = execute(&g, &Placement(actions.clone()), &tb);
+        assert_eq!(inc, full, "divergence after edit {step}");
+    }
+}
+
+#[test]
+fn default_budget_keeps_paper_scale_single_level() {
+    // The default budget must leave every paper-sized graph exactly as
+    // the single co-location pass built it — the scale machinery is
+    // invisible until a graph actually needs it.
+    let g = Workload::resolve("layered:16x8:3").unwrap().graph;
+    let ml = coarsen_to_budget(&g, DEFAULT_COARSEN_BUDGET);
+    assert_eq!(ml.n_levels(), 1);
+}
