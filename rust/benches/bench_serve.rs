@@ -9,9 +9,17 @@
 //! fingerprint throughput, checkpoint serialize / parse / disk
 //! round-trip, and a TCP loadgen against a live server on an ephemeral
 //! loopback port — the end-to-end req/s number the ROADMAP's serving
-//! goal cares about. `--json` renders everything as one `hsdag-bench-v1`
-//! document; `--quick` trims iteration counts for CI smoke runs.
+//! goal cares about. The fleet sweep then spawns 1/2/4 *separate shard
+//! processes* (the real `hsdag serve` binary), routes a fixed offered
+//! load across them with the same rendezvous hash the router uses, and
+//! reports req/s plus p50/p99 per shard count, cold vs warmed cache —
+//! the saturation curve behind BENCH_FLEET.json. `--json` renders
+//! everything as one `hsdag-bench-v1` document; `--quick` trims
+//! iteration counts for CI smoke runs.
 
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+use std::process::{Child, ChildStdout, Command, Stdio};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -20,10 +28,11 @@ use hsdag::features::FeatureConfig;
 use hsdag::models::Workload;
 use hsdag::rl::{Env, HsdagAgent};
 use hsdag::serve::{
-    client, fingerprint, protocol, Checkpoint, CheckpointMeta, PlacementService, ServeOptions,
-    Server,
+    client, discover_testbed, fingerprint, protocol, shard_for, Checkpoint, CheckpointMeta,
+    PlacementService, ServeOptions, Server,
 };
 use hsdag::util::bench::{BenchResult, BenchSession};
+use hsdag::util::stats;
 
 fn main() {
     let mut session = BenchSession::from_args("bench_serve");
@@ -146,5 +155,188 @@ fn main() {
         s.p50_ms,
         s.p99_ms
     ));
+
+    session.note("== fleet sweep (multi-process shards, rendezvous-routed) ==");
+    ckpt.save(&path).unwrap();
+    fleet_sweep(&mut session, &path);
+
     session.finish();
+}
+
+/// One shard subprocess: the real `hsdag serve` binary on an ephemeral
+/// loopback port. The stdout reader stays alive until [`shutdown`] so
+/// the child's final summary `println!` can't die on a closed pipe.
+struct Shard {
+    child: Child,
+    stdout: BufReader<ChildStdout>,
+    addr: String,
+}
+
+impl Shard {
+    fn spawn(ckpt: &Path) -> Shard {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_hsdag"))
+            .args([
+                "serve",
+                "--load",
+                ckpt.to_str().unwrap(),
+                "--addr",
+                "127.0.0.1:0",
+                "--serve-workers",
+                "2",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning shard subprocess");
+        let mut stdout = BufReader::new(child.stdout.take().unwrap());
+        // The serve banner ends "... listening on IP:PORT (...)".
+        let addr = loop {
+            let mut line = String::new();
+            if stdout.read_line(&mut line).expect("reading shard banner") == 0 {
+                panic!("shard exited before printing its listen address");
+            }
+            if let Some(rest) = line.split("listening on ").nth(1) {
+                break rest.split_whitespace().next().unwrap().to_string();
+            }
+        };
+        Shard { child, stdout, addr }
+    }
+
+    fn shutdown(mut self, timeout: Duration) {
+        let _ = client::roundtrip(&self.addr, &protocol::render_shutdown_request(), timeout);
+        let mut rest = String::new();
+        let _ = self.stdout.read_to_string(&mut rest);
+        let _ = self.child.wait();
+    }
+}
+
+/// Saturation sweep: the same offered load (a fixed spec mix, routed by
+/// the production rendezvous hash) against fleets of 1/2/4 shard
+/// processes. Cold pass = first touch per spec (env build + policy
+/// inference on the owning shard); warm passes = pipelined cache hits
+/// from concurrent clients. Fleet cache disjointness is asserted, not
+/// assumed: the shards' caches together must hold each spec exactly once.
+fn fleet_sweep(session: &mut BenchSession, ckpt: &Path) {
+    let timeout = Duration::from_secs(30);
+    let specs: Vec<String> = (5..13).map(|n| format!("seq:{n}")).collect();
+    let (shard_counts, rounds, threads) = if session.is_quick() {
+        (vec![1usize, 2], 2usize, 2usize)
+    } else {
+        (vec![1usize, 2, 4], 12usize, 2usize)
+    };
+    for &n in &shard_counts {
+        let shards: Vec<Shard> = (0..n).map(|_| Shard::spawn(ckpt)).collect();
+        let addrs: Vec<String> = shards.iter().map(|s| s.addr.clone()).collect();
+        let testbed = discover_testbed(&addrs, timeout).unwrap();
+        // (owning shard, request line) per spec — exactly what the
+        // router / sharded client would compute.
+        let reqs: Vec<(usize, String)> = specs
+            .iter()
+            .map(|spec| {
+                let g = Workload::resolve(spec).unwrap().graph;
+                (
+                    shard_for(fingerprint(&g, &testbed), &addrs),
+                    protocol::render_place_request(
+                        Some(spec.as_str()),
+                        None,
+                        None,
+                        None,
+                        None,
+                        false,
+                    ),
+                )
+            })
+            .collect();
+
+        let mut conns: Vec<client::Connection> = addrs
+            .iter()
+            .map(|a| client::Connection::open(a, timeout).unwrap())
+            .collect();
+        let mut cold: Vec<f64> = Vec::with_capacity(reqs.len());
+        for (owner, line) in &reqs {
+            let t0 = Instant::now();
+            let resp = conns[*owner].send(line).unwrap();
+            cold.push(t0.elapsed().as_nanos() as f64);
+            protocol::parse_response(&resp).unwrap();
+        }
+        drop(conns);
+        session.push(BenchResult {
+            name: format!("serve/fleet/cold/shards:{n}"),
+            iters: cold.len(),
+            median_ns: stats::percentile(&cold, 50.0),
+            mean_ns: stats::mean(&cold),
+            min_ns: cold.iter().cloned().fold(f64::INFINITY, f64::min),
+        });
+
+        // Warm passes: `threads` concurrent clients, each with its own
+        // pipelined connection per shard, interleaved over the spec mix.
+        let work: Vec<(usize, String)> =
+            (0..rounds).flat_map(|_| reqs.iter().cloned()).collect();
+        let t0 = Instant::now();
+        let mut warm: Vec<f64> = Vec::with_capacity(work.len());
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                let addrs = &addrs;
+                let chunk: Vec<(usize, String)> =
+                    work.iter().skip(t).step_by(threads).cloned().collect();
+                handles.push(scope.spawn(move || {
+                    let mut conns: Vec<client::Connection> = addrs
+                        .iter()
+                        .map(|a| client::Connection::open(a, timeout).unwrap())
+                        .collect();
+                    let mut lat = Vec::with_capacity(chunk.len());
+                    for (owner, line) in &chunk {
+                        let t1 = Instant::now();
+                        let resp = conns[*owner].send(line).unwrap();
+                        lat.push(t1.elapsed().as_nanos() as f64);
+                        protocol::parse_response(&resp).unwrap();
+                    }
+                    lat
+                }));
+            }
+            for h in handles {
+                warm.extend(h.join().unwrap());
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        session.push(BenchResult {
+            name: format!("serve/fleet/warm/shards:{n}"),
+            iters: warm.len(),
+            median_ns: stats::percentile(&warm, 50.0),
+            mean_ns: stats::mean(&warm),
+            min_ns: warm.iter().cloned().fold(f64::INFINITY, f64::min),
+        });
+        session.counter(
+            &format!("serve/fleet/warm/p99_ns/shards:{n}"),
+            stats::percentile(&warm, 99.0),
+        );
+        session.counter(
+            &format!("serve/fleet/warm/req_per_s/shards:{n}"),
+            warm.len() as f64 / wall,
+        );
+
+        // The point of routing: fleet caches *partition* the keyspace.
+        let mut cache_total = 0usize;
+        for a in &addrs {
+            let resp =
+                client::roundtrip(a, &protocol::render_stats_request(), timeout).unwrap();
+            let doc = protocol::parse_response(&resp).unwrap();
+            cache_total += doc.get("cache_len").unwrap().as_usize().unwrap();
+        }
+        assert_eq!(
+            cache_total,
+            specs.len(),
+            "fleet caches must hold each spec exactly once"
+        );
+        session.note(&format!(
+            "  shards:{n}: {} warm reqs in {wall:.3}s ({:.0} req/s), \
+             fleet cache_len {cache_total} (disjoint)",
+            warm.len(),
+            warm.len() as f64 / wall
+        ));
+        for s in shards {
+            s.shutdown(timeout);
+        }
+    }
 }

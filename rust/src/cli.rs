@@ -40,14 +40,21 @@ COMMANDS
                          suite, zero-shot eval held-out    [--episodes N] [--rollouts N]
                                                            [--save CKPT]
                                                            [--eval-only --load CKPT]
-  serve                  placement server over a trained   --load CKPT [--addr IP:PORT]
-                         checkpoint (see README \"Serving\") [--serve-workers N]
-                                                           [--cache-capacity N] [--budget-ms X]
-                                                           [--rollouts N]
-  request                client for a running server       [--addr IP:PORT] [--workload W]
+  serve                  placement shard over a trained    --load CKPT [--addr IP:PORT]
+                         checkpoint (see README \"Serving\") [--serve-workers N] [--queue-depth N]
+                         SIGHUP or ctrl:reload hot-swaps   [--cache-capacity N] [--budget-ms X]
+                         the checkpoint with zero downtime [--rollouts N]
+  route                  consistent-hash router over N     --shards A,B,.. [--addr IP:PORT]
+                         shards (see README \"Fleet\")       [--serve-workers N] [--queue-depth N]
+                                                           [--timeout-s X]
+  request                client for a server / router      [--addr IP:PORT] [--workload W]
                                                            [--graph F] [--id X] [--budget-ms X]
                                                            [--rollouts N] [--no-cache]
+                                                           [--tenant T] [--retries N]
+                                                           [--shards A,B,..] (client-side routing)
                                                            [--stats] [--shutdown]
+                                                           [--reload [--checkpoint CKPT]]
+                                                           [--clear-cache]
   export                 write a workload as v1 JSON       [--workload W] [--out F]
   graph-stats            validate + describe workloads     [--workload W]
   config                 print the Table 6 hyper-parameters
@@ -110,6 +117,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                     | "stats"
                     | "shutdown"
                     | "no-cache"
+                    | "reload"
+                    | "clear-cache"
             );
             if boolean {
                 flags.insert(key.to_string(), "true".to_string());
@@ -340,6 +349,32 @@ mod tests {
         assert!(c.flags.contains_key("no-cache") && c.flags.contains_key("shutdown"));
         let c = parse(&argv("generalize --eval-only --load g.json")).unwrap();
         assert!(c.flags.contains_key("eval-only"));
+    }
+
+    #[test]
+    fn fleet_flags_parse() {
+        // route takes a shard list; --queue-depth is a valued flag.
+        let c = parse(&argv("route --shards 127.0.0.1:7481,127.0.0.1:7482 --queue-depth 8")).unwrap();
+        assert_eq!(c.command, "route");
+        assert_eq!(
+            c.str_list_flag("shards", ""),
+            vec!["127.0.0.1:7481", "127.0.0.1:7482"]
+        );
+        assert_eq!(c.usize_flag("queue-depth", 64).unwrap(), 8);
+        // reload / clear-cache are boolean; --checkpoint and --tenant
+        // and --retries take values.
+        let c = parse(&argv("request --addr 127.0.0.1:7477 --reload --checkpoint new.json")).unwrap();
+        assert!(c.flags.contains_key("reload"));
+        assert_eq!(c.str_flag("checkpoint", ""), "new.json");
+        let c = parse(&argv("request --clear-cache --addr 127.0.0.1:7477")).unwrap();
+        assert!(c.flags.contains_key("clear-cache"));
+        let c = parse(&argv(
+            "request --workload seq:8 --tenant team-a --retries 3 --shards a:1,b:2",
+        ))
+        .unwrap();
+        assert_eq!(c.str_flag("tenant", ""), "team-a");
+        assert_eq!(c.usize_flag("retries", 0).unwrap(), 3);
+        assert_eq!(c.str_list_flag("shards", ""), vec!["a:1", "b:2"]);
     }
 
     #[test]

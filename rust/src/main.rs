@@ -4,7 +4,9 @@
 //! on Computation Graphs" (NeurIPS 2024). See `hsdag --help` / README.md.
 
 use std::path::Path;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::thread;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -17,7 +19,8 @@ use hsdag::harness::{figure2, generalize, table1, table2, table3, table4, table5
 use hsdag::models::{Benchmark, Workload};
 use hsdag::rl::{BackendFactory, Env, HsdagAgent, NativeBackend};
 use hsdag::serve::{
-    client, protocol, Checkpoint, CheckpointMeta, PlacementService, ServeOptions, Server,
+    client, discover_testbed, fingerprint, protocol, shard_for, sighup_flag, Checkpoint,
+    CheckpointMeta, PlacementService, Router, ServeOptions, Server, DEFAULT_QUEUE_DEPTH,
 };
 use hsdag::sim::{execute, ExecReport, Placement, Testbed};
 use hsdag::util::json::Json;
@@ -328,7 +331,27 @@ fn run(c: Cli) -> Result<()> {
             let trained_on = ckpt.meta.workload.clone();
             let cache_capacity = opts.cache_capacity;
             let service = Arc::new(PlacementService::new(ckpt, &run_cfg, opts)?);
-            let server = Server::bind(Arc::clone(&service), &addr)?;
+            // A bare `ctrl: reload` (or SIGHUP) re-reads the --load path:
+            // the runbook is "atomically replace the file, poke the
+            // daemon" — no client-side path plumbing needed.
+            service.set_default_checkpoint(Path::new(&c.str_flag("load", "")));
+            if let Some(flag) = sighup_flag() {
+                let svc = Arc::clone(&service);
+                thread::spawn(move || loop {
+                    thread::sleep(Duration::from_millis(200));
+                    if flag.swap(false, Ordering::Relaxed) {
+                        match svc.reload(None) {
+                            Ok((generation, cache_kept, on)) => println!(
+                                "SIGHUP reload: generation {generation}, cache {}, trained on {on}",
+                                if cache_kept { "kept" } else { "flushed" }
+                            ),
+                            Err(e) => eprintln!("SIGHUP reload failed (old policy kept): {e:#}"),
+                        }
+                    }
+                });
+            }
+            let mut server = Server::bind(Arc::clone(&service), &addr)?;
+            server.set_queue_depth(c.usize_flag("queue-depth", DEFAULT_QUEUE_DEPTH)?);
             // The banner is the contract scripts parse for the (possibly
             // ephemeral) port — keep "listening on <addr>" stable.
             println!(
@@ -343,7 +366,8 @@ fn run(c: Cli) -> Result<()> {
             let s = service.stats_view();
             println!(
                 "shutdown after {:.1}s: {} requests ({} placements, {} cache hits, \
-                 {} fallbacks, {} errors), hit rate {:.0}%, p50 {:.2} ms, p99 {:.2} ms",
+                 {} fallbacks, {} errors), hit rate {:.0}%, p50 {:.2} ms, p99 {:.2} ms, \
+                 generation {}, {} reloads, {} busy rejects",
                 s.uptime_s,
                 s.requests,
                 s.placements,
@@ -352,16 +376,49 @@ fn run(c: Cli) -> Result<()> {
                 s.errors,
                 100.0 * s.cache_hit_rate,
                 s.p50_ms,
-                s.p99_ms
+                s.p99_ms,
+                s.checkpoint_generation,
+                s.reloads,
+                s.busy_rejects
             );
         }
-        "request" => {
-            let addr = c.str_flag("addr", "127.0.0.1:7477");
+        "route" => {
+            let shards = c.str_list_flag("shards", "");
+            anyhow::ensure!(
+                !shards.is_empty(),
+                "route needs --shards addr,addr,... (the shard daemons to front)"
+            );
+            let addr = c.str_flag("addr", "127.0.0.1:7480");
+            let workers = c.usize_flag("serve-workers", 4)?.max(1);
             let timeout = Duration::from_secs_f64(c.f64_flag("timeout-s", 10.0)?);
+            let router = Arc::new(Router::new(shards.clone(), timeout)?);
+            let mut server = Server::bind(Arc::clone(&router), &addr)?;
+            server.set_queue_depth(c.usize_flag("queue-depth", DEFAULT_QUEUE_DEPTH)?);
+            // Same "listening on <addr>" banner contract as serve.
+            println!(
+                "hsdag-route listening on {} ({} shards, testbed {}, {workers} workers)",
+                server.local_addr(),
+                shards.len(),
+                router.testbed(),
+            );
+            server.run(workers)?;
+            println!("router shutdown ({} shards left running)", shards.len());
+        }
+        "request" => {
+            let timeout = Duration::from_secs_f64(c.f64_flag("timeout-s", 10.0)?);
+            let retries = c.usize_flag("retries", 0)?;
+            let shards = c.str_list_flag("shards", "");
+            // Resolved graph of a place request, kept for client-side
+            // routing (fingerprints are computed over the graph itself).
+            let mut routed_graph: Option<CompGraph> = None;
             let line = if c.flags.contains_key("stats") {
                 protocol::render_stats_request()
             } else if c.flags.contains_key("shutdown") {
                 protocol::render_shutdown_request()
+            } else if c.flags.contains_key("reload") {
+                protocol::render_reload_request(c.flags.get("checkpoint").map(String::as_str))
+            } else if c.flags.contains_key("clear-cache") {
+                protocol::render_clear_cache_request()
             } else {
                 // --graph reuses the `file:` workload source (one
                 // format-sniffing loader for .json / .dot / .gv).
@@ -373,8 +430,15 @@ fn run(c: Cli) -> Result<()> {
                 anyhow::ensure!(
                     graph.is_some() != spec.is_some(),
                     "request needs exactly one of --workload <spec> or --graph <file> \
-                     (or --stats / --shutdown)"
+                     (or --stats / --shutdown / --reload / --clear-cache)"
                 );
+                if !shards.is_empty() {
+                    routed_graph = Some(match (&graph, spec) {
+                        (Some(g), _) => g.clone(),
+                        (None, Some(s)) => Workload::resolve(s)?.graph,
+                        (None, None) => unreachable!("ensured above"),
+                    });
+                }
                 let id = c.flags.get("id").map(|s| Json::Str(s.clone()));
                 let budget_ms = match c.flags.get("budget-ms") {
                     None => None,
@@ -384,16 +448,39 @@ fn run(c: Cli) -> Result<()> {
                     None => None,
                     Some(v) => Some(v.parse::<usize>().context("--rollouts must be an integer")?),
                 };
-                protocol::render_place_request(
+                protocol::render_place_request_for(
                     spec.map(String::as_str),
                     graph.as_ref(),
                     id.as_ref(),
                     budget_ms,
                     rollouts,
                     c.flags.contains_key("no-cache"),
+                    c.flags.get("tenant").map(String::as_str),
                 )
             };
-            let response = client::roundtrip(&addr, &line, timeout)?;
+            // Router-less deployments: --shards picks the owning shard
+            // client-side with the same rendezvous hash the router uses,
+            // so either topology partitions the fleet's caches
+            // identically.
+            let addr = if shards.is_empty() {
+                c.str_flag("addr", "127.0.0.1:7477")
+            } else {
+                let graph = routed_graph.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--shards routes place requests by fingerprint; fleet-wide \
+                         --stats/--shutdown/--reload/--clear-cache go through --addr \
+                         (a shard, or a router that fans out)"
+                    )
+                })?;
+                let testbed = discover_testbed(&shards, timeout)?;
+                let fp = fingerprint(graph, &testbed);
+                let addr = shards[shard_for(fp, &shards)].clone();
+                // Routing note on stderr: stdout stays exactly one
+                // response line for scripts.
+                eprintln!("routing {fp:016x} to shard {addr} (testbed {testbed})");
+                addr
+            };
+            let response = client::roundtrip_retry(&addr, &line, timeout, retries)?;
             println!("{response}");
             // Exit non-zero (with the server's message) on an error
             // response, so scripts can just check the status.

@@ -228,6 +228,103 @@ mod tests {
         assert_eq!(order(&c), vec![3]);
     }
 
+    /// The deployment shape: many server workers hammering one
+    /// `Mutex<LruCache>`. The cache itself is single-threaded; what this
+    /// pins down is that the *server's usage pattern* (peek + put + len
+    /// under one lock hold, gets under another) maintains every
+    /// invariant no matter how threads interleave: capacity is never
+    /// exceeded, values stay bound to their keys, insertions are
+    /// conserved (fresh inserts == evictions + final occupancy), and the
+    /// recency list still orders correctly afterwards.
+    #[test]
+    fn concurrent_hammer_keeps_invariants() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Mutex;
+
+        const CAPACITY: usize = 16;
+        const THREADS: u64 = 8;
+        const ITERS: u64 = 2000;
+        const KEYSPACE: u64 = 48;
+
+        let cache: Mutex<LruCache<u64, u64>> = Mutex::new(LruCache::new(CAPACITY));
+        let hits = AtomicUsize::new(0);
+        let misses = AtomicUsize::new(0);
+        let puts = AtomicUsize::new(0);
+        let fresh_inserts = AtomicUsize::new(0);
+        let evictions = AtomicUsize::new(0);
+
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let (cache, hits, misses, puts, fresh_inserts, evictions) =
+                    (&cache, &hits, &misses, &puts, &fresh_inserts, &evictions);
+                scope.spawn(move || {
+                    // Deterministic per-thread op stream (different per
+                    // thread so the interleaving, not the ops, varies).
+                    let mut x = 0x9E37_79B9u64.wrapping_mul(t + 1);
+                    for _ in 0..ITERS {
+                        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                        let k = (x >> 33) % KEYSPACE;
+                        let mut c = cache.lock().unwrap();
+                        if x & 1 == 0 {
+                            match c.get(&k) {
+                                Some(v) => {
+                                    assert_eq!(*v, k * 10, "value bound to wrong key");
+                                    hits.fetch_add(1, Ordering::Relaxed);
+                                }
+                                None => {
+                                    misses.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        } else {
+                            let was_present = c.peek(&k).is_some();
+                            let evicted = c.put(k, k * 10);
+                            puts.fetch_add(1, Ordering::Relaxed);
+                            if !was_present {
+                                fresh_inserts.fetch_add(1, Ordering::Relaxed);
+                            }
+                            if let Some((ek, ev)) = evicted {
+                                assert!(!was_present, "refresh must never evict");
+                                assert_eq!(ev, ek * 10, "evicted value bound to wrong key");
+                                evictions.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        assert!(c.len() <= CAPACITY, "capacity exceeded");
+                    }
+                });
+            }
+        });
+
+        let c = cache.lock().unwrap();
+        assert_eq!(c.len(), CAPACITY, "keyspace >> capacity, cache must be full");
+        // Conservation: every key that entered either fell out or is here.
+        assert_eq!(
+            fresh_inserts.load(Ordering::Relaxed),
+            evictions.load(Ordering::Relaxed) + c.len(),
+            "insertions not conserved"
+        );
+        // Every op landed in exactly one counter bucket.
+        assert_eq!(
+            hits.load(Ordering::Relaxed)
+                + misses.load(Ordering::Relaxed)
+                + puts.load(Ordering::Relaxed),
+            (THREADS * ITERS) as usize,
+            "op counters inconsistent"
+        );
+        assert!(fresh_inserts.load(Ordering::Relaxed) <= puts.load(Ordering::Relaxed));
+        // The recency list survived the interleaving: it walks exactly
+        // the mapped keys (checked by `order`) and eviction order still
+        // behaves deterministically from here on.
+        drop(c);
+        let mut c = cache.lock().unwrap();
+        let keys = order(&c);
+        assert_eq!(keys.len(), CAPACITY);
+        let lru = *keys.last().unwrap();
+        let mru = keys[0];
+        let (ek, _) = c.put(u64::MAX, 0).expect("full cache must evict");
+        assert_eq!(ek, lru, "post-hammer eviction must take the list tail");
+        assert!(c.peek(&mru).is_some(), "MRU entry must survive");
+    }
+
     #[test]
     fn churn_keeps_invariants() {
         // Deterministic mixed get/put churn; `order` checks list/map

@@ -22,6 +22,64 @@ pub fn roundtrip(addr: &str, request_line: &str, timeout: Duration) -> Result<St
     conn.send(request_line)
 }
 
+/// [`roundtrip`] with up to `retries` extra attempts on failure, backing
+/// off exponentially (50 ms doubling, capped at 2 s) with jitter so N
+/// clients retrying a briefly-down shard don't re-stampede it in sync.
+///
+/// Only *transport* failures reach the retry path — every `Err` out of
+/// [`roundtrip`] is a connect/IO error by construction, while a
+/// server-reported failure (`"ok": false`, including `busy` shed-load
+/// lines) comes back as `Ok(line)` and is never retried here; the
+/// caller's response parsing keeps its exit-status contract. With
+/// `retries == 0` this is exactly [`roundtrip`].
+pub fn roundtrip_retry(
+    addr: &str,
+    request_line: &str,
+    timeout: Duration,
+    retries: usize,
+) -> Result<String> {
+    let mut delay = Duration::from_millis(50);
+    for attempt in 0..=retries {
+        match roundtrip(addr, request_line, timeout) {
+            Ok(resp) => return Ok(resp),
+            Err(e) if attempt == retries => {
+                return Err(e).with_context(|| {
+                    format!("request failed after {} attempt(s)", retries + 1)
+                });
+            }
+            Err(_) => {
+                std::thread::sleep(delay + jitter(delay / 2, addr, attempt));
+                delay = (delay * 2).min(Duration::from_secs(2));
+            }
+        }
+    }
+    unreachable!("the attempt loop always returns");
+}
+
+/// Up-to-`cap` pseudo-random jitter, seeded from the clock, the target
+/// address and the attempt number (no RNG dependency; splitmix64 over
+/// the seed is plenty for de-synchronizing retry stampedes).
+fn jitter(cap: Duration, addr: &str, attempt: usize) -> Duration {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos() as u64)
+        .unwrap_or(0);
+    let mut x = nanos ^ ((attempt as u64) << 32);
+    for b in addr.as_bytes() {
+        x = x.rotate_left(8) ^ (*b as u64);
+    }
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let cap_ns = cap.as_nanos() as u64;
+    if cap_ns == 0 {
+        return Duration::ZERO;
+    }
+    Duration::from_nanos(z % cap_ns)
+}
+
 /// A pipelined connection: many request/response exchanges, one stream.
 pub struct Connection {
     reader: BufReader<TcpStream>,

@@ -19,21 +19,33 @@
 //! - [`protocol`] — the line-delimited JSON wire format (`place`,
 //!   `stats`, `ctrl` requests) spoken over TCP.
 //! - [`server`] — the `hsdag serve` daemon: a worker pool over a TCP
-//!   listener, per-request latency budgets with baseline fallback, live
-//!   metrics and graceful shutdown.
+//!   listener with bounded admission (explicit `busy` shed past the
+//!   high-water mark), per-request latency budgets with baseline
+//!   fallback, RCU-style zero-downtime checkpoint reload
+//!   (`ctrl: reload` / SIGHUP), live metrics and graceful shutdown.
+//! - [`router`] — the fleet tier: `hsdag route` consistent-hashes
+//!   requests by fingerprint across N shard daemons (rendezvous
+//!   hashing, [`shard_for`]) so the shards' caches partition the
+//!   keyspace instead of duplicating it.
 //! - [`client`] — the `hsdag request` plumbing (one line in, one line
-//!   out), shared by the CLI, the serving example, the loadgen bench and
-//!   the loopback tests.
+//!   out, optional bounded retry with backoff + jitter), shared by the
+//!   CLI, the serving example, the loadgen bench and the loopback
+//!   tests.
 
 pub mod cache;
 pub mod checkpoint;
 pub mod client;
 pub mod fingerprint;
 pub mod protocol;
+pub mod router;
 pub mod server;
 
 pub use cache::LruCache;
 pub use checkpoint::{Checkpoint, CheckpointMeta};
 pub use fingerprint::{fingerprint, fingerprint_delta, fingerprint_hex, FingerprintState};
 pub use protocol::{PlaceOutcome, Provenance, Request, StatsView};
-pub use server::{PlacementService, ServeOptions, Server, ServerHandle};
+pub use router::{discover_testbed, shard_for, Router};
+pub use server::{
+    sighup_flag, LineHandler, PlacementService, ServeOptions, Server, ServerHandle,
+    DEFAULT_QUEUE_DEPTH,
+};

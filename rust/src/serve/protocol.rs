@@ -6,9 +6,12 @@
 //! ```json
 //! {"op": "place", "workload": "resnet"}
 //! {"op": "place", "graph": {"format": "hsdag-graph-v1", ...},
-//!  "id": 7, "budget_ms": 5.0, "rollouts": 8, "no_cache": true}
+//!  "id": 7, "budget_ms": 5.0, "rollouts": 8, "no_cache": true,
+//!  "tenant": "team-a"}
 //! {"op": "stats"}
 //! {"op": "ctrl", "action": "shutdown"}
+//! {"op": "ctrl", "action": "reload", "checkpoint": "/path/new.ckpt.json"}
+//! {"op": "ctrl", "action": "clear-cache"}
 //! ```
 //!
 //! A `place` request names its graph exactly one way: `workload` (a
@@ -16,8 +19,17 @@
 //! or `graph` (an inline `hsdag-graph-v1` document). Optional fields:
 //! `id` (any JSON value, echoed verbatim into the response), `budget_ms`
 //! (per-request policy-inference budget overriding the server default),
-//! `rollouts` (stochastic policy rollouts on top of the greedy one) and
-//! `no_cache` (bypass the placement cache in both directions).
+//! `rollouts` (stochastic policy rollouts on top of the greedy one),
+//! `no_cache` (bypass the placement cache in both directions) and
+//! `tenant` (a caller label counted per tenant in `stats`).
+//!
+//! `ctrl: reload` hot-swaps the served checkpoint with zero downtime
+//! (`checkpoint` optional — it defaults to the path the daemon was
+//! started with); `ctrl: clear-cache` drops every cached placement
+//! (operationally: after a reload that kept the cache by mistake). A
+//! shard at capacity sheds load with a fast, recognizable
+//! `{"ok": false, "busy": true, ...}` line instead of queueing
+//! unboundedly — see [`render_busy_response`].
 //!
 //! Responses always carry `ok`; placements report the structural
 //! fingerprint, the placement (device id per original graph node), the
@@ -45,6 +57,11 @@ pub enum Request {
     Place(PlaceRequest),
     Stats,
     Shutdown,
+    /// Hot-reload the served checkpoint (optional explicit path; `None`
+    /// re-reads the path the daemon was started with).
+    Reload(Option<String>),
+    /// Drop every cached placement.
+    ClearCache,
 }
 
 /// The graph a `place` request wants placed.
@@ -62,6 +79,8 @@ pub struct PlaceRequest {
     pub budget_ms: Option<f64>,
     pub rollouts: Option<usize>,
     pub no_cache: bool,
+    /// Caller label for the per-tenant request counters in `stats`.
+    pub tenant: Option<String>,
 }
 
 /// Parse one request line.
@@ -75,7 +94,21 @@ pub fn parse_request(line: &str) -> Result<Request> {
         "stats" => Ok(Request::Stats),
         "ctrl" => match doc.get("action").and_then(Json::as_str) {
             Some("shutdown") => Ok(Request::Shutdown),
-            Some(other) => bail!("unknown ctrl action '{other}' (known: shutdown)"),
+            Some("reload") => {
+                let ckpt = match doc.get("checkpoint") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_str()
+                            .ok_or_else(|| anyhow!("\"checkpoint\" must be a string path"))?
+                            .to_string(),
+                    ),
+                };
+                Ok(Request::Reload(ckpt))
+            }
+            Some("clear-cache") => Ok(Request::ClearCache),
+            Some(other) => {
+                bail!("unknown ctrl action '{other}' (known: shutdown | reload | clear-cache)")
+            }
             None => bail!("ctrl request needs a string \"action\""),
         },
         "place" => {
@@ -109,12 +142,21 @@ pub fn parse_request(line: &str) -> Result<Request> {
                     v.as_bool().ok_or_else(|| anyhow!("\"no_cache\" must be a boolean"))?
                 }
             };
+            let tenant = match doc.get("tenant") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .ok_or_else(|| anyhow!("\"tenant\" must be a string"))?
+                        .to_string(),
+                ),
+            };
             Ok(Request::Place(PlaceRequest {
                 source,
                 id: doc.get("id").cloned(),
                 budget_ms,
                 rollouts,
                 no_cache,
+                tenant,
             }))
         }
         other => bail!("unknown op '{other}' (known: place | stats | ctrl)"),
@@ -135,6 +177,21 @@ pub fn render_place_request(
     rollouts: Option<usize>,
     no_cache: bool,
 ) -> String {
+    render_place_request_for(workload, graph, id, budget_ms, rollouts, no_cache, None)
+}
+
+/// [`render_place_request`] with a tenant label for the per-tenant
+/// request counters.
+#[allow(clippy::too_many_arguments)]
+pub fn render_place_request_for(
+    workload: Option<&str>,
+    graph: Option<&CompGraph>,
+    id: Option<&Json>,
+    budget_ms: Option<f64>,
+    rollouts: Option<usize>,
+    no_cache: bool,
+    tenant: Option<&str>,
+) -> String {
     let mut fields = vec![("op".to_string(), Json::Str("place".to_string()))];
     if let Some(v) = id {
         fields.push(("id".to_string(), v.clone()));
@@ -154,6 +211,9 @@ pub fn render_place_request(
     if no_cache {
         fields.push(("no_cache".to_string(), Json::Bool(true)));
     }
+    if let Some(t) = tenant {
+        fields.push(("tenant".to_string(), Json::Str(t.to_string())));
+    }
     Json::Obj(fields).to_string_compact()
 }
 
@@ -165,6 +225,27 @@ pub fn render_shutdown_request() -> String {
     Json::Obj(vec![
         ("op".to_string(), Json::Str("ctrl".to_string())),
         ("action".to_string(), Json::Str("shutdown".to_string())),
+    ])
+    .to_string_compact()
+}
+
+/// Render a `ctrl: reload` request (`checkpoint` optional — the daemon
+/// falls back to the path it was started with).
+pub fn render_reload_request(checkpoint: Option<&str>) -> String {
+    let mut fields = vec![
+        ("op".to_string(), Json::Str("ctrl".to_string())),
+        ("action".to_string(), Json::Str("reload".to_string())),
+    ];
+    if let Some(p) = checkpoint {
+        fields.push(("checkpoint".to_string(), Json::Str(p.to_string())));
+    }
+    Json::Obj(fields).to_string_compact()
+}
+
+pub fn render_clear_cache_request() -> String {
+    Json::Obj(vec![
+        ("op".to_string(), Json::Str("ctrl".to_string())),
+        ("action".to_string(), Json::Str("clear-cache".to_string())),
     ])
     .to_string_compact()
 }
@@ -268,6 +349,23 @@ pub struct StatsView {
     pub cache_hit_rate: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Testbed id the shard serves (routers and sharded clients discover
+    /// it here so their fingerprints agree with the shard's).
+    pub testbed: String,
+    /// Monotonic generation of the live checkpoint: 0 at startup, +1 per
+    /// successful `ctrl: reload` / SIGHUP swap.
+    pub checkpoint_generation: u64,
+    /// What the *live* checkpoint says it was trained on (tracks
+    /// reloads truthfully).
+    pub trained_on: String,
+    /// Successful hot reloads since startup.
+    pub reloads: u64,
+    /// Connections shed with a `busy` response past the admission
+    /// high-water mark.
+    pub busy_rejects: u64,
+    /// Per-tenant `place` request counts (requests carrying a `tenant`
+    /// label), sorted by tenant name.
+    pub tenants: Vec<(String, u64)>,
 }
 
 pub fn render_stats_response(s: &StatsView) -> String {
@@ -287,8 +385,65 @@ pub fn render_stats_response(s: &StatsView) -> String {
         ("cache_hit_rate".to_string(), Json::Num(s.cache_hit_rate)),
         ("p50_ms".to_string(), Json::Num(s.p50_ms)),
         ("p99_ms".to_string(), Json::Num(s.p99_ms)),
+        ("testbed".to_string(), Json::Str(s.testbed.clone())),
+        (
+            "checkpoint_generation".to_string(),
+            Json::Num(s.checkpoint_generation as f64),
+        ),
+        ("trained_on".to_string(), Json::Str(s.trained_on.clone())),
+        ("reloads".to_string(), Json::Num(s.reloads as f64)),
+        ("busy_rejects".to_string(), Json::Num(s.busy_rejects as f64)),
+        (
+            "tenants".to_string(),
+            Json::Obj(
+                s.tenants
+                    .iter()
+                    .map(|(name, count)| (name.clone(), Json::Num(*count as f64)))
+                    .collect(),
+            ),
+        ),
     ])
     .to_string_compact()
+}
+
+/// Render the acknowledgment of a successful `ctrl: reload`: the new
+/// generation, whether the placement cache survived the swap, and what
+/// the new checkpoint was trained on.
+pub fn render_reload_response(generation: u64, cache_kept: bool, trained_on: &str) -> String {
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(true)),
+        ("op".to_string(), Json::Str("ctrl".to_string())),
+        ("action".to_string(), Json::Str("reload".to_string())),
+        ("generation".to_string(), Json::Num(generation as f64)),
+        ("cache_kept".to_string(), Json::Bool(cache_kept)),
+        ("trained_on".to_string(), Json::Str(trained_on.to_string())),
+    ])
+    .to_string_compact()
+}
+
+/// Render the shed-load response a shard writes past its admission
+/// high-water mark. The `busy` marker distinguishes explicit
+/// backpressure (retryable) from request errors (not retryable).
+pub fn render_busy_response(pending: usize) -> String {
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(false)),
+        ("busy".to_string(), Json::Bool(true)),
+        (
+            "error".to_string(),
+            Json::Str(format!(
+                "busy: shard at capacity ({pending} pending connections); retry with backoff"
+            )),
+        ),
+    ])
+    .to_string_compact()
+}
+
+/// Does a response line report explicit shed load (`busy: true`)?
+pub fn is_busy_response(line: &str) -> bool {
+    Json::parse(line.trim())
+        .ok()
+        .and_then(|doc| doc.get("busy").and_then(Json::as_bool))
+        .unwrap_or(false)
 }
 
 /// Render the acknowledgment of a `ctrl` request.
@@ -342,8 +497,15 @@ mod tests {
         }
         let g = Workload::resolve("layered:3x2:1").unwrap().graph;
         let id = Json::Num(7.0);
-        let line =
-            render_place_request(None, Some(&g), Some(&id), Some(2.5), Some(8), true);
+        let line = render_place_request_for(
+            None,
+            Some(&g),
+            Some(&id),
+            Some(2.5),
+            Some(8),
+            true,
+            Some("team-a"),
+        );
         match parse_request(&line).unwrap() {
             Request::Place(p) => {
                 match p.source {
@@ -357,6 +519,7 @@ mod tests {
                 assert_eq!(p.budget_ms, Some(2.5));
                 assert_eq!(p.rollouts, Some(8));
                 assert!(p.no_cache);
+                assert_eq!(p.tenant.as_deref(), Some("team-a"));
             }
             _ => panic!("wrong op"),
         }
@@ -366,6 +529,51 @@ mod tests {
     fn stats_and_shutdown_roundtrip() {
         assert!(matches!(parse_request(&render_stats_request()).unwrap(), Request::Stats));
         assert!(matches!(parse_request(&render_shutdown_request()).unwrap(), Request::Shutdown));
+    }
+
+    #[test]
+    fn reload_and_clear_cache_roundtrip() {
+        // Reload with the daemon's default checkpoint path...
+        match parse_request(&render_reload_request(None)).unwrap() {
+            Request::Reload(None) => {}
+            _ => panic!("wrong op"),
+        }
+        // ...and with an explicit one.
+        match parse_request(&render_reload_request(Some("/tmp/new.ckpt.json"))).unwrap() {
+            Request::Reload(Some(p)) => assert_eq!(p, "/tmp/new.ckpt.json"),
+            _ => panic!("wrong op"),
+        }
+        assert!(matches!(
+            parse_request(&render_clear_cache_request()).unwrap(),
+            Request::ClearCache
+        ));
+        // A non-string checkpoint is a parse error, not a silent default.
+        let err = parse_request(r#"{"op": "ctrl", "action": "reload", "checkpoint": 3}"#)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("checkpoint"), "{err:#}");
+    }
+
+    #[test]
+    fn reload_response_reports_generation_and_cache_policy() {
+        let line = render_reload_response(3, true, "generalize:seq:48");
+        let doc = parse_response(&line).unwrap();
+        assert_eq!(doc.get("action").unwrap().as_str(), Some("reload"));
+        assert_eq!(doc.get("generation").unwrap().as_usize(), Some(3));
+        assert_eq!(doc.get("cache_kept").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("trained_on").unwrap().as_str(), Some("generalize:seq:48"));
+    }
+
+    #[test]
+    fn busy_responses_are_errors_and_recognizable() {
+        let line = render_busy_response(64);
+        // An error for the exit-status contract...
+        let msg = format!("{:#}", parse_response(&line).unwrap_err());
+        assert!(msg.contains("busy"), "{msg}");
+        // ...but distinguishable from request errors, so clients know the
+        // load was shed (retryable) rather than the request being wrong.
+        assert!(is_busy_response(&line));
+        assert!(!is_busy_response(&render_error_response(None, "unknown workload")));
+        assert!(!is_busy_response("not json"));
     }
 
     #[test]
@@ -379,6 +587,7 @@ mod tests {
             (r#"{"op": "place", "graph": {"format": "wrong"}}"#, "inline graph"),
             (r#"{"op": "place", "workload": "a", "budget_ms": -1}"#, "budget_ms"),
             (r#"{"op": "place", "workload": "a", "no_cache": 1}"#, "no_cache"),
+            (r#"{"op": "place", "workload": "a", "tenant": 7}"#, "tenant"),
             (r#"{"op": "ctrl", "action": "reboot"}"#, "unknown ctrl action"),
             (r#"{"op": "ctrl"}"#, "needs a string"),
         ] {

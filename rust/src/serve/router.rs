@@ -1,0 +1,452 @@
+//! The fleet tier: consistent-hash routing of placement requests across
+//! N shard daemons.
+//!
+//! One `hsdag serve` process duplicates every LRU cache line N times
+//! when deployed as N independent daemons behind a dumb load balancer.
+//! The router instead partitions the *fingerprint space*: each `place`
+//! request is forwarded to the shard that rendezvous-hashing
+//! ([`shard_for`]) assigns its structural fingerprint, so each shard's
+//! placement cache and single-flight table own a disjoint slice of the
+//! keyspace and aggregate cache capacity scales with fleet size.
+//!
+//! Properties the tests pin:
+//!
+//! - **Determinism**: [`shard_for`] is a pure function of the
+//!   fingerprint and the shard *address strings* — no RNG, no state.
+//!   The router, the sharded client (`hsdag request --shards ...`) and
+//!   any future implementation agree on every fingerprint's owner by
+//!   construction, and golden values keep the function from drifting.
+//! - **Permutation invariance**: scoring is per-address
+//!   (highest-random-weight), so reordering `--shards` never reshuffles
+//!   the keyspace, and adding a shard only moves the ~1/N of keys that
+//!   now score highest on the newcomer.
+//! - **Fingerprint agreement**: fingerprints hash the testbed id, so
+//!   the router discovers the fleet's testbed from a shard's `stats`
+//!   response at startup ([`Router::new`]) instead of trusting its own
+//!   config — a router pointed at a fleet serving a different testbed
+//!   would otherwise compute different keys than the shards themselves.
+//!
+//! The router speaks the same line protocol as a shard and plugs into
+//! the same TCP front end ([`Server`](super::server::Server)) via
+//! [`LineHandler`]: `place` is routed, `stats` fans out and aggregates
+//! (plus the router's own routing counters), `ctrl: reload` /
+//! `ctrl: clear-cache` fan out to every shard, and `ctrl: shutdown`
+//! stops the *router only* — shards are independent processes with
+//! their own lifecycles. Shard `busy` responses pass through verbatim,
+//! so backpressure reaches the client that caused it.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::client::{roundtrip, Connection};
+use super::fingerprint::fingerprint;
+use super::protocol::{self, PlaceSource, Request};
+use super::server::LineHandler;
+use crate::models::Workload;
+use crate::util::json::Json;
+
+/// 64-bit FNV-1a over a byte string (the shard-address hash half of the
+/// rendezvous score). Kept private-and-duplicated rather than shared
+/// with the fingerprint module on purpose: the two hash families must
+/// be able to evolve independently without silently re-keying the other.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The splitmix64 finalizer: a cheap, well-mixed bijection on u64.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Rendezvous (highest-random-weight) hashing: the owning shard of a
+/// fingerprint is the one whose `(address, fingerprint)` pair scores
+/// highest. Pure and deterministic — every caller that knows the shard
+/// addresses agrees on the owner, whatever order the addresses came in.
+/// Exact-score ties (vanishingly rare) break toward the lexically
+/// smallest address so even they are permutation-invariant.
+///
+/// Returns an index into `shards`.
+///
+/// # Panics
+/// When `shards` is empty — an empty fleet cannot own anything.
+pub fn shard_for(fp: u64, shards: &[String]) -> usize {
+    assert!(!shards.is_empty(), "shard_for: empty shard list");
+    let mut best = 0usize;
+    let mut best_score = 0u64;
+    for (i, addr) in shards.iter().enumerate() {
+        let score = splitmix64(fnv1a(addr.as_bytes()) ^ fp);
+        if i == 0
+            || score > best_score
+            || (score == best_score && shards[i] < shards[best])
+        {
+            best = i;
+            best_score = score;
+        }
+    }
+    best
+}
+
+/// Ask the fleet which testbed it serves: query each shard's `stats`
+/// until one answers, then verify every *other* reachable shard agrees
+/// (fingerprints hash the testbed id, so a mixed-testbed fleet would
+/// partition the keyspace incoherently). Errors when no shard is
+/// reachable or two shards disagree.
+pub fn discover_testbed(shards: &[String], timeout: Duration) -> Result<String> {
+    let req = protocol::render_stats_request();
+    let mut found: Option<(String, String)> = None; // (testbed, source addr)
+    let mut last_err: Option<anyhow::Error> = None;
+    for addr in shards {
+        match roundtrip(addr, &req, timeout) {
+            Err(e) => last_err = Some(e),
+            Ok(line) => {
+                let doc = protocol::parse_response(&line)
+                    .with_context(|| format!("stats from shard {addr}"))?;
+                let tb = doc
+                    .get("testbed")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("shard {addr} reports no testbed in stats"))?
+                    .to_string();
+                match &found {
+                    None => found = Some((tb, addr.clone())),
+                    Some((seen, seen_addr)) if *seen != tb => bail!(
+                        "fleet testbed mismatch: shard {seen_addr} serves '{seen}' \
+                         but shard {addr} serves '{tb}'"
+                    ),
+                    Some(_) => {}
+                }
+            }
+        }
+    }
+    match found {
+        Some((tb, _)) => Ok(tb),
+        None => Err(last_err
+            .unwrap_or_else(|| anyhow!("no shards given"))
+            .context("discovering the fleet testbed (is any shard up?)")),
+    }
+}
+
+#[derive(Default)]
+struct RouterInner {
+    /// Lines handled by the router (any op).
+    requests: u64,
+    /// `place` requests forwarded, per shard index.
+    routed: Vec<u64>,
+    /// Requests the router failed (parse errors, unreachable shard).
+    errors: u64,
+    /// `busy` responses passed through from saturated shards.
+    shard_busy: u64,
+    /// Connections the router's *own* admission control shed.
+    busy_rejects: u64,
+}
+
+/// A routing front end over a fixed shard list. See the module docs for
+/// the semantics of each op.
+pub struct Router {
+    shards: Vec<String>,
+    testbed: String,
+    timeout: Duration,
+    /// Idle pipelined connections per shard, reused across requests so
+    /// steady-state routing costs no TCP handshakes.
+    pools: Vec<Mutex<Vec<Connection>>>,
+    stats: Mutex<RouterInner>,
+}
+
+impl Router {
+    /// Stand the router up: requires at least one shard address and at
+    /// least one *reachable* shard (to discover the fleet's testbed id,
+    /// without which fingerprints — the routing keys — cannot be
+    /// computed).
+    pub fn new(shards: Vec<String>, timeout: Duration) -> Result<Router> {
+        if shards.is_empty() {
+            bail!("router needs at least one shard address (--shards a,b,...)");
+        }
+        let testbed = discover_testbed(&shards, timeout)?;
+        let pools = shards.iter().map(|_| Mutex::new(Vec::new())).collect();
+        let stats = Mutex::new(RouterInner { routed: vec![0; shards.len()], ..Default::default() });
+        Ok(Router { shards, testbed, timeout, pools, stats })
+    }
+
+    /// The testbed id discovered from the fleet.
+    pub fn testbed(&self) -> &str {
+        &self.testbed
+    }
+
+    /// The shard list, in the order routing indices refer to it.
+    pub fn shards(&self) -> &[String] {
+        &self.shards
+    }
+
+    /// Forward one line to a shard, reusing a pooled connection when one
+    /// is idle. A stale pooled connection (shard restarted, idle close)
+    /// gets exactly one fresh-connection retry — safe because every
+    /// protocol op is idempotent on the shard side. The connection is
+    /// returned to the pool unless the shard shed it with `busy` (the
+    /// shard closes after a busy line).
+    fn forward(&self, shard: usize, line: &str) -> Result<String> {
+        let addr = &self.shards[shard];
+        if let Some(mut conn) = self.pools[shard].lock().unwrap().pop() {
+            if let Ok(resp) = conn.send(line) {
+                if !protocol::is_busy_response(&resp) {
+                    self.pools[shard].lock().unwrap().push(conn);
+                }
+                return Ok(resp);
+            }
+            // Stale: fall through to a fresh connection.
+        }
+        let mut conn = Connection::open(addr, self.timeout)
+            .with_context(|| format!("router: connecting shard {shard} at {addr}"))?;
+        let resp = conn
+            .send(line)
+            .with_context(|| format!("router: forwarding to shard {shard} at {addr}"))?;
+        if !protocol::is_busy_response(&resp) {
+            self.pools[shard].lock().unwrap().push(conn);
+        }
+        Ok(resp)
+    }
+
+    /// Send one line to every shard in order; each entry is the shard's
+    /// response or the transport error that prevented one.
+    fn fan_out(&self, line: &str) -> Vec<Result<String>> {
+        (0..self.shards.len()).map(|i| self.forward(i, line)).collect()
+    }
+
+    /// Route a `place` request: fingerprint the graph the same way the
+    /// owning shard will, pick the owner, forward the *original* line
+    /// verbatim (the shard re-parses it; the router never rewrites
+    /// requests), and pass the shard's response through verbatim.
+    fn route_place(&self, line: &str, source: &PlaceSource) -> Result<String> {
+        let fp = match source {
+            PlaceSource::Spec(s) => {
+                let w = Workload::resolve(s)?;
+                fingerprint(&w.graph, &self.testbed)
+            }
+            PlaceSource::Inline(g) => fingerprint(g, &self.testbed),
+        };
+        let shard = shard_for(fp, &self.shards);
+        let resp = self.forward(shard, line)?;
+        let mut s = self.stats.lock().unwrap();
+        s.routed[shard] += 1;
+        if protocol::is_busy_response(&resp) {
+            s.shard_busy += 1;
+        }
+        Ok(resp)
+    }
+
+    /// The aggregated `stats` response: the router's own counters plus
+    /// each shard's full stats document (or the error that replaced it).
+    fn render_fleet_stats(&self) -> String {
+        let per_shard = self.fan_out(&protocol::render_stats_request());
+        let s = self.stats.lock().unwrap();
+        let shards_json: Vec<Json> = per_shard
+            .iter()
+            .zip(&self.shards)
+            .map(|(resp, addr)| {
+                let body = match resp {
+                    Ok(line) => Json::parse(line).unwrap_or_else(|e| {
+                        Json::Obj(vec![
+                            ("ok".to_string(), Json::Bool(false)),
+                            ("error".to_string(), Json::Str(format!("bad stats JSON: {e}"))),
+                        ])
+                    }),
+                    Err(e) => Json::Obj(vec![
+                        ("ok".to_string(), Json::Bool(false)),
+                        ("error".to_string(), Json::Str(format!("{e:#}"))),
+                    ]),
+                };
+                Json::Obj(vec![
+                    ("addr".to_string(), Json::Str(addr.clone())),
+                    ("stats".to_string(), body),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("ok".to_string(), Json::Bool(true)),
+            ("op".to_string(), Json::Str("stats".to_string())),
+            ("router".to_string(), Json::Bool(true)),
+            ("fleet_size".to_string(), Json::Num(self.shards.len() as f64)),
+            ("testbed".to_string(), Json::Str(self.testbed.clone())),
+            ("requests".to_string(), Json::Num(s.requests as f64)),
+            (
+                "routed".to_string(),
+                Json::Arr(s.routed.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            ("errors".to_string(), Json::Num(s.errors as f64)),
+            ("shard_busy".to_string(), Json::Num(s.shard_busy as f64)),
+            ("busy_rejects".to_string(), Json::Num(s.busy_rejects as f64)),
+            ("shards".to_string(), Json::Arr(shards_json)),
+        ])
+        .to_string_compact()
+    }
+
+    /// Fan a `ctrl` line out to every shard and aggregate: overall `ok`
+    /// iff every shard acknowledged, with each shard's raw response
+    /// embedded for the operator.
+    fn render_fleet_ctrl(&self, action: &str, line: &str) -> String {
+        let per_shard = self.fan_out(line);
+        let mut all_ok = true;
+        let shards_json: Vec<Json> = per_shard
+            .iter()
+            .zip(&self.shards)
+            .map(|(resp, addr)| {
+                let body = match resp {
+                    Ok(l) => {
+                        let doc = Json::parse(l).unwrap_or(Json::Null);
+                        if doc.get("ok").and_then(Json::as_bool) != Some(true) {
+                            all_ok = false;
+                        }
+                        doc
+                    }
+                    Err(e) => {
+                        all_ok = false;
+                        Json::Obj(vec![
+                            ("ok".to_string(), Json::Bool(false)),
+                            ("error".to_string(), Json::Str(format!("{e:#}"))),
+                        ])
+                    }
+                };
+                Json::Obj(vec![
+                    ("addr".to_string(), Json::Str(addr.clone())),
+                    ("response".to_string(), body),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("ok".to_string(), Json::Bool(all_ok)),
+            ("op".to_string(), Json::Str("ctrl".to_string())),
+            ("action".to_string(), Json::Str(action.to_string())),
+            ("router".to_string(), Json::Bool(true)),
+            ("shards".to_string(), Json::Arr(shards_json)),
+        ])
+        .to_string_compact()
+    }
+}
+
+impl LineHandler for Router {
+    fn handle_line(&self, line: &str) -> (String, bool) {
+        self.stats.lock().unwrap().requests += 1;
+        match protocol::parse_request(line) {
+            Err(e) => {
+                self.stats.lock().unwrap().errors += 1;
+                (protocol::render_error_response(None, &format!("{e:#}")), false)
+            }
+            Ok(Request::Place(req)) => match self.route_place(line, &req.source) {
+                Ok(resp) => (resp, false),
+                Err(e) => {
+                    self.stats.lock().unwrap().errors += 1;
+                    (
+                        protocol::render_error_response(req.id.as_ref(), &format!("{e:#}")),
+                        false,
+                    )
+                }
+            },
+            Ok(Request::Stats) => (self.render_fleet_stats(), false),
+            Ok(Request::Reload(_)) => (self.render_fleet_ctrl("reload", line), false),
+            Ok(Request::ClearCache) => (self.render_fleet_ctrl("clear-cache", line), false),
+            // Shutdown stops the router only: shards are independent
+            // processes, shut down individually (or left up for the
+            // next router).
+            Ok(Request::Shutdown) => (protocol::render_ctrl_response("shutdown"), true),
+        }
+    }
+
+    fn note_busy(&self) {
+        self.stats.lock().unwrap().busy_rejects += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 7481 + i)).collect()
+    }
+
+    #[test]
+    fn shard_for_is_deterministic_and_permutation_invariant() {
+        let shards = addrs(4);
+        let mut rev = shards.clone();
+        rev.reverse();
+        for fp in (0..2000u64).map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15)) {
+            let a = &shards[shard_for(fp, &shards)];
+            let b = &rev[shard_for(fp, &rev)];
+            assert_eq!(a, b, "fp {fp:016x} moved when the shard list was permuted");
+        }
+    }
+
+    /// Golden values: these pin the exact hash function. If this test
+    /// breaks, router and client deployments of different builds would
+    /// disagree on key ownership — never change the function without a
+    /// fleet-wide flag day.
+    #[test]
+    fn shard_for_golden_values() {
+        // Frozen once from the implementation. If this test breaks,
+        // router and client deployments of different builds would
+        // disagree on key ownership — never change the hash function
+        // without a fleet-wide flag day.
+        let shards = addrs(3);
+        let got: Vec<usize> = (0..16u64)
+            .map(|i| shard_for(i.wrapping_mul(0x0101_0101_0101_0101), &shards))
+            .collect();
+        assert_eq!(got, vec![0, 1, 0, 1, 1, 2, 1, 0, 0, 2, 1, 0, 0, 1, 2, 0]);
+        // The underlying primitives are pinned too, which pins shard_for
+        // transitively for ANY address list, not just this one.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"127.0.0.1:7481"), 0xb46a_69e9_5e9e_1b8c);
+        assert_eq!(splitmix64(0), 0xe220_a839_7b1d_cdaf);
+        assert_eq!(splitmix64(1), 0x910a_2dec_8902_5cc1);
+        assert_eq!(splitmix64(0xdead_beef), 0x4adf_b90f_68c9_eb9b);
+    }
+
+    #[test]
+    fn shard_for_spreads_keys_and_is_stable_under_growth() {
+        let shards = addrs(4);
+        let mut counts = vec![0usize; shards.len()];
+        let fps: Vec<u64> = (0..4000u64).map(|i| splitmix64(i)).collect();
+        for &fp in &fps {
+            counts[shard_for(fp, &shards)] += 1;
+        }
+        // Spread: no shard owns more than half or less than a twentieth
+        // of a uniform keyspace across 4 shards (expected share 25%).
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 200 && c < 2000, "shard {i} owns {c}/4000 keys");
+        }
+        // Minimal disruption: adding a 5th shard only moves keys that
+        // now belong to it — every key that stays on an old shard stays
+        // on the SAME old shard.
+        let mut grown = shards.clone();
+        grown.push("127.0.0.1:7485".to_string());
+        let mut moved = 0usize;
+        for &fp in &fps {
+            let old = shard_for(fp, &shards);
+            let new = shard_for(fp, &grown);
+            if grown[new] == "127.0.0.1:7485" {
+                moved += 1;
+            } else {
+                assert_eq!(shards[old], grown[new], "fp {fp:016x} moved between old shards");
+            }
+        }
+        // The newcomer takes roughly 1/5; certainly not 0 and not half.
+        assert!(moved > 400 && moved < 2000, "new shard took {moved}/4000 keys");
+    }
+
+    #[test]
+    fn shard_for_single_shard_owns_everything() {
+        let one = vec!["10.0.0.1:7000".to_string()];
+        for fp in [0u64, 1, u64::MAX, 0xdead_beef] {
+            assert_eq!(shard_for(fp, &one), 0);
+        }
+    }
+}

@@ -28,18 +28,48 @@
 //!    `"fallback:single:<device>"`).
 //!
 //! A `stats` request reports live metrics (qps, cache hit rate, p50/p99
-//! service time over a sliding window); a `ctrl: shutdown` message
-//! acknowledges, stops the accept loop, drains the workers and joins
-//! them — a clean exit, suitable for CI.
+//! service time over a sliding window, per-tenant request counts, the
+//! live checkpoint generation); a `ctrl: shutdown` message acknowledges,
+//! stops the accept loop, drains the workers and joins them — a clean
+//! exit, suitable for CI.
+//!
+//! ## Hot reload
+//!
+//! The policy lives behind an RCU-style swap: requests clone an
+//! `Arc<PolicySnapshot>` out of a mutex at admission and never touch the
+//! shared pointer again, so a `ctrl: reload` (or SIGHUP, see
+//! [`sighup_flag`]) can load + pre-flight a new `hsdag-params-v1`
+//! checkpoint *outside* any lock, then swap the `Arc` in a critical
+//! section that is one pointer move long. In-flight requests finish on
+//! the snapshot they started with; nothing blocks, nothing drops. The
+//! `checkpoint_generation` counter bumps per successful swap and `stats`
+//! reports it (and the new `trained_on`) truthfully. The placement cache
+//! is *kept* across a reload when the new checkpoint has the same
+//! architecture (hidden width — cached answers are simulator-verified
+//! placements, still valid under any policy) and *flushed* when the
+//! architecture changed; `ctrl: clear-cache` forces a flush either way.
+//!
+//! ## Admission control
+//!
+//! The accept loop feeds workers through a *bounded* queue
+//! ([`Server::set_queue_depth`], default [`DEFAULT_QUEUE_DEPTH`]; depth
+//! 0 admits a connection only when a worker is idle right now). Past
+//! the high-water mark a new
+//! connection is answered with one fast `{"ok": false, "busy": true}`
+//! line and closed — overload degrades into explicit shed load (counted
+//! in `stats.busy_rejects`) instead of unbounded queueing and p99
+//! collapse.
 //!
 //! [`protocol`]: super::protocol
 //! [`fingerprint`]: super::fingerprint::fingerprint
 //! [`cache`]: super::cache
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::TrySendError;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -67,6 +97,23 @@ const SERVICE_TIME_WINDOW: usize = 4096;
 /// set (between chunks the deadline is re-checked; unbounded requests
 /// run every rollout in a single pass).
 const ROLLOUT_CHUNK: usize = 2;
+
+/// Default admission-control high-water mark (pending connections).
+pub const DEFAULT_QUEUE_DEPTH: usize = 64;
+
+/// Anything that answers protocol lines — the TCP [`Server`] front end
+/// is generic over this, so one accept-loop/worker-pool/admission
+/// implementation fronts both a [`PlacementService`] shard and a
+/// [`Router`](super::router::Router).
+pub trait LineHandler: Send + Sync {
+    /// Handle one protocol line; returns the response line and whether
+    /// the handler's own shutdown was requested.
+    fn handle_line(&self, line: &str) -> (String, bool);
+
+    /// Called by the front end when it sheds a connection past the
+    /// admission high-water mark (stats hooks).
+    fn note_busy(&self) {}
+}
 
 /// Serving knobs (the `hsdag serve` flags).
 #[derive(Debug, Clone)]
@@ -128,16 +175,42 @@ struct StatsInner {
     /// Fresh single-device + memory-greedy evaluation passes (misses of
     /// the per-fingerprint trivial-candidate cache).
     trivial_evals: u64,
+    /// Successful checkpoint swaps since boot.
+    reloads: u64,
+    /// Connections shed by admission control (not counted in `requests`:
+    /// a shed connection never reached a worker).
+    busy_rejects: u64,
+    /// Place requests per self-reported tenant label.
+    tenants: HashMap<String, u64>,
     service_ms: Vec<f64>,
     ring_idx: usize,
 }
 
-/// The transport-free placement service.
-pub struct PlacementService {
-    cfg: Config,
+/// One immutable generation of the policy: the parameters plus the
+/// config they were validated under (the checkpoint pins `hidden`, so
+/// the config can differ across generations). Requests clone the `Arc`
+/// once at admission and never look back — a reload swapping the
+/// service-level pointer cannot stall or corrupt an in-flight request.
+struct PolicySnapshot {
     params: ParamStore,
+    cfg: Config,
     /// Informational: what the checkpoint says it was trained on.
     trained_on: String,
+    /// 0 at boot, +1 per successful [`PlacementService::reload`].
+    generation: u64,
+}
+
+/// The transport-free placement service.
+pub struct PlacementService {
+    /// Boot-time config: testbed/seed/backend are fixed for the process
+    /// lifetime (a reload refuses to change testbed); `hidden` here is
+    /// the boot checkpoint's and may be superseded by the live snapshot.
+    cfg: Config,
+    /// The live policy, RCU-style: lock, clone the `Arc`, unlock.
+    policy: Mutex<Arc<PolicySnapshot>>,
+    /// Where `reload(None)` (the bare `ctrl: reload` / SIGHUP path)
+    /// re-reads the checkpoint from.
+    default_ckpt: Mutex<Option<PathBuf>>,
     device_names: Vec<String>,
     opts: ServeOptions,
     cache: Mutex<LruCache<u64, CacheEntry>>,
@@ -179,10 +252,16 @@ impl PlacementService {
         cfg.update_timestep = 1;
         let tb = cfg.resolve_testbed()?;
         ckpt.check_compatible(cfg.hidden, tb.n_actions(), &cfg.testbed)?;
+        let snapshot = PolicySnapshot {
+            params: ckpt.store,
+            cfg: cfg.clone(),
+            trained_on: ckpt.meta.workload.clone(),
+            generation: 0,
+        };
         Ok(PlacementService {
             device_names: tb.devices.iter().map(|d| d.name.clone()).collect(),
-            trained_on: ckpt.meta.workload.clone(),
-            params: ckpt.store,
+            policy: Mutex::new(Arc::new(snapshot)),
+            default_ckpt: Mutex::new(None),
             cache: Mutex::new(LruCache::new(opts.cache_capacity)),
             inflight: Mutex::new(HashSet::new()),
             inflight_cv: Condvar::new(),
@@ -193,14 +272,91 @@ impl PlacementService {
         })
     }
 
-    /// The resolved run configuration (testbed id, hidden size, seed).
+    /// The boot-time run configuration (testbed id, hidden size, seed).
+    /// After a reload the live snapshot's config is authoritative for
+    /// `hidden`; testbed and seed never change.
     pub fn config(&self) -> &Config {
         &self.cfg
     }
 
-    /// What the checkpoint was trained on (banner text).
-    pub fn trained_on(&self) -> &str {
-        &self.trained_on
+    /// What the live checkpoint was trained on (banner text; tracks
+    /// reloads).
+    pub fn trained_on(&self) -> String {
+        self.policy.lock().unwrap().trained_on.clone()
+    }
+
+    /// The live checkpoint generation (0 at boot, +1 per reload).
+    pub fn generation(&self) -> u64 {
+        self.policy.lock().unwrap().generation
+    }
+
+    /// Register the checkpoint path a bare `ctrl: reload` (or SIGHUP)
+    /// re-reads; `hsdag serve` points this at its `--load` flag so the
+    /// atomically-replace-then-reload runbook needs no argument.
+    pub fn set_default_checkpoint(&self, path: &Path) {
+        *self.default_ckpt.lock().unwrap() = Some(path.to_path_buf());
+    }
+
+    /// Load, validate, pre-flight and atomically swap in a new
+    /// checkpoint; in-flight requests finish on the snapshot they
+    /// already hold. Returns `(generation, cache_kept, trained_on)`.
+    ///
+    /// Everything expensive — disk read, shape checks, a smoke rollout —
+    /// happens *before* the policy lock is taken; the critical section
+    /// is one `Arc` assignment. A checkpoint for a different testbed is
+    /// refused (that is a redeploy, not a reload). The placement cache
+    /// is kept when the architecture (hidden width) is unchanged —
+    /// cached answers are simulator-verified placements, valid
+    /// regardless of which policy found them — and flushed otherwise.
+    pub fn reload(&self, path: Option<&Path>) -> Result<(u64, bool, String)> {
+        let path = match path {
+            Some(p) => p.to_path_buf(),
+            None => self.default_ckpt.lock().unwrap().clone().ok_or_else(|| {
+                anyhow!(
+                    "reload: no checkpoint given and no default path registered \
+                     (pass ctrl.checkpoint, or start serve with --load)"
+                )
+            })?,
+        };
+        let ckpt = Checkpoint::load(&path)
+            .with_context(|| format!("reloading checkpoint '{}'", path.display()))?;
+        let tb = self.cfg.resolve_testbed()?;
+        // The checkpoint's own hidden width is the candidate config's:
+        // architecture may change across a reload (the cache is flushed
+        // then); the action space and testbed must not.
+        ckpt.check_compatible(ckpt.meta.hidden, tb.n_actions(), &self.cfg.testbed)?;
+        let mut cfg = self.cfg.clone();
+        cfg.hidden = ckpt.meta.hidden;
+        // Pre-flight: stand a full agent up on a tiny graph and run the
+        // greedy rollout. This catches parameter-store problems the
+        // shape header checks cannot (e.g. a feature-dim mismatch that
+        // only surfaces when the backend wires the layers together),
+        // while the old snapshot keeps serving.
+        let smoke = Workload::resolve("seq:4")?;
+        let env = Env::for_workload(smoke, &cfg)?;
+        let backend = NativeBackend::from_snapshot(&env, &cfg, &ckpt.store)?;
+        let mut agent = HsdagAgent::with_backend(&env, Box::new(backend), &cfg)?;
+        agent
+            .rollout_batch(&env, 0)
+            .context("reload pre-flight rollout failed; keeping the old checkpoint")?;
+        let trained_on = ckpt.meta.workload.clone();
+        let (generation, cache_kept) = {
+            let mut slot = self.policy.lock().unwrap();
+            let generation = slot.generation + 1;
+            let cache_kept = cfg.hidden == slot.cfg.hidden;
+            *slot = Arc::new(PolicySnapshot {
+                params: ckpt.store,
+                cfg,
+                trained_on: trained_on.clone(),
+                generation,
+            });
+            (generation, cache_kept)
+        };
+        if !cache_kept {
+            self.clear_cache();
+        }
+        self.stats.lock().unwrap().reloads += 1;
+        Ok((generation, cache_kept, trained_on))
     }
 
     /// Evaluate the non-learned candidates for one environment: every
@@ -263,6 +419,9 @@ impl PlacementService {
     /// Serve one placement request (the cache-or-infer-or-fallback core).
     pub fn handle_place(&self, req: &PlaceRequest) -> Result<PlaceOutcome> {
         let t0 = Instant::now();
+        // RCU read side: one lock + Arc clone, then this request runs to
+        // completion on `snap` no matter how many reloads land meanwhile.
+        let snap: Arc<PolicySnapshot> = self.policy.lock().unwrap().clone();
         let deadline = req
             .budget_ms
             .or(self.opts.budget_ms)
@@ -273,7 +432,7 @@ impl PlacementService {
             PlaceSource::Spec(s) => Workload::resolve(s)?,
             PlaceSource::Inline(g) => Workload::from_graph(g.clone(), None),
         };
-        let fp = fingerprint(&workload.graph, &self.cfg.testbed);
+        let fp = fingerprint(&workload.graph, &snap.cfg.testbed);
         let fp_hex = format!("{fp:016x}");
 
         // A request with server-default knobs: its answer may be cached,
@@ -321,15 +480,15 @@ impl PlacementService {
             }
         }
 
-        let env = Env::for_workload(workload, &self.cfg)?;
+        let env = Env::for_workload(workload, &snap.cfg)?;
 
         // Candidates, policy first (ties between a policy rollout and an
         // identical baseline placement resolve toward the policy).
         let mut candidates: Vec<(f64, bool, Placement, Provenance)> = Vec::new();
         let mut policy_complete = false;
         if !over(&deadline) {
-            let backend = NativeBackend::from_snapshot(&env, &self.cfg, &self.params)?;
-            let mut agent = HsdagAgent::with_backend(&env, Box::new(backend), &self.cfg)?;
+            let backend = NativeBackend::from_snapshot(&env, &snap.cfg, &snap.params)?;
+            let mut agent = HsdagAgent::with_backend(&env, Box::new(backend), &snap.cfg)?;
             let n_roll = req.rollouts.unwrap_or(self.opts.rollouts);
             // The greedy rollout plus every stochastic one go through ONE
             // batched policy pass when the request is unbounded (the
@@ -426,11 +585,16 @@ impl PlacementService {
         // Only the server-default answer may enter the cache: a
         // budget-truncated result, or one computed under per-request
         // knob overrides, must never be served to later unconstrained
-        // requests for the same graph (cache poisoning).
+        // requests for the same graph (cache poisoning). A checkpoint
+        // swap mid-inference also voids cacheability — the reload may
+        // just have flushed the cache, and an old-generation answer must
+        // not repopulate it behind the new policy's back. (The trivial
+        // candidates above are exempt: they are policy-independent.)
         let cacheable = !req.no_cache
             && policy_complete
             && req.budget_ms.is_none()
-            && req.rollouts.is_none();
+            && req.rollouts.is_none()
+            && self.policy.lock().unwrap().generation == snap.generation;
         if cacheable {
             let mut cache = self.cache.lock().unwrap();
             let mut entry = cache.peek(&fp).cloned().unwrap_or_default();
@@ -465,11 +629,34 @@ impl PlacementService {
                 self.stats.lock().unwrap().requests += 1;
                 (protocol::render_ctrl_response("shutdown"), true)
             }
+            Ok(Request::Reload(path)) => {
+                self.stats.lock().unwrap().requests += 1;
+                match self.reload(path.as_deref().map(Path::new)) {
+                    Ok((generation, cache_kept, trained_on)) => (
+                        protocol::render_reload_response(generation, cache_kept, &trained_on),
+                        false,
+                    ),
+                    Err(e) => {
+                        // The old checkpoint keeps serving; the caller
+                        // learns why the swap did not happen.
+                        self.stats.lock().unwrap().errors += 1;
+                        (protocol::render_error_response(None, &format!("{e:#}")), false)
+                    }
+                }
+            }
+            Ok(Request::ClearCache) => {
+                self.stats.lock().unwrap().requests += 1;
+                self.clear_cache();
+                (protocol::render_ctrl_response("clear-cache"), false)
+            }
             Ok(Request::Place(req)) => {
                 let result = self.handle_place(&req);
                 let service_ms = t0.elapsed().as_secs_f64() * 1e3;
                 let mut s = self.stats.lock().unwrap();
                 s.requests += 1;
+                if let Some(tenant) = &req.tenant {
+                    *s.tenants.entry(tenant.clone()).or_insert(0) += 1;
+                }
                 match result {
                     Ok(outcome) => {
                         s.placements += 1;
@@ -502,11 +689,23 @@ impl PlacementService {
         }
     }
 
-    /// Snapshot the live metrics.
+    /// Snapshot the live metrics. The three locks are taken one at a
+    /// time (never nested) so this can never deadlock against a
+    /// concurrent reload or place.
     pub fn stats_view(&self) -> StatsView {
+        let (checkpoint_generation, trained_on) = {
+            let p = self.policy.lock().unwrap();
+            (p.generation, p.trained_on.clone())
+        };
+        let (cache_len, cache_capacity) = {
+            let c = self.cache.lock().unwrap();
+            (c.len(), c.capacity())
+        };
         let s = self.stats.lock().unwrap();
-        let cache = self.cache.lock().unwrap();
         let uptime_s = self.started.elapsed().as_secs_f64();
+        let mut tenants: Vec<(String, u64)> =
+            s.tenants.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        tenants.sort();
         StatsView {
             uptime_s,
             requests: s.requests,
@@ -515,18 +714,36 @@ impl PlacementService {
             fallbacks: s.fallbacks,
             errors: s.errors,
             trivial_evals: s.trivial_evals,
-            cache_len: cache.len(),
-            cache_capacity: cache.capacity(),
+            reloads: s.reloads,
+            busy_rejects: s.busy_rejects,
+            cache_len,
+            cache_capacity,
             qps: s.requests as f64 / uptime_s.max(1e-9),
             cache_hit_rate: s.cache_hits as f64 / (s.placements.max(1)) as f64,
             p50_ms: stats::percentile(&s.service_ms, 50.0),
             p99_ms: stats::percentile(&s.service_ms, 99.0),
+            testbed: self.cfg.testbed.clone(),
+            checkpoint_generation,
+            trained_on,
+            tenants,
         }
     }
 
-    /// Drop every cached placement (benches isolate cold/hit paths).
+    /// Drop every cached placement (benches isolate cold/hit paths; the
+    /// `ctrl: clear-cache` escape hatch after a reload that should have
+    /// flushed).
     pub fn clear_cache(&self) {
         self.cache.lock().unwrap().clear();
+    }
+}
+
+impl LineHandler for PlacementService {
+    fn handle_line(&self, line: &str) -> (String, bool) {
+        PlacementService::handle_line(self, line)
+    }
+
+    fn note_busy(&self) {
+        self.stats.lock().unwrap().busy_rejects += 1;
     }
 }
 
@@ -535,11 +752,15 @@ impl PlacementService {
 // ---------------------------------------------------------------------------
 
 /// A bound-but-not-yet-running server. `addr` may use port 0 for an
-/// ephemeral port; [`Server::local_addr`] reports what was bound.
+/// ephemeral port; [`Server::local_addr`] reports what was bound. The
+/// front end is generic over [`LineHandler`]: the same accept loop,
+/// worker pool and admission control serve both a [`PlacementService`]
+/// shard and a [`Router`](super::router::Router).
 pub struct Server {
     listener: TcpListener,
-    service: Arc<PlacementService>,
+    handler: Arc<dyn LineHandler>,
     addr: SocketAddr,
+    queue_depth: usize,
 }
 
 /// Handle to a server running on a background thread (tests, examples).
@@ -556,15 +777,23 @@ impl ServerHandle {
 }
 
 impl Server {
-    pub fn bind(service: Arc<PlacementService>, addr: &str) -> Result<Server> {
+    pub fn bind(handler: Arc<dyn LineHandler>, addr: &str) -> Result<Server> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding serve address '{addr}'"))?;
         let addr = listener.local_addr()?;
-        Ok(Server { listener, service, addr })
+        Ok(Server { listener, handler, addr, queue_depth: DEFAULT_QUEUE_DEPTH })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Admission-control high-water mark: accepted connections that may
+    /// wait for a worker. Depth 0 is a rendezvous — a connection is
+    /// admitted only if a worker is idle at that instant; anything past
+    /// the mark gets one `busy` line and a close.
+    pub fn set_queue_depth(&mut self, depth: usize) {
+        self.queue_depth = depth;
     }
 
     /// Accept and serve until a shutdown request arrives, then drain and
@@ -574,17 +803,22 @@ impl Server {
             .set_nonblocking(true)
             .context("setting the listener non-blocking")?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::channel::<TcpStream>();
+        // The bounded hand-off IS the admission queue: `try_send` either
+        // parks the connection within the high-water mark (or straight
+        // into an idle worker's `recv`) or fails fast, in which case the
+        // client gets an explicit `busy` line instead of silently
+        // joining an unbounded backlog.
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(self.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let mut pool = Vec::with_capacity(workers.max(1));
         for i in 0..workers.max(1) {
             let rx = Arc::clone(&rx);
-            let service = Arc::clone(&self.service);
+            let handler = Arc::clone(&self.handler);
             let shutdown = Arc::clone(&shutdown);
             pool.push(
                 thread::Builder::new()
                     .name(format!("hsdag-serve-{i}"))
-                    .spawn(move || worker_loop(&rx, &service, &shutdown))
+                    .spawn(move || worker_loop(&rx, &*handler, &shutdown))
                     .context("spawning serve worker")?,
             );
         }
@@ -593,11 +827,17 @@ impl Server {
                 break;
             }
             match self.listener.accept() {
-                Ok((stream, _peer)) => {
-                    // A send can only fail once every worker has exited,
-                    // which only happens on shutdown.
-                    let _ = tx.send(stream);
-                }
+                Ok((stream, _peer)) => match tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(stream)) => {
+                        shed_busy(stream, self.queue_depth);
+                        self.handler.note_busy();
+                    }
+                    // Workers only exit once the senders drop, which
+                    // only happens on shutdown; drop the connection and
+                    // let the flag check above end the loop.
+                    Err(TrySendError::Disconnected(_)) => {}
+                },
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
                     thread::sleep(Duration::from_millis(10));
                 }
@@ -629,11 +869,24 @@ impl Server {
     }
 }
 
+/// Shed one over-capacity connection: a single fast `busy` line, then
+/// close. Runs on the accept thread, so it must never block long — the
+/// write timeout bounds a pathological client.
+fn shed_busy(mut stream: TcpStream, queue_depth: usize) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let line = protocol::render_busy_response(queue_depth);
+    let _ = stream
+        .write_all(line.as_bytes())
+        .and_then(|_| stream.write_all(b"\n"))
+        .and_then(|_| stream.flush());
+}
+
 /// One pool worker: pull connections off the shared queue until the
 /// channel closes (all senders dropped at shutdown).
 fn worker_loop(
     rx: &Mutex<mpsc::Receiver<TcpStream>>,
-    service: &PlacementService,
+    handler: &dyn LineHandler,
     shutdown: &AtomicBool,
 ) {
     loop {
@@ -644,14 +897,14 @@ fn worker_loop(
             Ok(s) => s,
             Err(_) => return,
         };
-        handle_conn(stream, service, shutdown);
+        handle_conn(stream, handler, shutdown);
     }
 }
 
 /// Serve one connection: line in, line out, until EOF / shutdown. The
 /// short read timeout keeps the worker responsive to a shutdown raised
 /// elsewhere while this client idles.
-fn handle_conn(stream: TcpStream, service: &PlacementService, shutdown: &AtomicBool) {
+fn handle_conn(stream: TcpStream, handler: &dyn LineHandler, shutdown: &AtomicBool) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
     let mut writer = match stream.try_clone() {
@@ -673,7 +926,7 @@ fn handle_conn(stream: TcpStream, service: &PlacementService, shutdown: &AtomicB
                 let line = String::from_utf8_lossy(&buf).trim().to_string();
                 buf.clear();
                 if !line.is_empty() {
-                    let (response, shut) = service.handle_line(&line);
+                    let (response, shut) = handler.handle_line(&line);
                     if writer
                         .write_all(response.as_bytes())
                         .and_then(|_| writer.write_all(b"\n"))
@@ -696,5 +949,45 @@ fn handle_conn(stream: TcpStream, service: &PlacementService, shutdown: &AtomicB
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => continue,
             Err(_) => return,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIGHUP → reload latch
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+static SIGHUP_FLAG: AtomicBool = AtomicBool::new(false);
+
+/// The handler itself only flips an atomic — the only thing that is
+/// async-signal-safe here. A watcher thread (see `hsdag serve`) polls
+/// the flag and performs the actual [`PlacementService::reload`].
+#[cfg(unix)]
+extern "C" fn sighup_latch(_signum: i32) {
+    SIGHUP_FLAG.store(true, Ordering::Relaxed);
+}
+
+/// Install (once) a SIGHUP handler that latches into a process-wide
+/// flag, and return the flag; the caller polls it and swaps it back to
+/// `false` before reloading. Returns `None` on platforms without POSIX
+/// signals. Declared against the C library directly — the crate has no
+/// libc dependency.
+pub fn sighup_flag() -> Option<&'static AtomicBool> {
+    #[cfg(unix)]
+    {
+        use std::sync::Once;
+        const SIGHUP: i32 = 1;
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        static INSTALL: Once = Once::new();
+        INSTALL.call_once(|| unsafe {
+            signal(SIGHUP, sighup_latch);
+        });
+        Some(&SIGHUP_FLAG)
+    }
+    #[cfg(not(unix))]
+    {
+        None
     }
 }

@@ -1,0 +1,439 @@
+//! Fleet-tier integration tests: routing, hot reload, backpressure.
+//!
+//! - the router partitions the keyspace: requests for distinct specs
+//!   land on their rendezvous-assigned shards, repeats are cache hits on
+//!   the owning shard, and the fleet's caches together hold each spec
+//!   exactly once (no duplication);
+//! - `ctrl: reload` fans out through the router, bumps every shard's
+//!   checkpoint generation with the cache kept (same hidden width), and
+//!   a reload hammered by concurrent placement traffic drops nothing;
+//! - a saturated shard (one worker, zero queue depth) sheds the surplus
+//!   connection with an explicit `busy` line instead of stalling it,
+//!   counts the reject, and serves normally again once the pinned
+//!   connection goes away;
+//! - `ctrl: clear-cache` over the wire empties the LRU so the next
+//!   repeat is a fresh inference, not a cache hit;
+//! - the retry client backs off on transport errors (connection refused
+//!   costs the full backoff schedule before the final error) and never
+//!   retries a server-reported failure (the shard sees exactly one
+//!   request).
+
+use std::io::{BufRead, BufReader};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hsdag::config::Config;
+use hsdag::features::FeatureConfig;
+use hsdag::models::Workload;
+use hsdag::rl::{Env, HsdagAgent};
+use hsdag::serve::{
+    client, fingerprint, protocol, shard_for, Checkpoint, CheckpointMeta, LineHandler,
+    PlacementService, Router, ServeOptions, Server, ServerHandle,
+};
+use hsdag::util::json::Json;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hsdag_fleet_test_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Train a small native policy and wrap it as a checkpoint.
+fn tiny_checkpoint(train_spec: &str, episodes: usize) -> (Checkpoint, Config) {
+    let cfg = Config {
+        backend: "native".to_string(),
+        hidden: 16,
+        update_timestep: 4,
+        seed: 5,
+        ..Default::default()
+    };
+    let env = Env::for_workload(Workload::resolve(train_spec).unwrap(), &cfg).unwrap();
+    let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+    agent.search(&env, episodes).unwrap();
+    let ckpt = Checkpoint::new(
+        agent.export_params(),
+        CheckpointMeta {
+            hidden: cfg.hidden,
+            feature_dim: FeatureConfig::dim(),
+            actions: env.n_actions(),
+            testbed: env.testbed.id.clone(),
+            workload: train_spec.to_string(),
+            best_latency: None,
+        },
+    );
+    (ckpt, cfg)
+}
+
+/// One in-process shard: a `PlacementService` behind a real TCP server
+/// on an ephemeral loopback port.
+struct Shard {
+    service: Arc<PlacementService>,
+    addr: String,
+    handle: ServerHandle,
+}
+
+fn spawn_shards(n: usize, ckpt: &Checkpoint, cfg: &Config) -> Vec<Shard> {
+    (0..n)
+        .map(|_| {
+            let service = Arc::new(
+                PlacementService::new(ckpt.clone(), cfg, ServeOptions::default()).unwrap(),
+            );
+            let server = Server::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+            let addr = server.local_addr().to_string();
+            let handle = server.spawn(2).unwrap();
+            Shard { service, addr, handle }
+        })
+        .collect()
+}
+
+fn shutdown_shards(shards: Vec<Shard>, timeout: Duration) {
+    for s in shards {
+        client::roundtrip(&s.addr, &protocol::render_shutdown_request(), timeout).unwrap();
+        s.handle.join().unwrap();
+    }
+}
+
+/// Pick specs until every shard owns at least `per_shard` of them — the
+/// rendezvous hash decides ownership, so the set adapts to the ports the
+/// OS handed out rather than hardcoding an assignment.
+fn specs_covering(addrs: &[String], testbed: &str, per_shard: usize) -> Vec<(String, usize)> {
+    let mut owned = vec![0usize; addrs.len()];
+    let mut picked = Vec::new();
+    for n in 4..64 {
+        if owned.iter().all(|&c| c >= per_shard) {
+            break;
+        }
+        let spec = format!("seq:{n}");
+        let g = Workload::resolve(&spec).unwrap().graph;
+        let owner = shard_for(fingerprint(&g, testbed), addrs);
+        if owned[owner] < per_shard {
+            owned[owner] += 1;
+            picked.push((spec, owner));
+        }
+    }
+    assert!(
+        owned.iter().all(|&c| c >= per_shard),
+        "60 candidate specs did not cover every shard — hash badly skewed?"
+    );
+    picked
+}
+
+#[test]
+fn router_partitions_caches_and_fans_out_reload() {
+    let (ckpt, cfg) = tiny_checkpoint("layered:3x3:1", 2);
+    let dir = tmp_dir("router");
+    let ckpt_path = dir.join("fleet.ckpt.json");
+    ckpt.save(&ckpt_path).unwrap();
+
+    let timeout = Duration::from_secs(30);
+    let shards = spawn_shards(2, &ckpt, &cfg);
+    for s in &shards {
+        s.service.set_default_checkpoint(&ckpt_path);
+    }
+    let addrs: Vec<String> = shards.iter().map(|s| s.addr.clone()).collect();
+    let router = Router::new(addrs.clone(), timeout).unwrap();
+    assert_eq!(router.testbed(), cfg.resolve_testbed().unwrap().id);
+
+    // Each spec routed twice through the router: a cold miss then a
+    // cache hit — on the owning shard both times.
+    let specs = specs_covering(&addrs, router.testbed(), 1);
+    for (spec, owner) in &specs {
+        let line =
+            protocol::render_place_request(Some(spec.as_str()), None, None, None, None, false);
+        for (pass, want_cache) in [("cold", false), ("repeat", true)] {
+            let (resp, shut) = router.handle_line(&line);
+            assert!(!shut);
+            let doc = protocol::parse_response(&resp).unwrap();
+            let prov = doc.get("provenance").unwrap().as_str().unwrap();
+            assert_eq!(
+                prov == "cache",
+                want_cache,
+                "{spec} {pass} pass (owner shard {owner}): provenance {prov}"
+            );
+        }
+    }
+
+    // The partition property: together the shard caches hold each spec
+    // exactly once, and each shard holds exactly what it owns.
+    let views: Vec<_> = shards.iter().map(|s| s.service.stats_view()).collect();
+    let total: usize = views.iter().map(|v| v.cache_len).sum();
+    assert_eq!(total, specs.len(), "fleet caches must hold each spec exactly once");
+    for (i, v) in views.iter().enumerate() {
+        let owned = specs.iter().filter(|(_, o)| *o == i).count();
+        assert_eq!(v.cache_len, owned, "shard {i} cache size");
+        assert_eq!(v.cache_hits, owned as u64, "shard {i} cache hits");
+    }
+
+    // The router's aggregated stats see the same world.
+    let (resp, _) = router.handle_line(&protocol::render_stats_request());
+    let doc = protocol::parse_response(&resp).unwrap();
+    assert_eq!(doc.get("router").unwrap().as_bool(), Some(true));
+    assert_eq!(doc.get("fleet_size").unwrap().as_usize(), Some(2));
+    let routed: Vec<usize> = doc
+        .get("routed")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    assert_eq!(routed.iter().sum::<usize>(), 2 * specs.len());
+    let shard_stats = doc.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shard_stats.len(), 2);
+    for (i, entry) in shard_stats.iter().enumerate() {
+        assert_eq!(entry.get("addr").and_then(Json::as_str), Some(addrs[i].as_str()));
+        let body = entry.get("stats").unwrap();
+        assert_eq!(body.get("checkpoint_generation").unwrap().as_usize(), Some(0));
+    }
+
+    // Reload fans out: every shard bumps its generation, keeps its cache
+    // (same hidden width), and the aggregate response is ok.
+    let (resp, _) = router.handle_line(&protocol::render_reload_request(None));
+    let doc = protocol::parse_response(&resp).unwrap();
+    assert_eq!(doc.get("action").unwrap().as_str(), Some("reload"));
+    for entry in doc.get("shards").unwrap().as_arr().unwrap() {
+        let body = entry.get("response").unwrap();
+        assert_eq!(body.get("generation").unwrap().as_usize(), Some(1));
+        assert_eq!(body.get("cache_kept").unwrap().as_bool(), Some(true));
+    }
+    for (i, s) in shards.iter().enumerate() {
+        assert_eq!(s.service.generation(), 1, "shard {i} generation");
+        let v = s.service.stats_view();
+        assert_eq!(v.reloads, 1);
+        let owned = specs.iter().filter(|(_, o)| *o == i).count();
+        assert_eq!(v.cache_len, owned, "reload with same hidden must keep the cache");
+    }
+
+    // A repeat after reload is still a cache hit (the cache survived).
+    let (spec, owner) = &specs[0];
+    let line = protocol::render_place_request(Some(spec.as_str()), None, None, None, None, false);
+    let (resp, _) = router.handle_line(&line);
+    let doc = protocol::parse_response(&resp).unwrap();
+    assert_eq!(doc.get("provenance").unwrap().as_str(), Some("cache"), "owner {owner}");
+
+    // Shutdown through the router stops the router only; the shards
+    // answer afterwards and are shut down individually.
+    let (resp, shut) = router.handle_line(&protocol::render_shutdown_request());
+    assert!(shut);
+    assert!(protocol::parse_response(&resp).is_ok());
+    for s in &shards {
+        let resp =
+            client::roundtrip(&s.addr, &protocol::render_stats_request(), timeout).unwrap();
+        assert!(protocol::parse_response(&resp).is_ok(), "shard must outlive the router");
+    }
+    shutdown_shards(shards, timeout);
+}
+
+#[test]
+fn reload_under_concurrent_load_drops_nothing() {
+    let (ckpt, cfg) = tiny_checkpoint("layered:3x3:1", 2);
+    let dir = tmp_dir("reload_load");
+    let ckpt_path = dir.join("live.ckpt.json");
+    ckpt.save(&ckpt_path).unwrap();
+
+    let service =
+        Arc::new(PlacementService::new(ckpt, &cfg, ServeOptions::default()).unwrap());
+    service.set_default_checkpoint(&ckpt_path);
+    let server = Server::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = server.spawn(4).unwrap();
+    let timeout = Duration::from_secs(30);
+
+    const CLIENTS: usize = 4;
+    const REQS: usize = 40;
+    const RELOADS: u64 = 3;
+    let specs = ["seq:4", "seq:5", "seq:6"];
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..CLIENTS {
+            let (addr, specs) = (&addr, &specs);
+            handles.push(scope.spawn(move || {
+                let mut conn = client::Connection::open(addr, timeout).unwrap();
+                let tenant = format!("team-{t}");
+                for i in 0..REQS {
+                    let spec = specs[(t + i) % specs.len()];
+                    let line = protocol::render_place_request_for(
+                        Some(spec),
+                        None,
+                        None,
+                        None,
+                        None,
+                        false,
+                        Some(&tenant),
+                    );
+                    // Every response must be a success — a dropped or
+                    // error response during reload fails the test.
+                    let resp = conn.send(&line).unwrap();
+                    protocol::parse_response(&resp).unwrap();
+                }
+            }));
+        }
+        // Interleave reloads with the traffic.
+        for _ in 0..RELOADS {
+            std::thread::sleep(Duration::from_millis(30));
+            let resp =
+                client::roundtrip(&addr, &protocol::render_reload_request(None), timeout)
+                    .unwrap();
+            protocol::parse_response(&resp).unwrap();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let v = service.stats_view();
+    assert_eq!(service.generation(), RELOADS);
+    assert_eq!(v.reloads, RELOADS);
+    assert_eq!(v.errors, 0, "no request may fail during reloads");
+    assert!(v.requests >= (CLIENTS * REQS) as u64 + RELOADS);
+    assert_eq!(v.checkpoint_generation, RELOADS);
+    // Per-tenant accounting: every client thread's label, sorted, with
+    // its exact request count.
+    let want: Vec<(String, u64)> =
+        (0..CLIENTS).map(|t| (format!("team-{t}"), REQS as u64)).collect();
+    assert_eq!(v.tenants, want);
+
+    client::roundtrip(&addr, &protocol::render_shutdown_request(), timeout).unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn saturated_server_sheds_busy_then_recovers() {
+    let (ckpt, cfg) = tiny_checkpoint("seq:6", 1);
+    let service =
+        Arc::new(PlacementService::new(ckpt, &cfg, ServeOptions::default()).unwrap());
+    let mut server = Server::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    // One worker, zero queue: a second concurrent connection is over the
+    // high-water mark by construction — the shed is deterministic, not a
+    // race the test has to win.
+    server.set_queue_depth(0);
+    let addr = server.local_addr().to_string();
+    let handle = server.spawn(1).unwrap();
+    let timeout = Duration::from_secs(30);
+
+    // Pin the only worker: complete one exchange so the worker is
+    // provably inside this connection's read loop, then keep it open.
+    let mut pinned = client::Connection::open(&addr, timeout).unwrap();
+    let resp = pinned.send(&protocol::render_stats_request()).unwrap();
+    assert!(protocol::parse_response(&resp).is_ok());
+
+    // The surplus connection gets the busy line without sending a byte
+    // (admission is at accept time), then EOF.
+    let surplus = TcpStream::connect(&addr).unwrap();
+    surplus.set_read_timeout(Some(timeout)).unwrap();
+    let mut reader = BufReader::new(surplus);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(protocol::is_busy_response(&line), "expected busy shed, got: {line}");
+    assert!(protocol::parse_response(&line).is_err(), "busy must be an error response");
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "server must close after busy");
+
+    // Release the worker; the server must serve new connections again.
+    drop(pinned);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match client::roundtrip(&addr, &protocol::render_stats_request(), timeout) {
+            Ok(resp) if !protocol::is_busy_response(&resp) => {
+                let doc = protocol::parse_response(&resp).unwrap();
+                assert!(doc.get("busy_rejects").unwrap().as_usize().unwrap() >= 1);
+                break;
+            }
+            _ if Instant::now() > deadline => panic!("server never recovered from shed"),
+            _ => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    assert!(service.stats_view().busy_rejects >= 1);
+
+    // Shutdown may race one more busy shed; retry briefly.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let resp =
+            client::roundtrip(&addr, &protocol::render_shutdown_request(), timeout).unwrap();
+        if !protocol::is_busy_response(&resp) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "shutdown kept getting shed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    handle.join().unwrap();
+}
+
+#[test]
+fn clear_cache_over_the_wire() {
+    let (ckpt, cfg) = tiny_checkpoint("seq:5", 1);
+    let service =
+        Arc::new(PlacementService::new(ckpt, &cfg, ServeOptions::default()).unwrap());
+    let server = Server::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = server.spawn(2).unwrap();
+    let timeout = Duration::from_secs(30);
+
+    let line = protocol::render_place_request(Some("seq:5"), None, None, None, None, false);
+    let warm = |label: &str| -> String {
+        let resp = client::roundtrip(&addr, &line, timeout).unwrap();
+        let doc = protocol::parse_response(&resp).unwrap();
+        let prov = doc.get("provenance").unwrap().as_str().unwrap().to_string();
+        assert!(doc.get("feasible").unwrap().as_bool() == Some(true), "{label}");
+        prov
+    };
+    assert_ne!(warm("first"), "cache");
+    assert_eq!(warm("repeat"), "cache");
+    assert_eq!(service.stats_view().cache_len, 1);
+
+    let resp =
+        client::roundtrip(&addr, &protocol::render_clear_cache_request(), timeout).unwrap();
+    let doc = protocol::parse_response(&resp).unwrap();
+    assert_eq!(doc.get("action").unwrap().as_str(), Some("clear-cache"));
+    assert_eq!(service.stats_view().cache_len, 0);
+
+    // The next identical request is a fresh inference again.
+    assert_ne!(warm("after clear"), "cache");
+    assert_eq!(warm("re-repeat"), "cache");
+
+    client::roundtrip(&addr, &protocol::render_shutdown_request(), timeout).unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn retry_client_backs_off_on_transport_errors_only() {
+    // A port that was just bound and released: connecting is refused
+    // immediately, so elapsed time is backoff, not network latency.
+    let dead_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let stats = protocol::render_stats_request();
+    let timeout = Duration::from_secs(2);
+
+    let t0 = Instant::now();
+    let err = client::roundtrip_retry(&dead_addr, &stats, timeout, 2).unwrap_err();
+    let elapsed = t0.elapsed();
+    assert!(format!("{err:#}").contains("after 3 attempt(s)"), "{err:#}");
+    // Two backoff sleeps (50 ms + 100 ms) floor the elapsed time.
+    assert!(elapsed >= Duration::from_millis(150), "no backoff: {elapsed:?}");
+
+    // retries == 0 is a single attempt.
+    let t0 = Instant::now();
+    let err = client::roundtrip_retry(&dead_addr, &stats, timeout, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("after 1 attempt(s)"), "{err:#}");
+    assert!(t0.elapsed() < Duration::from_millis(150));
+
+    // A server-reported failure is returned, not retried: the server
+    // sees exactly one request.
+    let (ckpt, cfg) = tiny_checkpoint("seq:4", 1);
+    let service =
+        Arc::new(PlacementService::new(ckpt, &cfg, ServeOptions::default()).unwrap());
+    let server = Server::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = server.spawn(1).unwrap();
+    let bad = "{\"op\":\"place\"}"; // no spec and no graph: a request error
+    let resp = client::roundtrip_retry(&addr, bad, timeout, 5).unwrap();
+    assert!(protocol::parse_response(&resp).is_err(), "must surface the server error");
+    assert_eq!(service.stats_view().requests, 1, "server error must not be retried");
+
+    client::roundtrip(&addr, &protocol::render_shutdown_request(), timeout).unwrap();
+    handle.join().unwrap();
+}
