@@ -9,7 +9,10 @@
 //!
 //! Flags (after `--`): `--json` emits one `hsdag-bench-v1` document on
 //! stdout (the BENCH_POLICY.json snapshot format); `--quick` trims the
-//! iteration counts for CI smoke runs:
+//! iteration counts for CI smoke runs; `--workers N` installs N kernel
+//! workers (0 = auto) and, when N != 1, first asserts the parallel
+//! forward pass is bit-identical to the serial one — CI's thread sweep
+//! runs this binary at 1/2/4 workers and relies on that gate:
 //!
 //!   cargo bench --bench bench_policy -- --json > BENCH_POLICY.json
 
@@ -18,11 +21,27 @@ use hsdag::models::Benchmark;
 use hsdag::parsing::parse;
 use hsdag::rl::{Env, NativeBackend, PolicyBackend, TrainBatch};
 use hsdag::util::bench::BenchSession;
+use hsdag::util::pool;
+
+/// `--workers N` from the forwarded bench args ([`BenchSession`] ignores
+/// flags it does not know, so the sweep flag parses here). 0 = auto.
+fn parse_workers() -> usize {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    args.iter()
+        .position(|a| a == "--workers")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
 
 fn main() {
+    let workers = parse_workers();
+    pool::set_global_workers(workers);
     let mut session = BenchSession::from_args("bench_policy");
     session.note("== native policy backend (fwd / placer / train per call) ==");
-    let cfg = Config { backend: "native".to_string(), seed: 3, ..Default::default() };
+    session.note(&format!("-- workers: {} (0 = auto) --", workers));
+    session.counter("workers/requested", workers as f64);
+    let cfg = Config { backend: "native".to_string(), seed: 3, workers, ..Default::default() };
     for b in Benchmark::ALL {
         let env = Env::new(b, &cfg).unwrap();
         let mut backend = NativeBackend::new(&env, &cfg).unwrap();
@@ -35,6 +54,21 @@ fn main() {
         ));
         let h = cfg.hidden;
         let fb = vec![0f32; env.v_pad * h];
+
+        // Identity gate: before timing anything at workers != 1, prove
+        // the banded kernels return the serial bits on this graph. A
+        // mismatch is a correctness bug, not a perf result — abort.
+        if workers != 1 {
+            pool::set_global_workers(1);
+            let serial = backend.fwd(&env, &fb).unwrap();
+            pool::set_global_workers(workers);
+            let par = backend.fwd(&env, &fb).unwrap();
+            let same = serial.scores.len() == par.scores.len()
+                && serial.z.len() == par.z.len()
+                && serial.scores.iter().zip(&par.scores).all(|(a, b)| a.to_bits() == b.to_bits())
+                && serial.z.iter().zip(&par.z).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{}: fwd at workers={} diverged from workers=1", b.id(), workers);
+        }
 
         // fwd: encoder + edge scorer at the real graph size.
         session.run(&format!("policy/fwd/{}", b.id()), 1, 10, || {

@@ -76,7 +76,13 @@ COMMON FLAGS
   --episodes N                      RL search episodes (default 30)
   --seed N                          RNG seed (default 0)
   --oom-penalty X                   reward for infeasible (OOM) placements during search (default 0)
-  --workers N                       threads for batched placement evaluation (default 0 = auto)
+  --workers N                       threads for every data-parallel path: batched placement
+                                    evaluation, the native policy kernels, rollout fan-out and
+                                    the router scatter (default 0 = one per core; results are
+                                    bit-identical at any worker count)
+  --fast-math                       opt-in reassociated 8-wide lane kernels in the native policy
+                                    (faster, deterministic, but only tolerance-equal to the
+                                    default bit-reproducible kernels)
   --artifacts DIR                   artifacts directory (default artifacts)
   --no-baseline                     disable the EMA reward baseline (paper-literal Eq. 14)
   --no-shape | --no-node-id | --no-structural   feature ablations
@@ -112,6 +118,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                     | "no-node-id"
                     | "no-structural"
                     | "exact-fractal"
+                    | "fast-math"
                     | "help"
                     | "eval-only"
                     | "stats"
@@ -187,7 +194,8 @@ impl Cli {
             testbed: self.str_flag("testbed", "cpu_gpu"),
             backend: self.str_flag("backend", "auto"),
             oom_penalty: self.f64_flag("oom-penalty", 0.0)?,
-            eval_workers: self.usize_flag("workers", 0)?,
+            workers: self.usize_flag("workers", 0)?,
+            fast_math: self.flags.contains_key("fast-math"),
             use_baseline: !self.flags.contains_key("no-baseline"),
             coarsen_budget: self
                 .usize_flag("coarsen-budget", crate::coarsen::DEFAULT_COARSEN_BUDGET)?
@@ -271,15 +279,23 @@ mod tests {
         let cfg = parse(&args).unwrap().config().unwrap();
         assert_eq!(cfg.testbed, "cpu_gpu_tight");
         assert_eq!(cfg.oom_penalty, 0.25);
-        assert_eq!(cfg.eval_workers, 4);
+        assert_eq!(cfg.workers, 4);
+        // (main() installs the flag as the process-global pool knob;
+        // config() stays side-effect-free so parallel tests don't race.)
         // Memory-capped multi-GPU ids resolve through the same flag.
         let c = parse(&argv("train --testbed multi_gpu:2:8")).unwrap();
         assert_eq!(c.config().unwrap().num_devices(), 3);
-        // Defaults: penalty 0, auto workers.
+        // Defaults: penalty 0, auto workers, exact kernels.
         let c = parse(&argv("table2")).unwrap();
         let cfg = c.config().unwrap();
         assert_eq!(cfg.oom_penalty, 0.0);
-        assert_eq!(cfg.eval_workers, 0);
+        assert_eq!(cfg.workers, 0);
+        assert!(!cfg.fast_math);
+        // --fast-math is a boolean flag.
+        let c = parse(&argv("train --fast-math --workers 2")).unwrap();
+        let cfg = c.config().unwrap();
+        assert!(cfg.fast_math);
+        assert_eq!(cfg.workers, 2);
         // Malformed values are errors, not silent defaults.
         assert!(parse(&argv("train --oom-penalty x")).unwrap().config().is_err());
     }

@@ -56,9 +56,18 @@ pub struct Config {
     /// it. Irrelevant on the unbounded default testbeds, where every
     /// placement is feasible.
     pub oom_penalty: f64,
-    /// Worker threads for batched placement evaluation
-    /// (`evaluate_many` / `measure_many`); 0 = one per available core.
-    pub eval_workers: usize,
+    /// Worker threads for every data-parallel path (`--workers`): the
+    /// batched placement evaluation (`evaluate_many` / `measure_many`),
+    /// the row-banded `runtime/nn` kernels, and the router's shard
+    /// scatter. 0 = one per available core. `main::run` installs the
+    /// value as the process-global `util::pool` knob at CLI startup
+    /// (`Cli::config` itself stays side-effect-free).
+    pub workers: usize,
+    /// Opt-in `--fast-math` lane kernels in the native policy:
+    /// reassociated 8-wide sums, deterministic but only tolerance-equal
+    /// to the default kernels (which stay bit-reproducible at any worker
+    /// count). Off by default.
+    pub fast_math: bool,
     /// Working-graph node budget for multi-level coarsening
     /// (`--coarsen-budget`): the co-location pass is re-applied (with a
     /// layer-matching fallback) until the policy-facing graph has at
@@ -89,7 +98,8 @@ impl Default for Config {
             use_baseline: true,
             temperature: 1.0,
             oom_penalty: 0.0,
-            eval_workers: 0,
+            workers: 0,
+            fast_math: false,
             coarsen_budget: crate::coarsen::DEFAULT_COARSEN_BUDGET,
             seed: 0,
             features: FeatureConfig::default(),
@@ -169,7 +179,8 @@ mod tests {
         assert_eq!(c.update_timestep, 20);
         assert_eq!(c.dropout_network, 0.2);
         assert_eq!(c.oom_penalty, 0.0);
-        assert_eq!(c.eval_workers, 0);
+        assert_eq!(c.workers, 0);
+        assert!(!c.fast_math);
         assert_eq!(c.coarsen_budget, crate::coarsen::DEFAULT_COARSEN_BUDGET);
     }
 

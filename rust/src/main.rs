@@ -42,6 +42,10 @@ fn main() {
 
 fn run(c: Cli) -> Result<()> {
     let cfg = c.config()?;
+    // One --workers flag steers every data-parallel path: install it as
+    // the process-global pool knob so the kernel pool, the batched cost
+    // model and the router scatter all resolve "auto" through it.
+    hsdag::util::pool::set_global_workers(cfg.workers);
     match c.command.as_str() {
         "table1" => println!("{}", table1::run().render()),
         "table2" => {
@@ -314,7 +318,7 @@ fn run(c: Cli) -> Result<()> {
         "serve" => {
             let (ckpt, run_cfg) = load_run_config(&c, &cfg)?;
             let addr = c.str_flag("addr", "127.0.0.1:7477");
-            let workers = c.usize_flag("serve-workers", 4)?.max(1);
+            let workers = serve_workers(&c, &cfg)?;
             let budget_ms = match c.flags.get("budget-ms") {
                 None => None,
                 Some(v) => {
@@ -389,7 +393,7 @@ fn run(c: Cli) -> Result<()> {
                 "route needs --shards addr,addr,... (the shard daemons to front)"
             );
             let addr = c.str_flag("addr", "127.0.0.1:7480");
-            let workers = c.usize_flag("serve-workers", 4)?.max(1);
+            let workers = serve_workers(&c, &cfg)?;
             let timeout = Duration::from_secs_f64(c.f64_flag("timeout-s", 10.0)?);
             let router = Arc::new(Router::new(shards.clone(), timeout)?);
             let mut server = Server::bind(Arc::clone(&router), &addr)?;
@@ -455,6 +459,7 @@ fn run(c: Cli) -> Result<()> {
                     budget_ms,
                     rollouts,
                     c.flags.contains_key("no-cache"),
+                    c.flags.contains_key("fast-math"),
                     c.flags.get("tenant").map(String::as_str),
                 )
             };
@@ -490,6 +495,15 @@ fn run(c: Cli) -> Result<()> {
         other => anyhow::bail!("unknown command '{other}'\n\n{}", cli::usage()),
     }
     Ok(())
+}
+
+/// Connection-handler thread count for serve / route: explicit
+/// `--serve-workers`, else the unified `--workers` knob (when nonzero),
+/// else 4 — so one flag sizes both the compute pool and the accept loop
+/// unless the operator splits them deliberately.
+fn serve_workers(c: &Cli, cfg: &Config) -> Result<usize> {
+    let default = if cfg.workers > 0 { cfg.workers } else { 4 };
+    Ok(c.usize_flag("serve-workers", default)?.max(1))
 }
 
 /// Write the agent's current learning state as an hsdag-params-v1

@@ -209,7 +209,7 @@ impl NativeBackend {
     pub fn new(env: &Env, cfg: &Config) -> Result<NativeBackend> {
         let mut rng = Rng::new(cfg.seed ^ 0x45DA6);
         let wg = env.working_graph();
-        let policy = NativePolicy::new(
+        let mut policy = NativePolicy::new(
             env.features.x.clone(),
             env.n_nodes,
             env.features.d,
@@ -219,6 +219,9 @@ impl NativeBackend {
             cfg.learning_rate,
             &mut rng,
         )?;
+        // `--fast-math` rides the config into the kernels; from_snapshot
+        // inherits it too since it constructs through here.
+        policy.set_fast_math(cfg.fast_math);
         Ok(NativeBackend { policy, hidden: cfg.hidden })
     }
 

@@ -124,7 +124,7 @@ impl Env {
 
     /// Build with explicit feature ablation switches (Table 3). The
     /// testbed is taken from `cfg.testbed` (registry id) and the cost
-    /// model honors `cfg.eval_workers` (`--workers`): batched calls
+    /// model honors `cfg.workers` (`--workers`): batched calls
     /// through `Env::cost` fan out over the configured pool width, while
     /// single-placement `evaluate` stays inline and bit-identical.
     pub fn with_features(bench: Benchmark, cfg: &Config, fcfg: FeatureConfig) -> Result<Env> {
@@ -145,7 +145,7 @@ impl Env {
         fcfg: FeatureConfig,
     ) -> Result<Env> {
         let mut env = Self::build(workload, fcfg, cfg.resolve_testbed()?, cfg.coarsen_budget)?;
-        env.set_cost_model(Box::new(ParallelCostModel::new(AnalyticCostModel, cfg.eval_workers)));
+        env.set_cost_model(Box::new(ParallelCostModel::new(AnalyticCostModel, cfg.workers)));
         Ok(env)
     }
 
@@ -342,6 +342,19 @@ impl Env {
     /// time, transfer volume, memory high-water, feasibility.
     pub fn report(&self, working_actions: &[usize]) -> Result<ExecReport> {
         Ok(self.cost.evaluate(&self.graph, &self.expand(working_actions)?, &self.testbed))
+    }
+
+    /// Batched [`Env::report`]: expand every working-graph placement,
+    /// then simulate them through one [`CostModel::evaluate_many`] call —
+    /// the configured [`ParallelCostModel`] spreads the batch over the
+    /// worker pool, and each report is element-wise identical to a serial
+    /// `report` call on the same placement.
+    pub fn report_many(&self, working_actions: &[&[usize]]) -> Result<Vec<ExecReport>> {
+        let placements = working_actions
+            .iter()
+            .map(|a| self.expand(a))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(self.cost.evaluate_many(&self.graph, &placements, &self.testbed))
     }
 
     /// Whether a placement fits every device's memory capacity. Always

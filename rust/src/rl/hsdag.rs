@@ -20,7 +20,7 @@ use super::search::{reinforce_coefficients, SearchResult, Tracker};
 use crate::config::Config;
 use crate::parsing::{parse, Partition};
 use crate::runtime::ParamStore;
-use crate::sim::measure_from;
+use crate::sim::{measure_from, request_rng};
 use crate::util::stats::Ema;
 use crate::util::Rng;
 
@@ -306,16 +306,26 @@ impl HsdagAgent {
     ///
     /// Nothing is buffered for training and the feedback state is left
     /// reset; `last_partition` reflects the greedy rollout.
+    ///
+    /// Every stochastic rollout draws its dropout and sampling decisions
+    /// from a counter-derived RNG stream ([`request_rng`] over one base
+    /// draw), so rollout `bi`'s trajectory is a pure function of (policy,
+    /// base, `bi`) — bit-identical no matter how many rollouts share the
+    /// batch or how many workers simulate it. The greedy rollout (bi = 0)
+    /// draws nothing.
     pub fn rollout_batch(&mut self, env: &Env, n_stochastic: usize) -> Result<Vec<StepOutcome>> {
         let b = 1 + n_stochastic;
         let v_pad = env.v_pad;
         let nd = env.n_actions();
         self.reset_episode();
         let out = self.backend.fwd(env, &self.fb)?;
+        let base = self.rng.next_u64();
 
         // Parse each rollout (rollout 0 greedy: raw scores; the rest with
-        // exploration edge dropout on a scratch copy).
+        // exploration edge dropout on a scratch copy, each from its own
+        // counter-derived stream).
         let mut parts = Vec::with_capacity(b);
+        let mut rngs: Vec<Rng> = (0..b).map(|bi| request_rng(base, bi)).collect();
         let mut cids_all = vec![0i32; b * v_pad];
         let mut gmask_all = vec![0f32; b * v_pad];
         let mut scores = out.scores.clone();
@@ -324,7 +334,7 @@ impl HsdagAgent {
                 scores.copy_from_slice(&out.scores);
                 if self.cfg.dropout_network > 0.0 {
                     for s in scores.iter_mut() {
-                        if self.rng.next_f64() < self.cfg.dropout_network {
+                        if rngs[bi].next_f64() < self.cfg.dropout_network {
                             *s = -1.0;
                         }
                     }
@@ -347,23 +357,34 @@ impl HsdagAgent {
             gmask_all.chunks_exact(v_pad).take(b).collect();
         let logits_all = self.backend.placer_many(env, &fwds, &cids_refs, &gmask_refs)?;
 
-        // Sample / argmax, expand and simulate per rollout. Serving ranks
-        // placements by deterministic makespan, so no measurement noise.
-        let mut outs = Vec::with_capacity(b);
+        // Sample / argmax and expand per rollout, then simulate the whole
+        // batch through one `Env::report_many` call — the env's
+        // `ParallelCostModel` spreads the B simulations across the worker
+        // pool. Serving ranks placements by deterministic makespan, so no
+        // measurement noise.
+        let mut actions_all = Vec::with_capacity(b);
         for (bi, part) in parts.iter().enumerate() {
             let logits = &logits_all[bi];
             let mut group_devices = vec![0usize; part.n_groups];
             for g in 0..part.n_groups {
                 let row = &logits[g * nd..(g + 1) * nd];
                 group_devices[g] = if bi > 0 {
-                    sample_softmax(row, self.cfg.temperature, &mut self.rng)
+                    sample_softmax(row, self.cfg.temperature, &mut rngs[bi])
                 } else {
                     argmax(row)
                 };
             }
             let actions: Vec<usize> =
                 part.cluster_of.iter().map(|&c| group_devices[c]).collect();
-            let report = env.report(&actions)?;
+            actions_all.push(actions);
+        }
+        let action_refs: Vec<&[usize]> = actions_all.iter().map(|a| a.as_slice()).collect();
+        let reports = env.report_many(&action_refs)?;
+
+        let mut outs = Vec::with_capacity(b);
+        for ((actions, report), part) in
+            actions_all.into_iter().zip(reports).zip(parts.iter())
+        {
             let feasible = report.feasible();
             let reward = env.reward_with_penalty(&report, report.makespan, self.cfg.oom_penalty);
             outs.push(StepOutcome {
@@ -441,11 +462,16 @@ impl HsdagAgent {
             }
             tracker.end_episode(ep);
         }
-        // Greedy final placement under the trained policy.
-        self.reset_episode();
-        let greedy = self.step(env, false)?;
-        let det = if greedy.feasible { greedy.det_latency } else { f64::INFINITY };
-        tracker.observe(&greedy.actions, det, greedy.reward);
+        // Final evaluation under the trained policy: the greedy placement
+        // plus `update_timestep` stochastic rollouts, simulated as one
+        // parallel batch (`rollout_batch` -> `Env::report_many` -> worker
+        // pool). Rollout 0 is bit-identical to the old single greedy
+        // step; the extra samples can only improve the tracked best.
+        let finals = self.rollout_batch(env, self.cfg.update_timestep)?;
+        for o in &finals {
+            let det = if o.feasible { o.det_latency } else { f64::INFINITY };
+            tracker.observe(&o.actions, det, o.reward);
+        }
 
         // Peak working set: replay buffer (incl. rewards), the evolving
         // feedback state, the dense adjacency (when materialized — see

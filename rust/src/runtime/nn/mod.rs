@@ -33,6 +33,28 @@
 //!   wrappers remain for tests and one-shot callers. `NativePolicy` feeds
 //!   them from a reusable [`policy::Scratch`] arena.
 //!
+//! ## Threading model (PR 9)
+//!
+//! The dense matmuls and the CSR aggregation fan their *output rows* out
+//! across the shared scoped worker pool (`crate::util::pool`) in
+//! contiguous disjoint bands. Each row's accumulation runs the serial
+//! loop verbatim, so results are **bit-identical at any worker count** —
+//! including the backward `A^T·B` product, which partitions its *output*
+//! rows (not the input batch) precisely so no cross-thread reduction
+//! ever reassociates a sum (see [`matmul_at_b_acc_workers`]). Every
+//! parallel kernel has a `*_workers` entry point (0 = the global
+//! `--workers` knob); the plain names pick serial vs pool automatically
+//! by a flop-count threshold, which is a pure throughput decision — both
+//! sides of the threshold produce the same bits.
+//!
+//! The opt-in `--fast-math` variants ([`matmul_into_fast`],
+//! [`matmul_a_bt_into_fast`], [`dot_fast`]) trade that guarantee for
+//! wider lanes: `chunks_exact(8)` panels whose partial sums combine as a
+//! balanced tree. Still deterministic for a fixed input — but a
+//! *different* (fixed) rounding order than the default kernels, so
+//! outputs agree to relative tolerance, not bitwise. Nothing reaches
+//! them unless the flag is set.
+//!
 //! Everything here is deterministic, row-major and unpadded: the native
 //! backend works at the *real* working-graph sizes, not the artifacts'
 //! static padded capacities.
@@ -41,50 +63,92 @@ pub mod policy;
 
 pub use policy::{NativeBatch, NativePolicy};
 
+use crate::util::pool;
+
 /// Reduction-dimension unroll of the dense matmul kernels. Chained adds
 /// keep per-element accumulation order identical to the scalar loop; the
 /// panel exists to amortize the `c` row read/write and give LLVM four
 /// independent multiply streams per SIMD lane.
 const K_UNROLL: usize = 4;
 
+/// Minimum multiply-accumulate count before a kernel's default entry
+/// point fans its output rows across the worker pool: below this the
+/// scoped spawn/join overhead (tens of microseconds) exceeds the
+/// arithmetic. Purely a throughput decision — the banded path is
+/// bit-identical to serial, so the threshold can never change a result.
+const PAR_MIN_WORK: usize = 1 << 17;
+
+/// Worker request for a kernel's default entry point: the pool (0 = the
+/// global `--workers` knob) above the work threshold, inline below it.
+fn par_workers(work: usize) -> usize {
+    if work >= PAR_MIN_WORK {
+        0
+    } else {
+        1
+    }
+}
+
 /// C[m,n] = A[m,k] @ B[k,n] (row-major), dense path: branch-free and
 /// autovectorization-friendly. Bit-identical to the scalar
 /// i→k→j accumulation (and to [`matmul_sparse_rows`]) for finite inputs.
+/// Large shapes fan output rows across the worker pool — same bits
+/// either way.
 pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    matmul_into_workers(a, b, m, k, n, c, par_workers(m * k * n));
+}
+
+/// [`matmul_into`] with an explicit worker count (0 = the global
+/// `--workers` knob). Output rows split into contiguous disjoint bands;
+/// each row runs the serial accumulation verbatim, so the result is
+/// bit-identical at any worker count.
+pub fn matmul_into_workers(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    workers: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    c.fill(0.0);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        let mut kk = 0;
-        while kk + K_UNROLL <= k {
-            let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
-            let b0 = &b[kk * n..(kk + 1) * n];
-            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
-            let b2 = &b[(kk + 2) * n..(kk + 3) * n];
-            let b3 = &b[(kk + 3) * n..(kk + 4) * n];
-            for (j, cj) in crow.iter_mut().enumerate() {
-                // Four separately-rounded adds, in ascending-k order —
-                // the exact accumulation order of the reference loop.
-                let mut acc = *cj;
-                acc += a0 * b0[j];
-                acc += a1 * b1[j];
-                acc += a2 * b2[j];
-                acc += a3 * b3[j];
-                *cj = acc;
-            }
-            kk += K_UNROLL;
-        }
-        for kt in kk..k {
-            let aik = arow[kt];
-            let brow = &b[kt * n..(kt + 1) * n];
-            for (cj, bj) in crow.iter_mut().zip(brow) {
-                *cj += aik * bj;
-            }
-        }
+    if n == 0 {
+        return;
     }
+    pool::for_each_row_band(c, m, n, workers, |row0, band| {
+        for (r, crow) in band.chunks_exact_mut(n).enumerate() {
+            let i = row0 + r;
+            let arow = &a[i * k..(i + 1) * k];
+            crow.fill(0.0);
+            let mut kk = 0;
+            while kk + K_UNROLL <= k {
+                let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                let b0 = &b[kk * n..(kk + 1) * n];
+                let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+                let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+                let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    // Four separately-rounded adds, in ascending-k order —
+                    // the exact accumulation order of the reference loop.
+                    let mut acc = *cj;
+                    acc += a0 * b0[j];
+                    acc += a1 * b1[j];
+                    acc += a2 * b2[j];
+                    acc += a3 * b3[j];
+                    *cj = acc;
+                }
+                kk += K_UNROLL;
+            }
+            for kt in kk..k {
+                let aik = arow[kt];
+                let brow = &b[kt * n..(kt + 1) * n];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+    });
 }
 
 /// Allocating wrapper around [`matmul_into`].
@@ -124,19 +188,50 @@ pub fn matmul_sparse_rows(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c:
 /// path: branch-free saxpy rows (activations after the input layer are
 /// not sparse enough to pay for a branch).
 pub fn matmul_at_b_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    matmul_at_b_acc_workers(a, b, m, k, n, c, par_workers(m * k * n));
+}
+
+/// [`matmul_at_b_acc`] with an explicit worker count (0 = the global
+/// `--workers` knob).
+///
+/// The accumulation-order argument: gradient accumulation can NOT be
+/// parallelized by splitting the `m` input rows and reducing per-thread
+/// partial sums afterwards — partials start from 0.0 while the serial
+/// kernel folds each term straight into the live accumulator, and f32
+/// addition is not associative, so any reduce-after scheme drifts from
+/// the reference bitwise. Instead the *output* rows `kk` are
+/// partitioned: each band walks all `m` input rows in the reference
+/// order and touches only its own rows of `c`, so every element sees the
+/// exact serial add sequence (ascending `i`, seeded with the incoming
+/// accumulator) — bit-identical at any worker count, paid for by each
+/// band streaming all of `a` and `b`.
+pub fn matmul_at_b_acc_workers(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    workers: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(c.len(), k * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (kk, &aik) in arow.iter().enumerate() {
-            let crow = &mut c[kk * n..(kk + 1) * n];
-            for (cj, bj) in crow.iter_mut().zip(brow) {
-                *cj += aik * bj;
+    if n == 0 {
+        return;
+    }
+    pool::for_each_row_band(c, k, n, workers, |k0, band| {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for (lk, crow) in band.chunks_exact_mut(n).enumerate() {
+                let aik = arow[k0 + lk];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += aik * bj;
+                }
             }
         }
-    }
+    });
 }
 
 /// [`matmul_at_b_acc`] with the sparsity skip, for genuinely sparse `a`
@@ -164,38 +259,60 @@ pub fn matmul_at_b_acc_sparse(a: &[f32], b: &[f32], m: usize, k: usize, n: usize
 /// C[m,k] = A[m,n] @ B[k,n]^T — the activation-gradient product
 /// (`dX = dY @ W^T` with row-major W). Four output columns per pass
 /// share one streaming read of the `a` row (independent dot chains);
-/// each dot keeps the reference left-to-right order.
+/// each dot keeps the reference left-to-right order. Large shapes fan
+/// output rows across the worker pool — same bits either way.
 pub fn matmul_a_bt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    matmul_a_bt_into_workers(a, b, m, n, k, c, par_workers(m * n * k));
+}
+
+/// [`matmul_a_bt_into`] with an explicit worker count (0 = the global
+/// `--workers` knob). Output rows split into contiguous disjoint bands;
+/// every dot keeps its serial reduction order, so the result is
+/// bit-identical at any worker count.
+pub fn matmul_a_bt_into_workers(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+    workers: usize,
+) {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * k);
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let crow = &mut c[i * k..(i + 1) * k];
-        let mut kk = 0;
-        while kk + K_UNROLL <= k {
-            let b0 = &b[kk * n..(kk + 1) * n];
-            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
-            let b2 = &b[(kk + 2) * n..(kk + 3) * n];
-            let b3 = &b[(kk + 3) * n..(kk + 4) * n];
-            let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-            for (j, &aj) in arow.iter().enumerate() {
-                s0 += aj * b0[j];
-                s1 += aj * b1[j];
-                s2 += aj * b2[j];
-                s3 += aj * b3[j];
-            }
-            crow[kk] = s0;
-            crow[kk + 1] = s1;
-            crow[kk + 2] = s2;
-            crow[kk + 3] = s3;
-            kk += K_UNROLL;
-        }
-        for kt in kk..k {
-            let brow = &b[kt * n..(kt + 1) * n];
-            crow[kt] = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
-        }
+    if k == 0 {
+        return;
     }
+    pool::for_each_row_band(c, m, k, workers, |row0, band| {
+        for (r, crow) in band.chunks_exact_mut(k).enumerate() {
+            let i = row0 + r;
+            let arow = &a[i * n..(i + 1) * n];
+            let mut kk = 0;
+            while kk + K_UNROLL <= k {
+                let b0 = &b[kk * n..(kk + 1) * n];
+                let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+                let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+                let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+                let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+                for (j, &aj) in arow.iter().enumerate() {
+                    s0 += aj * b0[j];
+                    s1 += aj * b1[j];
+                    s2 += aj * b2[j];
+                    s3 += aj * b3[j];
+                }
+                crow[kk] = s0;
+                crow[kk + 1] = s1;
+                crow[kk + 2] = s2;
+                crow[kk + 3] = s3;
+                kk += K_UNROLL;
+            }
+            for kt in kk..k {
+                let brow = &b[kt * n..(kt + 1) * n];
+                crow[kt] = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+            }
+        }
+    });
 }
 
 /// Allocating wrapper around [`matmul_a_bt_into`].
@@ -203,6 +320,110 @@ pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f3
     let mut c = vec![0f32; m * k];
     matmul_a_bt_into(a, b, m, n, k, &mut c);
     c
+}
+
+/// Fast-math lane width: panel partial sums combine as a balanced tree
+/// instead of one serial add chain.
+const FAST_LANES: usize = 8;
+
+/// C[m,n] = A[m,k] @ B[k,n], `--fast-math` variant: walks k in panels of
+/// [`FAST_LANES`] and folds each panel's eight products into the
+/// accumulator through a balanced tree sum. The shorter dependency
+/// chains let LLVM keep more multiply streams in flight than the
+/// chained-add default — at the price of a *different* (but fixed and
+/// deterministic) rounding order than [`matmul_into`], so outputs agree
+/// to relative tolerance, not bitwise. Only reachable behind the opt-in
+/// flag.
+pub fn matmul_into_fast(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    matmul_into_fast_workers(a, b, m, k, n, c, par_workers(m * k * n));
+}
+
+/// [`matmul_into_fast`] with an explicit worker count. Banding is the
+/// same disjoint-output-row scheme as the exact kernels, so for a fixed
+/// input the fast path is itself bit-identical at any worker count.
+pub fn matmul_into_fast_workers(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    workers: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if n == 0 {
+        return;
+    }
+    pool::for_each_row_band(c, m, n, workers, |row0, band| {
+        for (r, crow) in band.chunks_exact_mut(n).enumerate() {
+            let i = row0 + r;
+            let arow = &a[i * k..(i + 1) * k];
+            crow.fill(0.0);
+            let mut kk = 0;
+            while kk + FAST_LANES <= k {
+                let al = &arow[kk..kk + FAST_LANES];
+                let brows: [&[f32]; FAST_LANES] =
+                    std::array::from_fn(|l| &b[(kk + l) * n..(kk + l + 1) * n]);
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    let p: [f32; FAST_LANES] = std::array::from_fn(|l| al[l] * brows[l][j]);
+                    *cj += ((p[0] + p[1]) + (p[2] + p[3])) + ((p[4] + p[5]) + (p[6] + p[7]));
+                }
+                kk += FAST_LANES;
+            }
+            for kt in kk..k {
+                let aik = arow[kt];
+                let brow = &b[kt * n..(kt + 1) * n];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+    });
+}
+
+/// Reassociated 8-lane dot product — the `--fast-math` reduction: eight
+/// independent accumulators over `chunks_exact(8)` panels, combined as a
+/// balanced tree, serial tail. Deterministic, but a different rounding
+/// order than the left-to-right reference sum.
+pub fn dot_fast(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let xc = x.chunks_exact(FAST_LANES);
+    let yc = y.chunks_exact(FAST_LANES);
+    let (xr, yr) = (xc.remainder(), yc.remainder());
+    let mut acc = [0f32; FAST_LANES];
+    for (xs, ys) in xc.zip(yc) {
+        for l in 0..FAST_LANES {
+            acc[l] += xs[l] * ys[l];
+        }
+    }
+    let mut tail = 0f32;
+    for (xv, yv) in xr.iter().zip(yr) {
+        tail += xv * yv;
+    }
+    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+}
+
+/// C[m,k] = A[m,n] @ B[k,n]^T, `--fast-math` variant: every output
+/// element is a [`dot_fast`] lane reduction. Same banded row ownership
+/// as the exact kernel; tolerance-equal (not bitwise) to
+/// [`matmul_a_bt_into`].
+pub fn matmul_a_bt_into_fast(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    if k == 0 {
+        return;
+    }
+    pool::for_each_row_band(c, m, k, par_workers(m * n * k), |row0, band| {
+        for (r, crow) in band.chunks_exact_mut(k).enumerate() {
+            let arow = &a[(row0 + r) * n..(row0 + r + 1) * n];
+            for (kk, cj) in crow.iter_mut().enumerate() {
+                *cj = dot_fast(arow, &b[kk * n..(kk + 1) * n]);
+            }
+        }
+    });
 }
 
 /// x[r, :] += bias for every row.
@@ -329,48 +550,82 @@ impl Csr {
 
 /// out = Â @ x over the CSR operator (overwrites `out`). One pass over
 /// the edge list; each output row accumulates in cache instead of
-/// scattering writes across the matrix.
+/// scattering writes across the matrix. Large operators fan output rows
+/// across the worker pool — same bits either way (CSR rows are
+/// independent gathers).
 pub fn aggregate_into(csr: &Csr, x: &[f32], cols: usize, out: &mut [f32]) {
+    aggregate_into_workers(csr, x, cols, out, par_workers(csr.nnz() * cols));
+}
+
+/// [`aggregate_into`] with an explicit worker count (0 = the global
+/// `--workers` knob). Each output row reads (never writes) the shared
+/// `x`, so banding is race-free and bit-identical at any worker count.
+pub fn aggregate_into_workers(csr: &Csr, x: &[f32], cols: usize, out: &mut [f32], workers: usize) {
     debug_assert_eq!(x.len(), csr.rows * cols);
     debug_assert_eq!(out.len(), csr.rows * cols);
-    for i in 0..csr.rows {
-        let dst = &mut out[i * cols..(i + 1) * cols];
-        dst.fill(0.0);
-        for e in csr.row_ptr[i] as usize..csr.row_ptr[i + 1] as usize {
-            let w = csr.w[e];
-            let src = &x[csr.col[e] as usize * cols..(csr.col[e] as usize + 1) * cols];
-            for (o, s) in dst.iter_mut().zip(src) {
-                *o += w * s;
+    if cols == 0 {
+        return;
+    }
+    pool::for_each_row_band(out, csr.rows, cols, workers, |row0, band| {
+        for (r, dst) in band.chunks_exact_mut(cols).enumerate() {
+            let i = row0 + r;
+            dst.fill(0.0);
+            for e in csr.row_ptr[i] as usize..csr.row_ptr[i + 1] as usize {
+                let w = csr.w[e];
+                let src = &x[csr.col[e] as usize * cols..(csr.col[e] as usize + 1) * cols];
+                for (o, s) in dst.iter_mut().zip(src) {
+                    *o += w * s;
+                }
             }
         }
-    }
+    });
 }
 
 /// The fused GCN layer pass: out = relu(Â @ x + bias), walking the edge
 /// list once and finishing each output row (bias add + ReLU) while it is
 /// still hot, instead of three separate sweeps over `[n, h]`.
-/// Bit-identical to `aggregate` → `add_bias` → `relu`.
+/// Bit-identical to `aggregate` → `add_bias` → `relu`. Large operators
+/// fan output rows across the worker pool — same bits either way.
 pub fn aggregate_bias_relu_into(csr: &Csr, x: &[f32], bias: &[f32], cols: usize, out: &mut [f32]) {
+    aggregate_bias_relu_into_workers(csr, x, bias, cols, out, par_workers(csr.nnz() * cols));
+}
+
+/// [`aggregate_bias_relu_into`] with an explicit worker count (0 = the
+/// global `--workers` knob). Same disjoint-output-row scheme as
+/// [`aggregate_into_workers`]: bit-identical at any worker count.
+pub fn aggregate_bias_relu_into_workers(
+    csr: &Csr,
+    x: &[f32],
+    bias: &[f32],
+    cols: usize,
+    out: &mut [f32],
+    workers: usize,
+) {
     debug_assert_eq!(bias.len(), cols);
     debug_assert_eq!(x.len(), csr.rows * cols);
     debug_assert_eq!(out.len(), csr.rows * cols);
-    for i in 0..csr.rows {
-        let dst = &mut out[i * cols..(i + 1) * cols];
-        dst.fill(0.0);
-        for e in csr.row_ptr[i] as usize..csr.row_ptr[i + 1] as usize {
-            let w = csr.w[e];
-            let src = &x[csr.col[e] as usize * cols..(csr.col[e] as usize + 1) * cols];
-            for (o, s) in dst.iter_mut().zip(src) {
-                *o += w * s;
-            }
-        }
-        for (o, bi) in dst.iter_mut().zip(bias) {
-            *o += bi;
-            if *o < 0.0 {
-                *o = 0.0;
-            }
-        }
+    if cols == 0 {
+        return;
     }
+    pool::for_each_row_band(out, csr.rows, cols, workers, |row0, band| {
+        for (r, dst) in band.chunks_exact_mut(cols).enumerate() {
+            let i = row0 + r;
+            dst.fill(0.0);
+            for e in csr.row_ptr[i] as usize..csr.row_ptr[i + 1] as usize {
+                let w = csr.w[e];
+                let src = &x[csr.col[e] as usize * cols..(csr.col[e] as usize + 1) * cols];
+                for (o, s) in dst.iter_mut().zip(src) {
+                    *o += w * s;
+                }
+            }
+            for (o, bi) in dst.iter_mut().zip(bias) {
+                *o += bi;
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    });
 }
 
 /// Build the symmetric-normalized adjacency with self-loops (Eq. 6) as a
@@ -615,6 +870,132 @@ mod tests {
                 let got_bt = matmul_a_bt(&bb, &seed, m, n, k);
                 assert_eq!(got_bt, want_bt, "a_bt {m}x{n}x{k}");
             }
+        }
+    }
+
+    #[test]
+    fn worker_counts_are_bit_identical() {
+        // The tentpole guarantee: every parallel kernel entry point at
+        // workers ∈ {0 (auto), 2, 4} must reproduce workers=1 bitwise —
+        // banding moves rows between threads, never terms within a sum.
+        let mut rng = Rng::new(1234);
+        for &(m, k, n) in
+            &[(1usize, 1usize, 1usize), (5, 7, 3), (16, 17, 19), (33, 46, 32), (67, 31, 29)]
+        {
+            let a = random_mat(&mut rng, m * k, 0.2);
+            let b = random_mat(&mut rng, k * n, 0.0);
+            let mut want = vec![0f32; m * n];
+            matmul_into_workers(&a, &b, m, k, n, &mut want, 1);
+            // a2 doubles as the [m,n] operand of A^T·B and A·B^T below.
+            let a2 = random_mat(&mut rng, m * n, 0.0);
+            let b2 = random_mat(&mut rng, k * n, 0.0);
+            let mut want_bt = vec![0f32; m * k];
+            matmul_a_bt_into_workers(&a2, &b2, m, n, k, &mut want_bt, 1);
+            let seed = random_mat(&mut rng, k * n, 0.0);
+            let mut want_acc = seed.clone();
+            matmul_at_b_acc_workers(&a, &a2, m, k, n, &mut want_acc, 1);
+            for workers in [0usize, 2, 4] {
+                let mut got = vec![9f32; m * n];
+                matmul_into_workers(&a, &b, m, k, n, &mut got, workers);
+                assert_eq!(got, want, "matmul {m}x{k}x{n} workers={workers}");
+                let mut got_bt = vec![9f32; m * k];
+                matmul_a_bt_into_workers(&a2, &b2, m, n, k, &mut got_bt, workers);
+                assert_eq!(got_bt, want_bt, "a_bt {m}x{n}x{k} workers={workers}");
+                // The documented partition-by-output-rows scheme must
+                // preserve the serial order even seeded mid-accumulation.
+                let mut got_acc = seed.clone();
+                matmul_at_b_acc_workers(&a, &a2, m, k, n, &mut got_acc, workers);
+                assert_eq!(got_acc, want_acc, "at_b_acc {m}x{k}x{n} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_aggregation_bit_identical_across_worker_counts() {
+        use crate::graph::CompGraph;
+        let mut rng = Rng::new(4321);
+        let g = CompGraph::random(&mut rng, 57, 23);
+        let coo = normalized_adjacency_coo(g.n(), &g.edges);
+        let csr = Csr::from_coo(g.n(), &coo);
+        for cols in [1usize, 5, 16] {
+            let x = random_mat(&mut rng, g.n() * cols, 0.1);
+            let bias = random_mat(&mut rng, cols, 0.0);
+            let mut want = vec![0f32; g.n() * cols];
+            aggregate_into_workers(&csr, &x, cols, &mut want, 1);
+            let mut want_fused = vec![0f32; g.n() * cols];
+            aggregate_bias_relu_into_workers(&csr, &x, &bias, cols, &mut want_fused, 1);
+            for workers in [0usize, 2, 4] {
+                let mut got = vec![7f32; g.n() * cols];
+                aggregate_into_workers(&csr, &x, cols, &mut got, workers);
+                assert_eq!(got, want, "aggregate cols={cols} workers={workers}");
+                let mut gotf = vec![7f32; g.n() * cols];
+                aggregate_bias_relu_into_workers(&csr, &x, &bias, cols, &mut gotf, workers);
+                assert_eq!(gotf, want_fused, "fused cols={cols} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_entry_points_route_large_shapes_through_the_pool() {
+        // Above the work threshold the plain names take the banded path;
+        // the auto-dispatch relies on that path matching serial bitwise.
+        let mut rng = Rng::new(888);
+        let (m, k, n) = (128usize, 64usize, 64usize);
+        assert!(m * k * n >= PAR_MIN_WORK, "shape must clear the threshold");
+        let a = random_mat(&mut rng, m * k, 0.0);
+        let b = random_mat(&mut rng, k * n, 0.0);
+        let mut want = vec![0f32; m * n];
+        matmul_into_workers(&a, &b, m, k, n, &mut want, 1);
+        let mut got = vec![0f32; m * n];
+        matmul_into(&a, &b, m, k, n, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fast_math_agrees_to_tolerance_and_is_worker_invariant() {
+        // Fast math reassociates sums, so it only promises tolerance
+        // against the exact kernels — but it is still a *fixed* order:
+        // within the fast path, worker counts must agree bitwise.
+        let mut rng = Rng::new(2468);
+        for &(m, k, n) in &[(3usize, 8usize, 5usize), (7, 13, 11), (16, 32, 19), (33, 46, 32)] {
+            let a = random_mat(&mut rng, m * k, 0.0);
+            let b = random_mat(&mut rng, k * n, 0.0);
+            let exact = matmul(&a, &b, m, k, n);
+            let mut fast = vec![0f32; m * n];
+            matmul_into_fast(&a, &b, m, k, n, &mut fast);
+            for (i, (&e, &f)) in exact.iter().zip(&fast).enumerate() {
+                let tol = 1e-4 * (1.0 + e.abs());
+                assert!((e - f).abs() <= tol, "matmul_fast {m}x{k}x{n} [{i}]: {e} vs {f}");
+            }
+            for workers in [2usize, 4] {
+                let mut fw = vec![0f32; m * n];
+                matmul_into_fast_workers(&a, &b, m, k, n, &mut fw, workers);
+                assert_eq!(fw, fast, "fast path must be worker-invariant (w={workers})");
+            }
+            // A·B^T fast vs exact (a2 [m,n], b2 [k,n]).
+            let a2 = random_mat(&mut rng, m * n, 0.0);
+            let b2 = random_mat(&mut rng, k * n, 0.0);
+            let exact_bt = matmul_a_bt(&a2, &b2, m, n, k);
+            let mut fast_bt = vec![0f32; m * k];
+            matmul_a_bt_into_fast(&a2, &b2, m, n, k, &mut fast_bt);
+            for (i, (&e, &f)) in exact_bt.iter().zip(&fast_bt).enumerate() {
+                let tol = 1e-4 * (1.0 + e.abs());
+                assert!((e - f).abs() <= tol, "a_bt_fast {m}x{n}x{k} [{i}]: {e} vs {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_fast_matches_reference_sum_to_tolerance() {
+        let mut rng = Rng::new(1357);
+        for len in [0usize, 1, 7, 8, 9, 16, 37, 200] {
+            let x = random_mat(&mut rng, len, 0.0);
+            let y = random_mat(&mut rng, len, 0.0);
+            let want: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let got = dot_fast(&x, &y);
+            assert!((want - got).abs() <= 1e-4 * (1.0 + want.abs()), "len={len}: {want} vs {got}");
+            // Deterministic: same inputs, same bits, every call.
+            assert_eq!(got.to_bits(), dot_fast(&x, &y).to_bits());
         }
     }
 

@@ -35,12 +35,37 @@
 use anyhow::{ensure, Result};
 
 use super::{
-    add_bias, aggregate_bias_relu_into, aggregate_into, colsum_acc, log_softmax_into,
-    matmul_a_bt_into, matmul_at_b_acc, matmul_at_b_acc_sparse, matmul_into, matmul_sparse_rows,
-    normalized_adjacency_csr, relu, relu_bwd, segment_mean_into, sigmoid, Csr,
+    add_bias, aggregate_bias_relu_into, aggregate_into, colsum_acc, dot_fast, log_softmax_into,
+    matmul_a_bt_into, matmul_a_bt_into_fast, matmul_at_b_acc, matmul_at_b_acc_sparse, matmul_into,
+    matmul_into_fast, matmul_sparse_rows, normalized_adjacency_csr, relu, relu_bwd,
+    segment_mean_into, sigmoid, Csr,
 };
 use crate::runtime::params::ParamStore;
 use crate::util::Rng;
+
+/// Dispatch between the exact and `--fast-math` matmul. The forward
+/// stacks and the backward `dX = dY @ W^T` products switch together, so
+/// a fast-math run is fast end to end; gradient *accumulation*
+/// ([`matmul_at_b_acc`]) always stays exact — its saxpy rows have no
+/// long dot chain to reassociate, so there is nothing to win. The
+/// sparse one-hot input kernels likewise never switch (the skip beats
+/// lanes on X⁰).
+fn mm_into(fast: bool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    if fast {
+        matmul_into_fast(a, b, m, k, n, c);
+    } else {
+        matmul_into(a, b, m, k, n, c);
+    }
+}
+
+/// [`mm_into`]'s twin for the A·Bᵀ activation-gradient product.
+fn mm_a_bt_into(fast: bool, a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    if fast {
+        matmul_a_bt_into_fast(a, b, m, n, k, c);
+    } else {
+        matmul_a_bt_into(a, b, m, n, k, c);
+    }
+}
 
 /// GPN partition log-likelihood weight in the REINFORCE objective
 /// (`shapes.PARTITION_LOSS_WEIGHT`).
@@ -176,6 +201,13 @@ pub struct NativePolicy {
     /// Train-forward dropout probability (0 disables; tests use 0 for
     /// finite-difference gradient checks).
     pub train_dropout: f64,
+    /// Opt-in `--fast-math` lane kernels (reassociated 8-wide sums in
+    /// the matmuls and the edge-scorer dot). Deterministic, but only
+    /// tolerance-equal to the default kernels. Private behind
+    /// [`Self::set_fast_math`] so toggling can invalidate the memoized
+    /// input MLP (which was computed with the previously-selected
+    /// kernels).
+    fast_math: bool,
     scratch: Scratch,
 }
 
@@ -213,8 +245,24 @@ impl NativePolicy {
             csr,
             lr,
             train_dropout: TRAIN_DROPOUT,
+            fast_math: false,
             scratch: Scratch::default(),
         })
+    }
+
+    /// Toggle the `--fast-math` lane kernels. Bumps the version counter
+    /// so the memoized input-MLP activations are recomputed with the
+    /// newly-selected kernels instead of leaking the other mode's bits.
+    pub fn set_fast_math(&mut self, on: bool) {
+        if self.fast_math != on {
+            self.version = self.version.wrapping_add(1);
+            self.fast_math = on;
+        }
+    }
+
+    /// Whether the `--fast-math` lane kernels are active.
+    pub fn fast_math(&self) -> bool {
+        self.fast_math
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -252,6 +300,7 @@ impl NativePolicy {
     /// (train path) is only meaningful for B = 1.
     fn encode_stack(&mut self, fbs: &[&[f32]], mut drop_rng: Option<&mut Rng>) {
         let (n, d, h) = (self.n, self.d, self.h);
+        let fast = self.fast_math;
         let b = fbs.len();
         debug_assert!(drop_rng.is_none() || b == 1, "dropout is a train-path (B=1) feature");
         // Memoized input MLP: h0 = relu(X⁰ W + b), h1 = relu(h0 W + b).
@@ -268,7 +317,8 @@ impl NativePolicy {
             );
             add_bias(&mut s.h0[..n * h], ps.params[TRANS_B0].as_f32(), n, h);
             relu(&mut s.h0[..n * h]);
-            matmul_into(
+            mm_into(
+                fast,
                 &s.h0[..n * h],
                 ps.params[TRANS_W1].as_f32(),
                 n,
@@ -308,7 +358,7 @@ impl NativePolicy {
             }
         }
         // GCN layer 1: stacked weight pass, per-block fused aggregation.
-        matmul_into(f, ps.params[GCN_W0].as_f32(), b * n, h, h, take(&mut s.g, b * n * h));
+        mm_into(fast, f, ps.params[GCN_W0].as_f32(), b * n, h, h, take(&mut s.g, b * n * h));
         let z1 = take(&mut s.z1, b * n * h);
         for bi in 0..b {
             aggregate_bias_relu_into(
@@ -320,7 +370,7 @@ impl NativePolicy {
             );
         }
         // GCN layer 2.
-        matmul_into(z1, ps.params[GCN_W1].as_f32(), b * n, h, h, &mut s.g[..b * n * h]);
+        mm_into(fast, z1, ps.params[GCN_W1].as_f32(), b * n, h, h, &mut s.g[..b * n * h]);
         let z = take(&mut s.z, b * n * h);
         for bi in 0..b {
             aggregate_bias_relu_into(
@@ -337,6 +387,7 @@ impl NativePolicy {
     /// `scratch.{pr, eh, scores}` (`[B·e, h]` / `[B·e]`).
     fn edge_fwd_stack(&mut self, b: usize) {
         let (e, h, n) = (self.edges.len(), self.h, self.n);
+        let fast = self.fast_math;
         let s = &mut self.scratch;
         let ps = &self.params;
         let pr = take(&mut s.pr, b * e * h);
@@ -351,14 +402,18 @@ impl NativePolicy {
                 }
             }
         }
-        matmul_into(pr, ps.params[EDGE_W0].as_f32(), b * e, h, h, take(&mut s.eh, b * e * h));
+        mm_into(fast, pr, ps.params[EDGE_W0].as_f32(), b * e, h, h, take(&mut s.eh, b * e * h));
         add_bias(&mut s.eh[..b * e * h], ps.params[EDGE_B0].as_f32(), b * e, h);
         relu(&mut s.eh[..b * e * h]);
         let w1 = ps.params[EDGE_W1].as_f32(); // [h, 1]
         let b1 = ps.params[EDGE_B1].as_f32()[0];
         let scores = take(&mut s.scores, b * e);
         for (row, out) in s.eh.chunks_exact(h).take(b * e).zip(scores.iter_mut()) {
-            let logit: f32 = row.iter().zip(w1).map(|(a, w)| a * w).sum::<f32>() + b1;
+            let logit: f32 = if fast {
+                dot_fast(row, w1) + b1
+            } else {
+                row.iter().zip(w1).map(|(a, w)| a * w).sum::<f32>() + b1
+            };
             *out = sigmoid(logit);
         }
     }
@@ -401,6 +456,7 @@ impl NativePolicy {
     /// per-rollout logits lengths (`slots_b · nd` each).
     fn placer_fwd_stack(&mut self, zs: &[&[f32]], cids: &[&[i32]]) -> Vec<usize> {
         let (n, h, nd) = (self.n, self.h, self.nd);
+        let fast = self.fast_math;
         let b = zs.len();
         let slots_per: Vec<usize> = cids
             .iter()
@@ -425,10 +481,19 @@ impl NativePolicy {
             );
             off += sl;
         }
-        matmul_into(pooled, ps.params[PLACE_W0].as_f32(), total, h, h, take(&mut s.ph, total * h));
+        mm_into(
+            fast,
+            pooled,
+            ps.params[PLACE_W0].as_f32(),
+            total,
+            h,
+            h,
+            take(&mut s.ph, total * h),
+        );
         add_bias(&mut s.ph[..total * h], ps.params[PLACE_B0].as_f32(), total, h);
         relu(&mut s.ph[..total * h]);
-        matmul_into(
+        mm_into(
+            fast,
             &s.ph[..total * h],
             ps.params[PLACE_W1].as_f32(),
             total,
@@ -503,6 +568,7 @@ impl NativePolicy {
     /// intermediates run through [`Scratch`].
     pub fn loss_and_grads(&mut self, batch: &NativeBatch, with_dropout: bool) -> (f32, Vec<Vec<f32>>) {
         let (n, d, h, nd) = (self.n, self.d, self.h, self.nd);
+        let fast = self.fast_math;
         let e = self.edges.len();
         debug_assert!(batch.v_stride >= n && batch.e_stride >= e);
         let mut grads: Vec<Vec<f32>> =
@@ -544,7 +610,8 @@ impl NativePolicy {
                     take(&mut s.pooled, slots * h_),
                     take(&mut s.counts, slots),
                 );
-                matmul_into(
+                mm_into(
+                    fast,
                     &s.pooled[..slots * h_],
                     ps.params[PLACE_W0].as_f32(),
                     slots,
@@ -554,7 +621,8 @@ impl NativePolicy {
                 );
                 add_bias(&mut s.ph[..slots * h_], ps.params[PLACE_B0].as_f32(), slots, h_);
                 relu(&mut s.ph[..slots * h_]);
-                matmul_into(
+                mm_into(
+                    fast,
                     &s.ph[..slots * h_],
                     ps.params[PLACE_W1].as_f32(),
                     slots,
@@ -620,7 +688,8 @@ impl NativePolicy {
                 );
                 colsum_acc(&s.dlogits[..slots * nd_], slots, nd_, &mut grads[PLACE_B1]);
                 let dph = take(&mut s.dph, slots * h_);
-                matmul_a_bt_into(
+                mm_a_bt_into(
+                    fast,
                     &s.dlogits[..slots * nd_],
                     ps.params[PLACE_W1].as_f32(),
                     slots,
@@ -639,7 +708,8 @@ impl NativePolicy {
                 );
                 colsum_acc(dph, slots, h_, &mut grads[PLACE_B0]);
                 let dpooled = take(&mut s.dpooled, slots * h_);
-                matmul_a_bt_into(
+                mm_a_bt_into(
+                    fast,
                     &s.dph[..slots * h_],
                     ps.params[PLACE_W0].as_f32(),
                     slots,
@@ -677,7 +747,8 @@ impl NativePolicy {
                 matmul_at_b_acc(&s.pr[..e * h_], deh, e, h_, h_, &mut grads[EDGE_W0]);
                 colsum_acc(deh, e, h_, &mut grads[EDGE_B0]);
                 let dpr = take(&mut s.dpr, e * h_);
-                matmul_a_bt_into(
+                mm_a_bt_into(
+                    fast,
                     &s.deh[..e * h_],
                     ps.params[EDGE_W0].as_f32(),
                     e,
@@ -702,13 +773,14 @@ impl NativePolicy {
                 aggregate_into(&self.csr, &s.dz[..n_ * h_], h_, dg); // Â symmetric
                 matmul_at_b_acc(&s.z1[..n_ * h_], dg, n_, h_, h_, &mut grads[GCN_W1]);
                 let dq = take(&mut s.dq, n_ * h_);
-                matmul_a_bt_into(&s.dg[..n_ * h_], ps.params[GCN_W1].as_f32(), n_, h_, h_, dq);
+                mm_a_bt_into(fast, &s.dg[..n_ * h_], ps.params[GCN_W1].as_f32(), n_, h_, h_, dq);
                 relu_bwd(dq, &s.z1[..n_ * h_]);
                 colsum_acc(dq, n_, h_, &mut grads[GCN_B0]);
                 aggregate_into(&self.csr, &s.dq[..n_ * h_], h_, &mut s.dg[..n_ * h_]);
                 matmul_at_b_acc(&s.f[..n_ * h_], &s.dg[..n_ * h_], n_, h_, h_, &mut grads[GCN_W0]);
                 // df reuses dz (the encoder's dz is fully consumed above).
-                matmul_a_bt_into(
+                mm_a_bt_into(
+                    fast,
                     &s.dg[..n_ * h_],
                     ps.params[GCN_W0].as_f32(),
                     n_,
@@ -732,7 +804,8 @@ impl NativePolicy {
                 );
                 colsum_acc(&s.dz[..n_ * h_], n_, h_, &mut grads[TRANS_B1]);
                 let dh0 = take(&mut s.dh0, n_ * h_);
-                matmul_a_bt_into(
+                mm_a_bt_into(
+                    fast,
                     &s.dz[..n_ * h_],
                     ps.params[TRANS_W1].as_f32(),
                     n_,
@@ -765,6 +838,19 @@ mod tests {
         let x0: Vec<f32> = (0..n * d).map(|_| rng.next_f32() - 0.5).collect();
         let mut p = NativePolicy::new(x0, n, d, edges, 4, 2, 1e-2, &mut rng).unwrap();
         p.train_dropout = 0.0; // deterministic forwards for the checks
+        p
+    }
+
+    /// The tiny graph at h = 16 — at least two fast-math lanes wide, so
+    /// the reassociated panels actually run (the h = 4 policy above only
+    /// ever hits the serial tail, where fast == exact bitwise).
+    fn lane_policy(seed: u64) -> NativePolicy {
+        let (n, edges) = tiny();
+        let d = 3;
+        let mut rng = Rng::new(seed);
+        let x0: Vec<f32> = (0..n * d).map(|_| rng.next_f32() - 0.5).collect();
+        let mut p = NativePolicy::new(x0, n, d, edges, 16, 2, 1e-2, &mut rng).unwrap();
+        p.train_dropout = 0.0;
         p
     }
 
@@ -912,6 +998,72 @@ mod tests {
         a.set_params(b.params().clone());
         let (za2, _) = a.fwd(&fb);
         assert_eq!(za2, zb, "stale memoized input MLP after set_params");
+    }
+
+    #[test]
+    fn fast_math_policy_agrees_to_tolerance() {
+        let mut exact = lane_policy(31);
+        let mut fast = lane_policy(31);
+        fast.set_fast_math(true);
+        assert!(fast.fast_math() && !exact.fast_math());
+        let (n, h) = (6usize, 16usize);
+        let mut rng = Rng::new(77);
+        let fb: Vec<f32> = (0..n * h).map(|_| rng.next_f32() * 0.2).collect();
+        let (ze, se) = exact.fwd(&fb);
+        let (zf, sf) = fast.fwd(&fb);
+        for (i, (a, b)) in ze.iter().zip(&zf).enumerate() {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()), "z[{i}]: {a} vs {b}");
+        }
+        for (i, (a, b)) in se.iter().zip(&sf).enumerate() {
+            assert!((a - b).abs() <= 1e-4, "score[{i}]: {a} vs {b}");
+        }
+        // Placer head through the lane kernels too.
+        let cids = [0, 0, 1, 1, 2, 2];
+        let gmask = [1.0f32, 1.0, 1.0, 0.0, 0.0, 0.0];
+        let le = exact.placer(&ze, &cids, &gmask);
+        let lf = fast.placer(&zf, &cids, &gmask);
+        for (i, (a, b)) in le.iter().zip(&lf).enumerate() {
+            assert!((a - b).abs() <= 1e-3 * (1.0 + a.abs()), "logit[{i}]: {a} vs {b}");
+        }
+        // Gradients: fast-math training is tolerance-equal, not bitwise.
+        let bufs = tiny_bufs();
+        let fb16: Vec<f32> = (0..2 * 8 * h).map(|_| rng.next_f32() * 0.1).collect();
+        let batch = NativeBatch {
+            t: 2,
+            v_stride: 8,
+            e_stride: 7,
+            fb: &fb16,
+            cids: &bufs.cids,
+            actions: &bufs.actions,
+            gmask: &bufs.gmask,
+            retained: &bufs.retained,
+            coeff: &bufs.coeff,
+            key: [7, 9],
+        };
+        let (loss_e, grads_e) = exact.loss_and_grads(&batch, false);
+        let (loss_f, grads_f) = fast.loss_and_grads(&batch, false);
+        assert!((loss_e - loss_f).abs() <= 1e-3 * (1.0 + loss_e.abs()), "{loss_e} vs {loss_f}");
+        for (pi, (ge, gf)) in grads_e.iter().zip(&grads_f).enumerate() {
+            for (i, (a, b)) in ge.iter().zip(gf).enumerate() {
+                assert!((a - b).abs() <= 1e-3 * (1.0 + a.abs()), "grad[{pi}][{i}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_math_toggle_invalidates_memoized_input_mlp() {
+        // h0/h1 memoized under the exact kernels must not leak into a
+        // fast-math forward: the toggle bumps the version counter.
+        let mut p = lane_policy(32);
+        let fb = vec![0f32; 6 * 16];
+        let _ = p.fwd(&fb); // primes the exact-kernel memo
+        p.set_fast_math(true);
+        let (zp, sp) = p.fwd(&fb);
+        let mut q = lane_policy(32);
+        q.set_fast_math(true);
+        let (zq, sq) = q.fwd(&fb);
+        assert_eq!(zp, zq, "stale exact-kernel memo leaked into the fast-math forward");
+        assert_eq!(sp, sq);
     }
 
     #[test]

@@ -20,8 +20,10 @@
 //! `id` (any JSON value, echoed verbatim into the response), `budget_ms`
 //! (per-request policy-inference budget overriding the server default),
 //! `rollouts` (stochastic policy rollouts on top of the greedy one),
-//! `no_cache` (bypass the placement cache in both directions) and
-//! `tenant` (a caller label counted per tenant in `stats`).
+//! `no_cache` (bypass the placement cache in both directions),
+//! `fast_math` (run the policy with the opt-in lane kernels; such
+//! answers never touch the cache) and `tenant` (a caller label counted
+//! per tenant in `stats`).
 //!
 //! `ctrl: reload` hot-swaps the served checkpoint with zero downtime
 //! (`checkpoint` optional — it defaults to the path the daemon was
@@ -79,6 +81,10 @@ pub struct PlaceRequest {
     pub budget_ms: Option<f64>,
     pub rollouts: Option<usize>,
     pub no_cache: bool,
+    /// Run the policy with the opt-in fast-math lane kernels
+    /// (tolerance-equal, not bit-equal, to the default kernels).
+    /// Fast-math answers never enter or leave the placement cache.
+    pub fast_math: bool,
     /// Caller label for the per-tenant request counters in `stats`.
     pub tenant: Option<String>,
 }
@@ -142,6 +148,12 @@ pub fn parse_request(line: &str) -> Result<Request> {
                     v.as_bool().ok_or_else(|| anyhow!("\"no_cache\" must be a boolean"))?
                 }
             };
+            let fast_math = match doc.get("fast_math") {
+                None => false,
+                Some(v) => {
+                    v.as_bool().ok_or_else(|| anyhow!("\"fast_math\" must be a boolean"))?
+                }
+            };
             let tenant = match doc.get("tenant") {
                 None => None,
                 Some(v) => Some(
@@ -156,6 +168,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 budget_ms,
                 rollouts,
                 no_cache,
+                fast_math,
                 tenant,
             }))
         }
@@ -177,11 +190,12 @@ pub fn render_place_request(
     rollouts: Option<usize>,
     no_cache: bool,
 ) -> String {
-    render_place_request_for(workload, graph, id, budget_ms, rollouts, no_cache, None)
+    render_place_request_for(workload, graph, id, budget_ms, rollouts, no_cache, false, None)
 }
 
-/// [`render_place_request`] with a tenant label for the per-tenant
-/// request counters.
+/// [`render_place_request`] with the opt-in knobs: `fast_math` (lane
+/// kernels, uncached) and a tenant label for the per-tenant request
+/// counters.
 #[allow(clippy::too_many_arguments)]
 pub fn render_place_request_for(
     workload: Option<&str>,
@@ -190,6 +204,7 @@ pub fn render_place_request_for(
     budget_ms: Option<f64>,
     rollouts: Option<usize>,
     no_cache: bool,
+    fast_math: bool,
     tenant: Option<&str>,
 ) -> String {
     let mut fields = vec![("op".to_string(), Json::Str("place".to_string()))];
@@ -210,6 +225,9 @@ pub fn render_place_request_for(
     }
     if no_cache {
         fields.push(("no_cache".to_string(), Json::Bool(true)));
+    }
+    if fast_math {
+        fields.push(("fast_math".to_string(), Json::Bool(true)));
     }
     if let Some(t) = tenant {
         fields.push(("tenant".to_string(), Json::Str(t.to_string())));
@@ -504,6 +522,7 @@ mod tests {
             Some(2.5),
             Some(8),
             true,
+            true,
             Some("team-a"),
         );
         match parse_request(&line).unwrap() {
@@ -519,8 +538,15 @@ mod tests {
                 assert_eq!(p.budget_ms, Some(2.5));
                 assert_eq!(p.rollouts, Some(8));
                 assert!(p.no_cache);
+                assert!(p.fast_math);
                 assert_eq!(p.tenant.as_deref(), Some("team-a"));
             }
+            _ => panic!("wrong op"),
+        }
+        // fast_math defaults off and rejects non-boolean values.
+        let plain = render_place_request(Some("seq:8"), None, None, None, None, false);
+        match parse_request(&plain).unwrap() {
+            Request::Place(p) => assert!(!p.fast_math),
             _ => panic!("wrong op"),
         }
     }
@@ -587,6 +613,7 @@ mod tests {
             (r#"{"op": "place", "graph": {"format": "wrong"}}"#, "inline graph"),
             (r#"{"op": "place", "workload": "a", "budget_ms": -1}"#, "budget_ms"),
             (r#"{"op": "place", "workload": "a", "no_cache": 1}"#, "no_cache"),
+            (r#"{"op": "place", "workload": "a", "fast_math": 1}"#, "fast_math"),
             (r#"{"op": "place", "workload": "a", "tenant": 7}"#, "tenant"),
             (r#"{"op": "ctrl", "action": "reboot"}"#, "unknown ctrl action"),
             (r#"{"op": "ctrl"}"#, "needs a string"),

@@ -29,11 +29,17 @@
 //! The router speaks the same line protocol as a shard and plugs into
 //! the same TCP front end ([`Server`](super::server::Server)) via
 //! [`LineHandler`]: `place` is routed, `stats` fans out and aggregates
-//! (plus the router's own routing counters), `ctrl: reload` /
-//! `ctrl: clear-cache` fan out to every shard, and `ctrl: shutdown`
-//! stops the *router only* — shards are independent processes with
-//! their own lifecycles. Shard `busy` responses pass through verbatim,
-//! so backpressure reaches the client that caused it.
+//! (plus the router's own routing counters and a per-shard health
+//! verdict), `ctrl: reload` / `ctrl: clear-cache` fan out to every
+//! shard, and `ctrl: shutdown` stops the *router only* — shards are
+//! independent processes with their own lifecycles. Shard `busy`
+//! responses pass through verbatim, so backpressure reaches the client
+//! that caused it.
+//!
+//! Fan-out ops scatter over the worker pool ([`pool::map_indexed`]):
+//! each shard owns its own connection pool (disjoint mutexes), so the
+//! scatter is lock-safe and a fleet `stats` costs the *slowest* shard's
+//! round-trip instead of the sum of all of them.
 
 use std::sync::Mutex;
 use std::time::Duration;
@@ -46,6 +52,7 @@ use super::protocol::{self, PlaceSource, Request};
 use super::server::LineHandler;
 use crate::models::Workload;
 use crate::util::json::Json;
+use crate::util::pool;
 
 /// 64-bit FNV-1a over a byte string (the shard-address hash half of the
 /// rendezvous score). Kept private-and-duplicated rather than shared
@@ -215,10 +222,14 @@ impl Router {
         Ok(resp)
     }
 
-    /// Send one line to every shard in order; each entry is the shard's
-    /// response or the transport error that prevented one.
+    /// Send one line to every shard; each entry is the shard's response
+    /// or the transport error that prevented one, in shard order. The
+    /// scatter runs on the worker pool (`--workers`): every shard's
+    /// connection pool is its own mutex, so concurrent forwards never
+    /// contend, and the fan-out completes in the slowest shard's
+    /// round-trip rather than the sum over the fleet.
     fn fan_out(&self, line: &str) -> Vec<Result<String>> {
-        (0..self.shards.len()).map(|i| self.forward(i, line)).collect()
+        pool::map_indexed(self.shards.len(), 0, |i| self.forward(i, line))
     }
 
     /// Route a `place` request: fingerprint the graph the same way the
@@ -245,9 +256,14 @@ impl Router {
 
     /// The aggregated `stats` response: the router's own counters plus
     /// each shard's full stats document (or the error that replaced it).
+    /// Doubling as the fleet health probe, each shard entry carries a
+    /// `healthy` verdict — true iff the shard answered a well-formed
+    /// `ok: true` stats line — and the top level counts `healthy_shards`
+    /// so one parallel round-trip tells the operator who is up.
     fn render_fleet_stats(&self) -> String {
         let per_shard = self.fan_out(&protocol::render_stats_request());
         let s = self.stats.lock().unwrap();
+        let mut healthy_shards = 0usize;
         let shards_json: Vec<Json> = per_shard
             .iter()
             .zip(&self.shards)
@@ -264,8 +280,11 @@ impl Router {
                         ("error".to_string(), Json::Str(format!("{e:#}"))),
                     ]),
                 };
+                let healthy = body.get("ok").and_then(Json::as_bool) == Some(true);
+                healthy_shards += healthy as usize;
                 Json::Obj(vec![
                     ("addr".to_string(), Json::Str(addr.clone())),
+                    ("healthy".to_string(), Json::Bool(healthy)),
                     ("stats".to_string(), body),
                 ])
             })
@@ -275,6 +294,7 @@ impl Router {
             ("op".to_string(), Json::Str("stats".to_string())),
             ("router".to_string(), Json::Bool(true)),
             ("fleet_size".to_string(), Json::Num(self.shards.len() as f64)),
+            ("healthy_shards".to_string(), Json::Num(healthy_shards as f64)),
             ("testbed".to_string(), Json::Str(self.testbed.clone())),
             ("requests".to_string(), Json::Num(s.requests as f64)),
             (

@@ -17,7 +17,12 @@
 //! 3. otherwise builds the placement environment and runs policy
 //!    inference — one greedy rollout plus a few stochastic ones — under
 //!    the per-request latency budget; when the budget is exhausted the
-//!    policy stage is skipped or cut short;
+//!    policy stage is skipped or cut short. Each rollout batch simulates
+//!    its placements through one batched `Env::report_many` call, so the
+//!    process-global worker pool (`--workers`) spreads the evaluations
+//!    without changing a single bit of the answer. A `fast_math` request
+//!    opts this one inference into the lane kernels; such answers never
+//!    enter or leave the placement cache;
 //! 4. always evaluates the cheap non-learned candidates (every
 //!    single-device deployment plus the capacity-aware memory-greedy) and
 //!    serves the fastest *feasible* candidate overall, preferring the
@@ -440,12 +445,16 @@ impl PlacementService {
         // (With caching disabled the leader's answer could never reach
         // the followers, so single-flight would only serialize them.)
         let default_shaped = !req.no_cache
+            && !req.fast_math
             && req.budget_ms.is_none()
             && req.rollouts.is_none()
             && self.opts.cache_capacity > 0;
 
         // Cache lookup + single-flight admission. `no_cache` bypasses the
         // cache in both directions, including the trivial-candidate reuse.
+        // A `fast_math` request never answers from the cache (the caller
+        // asked for the lane kernels, not a stored exact-kernel answer)
+        // but may still reuse the policy-independent trivial evaluations.
         let mut cached_trivial: Option<Arc<Vec<TrivialCandidate>>> = None;
         let mut _flight: Option<FlightGuard<'_>> = None;
         if !req.no_cache {
@@ -453,7 +462,9 @@ impl PlacementService {
                 let (answer, trivial) = self.cache_lookup(fp, &fp_hex);
                 cached_trivial = trivial;
                 if let Some(hit) = answer {
-                    return Ok(hit);
+                    if !req.fast_math {
+                        return Ok(hit);
+                    }
                 }
                 if !default_shaped {
                     break;
@@ -487,7 +498,12 @@ impl PlacementService {
         let mut candidates: Vec<(f64, bool, Placement, Provenance)> = Vec::new();
         let mut policy_complete = false;
         if !over(&deadline) {
-            let backend = NativeBackend::from_snapshot(&env, &snap.cfg, &snap.params)?;
+            let mut backend = NativeBackend::from_snapshot(&env, &snap.cfg, &snap.params)?;
+            if req.fast_math {
+                // Per-request opt-in: the lane kernels run for this
+                // inference only; the snapshot itself is untouched.
+                backend.policy_mut().set_fast_math(true);
+            }
             let mut agent = HsdagAgent::with_backend(&env, Box::new(backend), &snap.cfg)?;
             let n_roll = req.rollouts.unwrap_or(self.opts.rollouts);
             // The greedy rollout plus every stochastic one go through ONE
@@ -588,9 +604,13 @@ impl PlacementService {
         // requests for the same graph (cache poisoning). A checkpoint
         // swap mid-inference also voids cacheability — the reload may
         // just have flushed the cache, and an old-generation answer must
-        // not repopulate it behind the new policy's back. (The trivial
-        // candidates above are exempt: they are policy-independent.)
+        // not repopulate it behind the new policy's back. A fast-math
+        // answer is likewise never stored: its logits came from the
+        // reassociated lane kernels, and the cache serves only the
+        // bit-reproducible default path. (The trivial candidates above
+        // are exempt: they are policy-independent.)
         let cacheable = !req.no_cache
+            && !req.fast_math
             && policy_complete
             && req.budget_ms.is_none()
             && req.rollouts.is_none()

@@ -6,7 +6,8 @@
 //! (`scheduler::execute`); `ReferenceCostModel` runs the retained linear
 //! re-scan (the behavioral specification, for differential testing);
 //! `ParallelCostModel` wraps any model and fans the batched entry points
-//! out over a scoped `std::thread` worker pool (`sim::pool`).
+//! out over the shared scoped `std::thread` worker pool
+//! (`crate::util::pool`).
 //!
 //! Batched entry points:
 //! - [`CostModel::evaluate_many`]: one graph, many placements — the shape
@@ -24,10 +25,9 @@
 //! `benches/bench_sim.rs` enforce this.
 
 use super::device::Testbed;
-use super::pool;
 use super::scheduler::{execute, execute_reference, measure_from, ExecReport, Placement};
 use crate::graph::CompGraph;
-use crate::util::Rng;
+use crate::util::{pool, Rng};
 
 /// A placement cost model: maps (graph, placement, testbed) to a full
 /// [`ExecReport`] (latency, busy time, transfer volume, memory

@@ -15,8 +15,12 @@
 pub mod cost;
 pub mod device;
 pub mod numerics;
-pub mod pool;
 pub mod scheduler;
+
+/// The worker pool moved to [`crate::util::pool`] when the `runtime/nn`
+/// kernels and the serve router started sharing it; re-exported so
+/// `sim::pool` call sites keep working.
+pub use crate::util::pool;
 
 pub use cost::{request_rng, AnalyticCostModel, CostModel, ParallelCostModel, ReferenceCostModel};
 pub use device::{DeviceId, DeviceKind, DeviceModel, LinkModel, Testbed, CPU, DGPU, IGPU};

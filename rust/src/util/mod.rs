@@ -1,9 +1,11 @@
 //! Shared utilities: deterministic PRNG, statistics helpers, a small
 //! property-testing harness (the offline crate set has no `proptest`),
-//! and a minimal JSON layer (no `serde`) for the on-disk graph format.
+//! a minimal JSON layer (no `serde`) for the on-disk graph format, and
+//! the scoped worker pool behind every data-parallel path.
 
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

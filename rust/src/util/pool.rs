@@ -1,0 +1,198 @@
+//! Scoped `std::thread` worker pool shared by every data-parallel layer:
+//! the `CostModel` batched paths, the `runtime/nn` row-partitioned
+//! kernels, and the router's shard scatter.
+//!
+//! The offline crate set has no rayon; this is the minimal deterministic
+//! fan-out those layers need: an atomic work counter, scoped workers
+//! (one per core, capped by the item count), and index-ordered result
+//! assembly — so parallel results are positionally identical to the
+//! serial loop, which the cost-model contract requires. The kernel path
+//! uses [`for_each_row_band`] instead: contiguous disjoint output-row
+//! bands, so each f32 element is written by exactly one thread with its
+//! accumulation order unchanged — bit-identical at any worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Process-global worker count (`--workers`), 0 = one per core. Set once
+/// at CLI startup; every call site that passes `workers = 0` resolves
+/// through this knob, so one flag steers the kernel pool, the batched
+/// cost model, and the router scatter consistently.
+static GLOBAL_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the process-wide default worker count (0 = auto). Called once
+/// from `main::run` at CLI startup (never from `Cli::config()` — tests
+/// share one process); safe to call again (tests restore it).
+pub fn set_global_workers(n: usize) {
+    GLOBAL_WORKERS.store(n, Ordering::Relaxed);
+}
+
+/// The installed `--workers` value (0 = auto).
+pub fn global_workers() -> usize {
+    GLOBAL_WORKERS.load(Ordering::Relaxed)
+}
+
+/// Hardware thread count, queried from the OS exactly once per process
+/// (`available_parallelism` can be a syscall; the kernels ask on every
+/// matmul).
+fn hardware_parallelism() -> usize {
+    static HW: OnceLock<usize> = OnceLock::new();
+    *HW.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Number of workers a batched call should actually use: the explicit
+/// request if nonzero, else the global `--workers` knob, else one per
+/// available core; never more than the item count and never zero.
+pub fn effective_workers(requested: usize, n_items: usize) -> usize {
+    let req = if requested == 0 { global_workers() } else { requested };
+    let w = if req == 0 { hardware_parallelism() } else { req };
+    w.min(n_items).max(1)
+}
+
+/// Compute `f(i)` for `i in 0..n` on `workers` scoped threads and return
+/// the results in index order. `workers == 0` means the global knob (one
+/// per core by default); one worker (or one item) degenerates to the
+/// plain serial loop. Work is claimed from a shared counter, so uneven
+/// item costs balance automatically.
+pub fn map_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = effective_workers(workers, n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("pool worker panicked") {
+                slots[i] = Some(v);
+            }
+        }
+    });
+    slots.into_iter().map(|o| o.expect("every index computed")).collect()
+}
+
+/// Split `out` (a row-major `[rows, row_stride]` buffer) into contiguous
+/// per-worker row bands and run `f(first_row, band)` on each band on its
+/// own scoped thread. Every output element is owned by exactly one band,
+/// so as long as `f` computes each row the same way the serial loop
+/// does, the result is **bit-identical at any worker count** — the
+/// parallelism only changes *which thread* runs a row, never the
+/// accumulation order within it. `workers == 0` means the global knob;
+/// one effective worker runs `f(0, out)` inline with no spawn.
+pub fn for_each_row_band<F>(out: &mut [f32], rows: usize, row_stride: usize, workers: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_stride);
+    let workers = effective_workers(workers, rows);
+    if workers == 1 || row_stride == 0 {
+        f(0, out);
+        return;
+    }
+    let band = rows.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (b, chunk) in out.chunks_mut(band * row_stride).enumerate() {
+            let f = &f;
+            s.spawn(move || f(b * band, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map() {
+        let serial: Vec<usize> = (0..100).map(|i| i * i).collect();
+        for workers in [0, 1, 3, 7] {
+            assert_eq!(map_indexed(100, workers, |i| i * i), serial, "workers {workers}");
+        }
+    }
+
+    #[test]
+    fn handles_fewer_items_than_workers() {
+        assert_eq!(map_indexed(2, 16, |i| i + 1), vec![1, 2]);
+        assert_eq!(map_indexed(1, 16, |i| i), vec![0]);
+    }
+
+    #[test]
+    fn empty_input_is_empty_output() {
+        assert_eq!(map_indexed(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn effective_workers_bounds() {
+        assert_eq!(effective_workers(4, 100), 4);
+        assert_eq!(effective_workers(4, 2), 2);
+        assert!(effective_workers(0, 100) >= 1);
+        assert_eq!(effective_workers(0, 1), 1);
+        assert_eq!(effective_workers(9, 0), 1);
+    }
+
+    #[test]
+    fn global_knob_steers_auto_requests() {
+        // Tests share one process: set, check, and restore the knob.
+        // Explicit nonzero requests must ignore it entirely.
+        let prev = global_workers();
+        set_global_workers(3);
+        assert_eq!(effective_workers(0, 100), 3);
+        assert_eq!(effective_workers(5, 100), 5);
+        set_global_workers(prev);
+    }
+
+    #[test]
+    fn balances_uneven_work() {
+        // Items with wildly different costs still all complete and land in
+        // order (the counter-based claim makes this safe by construction;
+        // this is a smoke test that nothing deadlocks or reorders).
+        let out = map_indexed(64, 8, |i| {
+            if i % 9 == 0 {
+                std::hint::black_box((0..20_000).sum::<usize>());
+            }
+            i
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn row_bands_cover_disjointly_in_order() {
+        // 13 rows of stride 3: every element written exactly once, band
+        // offsets consistent with the row index handed to the closure.
+        for workers in [1usize, 2, 4, 16] {
+            let mut out = vec![-1.0f32; 13 * 3];
+            for_each_row_band(&mut out, 13, 3, workers, |row0, band| {
+                for (r, row) in band.chunks_exact_mut(3).enumerate() {
+                    for (c, v) in row.iter_mut().enumerate() {
+                        *v = (row0 + r) as f32 * 10.0 + c as f32;
+                    }
+                }
+            });
+            let want: Vec<f32> =
+                (0..13).flat_map(|r| (0..3).map(move |c| r as f32 * 10.0 + c as f32)).collect();
+            assert_eq!(out, want, "workers {workers}");
+        }
+    }
+}

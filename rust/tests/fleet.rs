@@ -171,6 +171,9 @@ fn router_partitions_caches_and_fans_out_reload() {
     let doc = protocol::parse_response(&resp).unwrap();
     assert_eq!(doc.get("router").unwrap().as_bool(), Some(true));
     assert_eq!(doc.get("fleet_size").unwrap().as_usize(), Some(2));
+    // The parallel stats scatter doubles as the health probe: both
+    // shards are up, so both report healthy.
+    assert_eq!(doc.get("healthy_shards").unwrap().as_usize(), Some(2));
     let routed: Vec<usize> = doc
         .get("routed")
         .unwrap()
@@ -184,6 +187,7 @@ fn router_partitions_caches_and_fans_out_reload() {
     assert_eq!(shard_stats.len(), 2);
     for (i, entry) in shard_stats.iter().enumerate() {
         assert_eq!(entry.get("addr").and_then(Json::as_str), Some(addrs[i].as_str()));
+        assert_eq!(entry.get("healthy").and_then(Json::as_bool), Some(true));
         let body = entry.get("stats").unwrap();
         assert_eq!(body.get("checkpoint_generation").unwrap().as_usize(), Some(0));
     }
@@ -260,6 +264,7 @@ fn reload_under_concurrent_load_drops_nothing() {
                         None,
                         None,
                         None,
+                        false,
                         false,
                         Some(&tenant),
                     );

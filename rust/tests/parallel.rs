@@ -1,0 +1,239 @@
+//! Data-parallel determinism suite (PR 9).
+//!
+//! The threading contract this repo ships: on the default kernel path,
+//! `--workers N` is **bit-identical** to `--workers 1` everywhere — the
+//! row-banded kernels, the batched cost model, a full `search()`, a
+//! served placement request. Parallelism changes which thread computes a
+//! value, never the value. The opt-in `--fast-math` lane kernels are the
+//! one exception: they reassociate sums, so they are *tolerance*-equal
+//! to the default kernels — but still deterministic and worker-invariant
+//! within the fast path, and their answers never touch the serve cache.
+
+use hsdag::config::Config;
+use hsdag::features::FeatureConfig;
+use hsdag::models::Workload;
+use hsdag::rl::{Env, HsdagAgent};
+use hsdag::runtime::nn;
+use hsdag::serve::{protocol, Checkpoint, CheckpointMeta, PlacementService, ServeOptions};
+use hsdag::util::Rng;
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn kernel_entry_points_bit_identical_across_worker_counts() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 7, 3), (33, 46, 32), (67, 31, 29)] {
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let bt = randn(&mut rng, n * k);
+        let g = randn(&mut rng, m * n);
+
+        let mut c1 = vec![0f32; m * n];
+        nn::matmul_into_workers(&a, &b, m, k, n, &mut c1, 1);
+        let mut abt1 = vec![0f32; m * n];
+        nn::matmul_a_bt_into_workers(&a, &bt, m, n, k, &mut abt1, 1);
+        let mut acc1 = randn(&mut Rng::new(9), k * n);
+        nn::matmul_at_b_acc_workers(&a, &g, m, k, n, &mut acc1, 1);
+
+        for workers in [2usize, 4, 8] {
+            let mut c = vec![0f32; m * n];
+            nn::matmul_into_workers(&a, &b, m, k, n, &mut c, workers);
+            assert_eq!(bits(&c1), bits(&c), "matmul {m}x{k}x{n} workers {workers}");
+
+            let mut abt = vec![0f32; m * n];
+            nn::matmul_a_bt_into_workers(&a, &bt, m, n, k, &mut abt, workers);
+            assert_eq!(bits(&abt1), bits(&abt), "a_bt {m}x{n}x{k} workers {workers}");
+
+            let mut acc = randn(&mut Rng::new(9), k * n);
+            nn::matmul_at_b_acc_workers(&a, &g, m, k, n, &mut acc, workers);
+            assert_eq!(bits(&acc1), bits(&acc), "at_b_acc {m}x{k}x{n} workers {workers}");
+        }
+    }
+
+    // The sparse aggregation kernels, over a real normalized adjacency.
+    let g = Workload::resolve("random:60:3").unwrap().graph;
+    let csr = nn::normalized_adjacency_csr(g.n(), &g.edges);
+    for cols in [1usize, 5, 16] {
+        let x = randn(&mut rng, g.n() * cols);
+        let bias = randn(&mut rng, cols);
+        let mut agg1 = vec![0f32; g.n() * cols];
+        nn::aggregate_into_workers(&csr, &x, cols, &mut agg1, 1);
+        let mut rel1 = vec![0f32; g.n() * cols];
+        nn::aggregate_bias_relu_into_workers(&csr, &x, &bias, cols, &mut rel1, 1);
+        for workers in [2usize, 4, 8] {
+            let mut agg = vec![0f32; g.n() * cols];
+            nn::aggregate_into_workers(&csr, &x, cols, &mut agg, workers);
+            assert_eq!(bits(&agg1), bits(&agg), "aggregate cols {cols} workers {workers}");
+            let mut rel = vec![0f32; g.n() * cols];
+            nn::aggregate_bias_relu_into_workers(&csr, &x, &bias, cols, &mut rel, workers);
+            assert_eq!(bits(&rel1), bits(&rel), "agg+relu cols {cols} workers {workers}");
+        }
+    }
+}
+
+fn worker_cfg(workers: usize) -> Config {
+    Config {
+        backend: "native".to_string(),
+        hidden: 16,
+        update_timestep: 4,
+        seed: 21,
+        workers,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn search_trajectory_identical_at_any_worker_count() {
+    // The whole Alg. 1 loop — forwards, parses, samples, batched
+    // simulations, Adam updates, the final parallel rollout sweep — must
+    // not change a single bit when the evaluation pool widens.
+    let spec = "layered:4x3:2";
+    let run = |workers: usize| {
+        let cfg = worker_cfg(workers);
+        let env = Env::for_workload(Workload::resolve(spec).unwrap(), &cfg).unwrap();
+        let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+        agent.search(&env, 2).unwrap()
+    };
+    let serial = run(1);
+    for workers in [2usize, 4] {
+        let par = run(workers);
+        assert_eq!(serial.best_actions, par.best_actions, "workers {workers}");
+        assert_eq!(
+            serial.best_latency.to_bits(),
+            par.best_latency.to_bits(),
+            "workers {workers}"
+        );
+        assert_eq!(serial.curve.len(), par.curve.len());
+        for (a, b) in serial.curve.iter().zip(&par.curve) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "workers {workers}");
+            assert_eq!(a.mean_reward.to_bits(), b.mean_reward.to_bits(), "workers {workers}");
+        }
+    }
+}
+
+/// Train a small native policy and wrap it as a checkpoint.
+fn tiny_checkpoint(train_spec: &str, workers: usize) -> (Checkpoint, Config) {
+    let cfg = worker_cfg(workers);
+    let env = Env::for_workload(Workload::resolve(train_spec).unwrap(), &cfg).unwrap();
+    let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+    agent.search(&env, 1).unwrap();
+    let ckpt = Checkpoint::new(
+        agent.export_params(),
+        CheckpointMeta {
+            hidden: cfg.hidden,
+            feature_dim: FeatureConfig::dim(),
+            actions: env.n_actions(),
+            testbed: env.testbed.id.clone(),
+            workload: train_spec.to_string(),
+            best_latency: None,
+        },
+    );
+    (ckpt, cfg)
+}
+
+fn place_req(
+    spec: &str,
+    no_cache: bool,
+    fast_math: bool,
+) -> protocol::PlaceRequest {
+    let line = protocol::render_place_request_for(
+        Some(spec),
+        None,
+        None,
+        None,
+        None,
+        no_cache,
+        fast_math,
+        None,
+    );
+    match protocol::parse_request(&line).unwrap() {
+        protocol::Request::Place(p) => p,
+        _ => panic!("not a place request"),
+    }
+}
+
+#[test]
+fn served_request_identical_at_any_worker_count() {
+    // Two services over the SAME trained checkpoint, differing only in
+    // the evaluation worker count, must serve byte-identical placements.
+    let (ckpt, cfg1) = tiny_checkpoint("layered:3x3:1", 1);
+    let serial = PlacementService::new(
+        Checkpoint::new(ckpt.store.clone(), ckpt.meta.clone()),
+        &cfg1,
+        ServeOptions::default(),
+    )
+    .unwrap();
+    let req = place_req("seq:9", false, false);
+    let base = serial.handle_place(&req).unwrap();
+    for workers in [2usize, 4] {
+        let cfg = Config { workers, ..cfg1.clone() };
+        let par = PlacementService::new(
+            Checkpoint::new(ckpt.store.clone(), ckpt.meta.clone()),
+            &cfg,
+            ServeOptions::default(),
+        )
+        .unwrap();
+        let out = par.handle_place(&req).unwrap();
+        assert_eq!(base.placement, out.placement, "workers {workers}");
+        assert_eq!(base.latency_s.to_bits(), out.latency_s.to_bits(), "workers {workers}");
+        assert_eq!(base.provenance, out.provenance, "workers {workers}");
+        assert_eq!(base.fingerprint, out.fingerprint, "workers {workers}");
+    }
+}
+
+#[test]
+fn fast_math_kernels_are_tolerance_equal_and_worker_invariant() {
+    let mut rng = Rng::new(7);
+    let (m, k, n) = (33usize, 46usize, 32usize);
+    let a = randn(&mut rng, m * k);
+    let b = randn(&mut rng, k * n);
+    let mut exact = vec![0f32; m * n];
+    nn::matmul_into(&a, &b, m, k, n, &mut exact);
+    let mut fast = vec![0f32; m * n];
+    nn::matmul_into_fast(&a, &b, m, k, n, &mut fast);
+    for (i, (&e, &f)) in exact.iter().zip(&fast).enumerate() {
+        let tol = 1e-4 * (1.0 + e.abs());
+        assert!((e - f).abs() <= tol, "[{i}] exact {e} fast {f}");
+    }
+    // Within the fast path, the worker count still changes nothing: the
+    // reassociated order is fixed per row, and rows are banded disjointly.
+    for workers in [2usize, 4] {
+        let mut fw = vec![0f32; m * n];
+        nn::matmul_into_fast_workers(&a, &b, m, k, n, &mut fw, workers);
+        assert_eq!(bits(&fast), bits(&fw), "fast workers {workers}");
+    }
+    // dot_fast: deterministic, tolerance-equal to the reference sum.
+    let x = randn(&mut rng, 1000);
+    let y = randn(&mut rng, 1000);
+    let reference: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+    let d = nn::dot_fast(&x, &y);
+    assert!((reference - d).abs() <= 1e-4 * (1.0 + reference.abs()), "{reference} vs {d}");
+    assert_eq!(d.to_bits(), nn::dot_fast(&x, &y).to_bits());
+}
+
+#[test]
+fn fast_math_answers_never_enter_or_leave_the_serve_cache() {
+    let (ckpt, cfg) = tiny_checkpoint("layered:3x3:1", 1);
+    let svc = PlacementService::new(ckpt, &cfg, ServeOptions::default()).unwrap();
+    let spec = "seq:10";
+
+    // A cold fast-math request computes fresh (not from cache)...
+    let fast = svc.handle_place(&place_req(spec, false, true)).unwrap();
+    assert_ne!(fast.provenance, protocol::Provenance::Cache);
+    // ...and must NOT have populated the answer cache: the next default
+    // request still computes fresh.
+    let cold = svc.handle_place(&place_req(spec, false, false)).unwrap();
+    assert_ne!(cold.provenance, protocol::Provenance::Cache, "fast-math answer was cached");
+    // The default answer IS cached...
+    let warm = svc.handle_place(&place_req(spec, false, false)).unwrap();
+    assert_eq!(warm.provenance, protocol::Provenance::Cache);
+    // ...but a fast-math request refuses to read it back.
+    let fast2 = svc.handle_place(&place_req(spec, false, true)).unwrap();
+    assert_ne!(fast2.provenance, protocol::Provenance::Cache, "fast-math read the cache");
+}
