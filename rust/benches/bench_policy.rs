@@ -18,6 +18,7 @@
 
 use hsdag::config::Config;
 use hsdag::models::Benchmark;
+use hsdag::obs::metrics;
 use hsdag::parsing::parse;
 use hsdag::rl::{Env, NativeBackend, PolicyBackend, TrainBatch};
 use hsdag::util::bench::BenchSession;
@@ -138,6 +139,50 @@ fn main() {
             };
             backend.train(&env, &batch).unwrap()
         });
+    }
+
+    // Telemetry overhead gate: the metrics registry must be invisible on
+    // the policy hot path — the acceptance bar is enabled within 3% of
+    // disabled. Same backend, same inputs, only the global switch moves.
+    {
+        let b = Benchmark::ALL[0];
+        let env = Env::new(b, &cfg).unwrap();
+        let mut backend = NativeBackend::new(&env, &cfg).unwrap();
+        let fb = vec![0f32; env.v_pad * cfg.hidden];
+        session.note("-- telemetry overhead (metrics registry on vs off) --");
+        metrics::set_enabled(true);
+        session.run(&format!("policy/fwd_metrics_on/{}", b.id()), 1, 10, || {
+            backend.fwd(&env, &fb).unwrap()
+        });
+        metrics::set_enabled(false);
+        session.run(&format!("policy/fwd_metrics_off/{}", b.id()), 1, 10, || {
+            backend.fwd(&env, &fb).unwrap()
+        });
+        metrics::set_enabled(true);
+
+        // Profiling tier (--profile): per-kernel calls / wall ns / flops
+        // and pool busy time, surfaced as bench counters so the JSON
+        // snapshot records kernel-level utilization.
+        metrics::set_profiling(true);
+        let t0 = std::time::Instant::now();
+        for _ in 0..3 {
+            backend.fwd(&env, &fb).unwrap();
+        }
+        let wall_ns = t0.elapsed().as_nanos() as f64;
+        metrics::set_profiling(false);
+        for name in [
+            "kernel.matmul.calls",
+            "kernel.matmul.ns",
+            "kernel.matmul.flops",
+            "kernel.aggregate.calls",
+            "kernel.aggregate.ns",
+            "kernel.aggregate.flops",
+            "pool.tasks",
+            "pool.busy_ns",
+        ] {
+            session.counter(&format!("profile/{name}"), metrics::counter(name).get() as f64);
+        }
+        session.counter("profile/fwd_wall_ns", wall_ns);
     }
     session.finish();
 }

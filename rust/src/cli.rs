@@ -17,6 +17,10 @@ use crate::models::Workload;
 pub struct Cli {
     pub command: String,
     pub flags: HashMap<String, String>,
+    /// Positional arguments after the command. Only commands that opt in
+    /// (`trace`, with its `summarize <log>` sub-shape) accept any;
+    /// everywhere else a bare word is still a parse error.
+    pub args: Vec<String>,
 }
 
 pub fn usage() -> &'static str {
@@ -57,6 +61,8 @@ COMMANDS
                                                            [--clear-cache]
   export                 write a workload as v1 JSON       [--workload W] [--out F]
   graph-stats            validate + describe workloads     [--workload W]
+  trace summarize LOG    per-stage p50/p95/p99 latency table from an
+                         hsdag-trace-v1 JSONL log (--trace-log output)
   config                 print the Table 6 hyper-parameters
 
 COMMON FLAGS
@@ -96,6 +102,22 @@ COMMON FLAGS
   --load PATH                       read a checkpoint (place / generalize --eval-only / serve,
                                     or train — warm-start fine-tuning); layout or testbed-width
                                     mismatches are clear errors
+
+OBSERVABILITY (see README \"Observability\")
+  --log-level L                     stderr verbosity: off | error | warn | info | debug
+                                    (default info; the HSDAG_LOG env var sets the same knob,
+                                    the flag wins). User-facing banners/tables are unaffected.
+  --profile                         opt-in kernel/pool profiling counters (per-kernel calls,
+                                    wall ns, flops; worker busy time) in the metrics registry
+  --trace-log PATH                  serve / route: append one hsdag-trace-v1 JSONL line per
+                                    place request (per-stage spans; summarize with
+                                    `hsdag trace summarize PATH`)
+  --run-log PATH                    train: append one hsdag-run-v1 JSONL record per episode
+                                    (reward / loss / entropy / param-norm)
+  --trace-id X                      request: tag the place request with a trace id, echoed in
+                                    the response and in server-side trace lines
+  --metrics                         request: dump the server's metrics registry
+                                    (hsdag-metrics-v1; a router aggregates the fleet's)
 "
 }
 
@@ -106,6 +128,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
     }
     let command = args[0].clone();
     let mut flags = HashMap::new();
+    let mut positional = Vec::new();
     let mut i = 1;
     while i < args.len() {
         let a = &args[i];
@@ -126,6 +149,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                     | "no-cache"
                     | "reload"
                     | "clear-cache"
+                    | "metrics"
+                    | "profile"
             );
             if boolean {
                 flags.insert(key.to_string(), "true".to_string());
@@ -137,11 +162,16 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 flags.insert(key.to_string(), args[i + 1].clone());
                 i += 2;
             }
+        } else if command == "trace" {
+            // `hsdag trace summarize <log>` — the one command with a
+            // positional sub-shape.
+            positional.push(a.clone());
+            i += 1;
         } else {
             bail!("unexpected argument '{a}'\n\n{}", usage());
         }
     }
-    Ok(Cli { command, flags })
+    Ok(Cli { command, flags, args: positional })
 }
 
 impl Cli {
@@ -206,12 +236,17 @@ impl Cli {
                 no_structural: self.flags.contains_key("no-structural"),
                 exact_fractal: self.flags.contains_key("exact-fractal"),
             },
+            log_level: self.str_flag("log-level", "info"),
+            profile: self.flags.contains_key("profile"),
             ..Config::default()
         };
         // Fail fast on typos (the registry / backend errors name the
         // known ids).
         cfg.resolve_testbed()?;
         crate::rl::backend::BackendKind::resolve(&cfg.backend, &cfg.artifacts_dir)?;
+        if crate::obs::log::Level::parse(&cfg.log_level).is_none() {
+            bail!("unknown --log-level '{}' (off | error | warn | info | debug)", cfg.log_level);
+        }
         Ok(cfg)
     }
 }
@@ -391,6 +426,38 @@ mod tests {
         assert_eq!(c.str_flag("tenant", ""), "team-a");
         assert_eq!(c.usize_flag("retries", 0).unwrap(), 3);
         assert_eq!(c.str_list_flag("shards", ""), vec!["a:1", "b:2"]);
+    }
+
+    #[test]
+    fn observability_flags_parse() {
+        let c = parse(&argv(
+            "serve --load ckpt.json --trace-log t.jsonl --log-level debug --profile",
+        ))
+        .unwrap();
+        assert_eq!(c.str_flag("trace-log", ""), "t.jsonl");
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.log_level, "debug");
+        assert!(cfg.profile);
+        // --metrics is boolean; --trace-id and --run-log take values.
+        let c = parse(&argv("request --addr 127.0.0.1:7477 --metrics")).unwrap();
+        assert!(c.flags.contains_key("metrics"));
+        let c = parse(&argv("request --workload seq:8 --trace-id abc")).unwrap();
+        assert_eq!(c.str_flag("trace-id", ""), "abc");
+        let c = parse(&argv("train --run-log run.jsonl")).unwrap();
+        assert_eq!(c.str_flag("run-log", ""), "run.jsonl");
+        // `trace` takes positional args; every other command still
+        // rejects bare words (pinned by rejects_positional_garbage too).
+        let c = parse(&argv("trace summarize run.jsonl")).unwrap();
+        assert_eq!(c.args, vec!["summarize", "run.jsonl"]);
+        assert!(parse(&argv("train boom")).is_err());
+        // A bad level fails at config time, naming the choices.
+        let err = parse(&argv("train --log-level loud")).unwrap().config();
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("loud") && msg.contains("debug"), "{msg}");
+        // Defaults: info level, profiling off.
+        let cfg = parse(&argv("table2")).unwrap().config().unwrap();
+        assert_eq!(cfg.log_level, "info");
+        assert!(!cfg.profile);
     }
 
     #[test]

@@ -80,6 +80,18 @@ pub struct Config {
     pub features: FeatureConfig,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
+    /// Stderr log verbosity (`--log-level`, or the `HSDAG_LOG` env var —
+    /// the flag wins): off | error | warn | info | debug. `main::run`
+    /// installs the value as the process-global `obs::log` level at CLI
+    /// startup (`Cli::config` itself stays side-effect-free). Purely
+    /// diagnostic: banners, tables and protocol responses are unaffected.
+    pub log_level: String,
+    /// Opt-in kernel/pool profiling (`--profile`): per-kernel call/wall
+    /// ns/flops counters and worker-pool busy time in the `obs::metrics`
+    /// registry. Off by default — the hooks then cost one relaxed atomic
+    /// load per kernel call. Installed process-globally by `main::run`,
+    /// like `workers` and `log_level`. Strictly observational.
+    pub profile: bool,
 }
 
 impl Default for Config {
@@ -104,6 +116,8 @@ impl Default for Config {
             seed: 0,
             features: FeatureConfig::default(),
             artifacts_dir: "artifacts".to_string(),
+            log_level: "info".to_string(),
+            profile: false,
         }
     }
 }
@@ -182,6 +196,8 @@ mod tests {
         assert_eq!(c.workers, 0);
         assert!(!c.fast_math);
         assert_eq!(c.coarsen_budget, crate::coarsen::DEFAULT_COARSEN_BUDGET);
+        assert_eq!(c.log_level, "info");
+        assert!(!c.profile);
     }
 
     #[test]

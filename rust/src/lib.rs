@@ -39,6 +39,7 @@ pub mod features;
 pub mod graph;
 pub mod harness;
 pub mod models;
+pub mod obs;
 pub mod parsing;
 pub mod rl;
 pub mod runtime;

@@ -3,6 +3,7 @@
 //! Reproduces "A Structure-Aware Framework for Learning Device Placements
 //! on Computation Graphs" (NeurIPS 2024). See `hsdag --help` / README.md.
 
+use std::io::Write as _;
 use std::path::Path;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -17,15 +18,20 @@ use hsdag::features::FeatureConfig;
 use hsdag::graph::{dot, CompGraph};
 use hsdag::harness::{figure2, generalize, table1, table2, table3, table4, table5};
 use hsdag::models::{Benchmark, Workload};
-use hsdag::rl::{BackendFactory, Env, HsdagAgent, NativeBackend};
+use hsdag::obs::{log as obslog, metrics, trace::TraceSink};
+use hsdag::rl::{BackendFactory, CurvePoint, Env, HsdagAgent, NativeBackend};
 use hsdag::serve::{
     client, discover_testbed, fingerprint, protocol, shard_for, sighup_flag, Checkpoint,
     CheckpointMeta, PlacementService, Router, ServeOptions, Server, DEFAULT_QUEUE_DEPTH,
 };
 use hsdag::sim::{execute, ExecReport, Placement, Testbed};
 use hsdag::util::json::Json;
+use hsdag::{log_error, log_info, log_warn};
 
 fn main() {
+    // Adopt HSDAG_LOG before anything can log (a parse error below goes
+    // through the leveled logger); the --log-level flag wins inside run.
+    obslog::init_from_env();
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.iter().any(|a| a == "--help" || a == "-h") || args.is_empty() {
         println!("{}", cli::usage());
@@ -34,7 +40,7 @@ fn main() {
     match cli::parse(&args).and_then(run) {
         Ok(()) => {}
         Err(e) => {
-            eprintln!("error: {e:#}");
+            log_error!("error: {e:#}");
             std::process::exit(1);
         }
     }
@@ -46,6 +52,15 @@ fn run(c: Cli) -> Result<()> {
     // the process-global pool knob so the kernel pool, the batched cost
     // model and the router scatter all resolve "auto" through it.
     hsdag::util::pool::set_global_workers(cfg.workers);
+    // Same pattern for the telemetry knobs: the env var was adopted in
+    // main(); an explicit --log-level overrides it, and --profile turns
+    // the opt-in kernel/pool profiling counters on process-wide.
+    if c.flags.contains_key("log-level") {
+        if let Some(l) = obslog::Level::parse(&cfg.log_level) {
+            obslog::set_level(l);
+        }
+    }
+    metrics::set_profiling(cfg.profile);
     match c.command.as_str() {
         "table1" => println!("{}", table1::run().render()),
         "table2" => {
@@ -102,6 +117,22 @@ fn run(c: Cli) -> Result<()> {
                 env.n_actions(),
                 agent.backend_desc(),
             );
+            // Training telemetry: every learning-curve point also goes to
+            // the --run-log JSONL file (hsdag-run-v1) when asked. Strictly
+            // observational — the console lines stay byte-identical and
+            // the search trajectory never sees the writer.
+            let mut run_log = match c.flags.get("run-log") {
+                Some(path) => {
+                    let f = std::fs::OpenOptions::new()
+                        .create(true)
+                        .append(true)
+                        .open(path)
+                        .with_context(|| format!("open run log {path}"))?;
+                    log_info!("run log: {path} (hsdag-run-v1)");
+                    Some(std::io::BufWriter::new(f))
+                }
+                None => None,
+            };
             // One search call per episode so --save can checkpoint every
             // best-so-far improvement. The trajectory is identical to a
             // single search(episodes) call: the tracker is per-call
@@ -120,6 +151,10 @@ fn run(c: Cli) -> Result<()> {
                         p.mean_reward,
                         p.loss
                     );
+                    if let Some(w) = run_log.as_mut() {
+                        writeln!(w, "{}", run_record(ep, p.best_latency.min(best_latency), p))
+                            .context("write run log")?;
+                    }
                 }
                 if res.best_latency < best_latency {
                     best_latency = res.best_latency;
@@ -127,6 +162,9 @@ fn run(c: Cli) -> Result<()> {
                         save_checkpoint(path, &agent, &env, Some(best_latency))?;
                     }
                 }
+            }
+            if let Some(w) = run_log.as_mut() {
+                w.flush().context("flush run log")?;
             }
             println!(
                 "best latency {:.5}s  (speedup {:.1}% vs reference {:.5}s)  wall {:.1}s",
@@ -334,7 +372,12 @@ fn run(c: Cli) -> Result<()> {
             };
             let trained_on = ckpt.meta.workload.clone();
             let cache_capacity = opts.cache_capacity;
-            let service = Arc::new(PlacementService::new(ckpt, &run_cfg, opts)?);
+            let mut service = PlacementService::new(ckpt, &run_cfg, opts)?;
+            if let Some(path) = c.flags.get("trace-log") {
+                service.set_trace_sink(Arc::new(TraceSink::open(path)?));
+                log_info!("trace log: {path} (hsdag-trace-v1)");
+            }
+            let service = Arc::new(service);
             // A bare `ctrl: reload` (or SIGHUP) re-reads the --load path:
             // the runbook is "atomically replace the file, poke the
             // daemon" — no client-side path plumbing needed.
@@ -349,7 +392,7 @@ fn run(c: Cli) -> Result<()> {
                                 "SIGHUP reload: generation {generation}, cache {}, trained on {on}",
                                 if cache_kept { "kept" } else { "flushed" }
                             ),
-                            Err(e) => eprintln!("SIGHUP reload failed (old policy kept): {e:#}"),
+                            Err(e) => log_warn!("SIGHUP reload failed (old policy kept): {e:#}"),
                         }
                     }
                 });
@@ -395,7 +438,12 @@ fn run(c: Cli) -> Result<()> {
             let addr = c.str_flag("addr", "127.0.0.1:7480");
             let workers = serve_workers(&c, &cfg)?;
             let timeout = Duration::from_secs_f64(c.f64_flag("timeout-s", 10.0)?);
-            let router = Arc::new(Router::new(shards.clone(), timeout)?);
+            let mut router = Router::new(shards.clone(), timeout)?;
+            if let Some(path) = c.flags.get("trace-log") {
+                router.set_trace_sink(Arc::new(TraceSink::open(path)?));
+                log_info!("trace log: {path} (hsdag-trace-v1)");
+            }
+            let router = Arc::new(router);
             let mut server = Server::bind(Arc::clone(&router), &addr)?;
             server.set_queue_depth(c.usize_flag("queue-depth", DEFAULT_QUEUE_DEPTH)?);
             // Same "listening on <addr>" banner contract as serve.
@@ -417,6 +465,8 @@ fn run(c: Cli) -> Result<()> {
             let mut routed_graph: Option<CompGraph> = None;
             let line = if c.flags.contains_key("stats") {
                 protocol::render_stats_request()
+            } else if c.flags.contains_key("metrics") {
+                protocol::render_metrics_request()
             } else if c.flags.contains_key("shutdown") {
                 protocol::render_shutdown_request()
             } else if c.flags.contains_key("reload") {
@@ -434,7 +484,7 @@ fn run(c: Cli) -> Result<()> {
                 anyhow::ensure!(
                     graph.is_some() != spec.is_some(),
                     "request needs exactly one of --workload <spec> or --graph <file> \
-                     (or --stats / --shutdown / --reload / --clear-cache)"
+                     (or --stats / --metrics / --shutdown / --reload / --clear-cache)"
                 );
                 if !shards.is_empty() {
                     routed_graph = Some(match (&graph, spec) {
@@ -452,7 +502,7 @@ fn run(c: Cli) -> Result<()> {
                     None => None,
                     Some(v) => Some(v.parse::<usize>().context("--rollouts must be an integer")?),
                 };
-                protocol::render_place_request_for(
+                let line = protocol::render_place_request_for(
                     spec.map(String::as_str),
                     graph.as_ref(),
                     id.as_ref(),
@@ -461,7 +511,14 @@ fn run(c: Cli) -> Result<()> {
                     c.flags.contains_key("no-cache"),
                     c.flags.contains_key("fast-math"),
                     c.flags.get("tenant").map(String::as_str),
-                )
+                );
+                // Client-minted trace id: propagated on the wire, echoed
+                // in the response, and keyed into any server-side trace
+                // log the request crosses.
+                match c.flags.get("trace-id") {
+                    Some(tid) => protocol::with_trace_id(&line, tid)?,
+                    None => line,
+                }
             };
             // Router-less deployments: --shards picks the owning shard
             // client-side with the same rendezvous hash the router uses,
@@ -482,7 +539,7 @@ fn run(c: Cli) -> Result<()> {
                 let addr = shards[shard_for(fp, &shards)].clone();
                 // Routing note on stderr: stdout stays exactly one
                 // response line for scripts.
-                eprintln!("routing {fp:016x} to shard {addr} (testbed {testbed})");
+                log_info!("routing {fp:016x} to shard {addr} (testbed {testbed})");
                 addr
             };
             let response = client::roundtrip_retry(&addr, &line, timeout, retries)?;
@@ -491,6 +548,15 @@ fn run(c: Cli) -> Result<()> {
             // response, so scripts can just check the status.
             protocol::parse_response(&response)?;
         }
+        "trace" => match c.args.first().map(String::as_str) {
+            Some("summarize") => {
+                let path = c.args.get(1).ok_or_else(|| {
+                    anyhow::anyhow!("usage: hsdag trace summarize <log.jsonl>")
+                })?;
+                print!("{}", hsdag::obs::trace::summarize_file(Path::new(path))?);
+            }
+            _ => anyhow::bail!("usage: hsdag trace summarize <log.jsonl>"),
+        },
         "config" => print!("{}", cfg.table6()),
         other => anyhow::bail!("unknown command '{other}'\n\n{}", cli::usage()),
     }
@@ -504,6 +570,29 @@ fn run(c: Cli) -> Result<()> {
 fn serve_workers(c: &Cli, cfg: &Config) -> Result<usize> {
     let default = if cfg.workers > 0 { cfg.workers } else { 4 };
     Ok(c.usize_flag("serve-workers", default)?.max(1))
+}
+
+/// One `hsdag-run-v1` training-telemetry record (compact JSON, one per
+/// line in the --run-log file). Non-finite values (no update yet, no
+/// feasible placement yet) become JSON null.
+fn run_record(episode: usize, best_latency: f64, p: &CurvePoint) -> String {
+    fn num(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+    Json::Obj(vec![
+        ("format".to_string(), Json::Str("hsdag-run-v1".to_string())),
+        ("episode".to_string(), Json::Num(episode as f64)),
+        ("best_latency".to_string(), num(best_latency)),
+        ("mean_reward".to_string(), num(p.mean_reward)),
+        ("loss".to_string(), num(p.loss)),
+        ("entropy".to_string(), num(p.entropy)),
+        ("param_norm".to_string(), num(p.param_norm)),
+    ])
+    .to_string_compact()
 }
 
 /// Write the agent's current learning state as an hsdag-params-v1

@@ -1,0 +1,184 @@
+//! Minimal leveled logger for diagnostics (`error` > `warn` > `info` >
+//! `debug`), replacing ad-hoc `eprintln!` call sites.
+//!
+//! Ground rules:
+//!
+//! - **stderr only, message verbatim.** The logger adds no prefix or
+//!   timestamp at `error`/`warn`/`info`, so converted call sites emit
+//!   byte-identical lines; `debug` lines get a `debug: ` prefix since
+//!   they never existed before this tier. stdout stays reserved for
+//!   user-facing output (tables, banners, JSON) and is never routed
+//!   through here.
+//! - **Off-by-default debug tier.** The default level is `info`; the
+//!   `HSDAG_LOG` environment variable and the `--log-level` flag (flag
+//!   wins) raise or lower it. `off` silences everything.
+//! - **Cheap when silent.** The level gate is one relaxed atomic load
+//!   and the macros skip formatting entirely when the level is off.
+//!
+//! Use the crate-root macros: `log_error!`, `log_warn!`, `log_info!`,
+//! `log_debug!`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Severity levels; numeric rank orders them (`off` gates everything).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+/// Current level rank; `Info` by default.
+static LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
+
+impl Level {
+    /// Parse a level name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" | "quiet" => Some(Level::Off),
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" | "trace" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Install the process-wide level. Called from `main::run` (flag) and
+/// [`init_from_env`]; safe to call repeatedly (tests share a process).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as usize, Ordering::Relaxed);
+}
+
+/// The currently installed level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Off,
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Whether a message at `l` would currently be emitted. The macros call
+/// this before formatting, so silent levels cost one relaxed load.
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    l != Level::Off && (l as usize) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Adopt `HSDAG_LOG` if set and valid (unknown values are ignored, not
+/// fatal — a bad env var must not break the CLI). Called once at CLI
+/// startup, before the `--log-level` flag is applied on top.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("HSDAG_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+/// Emit one line to stderr. `error`/`warn`/`info` lines are verbatim
+/// (converted `eprintln!` sites stay byte-identical); `debug` lines are
+/// prefixed so ad-hoc tooling can filter them.
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    if l == Level::Debug {
+        eprintln!("debug: {args}");
+    } else {
+        eprintln!("{args}");
+    }
+}
+
+/// Log at `error` (always on unless the level is `off`).
+#[macro_export]
+macro_rules! log_error {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::log($crate::obs::log::Level::Error, format_args!($($a)*));
+        }
+    };
+}
+
+/// Log at `warn`.
+#[macro_export]
+macro_rules! log_warn {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::log($crate::obs::log::Level::Warn, format_args!($($a)*));
+        }
+    };
+}
+
+/// Log at `info` (the default tier).
+#[macro_export]
+macro_rules! log_info {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::log($crate::obs::log::Level::Info, format_args!($($a)*));
+        }
+    };
+}
+
+/// Log at `debug` (off by default; `HSDAG_LOG=debug` or
+/// `--log-level debug` enables).
+#[macro_export]
+macro_rules! log_debug {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::log($crate::obs::log::Level::Debug, format_args!($($a)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_rank() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("off"), Some(Level::Off));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Debug);
+    }
+
+    #[test]
+    fn gate_respects_level() {
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        set_level(prev);
+    }
+
+    #[test]
+    fn default_hides_debug() {
+        let prev = level();
+        set_level(Level::Info);
+        assert!(!enabled(Level::Debug));
+        assert!(enabled(Level::Info));
+        set_level(prev);
+    }
+}

@@ -1,0 +1,648 @@
+//! Process-wide metrics registry: named counters, gauges, and
+//! log₂-bucketed histograms, all lock-free on the write path.
+//!
+//! Design constraints (the serve and kernel hot paths run through here):
+//!
+//! - **One relaxed atomic increment per event.** Counters are sharded
+//!   across [`SHARDS`] cache-line-padded cells; each thread hashes to a
+//!   stable shard once and then every `inc` is a single
+//!   `fetch_add(Relaxed)` on a line no other shard writes.
+//! - **Zero allocation when disabled.** Handles are interned once
+//!   (leaked, `&'static`) and a disabled registry turns every write into
+//!   one relaxed load + branch. Nothing on the write path allocates,
+//!   enabled or not.
+//! - **Strictly observational.** Nothing in this module feeds back into
+//!   placement, scheduling, or cache decisions; `tests/obs.rs` pins that
+//!   trajectories are bit-identical with telemetry on or off.
+//!
+//! Histograms bucket by bit width (`bucket_of`), so quantiles are
+//! estimates interpolated within a power-of-two bucket — the right
+//! trade for a stats endpoint that must not sort sample windows under a
+//! mutex (see `serve::server`). The same bucket math backs the plain
+//! (non-atomic) [`LogHist`] used under the serve stats lock.
+//!
+//! Everything lives behind string names (`serve.requests`,
+//! `kernel.matmul.flops`, ...); `registry_json()` dumps the whole
+//! registry as a `hsdag-metrics-v1` document for the `metrics` wire
+//! command. Kernel profiling (`profile()`) is a second, off-by-default
+//! tier: it additionally reads the monotonic clock per call, so it is
+//! gated separately by `set_profiling`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Write-path shards per metric. 16 padded cells = 1 KiB per counter;
+/// enough that a 16-worker serve pool almost never shares a line.
+pub const SHARDS: usize = 16;
+
+/// Histogram bucket count: bucket `k` holds values of bit width `k`
+/// (`[2^(k-1), 2^k)`); 48 buckets cover u64 microsecond values up to
+/// ~8.9 years, far past any latency this process can observe.
+pub const BUCKETS: usize = 48;
+
+/// Global on/off switch for metric writes (on by default — a write is
+/// one relaxed increment). `bench_policy` flips it to measure the
+/// enabled-vs-disabled hot-path delta.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Opt-in kernel/pool profiling tier (off by default — it reads the
+/// monotonic clock per kernel call, which the default tier never does).
+static PROFILING: AtomicBool = AtomicBool::new(false);
+
+/// Enable or disable all metric writes. Reads (`get`, snapshots, the
+/// `metrics` wire command) always work.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether metric writes are currently recorded.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable or disable the kernel/pool profiling tier (`--profile`).
+pub fn set_profiling(on: bool) {
+    PROFILING.store(on, Ordering::Relaxed);
+}
+
+/// Whether kernel/pool profiling is on.
+pub fn profiling() -> bool {
+    PROFILING.load(Ordering::Relaxed)
+}
+
+/// Stable per-thread shard index: assigned round-robin at first use so
+/// a fixed worker pool spreads evenly across shards.
+fn shard_idx() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: usize = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+    }
+    SHARD.with(|s| *s)
+}
+
+/// One cache line per shard cell so concurrent writers never contend.
+#[repr(align(64))]
+struct PadCell(AtomicU64);
+
+impl PadCell {
+    fn new() -> Self {
+        PadCell(AtomicU64::new(0))
+    }
+}
+
+/// Monotonic sharded counter.
+pub struct Counter {
+    name: &'static str,
+    shards: [PadCell; SHARDS],
+}
+
+impl Counter {
+    fn new(name: &'static str) -> Self {
+        Counter { name, shards: std::array::from_fn(|_| PadCell::new()) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Add `n`; one relaxed load (the enable gate) + one relaxed
+    /// `fetch_add` on this thread's shard.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if !enabled() {
+            return;
+        }
+        self.shards[shard_idx()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Sum across shards. Relaxed per-shard reads: exact once writers
+    /// quiesce, monotone-approximate while they run.
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Last-write-wins gauge (worker counts, cache sizes, ...).
+pub struct Gauge {
+    name: &'static str,
+    value: AtomicU64,
+}
+
+impl Gauge {
+    fn new(name: &'static str) -> Self {
+        Gauge { name, value: AtomicU64::new(0) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket index for a value: its bit width, clamped to the table.
+/// `0 → 0`, `1 → 1`, `[2,3] → 2`, `[4,7] → 3`, ... `[2^(k-1), 2^k) → k`.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive lower bound of bucket `i`.
+pub fn bucket_lo(i: usize) -> u64 {
+    if i <= 1 {
+        i as u64
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (saturates at the top bucket).
+pub fn bucket_hi(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Quantile estimate over a bucket table: find the bucket holding the
+/// rank, then interpolate linearly inside its `[lo, hi]` range. Matches
+/// `util::stats::percentile`'s `p/100 * (n-1)` rank convention.
+fn quantile_from_buckets(buckets: &[u64], p: f64) -> f64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (total - 1) as f64;
+    let mut seen = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let after = seen + c;
+        if rank < after as f64 {
+            let within = rank - seen as f64; // in [0, c)
+            let frac = (within + 0.5) / c as f64;
+            let (lo, hi) = (bucket_lo(i) as f64, bucket_hi(i).min(1 << 62) as f64);
+            return lo + frac * (hi - lo);
+        }
+        seen = after;
+    }
+    bucket_hi(BUCKETS - 1).min(1 << 62) as f64
+}
+
+/// Sharded atomic histogram over u64 values (conventionally
+/// microseconds). Three relaxed increments per record (bucket, count is
+/// implicit in the buckets, sum) — used on per-request paths, not
+/// per-kernel-inner-loop paths.
+pub struct Histogram {
+    name: &'static str,
+    shards: [HistShard; SHARDS],
+}
+
+struct HistShard {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+}
+
+impl HistShard {
+    fn new() -> Self {
+        HistShard { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
+    }
+}
+
+impl Histogram {
+    fn new(name: &'static str) -> Self {
+        Histogram { name, shards: std::array::from_fn(|_| HistShard::new()) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        let s = &self.shards[shard_idx()];
+        s.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Merge all shards into a point-in-time snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = vec![0u64; BUCKETS];
+        let mut sum = 0u64;
+        for s in &self.shards {
+            for (b, a) in buckets.iter_mut().zip(&s.buckets) {
+                *b += a.load(Ordering::Relaxed);
+            }
+            sum = sum.wrapping_add(s.sum.load(Ordering::Relaxed));
+        }
+        HistSnapshot { buckets, sum }
+    }
+}
+
+/// Merged view of a [`Histogram`] (or a [`LogHist`]).
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Interpolated quantile estimate, `p` in [0, 100].
+    pub fn quantile(&self, p: f64) -> f64 {
+        quantile_from_buckets(&self.buckets, p)
+    }
+
+    /// Non-empty buckets as `(lo, hi, count)` rows for wire documents.
+    pub fn nonzero(&self) -> Vec<(u64, u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_lo(i), bucket_hi(i), c))
+            .collect()
+    }
+}
+
+/// Plain (non-atomic) log₂ histogram for single-writer contexts — the
+/// serve stats window lives in one of these *under its existing mutex*,
+/// replacing the clone-and-sort-per-`stats`-call sample vector: record
+/// is O(1), quantiles are O(BUCKETS), and nothing ever sorts.
+#[derive(Clone)]
+pub struct LogHist {
+    buckets: [u64; BUCKETS],
+    sum_us: u64,
+}
+
+impl Default for LogHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHist {
+    pub fn new() -> Self {
+        LogHist { buckets: [0; BUCKETS], sum_us: 0 }
+    }
+
+    #[inline]
+    pub fn record_us(&mut self, us: u64) {
+        self.buckets[bucket_of(us)] += 1;
+        self.sum_us = self.sum_us.wrapping_add(us);
+    }
+
+    /// Record a duration in milliseconds at microsecond resolution.
+    #[inline]
+    pub fn record_ms(&mut self, ms: f64) {
+        self.record_us((ms * 1000.0).max(0.0).round() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / n as f64 / 1000.0
+        }
+    }
+
+    /// Interpolated quantile in milliseconds, `p` in [0, 100].
+    pub fn quantile_ms(&self, p: f64) -> f64 {
+        quantile_from_buckets(&self.buckets, p) / 1000.0
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot { buckets: self.buckets.to_vec(), sum: self.sum_us }
+    }
+}
+
+/// The process-global registry: interned handles, enumerable for dumps.
+struct Registry {
+    counters: Mutex<Vec<&'static Counter>>,
+    gauges: Mutex<Vec<&'static Gauge>>,
+    histograms: Mutex<Vec<&'static Histogram>>,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        counters: Mutex::new(Vec::new()),
+        gauges: Mutex::new(Vec::new()),
+        histograms: Mutex::new(Vec::new()),
+    })
+}
+
+fn leak_name(name: &str) -> &'static str {
+    Box::leak(name.to_string().into_boxed_str())
+}
+
+/// Intern a counter by name. Takes the registry lock — call once per
+/// site (cache the returned `&'static`), never on a hot path.
+pub fn counter(name: &str) -> &'static Counter {
+    let mut v = registry().counters.lock().unwrap();
+    if let Some(c) = v.iter().find(|c| c.name == name) {
+        return c;
+    }
+    let c: &'static Counter = Box::leak(Box::new(Counter::new(leak_name(name))));
+    v.push(c);
+    c
+}
+
+/// Intern a gauge by name (same contract as [`counter`]).
+pub fn gauge(name: &str) -> &'static Gauge {
+    let mut v = registry().gauges.lock().unwrap();
+    if let Some(g) = v.iter().find(|g| g.name == name) {
+        return g;
+    }
+    let g: &'static Gauge = Box::leak(Box::new(Gauge::new(leak_name(name))));
+    v.push(g);
+    g
+}
+
+/// Intern a histogram by name (same contract as [`counter`]).
+pub fn histogram(name: &str) -> &'static Histogram {
+    let mut v = registry().histograms.lock().unwrap();
+    if let Some(h) = v.iter().find(|h| h.name == name) {
+        return h;
+    }
+    let h: &'static Histogram = Box::leak(Box::new(Histogram::new(leak_name(name))));
+    v.push(h);
+    h
+}
+
+/// Per-kernel profiling bundle: call count, accumulated wall nanos, and
+/// accumulated floating-point-op count.
+pub struct KernelStats {
+    pub calls: &'static Counter,
+    pub ns: &'static Counter,
+    pub flops: &'static Counter,
+}
+
+/// Intern the three counters for kernel `name` (e.g. `kernel.matmul` →
+/// `kernel.matmul.calls` / `.ns` / `.flops`).
+pub fn kernel_stats(name: &str) -> &'static KernelStats {
+    Box::leak(Box::new(KernelStats {
+        calls: counter(&format!("{name}.calls")),
+        ns: counter(&format!("{name}.ns")),
+        flops: counter(&format!("{name}.flops")),
+    }))
+}
+
+/// RAII kernel-profiling guard; records on drop.
+pub struct ProfileGuard {
+    stats: &'static KernelStats,
+    flops: u64,
+    start: Instant,
+}
+
+impl Drop for ProfileGuard {
+    fn drop(&mut self) {
+        self.stats.calls.inc();
+        self.stats.flops.add(self.flops);
+        self.stats.ns.add(self.start.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Kernel-profiling hook: returns `None` (one relaxed load, nothing
+/// else) unless profiling is on; otherwise interns the kernel's stats
+/// into `slot` once and starts a timer. Usage in a kernel entry point:
+///
+/// ```ignore
+/// static STATS: OnceLock<&'static KernelStats> = OnceLock::new();
+/// let _t = obs::metrics::profile(&STATS, "kernel.matmul", flops);
+/// ```
+#[inline]
+pub fn profile(
+    slot: &OnceLock<&'static KernelStats>,
+    name: &str,
+    flops: u64,
+) -> Option<ProfileGuard> {
+    if !profiling() {
+        return None;
+    }
+    let stats = *slot.get_or_init(|| kernel_stats(name));
+    Some(ProfileGuard { stats, flops, start: Instant::now() })
+}
+
+/// Dump the whole registry as a `hsdag-metrics-v1` document: counter
+/// and gauge values plus count/mean/p50/p99 and non-empty buckets per
+/// histogram. Names are sorted so the document is stable.
+pub fn registry_json() -> Json {
+    let mut counters: Vec<(String, Json)> = registry()
+        .counters
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|c| (c.name.to_string(), Json::Num(c.get() as f64)))
+        .collect();
+    counters.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut gauges: Vec<(String, Json)> = registry()
+        .gauges
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|g| (g.name.to_string(), Json::Num(g.get() as f64)))
+        .collect();
+    gauges.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut hists: Vec<(String, Json)> = registry()
+        .histograms
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|h| {
+            let s = h.snapshot();
+            (h.name.to_string(), hist_json(&s))
+        })
+        .collect();
+    hists.sort_by(|a, b| a.0.cmp(&b.0));
+    Json::Obj(vec![
+        ("format".to_string(), Json::Str("hsdag-metrics-v1".to_string())),
+        ("counters".to_string(), Json::Obj(counters)),
+        ("gauges".to_string(), Json::Obj(gauges)),
+        ("histograms".to_string(), Json::Obj(hists)),
+    ])
+}
+
+/// Render one histogram snapshot as its wire object.
+pub fn hist_json(s: &HistSnapshot) -> Json {
+    let n = s.count();
+    let mean = if n == 0 { 0.0 } else { s.sum as f64 / n as f64 };
+    Json::Obj(vec![
+        ("count".to_string(), Json::Num(n as f64)),
+        ("mean".to_string(), Json::Num(mean)),
+        ("p50".to_string(), Json::Num(s.quantile(50.0))),
+        ("p99".to_string(), Json::Num(s.quantile(99.0))),
+        (
+            "buckets".to_string(),
+            Json::Arr(
+                s.nonzero()
+                    .into_iter()
+                    .map(|(lo, hi, c)| {
+                        Json::Arr(vec![
+                            Json::Num(lo as f64),
+                            Json::Num(hi.min(1 << 62) as f64),
+                            Json::Num(c as f64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Serializes unit tests that toggle the process-global switches
+/// (`set_enabled`, `set_profiling`) or assert exact counter deltas —
+/// unit tests share one process and one registry. Lock via
+/// `lock_test_guard()`; never used outside `cfg(test)`.
+#[cfg(test)]
+pub(crate) static TEST_GUARD: Mutex<()> = Mutex::new(());
+
+/// Acquire [`TEST_GUARD`], surviving poisoning from a failed test.
+#[cfg(test)]
+pub(crate) fn lock_test_guard() -> std::sync::MutexGuard<'static, ()> {
+    TEST_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_math_partitions_u64() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        // Every bucket's bounds round-trip through bucket_of.
+        for i in 0..BUCKETS - 1 {
+            assert_eq!(bucket_of(bucket_lo(i)), i, "lo of {i}");
+            assert_eq!(bucket_of(bucket_hi(i)), i, "hi of {i}");
+        }
+    }
+
+    #[test]
+    fn counter_intern_is_idempotent() {
+        let _g = lock_test_guard();
+        let a = counter("test.intern.once");
+        let b = counter("test.intern.once");
+        assert!(std::ptr::eq(a, b));
+        let before = a.get();
+        b.add(3);
+        assert_eq!(a.get(), before + 3);
+    }
+
+    #[test]
+    fn gauge_is_last_write_wins() {
+        let _g = lock_test_guard();
+        let g = gauge("test.gauge");
+        g.set(7);
+        g.set(42);
+        assert_eq!(g.get(), 42);
+    }
+
+    #[test]
+    fn disabled_registry_drops_writes() {
+        let _g = lock_test_guard();
+        let c = counter("test.disabled");
+        let before = c.get();
+        set_enabled(false);
+        c.add(100);
+        set_enabled(true);
+        assert_eq!(c.get(), before);
+        c.inc();
+        assert_eq!(c.get(), before + 1);
+    }
+
+    #[test]
+    fn loghist_quantiles_order_and_bound() {
+        let mut h = LogHist::new();
+        for ms in [1.0, 2.0, 3.0, 5.0, 8.0, 100.0] {
+            h.record_ms(ms);
+        }
+        assert_eq!(h.count(), 6);
+        let (p50, p99) = (h.quantile_ms(50.0), h.quantile_ms(99.0));
+        assert!(p50 > 0.0 && p99 >= p50, "p50 {p50} p99 {p99}");
+        // Estimates stay within the data's bucket envelope.
+        assert!(p99 <= bucket_hi(bucket_of(100_000)) as f64 / 1000.0);
+        assert!((h.mean_ms() - (1.0 + 2.0 + 3.0 + 5.0 + 8.0 + 100.0) / 6.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn atomic_histogram_snapshot_merges_shards() {
+        let _g = lock_test_guard();
+        let h = histogram("test.hist");
+        let base = h.snapshot().count();
+        for v in [1u64, 10, 100, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), base + 4);
+        assert!(s.quantile(99.0) >= s.quantile(50.0));
+        assert!(!s.nonzero().is_empty());
+    }
+
+    #[test]
+    fn registry_dump_is_valid_and_sorted() {
+        counter("test.dump.a").inc();
+        counter("test.dump.b").inc();
+        histogram("test.dump.h").record(5);
+        let doc = registry_json();
+        assert_eq!(doc.get("format").and_then(|f| f.as_str()), Some("hsdag-metrics-v1"));
+        let names: Vec<&str> = match doc.get("counters") {
+            Some(Json::Obj(kv)) => kv.iter().map(|(k, _)| k.as_str()).collect(),
+            _ => panic!("counters object"),
+        };
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "counter names sorted");
+        // Round-trips through the parser.
+        let text = doc.to_string_compact();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn quantile_single_value_lands_in_bucket() {
+        let mut h = LogHist::new();
+        h.record_us(700);
+        let q = h.quantile_ms(50.0) * 1000.0;
+        assert!(
+            (bucket_lo(bucket_of(700)) as f64..=bucket_hi(bucket_of(700)) as f64).contains(&q),
+            "{q}"
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! Observability: the process-wide telemetry layer.
+//!
+//! Three tiers, all strictly observational — nothing here may feed back
+//! into placement, scheduling, or cache decisions (`tests/obs.rs` pins
+//! bit-identical trajectories with telemetry on vs off):
+//!
+//! - [`metrics`] — named sharded atomic counters/gauges and
+//!   log₂-bucketed histograms. Always-on by default (a write is one
+//!   relaxed increment); dumped by the `metrics` wire command as a
+//!   `hsdag-metrics-v1` document. A separate opt-in profiling tier
+//!   (`--profile`) adds per-kernel wall time / flops and worker-pool
+//!   utilization, surfaced by `bench_policy`.
+//! - [`trace`] — per-request ids propagated router → shard on the wire,
+//!   per-stage spans (queue, cache, rollout, simulate, select), and a
+//!   `hsdag-trace-v1` JSONL sink behind `--trace-log PATH`;
+//!   `hsdag trace summarize <log>` renders p50/p95/p99 per stage.
+//! - [`log`] — a leveled stderr logger (`--log-level`, `HSDAG_LOG`)
+//!   with an off-by-default debug tier; converted `eprintln!` sites
+//!   keep their output byte-identical.
+//!
+//! Training emits its own per-episode `hsdag-run-v1` records (reward /
+//! loss / entropy / param-norm) through `train --run-log PATH`; see
+//! `rl::search::CurvePoint`.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;

@@ -1,0 +1,362 @@
+//! Request tracing: per-request ids, per-stage span timings, and a
+//! `hsdag-trace-v1` JSONL sink.
+//!
+//! A trace id is minted where a request enters the system — the
+//! `request` client (`--trace <id>` to supply one), else the router,
+//! else the shard — and propagated on the wire in the `trace` field of
+//! the place request, so one id follows a request through the router to
+//! the shard that served it. Each process with `--trace-log PATH`
+//! appends one JSON line per request:
+//!
+//! ```json
+//! {"format":"hsdag-trace-v1","trace":"1f2e...","op":"place",
+//!  "total_us":1234,"spans":[{"stage":"queue","start_us":0,"dur_us":41},
+//!  {"stage":"cache","start_us":42,"dur_us":3}, ...],
+//!  "provenance":"policy","fingerprint":"..."}
+//! ```
+//!
+//! Spans carry their offset from request start (`start_us`) and
+//! duration (`dur_us`), so nesting and ordering are reconstructible.
+//! `hsdag trace summarize <log>` renders per-stage p50/p95/p99 from
+//! such a log ([`summarize_file`]). Tracing is strictly observational:
+//! span capture never branches the serving logic, and a process without
+//! a sink pays only an `Option` check per stage.
+
+use std::fs::OpenOptions;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Wire format tag for trace log lines.
+pub const TRACE_FORMAT: &str = "hsdag-trace-v1";
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Mint a fresh 16-hex-digit trace id: wall-clock nanos mixed with a
+/// process-local counter, so ids are unique within a process and
+/// collisions across processes need the same nanosecond. Ids never feed
+/// into placement decisions, so their randomness is not load-bearing.
+pub fn mint_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("{:016x}", splitmix64(nanos ^ seq.rotate_left(32)))
+}
+
+/// One timed stage within a request.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub stage: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// Span collector for one request. Create at ingress, close stages with
+/// [`Trace::end`], then render with [`Trace::to_json`].
+pub struct Trace {
+    id: String,
+    op: &'static str,
+    t0: Instant,
+    spans: Vec<Span>,
+    fields: Vec<(&'static str, Json)>,
+}
+
+impl Trace {
+    pub fn new(id: String, op: &'static str) -> Self {
+        Trace { id, op, t0: Instant::now(), spans: Vec::new(), fields: Vec::new() }
+    }
+
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// Mark the start of a stage (just a timestamp — pass it back to
+    /// [`Trace::end`], which allows overlapping or nested stages).
+    pub fn begin(&self) -> Instant {
+        Instant::now()
+    }
+
+    /// Close a stage opened at `started`.
+    pub fn end(&mut self, stage: &'static str, started: Instant) {
+        let start_us = started.duration_since(self.t0).as_micros() as u64;
+        let dur_us = started.elapsed().as_micros() as u64;
+        self.spans.push(Span { stage, start_us, dur_us });
+    }
+
+    /// Record a pre-measured stage (e.g. queue wait measured by the
+    /// accept loop before this trace existed); anchored at offset 0.
+    pub fn span_before_start(&mut self, stage: &'static str, dur_us: u64) {
+        self.spans.push(Span { stage, start_us: 0, dur_us });
+    }
+
+    /// Attach a scalar field to the trace line (provenance, fingerprint,
+    /// shard index, ...).
+    pub fn field(&mut self, key: &'static str, value: Json) {
+        self.fields.push((key, value));
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Render the `hsdag-trace-v1` line object.
+    pub fn to_json(&self) -> Json {
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("stage".to_string(), Json::Str(s.stage.to_string())),
+                    ("start_us".to_string(), Json::Num(s.start_us as f64)),
+                    ("dur_us".to_string(), Json::Num(s.dur_us as f64)),
+                ])
+            })
+            .collect();
+        let mut obj = vec![
+            ("format".to_string(), Json::Str(TRACE_FORMAT.to_string())),
+            ("trace".to_string(), Json::Str(self.id.clone())),
+            ("op".to_string(), Json::Str(self.op.to_string())),
+            ("total_us".to_string(), Json::Num(self.t0.elapsed().as_micros() as f64)),
+            ("spans".to_string(), Json::Arr(spans)),
+        ];
+        for (k, v) in &self.fields {
+            obj.push((k.to_string(), v.clone()));
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// Append-mode JSONL sink shared by a process's request handlers.
+/// Writes take a short mutex (one line render + one buffered write);
+/// flushed per line so a killed daemon loses at most the in-flight one.
+/// IO errors are swallowed after the first (tracing must never take
+/// down serving) — the error is reported once at `warn`.
+pub struct TraceSink {
+    path: String,
+    out: Mutex<SinkState>,
+}
+
+struct SinkState {
+    w: BufWriter<std::fs::File>,
+    failed: bool,
+}
+
+impl TraceSink {
+    /// Open (append/create) a trace log at `path`.
+    pub fn open(path: &str) -> Result<TraceSink> {
+        let f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open trace log {path}"))?;
+        Ok(TraceSink {
+            path: path.to_string(),
+            out: Mutex::new(SinkState { w: BufWriter::new(f), failed: false }),
+        })
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Append one trace line.
+    pub fn write(&self, trace: &Trace) {
+        let line = trace.to_json().to_string_compact();
+        let mut s = self.out.lock().unwrap();
+        if s.failed {
+            return;
+        }
+        let res = writeln!(s.w, "{line}").and_then(|_| s.w.flush());
+        if let Err(e) = res {
+            s.failed = true;
+            crate::log_warn!("trace log {}: write failed ({e}); tracing disabled", self.path);
+        }
+    }
+}
+
+/// Per-stage aggregate over one parsed trace log.
+#[derive(Debug)]
+pub struct StageSummary {
+    pub stage: String,
+    pub count: usize,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub total_ms: f64,
+}
+
+/// Parse a `hsdag-trace-v1` JSONL log into per-stage summaries plus the
+/// request-total distribution (stage name `"total"`, sorted last).
+/// Lines that fail to parse or carry another format are counted into
+/// `skipped`, not fatal — logs may interleave with other output.
+pub fn summarize_lines(text: &str) -> (Vec<StageSummary>, usize) {
+    let mut stages: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut totals: Vec<f64> = Vec::new();
+    let mut skipped = 0usize;
+    let mut push = |name: &str, us: f64, stages: &mut Vec<(String, Vec<f64>)>| {
+        match stages.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => v.push(us),
+            None => stages.push((name.to_string(), vec![us])),
+        }
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let doc = match Json::parse(line) {
+            Ok(d) => d,
+            Err(_) => {
+                skipped += 1;
+                continue;
+            }
+        };
+        if doc.get("format").and_then(|f| f.as_str()) != Some(TRACE_FORMAT) {
+            skipped += 1;
+            continue;
+        }
+        if let Some(t) = doc.get("total_us").and_then(|v| v.as_f64()) {
+            totals.push(t);
+        }
+        if let Some(spans) = doc.get("spans").and_then(|s| s.as_arr()) {
+            for sp in spans {
+                let stage = sp.get("stage").and_then(|s| s.as_str()).unwrap_or("?");
+                let dur = sp.get("dur_us").and_then(|d| d.as_f64()).unwrap_or(0.0);
+                push(stage, dur, &mut stages);
+            }
+        }
+    }
+    stages.sort_by(|a, b| a.0.cmp(&b.0));
+    if !totals.is_empty() {
+        stages.push(("total".to_string(), totals));
+    }
+    let out = stages
+        .into_iter()
+        .map(|(stage, v)| StageSummary {
+            stage,
+            count: v.len(),
+            p50_us: stats::percentile(&v, 50.0),
+            p95_us: stats::percentile(&v, 95.0),
+            p99_us: stats::percentile(&v, 99.0),
+            max_us: v.iter().cloned().fold(0.0, f64::max),
+            total_ms: v.iter().sum::<f64>() / 1000.0,
+        })
+        .collect();
+    (out, skipped)
+}
+
+/// `hsdag trace summarize <log>`: render the per-stage latency table.
+pub fn summarize_file(path: &Path) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read trace log {}", path.display()))?;
+    let (stages, skipped) = summarize_lines(&text);
+    if stages.is_empty() {
+        return Ok(format!(
+            "no hsdag-trace-v1 lines in {} ({} line(s) skipped)\n",
+            path.display(),
+            skipped
+        ));
+    }
+    let mut out = String::new();
+    let requests = stages.last().map(|s| s.count).unwrap_or(0);
+    out.push_str(&format!("trace summary: {} ({} request(s)", path.display(), requests));
+    if skipped > 0 {
+        out.push_str(&format!(", {skipped} non-trace line(s) skipped"));
+    }
+    out.push_str(")\n");
+    out.push_str(&format!(
+        "{:<12} {:>7} {:>12} {:>12} {:>12} {:>12} {:>12}\n",
+        "stage", "count", "p50 us", "p95 us", "p99 us", "max us", "total ms"
+    ));
+    for s in &stages {
+        out.push_str(&format!(
+            "{:<12} {:>7} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.2}\n",
+            s.stage, s.count, s.p50_us, s.p95_us, s.p99_us, s.max_us, s.total_ms
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_renders_schema_fields() {
+        let mut t = Trace::new("abc123".to_string(), "place");
+        let s = t.begin();
+        t.end("cache", s);
+        t.field("provenance", Json::Str("policy".to_string()));
+        let doc = t.to_json();
+        assert_eq!(doc.get("format").and_then(|f| f.as_str()), Some(TRACE_FORMAT));
+        assert_eq!(doc.get("trace").and_then(|f| f.as_str()), Some("abc123"));
+        assert_eq!(doc.get("op").and_then(|f| f.as_str()), Some("place"));
+        let spans = doc.get("spans").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].get("stage").and_then(|s| s.as_str()), Some("cache"));
+        assert_eq!(doc.get("provenance").and_then(|f| f.as_str()), Some("policy"));
+        // Round-trips through the parser.
+        assert!(Json::parse(&doc.to_string_compact()).is_ok());
+    }
+
+    #[test]
+    fn mint_ids_are_distinct_and_hex() {
+        let a = mint_id();
+        let b = mint_id();
+        assert_ne!(a, b);
+        assert_eq!(a.len(), 16);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn summarize_aggregates_per_stage() {
+        let mut log = String::new();
+        for dur in [100.0, 200.0, 300.0] {
+            let mut t = Trace::new(mint_id(), "place");
+            t.span_before_start("queue", dur as u64);
+            let s = t.begin();
+            t.end("rollout", s);
+            log.push_str(&t.to_json().to_string_compact());
+            log.push('\n');
+        }
+        log.push_str("not json\n");
+        let (stages, skipped) = summarize_lines(&log);
+        assert_eq!(skipped, 1);
+        let queue = stages.iter().find(|s| s.stage == "queue").unwrap();
+        assert_eq!(queue.count, 3);
+        assert_eq!(queue.p50_us, 200.0);
+        assert_eq!(queue.max_us, 300.0);
+        assert_eq!(stages.last().unwrap().stage, "total");
+        assert_eq!(stages.last().unwrap().count, 3);
+    }
+
+    #[test]
+    fn sink_appends_parseable_lines() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("hsdag-trace-test-{}.jsonl", mint_id()));
+        let sink = TraceSink::open(path.to_str().unwrap()).unwrap();
+        let mut t = Trace::new(mint_id(), "place");
+        t.span_before_start("queue", 5);
+        sink.write(&t);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        assert!(Json::parse(text.lines().next().unwrap()).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -584,7 +584,7 @@ impl BackendFactory {
                 match pjrt {
                     Ok(backend) => Ok(backend),
                     Err(e) if self.auto => {
-                        eprintln!(
+                        crate::log_warn!(
                             "note: auto backend falling back to native for {}: {e:#}",
                             env.workload.spec
                         );

@@ -6,7 +6,7 @@
 use anyhow::{Context, Result};
 
 use super::env::Env;
-use super::hsdag::{argmax, sample_softmax, StepOutcome};
+use super::hsdag::{argmax, mean_entropy, sample_softmax, StepOutcome};
 use super::search::{reinforce_coefficients, SearchResult, Tracker};
 use crate::config::Config;
 use crate::runtime::{Engine, ParamStore, Tensor};
@@ -166,6 +166,7 @@ impl BaselineAgent {
         }
         Ok(StepOutcome {
             n_groups: actions.len(),
+            entropy: mean_entropy(&logits, env.n_nodes, nd, self.cfg.temperature),
             actions,
             latency,
             det_latency: report.makespan,
@@ -225,9 +226,11 @@ impl BaselineAgent {
                 // Infeasible (OOM) placements never become "best".
                 let det = if o.feasible { o.det_latency } else { f64::INFINITY };
                 tracker.observe(&o.actions, det, o.reward);
+                tracker.observe_entropy(o.entropy);
             }
             if let Some(loss) = self.update(env, engine)? {
                 tracker.record_loss(loss as f64);
+                tracker.record_param_norm(self.params.l2_norm());
             }
             tracker.end_episode(ep);
         }

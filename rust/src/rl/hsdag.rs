@@ -97,6 +97,12 @@ pub struct StepOutcome {
     /// earn `Config::oom_penalty` as their reward and are never tracked
     /// as the best placement.
     pub feasible: bool,
+    /// Mean policy entropy (nats) of the per-group device distributions
+    /// this step sampled from, computed deterministically from the placer
+    /// logits at the sampling temperature. Telemetry only — never feeds
+    /// back into training or sampling. NaN for agents that don't report
+    /// it.
+    pub entropy: f64,
 }
 
 /// The HSDAG policy agent.
@@ -229,6 +235,7 @@ impl HsdagAgent {
                 argmax(row)
             };
         }
+        let entropy = mean_entropy(&logits, part.n_groups, nd, self.cfg.temperature);
         let actions: Vec<usize> = part.cluster_of.iter().map(|&c| group_devices[c]).collect();
         let report = env.report(&actions)?;
         let feasible = report.feasible();
@@ -292,6 +299,7 @@ impl HsdagAgent {
             reward,
             n_groups: part.n_groups,
             feasible,
+            entropy,
         })
     }
 
@@ -363,8 +371,10 @@ impl HsdagAgent {
         // pool. Serving ranks placements by deterministic makespan, so no
         // measurement noise.
         let mut actions_all = Vec::with_capacity(b);
+        let mut entropy_all = Vec::with_capacity(b);
         for (bi, part) in parts.iter().enumerate() {
             let logits = &logits_all[bi];
+            entropy_all.push(mean_entropy(logits, part.n_groups, nd, self.cfg.temperature));
             let mut group_devices = vec![0usize; part.n_groups];
             for g in 0..part.n_groups {
                 let row = &logits[g * nd..(g + 1) * nd];
@@ -382,8 +392,8 @@ impl HsdagAgent {
         let reports = env.report_many(&action_refs)?;
 
         let mut outs = Vec::with_capacity(b);
-        for ((actions, report), part) in
-            actions_all.into_iter().zip(reports).zip(parts.iter())
+        for (bi, ((actions, report), part)) in
+            actions_all.into_iter().zip(reports).zip(parts.iter()).enumerate()
         {
             let feasible = report.feasible();
             let reward = env.reward_with_penalty(&report, report.makespan, self.cfg.oom_penalty);
@@ -394,6 +404,7 @@ impl HsdagAgent {
                 reward,
                 n_groups: part.n_groups,
                 feasible,
+                entropy: entropy_all[bi],
             });
         }
         self.last_partition = parts.into_iter().next();
@@ -454,10 +465,12 @@ impl HsdagAgent {
                 // placements are never candidates for "best".
                 let det = if o.feasible { o.det_latency } else { f64::INFINITY };
                 tracker.observe(&o.actions, det, o.reward);
+                tracker.observe_entropy(o.entropy);
             }
             if self.buffer.full() {
                 if let Some(loss) = self.update(env)? {
                     tracker.record_loss(loss as f64);
+                    tracker.record_param_norm(self.backend.params().l2_norm());
                 }
             }
             tracker.end_episode(ep);
@@ -490,6 +503,35 @@ pub fn sample_softmax(logits: &[f32], temperature: f64, rng: &mut Rng) -> usize 
     let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let weights: Vec<f64> = logits.iter().map(|&l| (((l - mx) / t) as f64).exp()).collect();
     rng.categorical(&weights)
+}
+
+/// Mean Shannon entropy (nats) of the first `n_groups` per-group device
+/// distributions softmax(row / temperature) in a `[groups, nd]` logits
+/// plane. Deterministic in the logits — draws nothing from any RNG — so
+/// reporting it cannot perturb a seeded trajectory. Returns NaN when
+/// there are no groups.
+pub fn mean_entropy(logits: &[f32], n_groups: usize, nd: usize, temperature: f64) -> f64 {
+    if n_groups == 0 || nd == 0 {
+        return f64::NAN;
+    }
+    let t = temperature.max(1e-6);
+    let mut total = 0.0;
+    for g in 0..n_groups {
+        let row = &logits[g * nd..(g + 1) * nd];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        // H = ln Z - (1/Z) * sum w_i * s_i with s_i = (l_i - mx)/t,
+        // w_i = exp(s_i): numerically stable for any logit scale.
+        let mut z = 0.0;
+        let mut ws = 0.0;
+        for &l in row {
+            let s = (l as f64 - mx) / t;
+            let w = s.exp();
+            z += w;
+            ws += w * s;
+        }
+        total += z.ln() - ws / z;
+    }
+    total / n_groups as f64
 }
 
 /// Argmax index (ties to the first).

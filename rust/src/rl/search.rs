@@ -13,6 +13,12 @@ pub struct CurvePoint {
     pub mean_reward: f64,
     /// Last training loss in this episode (NaN if no update yet).
     pub loss: f64,
+    /// Mean policy entropy (nats per group) over the episode's sampled
+    /// steps (NaN when the agent does not report entropy).
+    pub entropy: f64,
+    /// L2 norm of the policy parameters after the episode's last update
+    /// (NaN if no update yet or the backend does not expose parameters).
+    pub param_norm: f64,
 }
 
 /// Outcome of a policy search.
@@ -42,7 +48,9 @@ pub struct Tracker {
     pub best_latency: f64,
     pub curve: Vec<CurvePoint>,
     episode_rewards: Vec<f64>,
+    episode_entropy: Vec<f64>,
     last_loss: f64,
+    last_param_norm: f64,
 }
 
 impl Tracker {
@@ -52,7 +60,9 @@ impl Tracker {
             best_latency: f64::INFINITY,
             curve: Vec::new(),
             episode_rewards: Vec::new(),
+            episode_entropy: Vec::new(),
             last_loss: f64::NAN,
+            last_param_norm: f64::NAN,
         }
     }
 
@@ -64,8 +74,22 @@ impl Tracker {
         self.episode_rewards.push(reward);
     }
 
+    /// Record one step's mean policy entropy (nats per group). Purely
+    /// observational — agents that don't report entropy simply never call
+    /// this and the curve carries NaN.
+    pub fn observe_entropy(&mut self, entropy: f64) {
+        if entropy.is_finite() {
+            self.episode_entropy.push(entropy);
+        }
+    }
+
     pub fn record_loss(&mut self, loss: f64) {
         self.last_loss = loss;
+    }
+
+    /// Record the parameter L2 norm after an update (telemetry only).
+    pub fn record_param_norm(&mut self, norm: f64) {
+        self.last_param_norm = norm;
     }
 
     pub fn end_episode(&mut self, episode: usize) {
@@ -74,13 +98,21 @@ impl Tracker {
         } else {
             self.episode_rewards.iter().sum::<f64>() / self.episode_rewards.len() as f64
         };
+        let entropy = if self.episode_entropy.is_empty() {
+            f64::NAN
+        } else {
+            self.episode_entropy.iter().sum::<f64>() / self.episode_entropy.len() as f64
+        };
         self.curve.push(CurvePoint {
             episode,
             best_latency: self.best_latency,
             mean_reward,
             loss: self.last_loss,
+            entropy,
+            param_norm: self.last_param_norm,
         });
         self.episode_rewards.clear();
+        self.episode_entropy.clear();
     }
 
     pub fn finish(self, wall_secs: f64, peak_bytes: usize) -> SearchResult {
@@ -140,6 +172,27 @@ mod tests {
         assert_eq!(t.best_latency, 1.0);
         assert_eq!(t.best_actions, vec![1, 1]);
         assert!((t.curve[0].mean_reward - (0.5 + 1.0 + 0.7) / 3.0).abs() < 1e-12);
+        // No entropy/param-norm reported -> NaN placeholders.
+        assert!(t.curve[0].entropy.is_nan());
+        assert!(t.curve[0].param_norm.is_nan());
+    }
+
+    #[test]
+    fn tracker_averages_entropy_per_episode() {
+        let mut t = Tracker::new();
+        t.observe(&[0], 1.0, 1.0);
+        t.observe_entropy(0.6);
+        t.observe_entropy(0.2);
+        t.observe_entropy(f64::NAN); // ignored
+        t.record_param_norm(3.5);
+        t.end_episode(0);
+        assert!((t.curve[0].entropy - 0.4).abs() < 1e-12);
+        assert_eq!(t.curve[0].param_norm, 3.5);
+        // Entropy buffer resets per episode.
+        t.observe(&[0], 1.0, 1.0);
+        t.end_episode(1);
+        assert!(t.curve[1].entropy.is_nan());
+        assert_eq!(t.curve[1].param_norm, 3.5); // norm persists until next update
     }
 
     #[test]

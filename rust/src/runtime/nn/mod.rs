@@ -63,6 +63,9 @@ pub mod policy;
 
 pub use policy::{NativeBatch, NativePolicy};
 
+use std::sync::OnceLock;
+
+use crate::obs::metrics::{self, KernelStats};
 use crate::util::pool;
 
 /// Reduction-dimension unroll of the dense matmul kernels. Chained adds
@@ -116,6 +119,10 @@ pub fn matmul_into_workers(
     if n == 0 {
         return;
     }
+    // Opt-in profiling (`--profile`): one relaxed load when off. Strictly
+    // observational — the computation below never sees the guard.
+    static STATS: OnceLock<&'static KernelStats> = OnceLock::new();
+    let _t = metrics::profile(&STATS, "kernel.matmul", 2 * (m * k * n) as u64);
     pool::for_each_row_band(c, m, n, workers, |row0, band| {
         for (r, crow) in band.chunks_exact_mut(n).enumerate() {
             let i = row0 + r;
@@ -220,6 +227,8 @@ pub fn matmul_at_b_acc_workers(
     if n == 0 {
         return;
     }
+    static STATS: OnceLock<&'static KernelStats> = OnceLock::new();
+    let _t = metrics::profile(&STATS, "kernel.matmul_at_b", 2 * (m * k * n) as u64);
     pool::for_each_row_band(c, k, n, workers, |k0, band| {
         for i in 0..m {
             let arow = &a[i * k..(i + 1) * k];
@@ -284,6 +293,8 @@ pub fn matmul_a_bt_into_workers(
     if k == 0 {
         return;
     }
+    static STATS: OnceLock<&'static KernelStats> = OnceLock::new();
+    let _t = metrics::profile(&STATS, "kernel.matmul_a_bt", 2 * (m * n * k) as u64);
     pool::for_each_row_band(c, m, k, workers, |row0, band| {
         for (r, crow) in band.chunks_exact_mut(k).enumerate() {
             let i = row0 + r;
@@ -607,6 +618,8 @@ pub fn aggregate_bias_relu_into_workers(
     if cols == 0 {
         return;
     }
+    static STATS: OnceLock<&'static KernelStats> = OnceLock::new();
+    let _t = metrics::profile(&STATS, "kernel.aggregate", 2 * (csr.nnz() * cols) as u64);
     pool::for_each_row_band(out, csr.rows, cols, workers, |row0, band| {
         for (r, dst) in band.chunks_exact_mut(cols).enumerate() {
             let i = row0 + r;
@@ -825,6 +838,26 @@ mod tests {
         let b = [7., 8., 9., 10., 11., 12.];
         let c = matmul(&a, &b, 2, 3, 2);
         assert_eq!(c, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn profiling_is_observationally_invisible() {
+        // With --profile on, kernels record call/ns/flops counters but
+        // produce bit-identical outputs; with it off, no counts accrue.
+        let _g = metrics::lock_test_guard();
+        let mut rng = Rng::new(11);
+        let a = random_mat(&mut rng, 8 * 5, 0.0);
+        let b = random_mat(&mut rng, 5 * 7, 0.0);
+        let off = matmul(&a, &b, 8, 5, 7);
+        let calls = metrics::counter("kernel.matmul.calls");
+        let flops = metrics::counter("kernel.matmul.flops");
+        let (c0, f0) = (calls.get(), flops.get());
+        metrics::set_profiling(true);
+        let on = matmul(&a, &b, 8, 5, 7);
+        metrics::set_profiling(false);
+        assert_eq!(off, on);
+        assert!(calls.get() >= c0 + 1);
+        assert!(flops.get() >= f0 + 2 * 8 * 5 * 7);
     }
 
     #[test]

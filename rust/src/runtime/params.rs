@@ -173,6 +173,18 @@ impl ParamStore {
         self.params.iter().map(|p| p.numel()).sum()
     }
 
+    /// L2 norm over all learnable scalars (f64 accumulation). Telemetry
+    /// for the training run log's `param_norm` column.
+    pub fn l2_norm(&self) -> f64 {
+        let mut ss = 0.0f64;
+        for p in &self.params {
+            for &x in p.as_f32() {
+                ss += x as f64 * x as f64;
+            }
+        }
+        ss.sqrt()
+    }
+
     /// Assemble the (params..., m..., v..., step) prefix of a train call.
     pub fn train_prefix(&self) -> Vec<Tensor> {
         let mut out = Vec::with_capacity(3 * self.n() + 1);
@@ -340,6 +352,20 @@ out loss
             ps.names.clone()
         )
         .is_err());
+    }
+
+    #[test]
+    fn l2_norm_sums_all_tensors() {
+        let mut ps = ParamStore {
+            params: vec![Tensor::f32(&[2], vec![3.0, 0.0]), Tensor::f32(&[1], vec![4.0])],
+            m: vec![Tensor::zeros(DType::F32, &[2]), Tensor::zeros(DType::F32, &[1])],
+            v: vec![Tensor::zeros(DType::F32, &[2]), Tensor::zeros(DType::F32, &[1])],
+            step: 0.0,
+            names: vec!["a".into(), "b".into()],
+        };
+        assert!((ps.l2_norm() - 5.0).abs() < 1e-12);
+        ps.params[0].as_f32_mut()[1] = 12.0;
+        assert!((ps.l2_norm() - 13.0).abs() < 1e-12);
     }
 
     #[test]

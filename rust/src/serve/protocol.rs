@@ -7,8 +7,9 @@
 //! {"op": "place", "workload": "resnet"}
 //! {"op": "place", "graph": {"format": "hsdag-graph-v1", ...},
 //!  "id": 7, "budget_ms": 5.0, "rollouts": 8, "no_cache": true,
-//!  "tenant": "team-a"}
+//!  "tenant": "team-a", "trace": "7c9e1f20aa314d56"}
 //! {"op": "stats"}
+//! {"op": "metrics"}
 //! {"op": "ctrl", "action": "shutdown"}
 //! {"op": "ctrl", "action": "reload", "checkpoint": "/path/new.ckpt.json"}
 //! {"op": "ctrl", "action": "clear-cache"}
@@ -22,8 +23,15 @@
 //! `rollouts` (stochastic policy rollouts on top of the greedy one),
 //! `no_cache` (bypass the placement cache in both directions),
 //! `fast_math` (run the policy with the opt-in lane kernels; such
-//! answers never touch the cache) and `tenant` (a caller label counted
-//! per tenant in `stats`).
+//! answers never touch the cache), `tenant` (a caller label counted
+//! per tenant in `stats`) and `trace` (a request-trace id, minted by
+//! the client or the router and echoed in the response; a shard with
+//! `--trace-log` writes a `hsdag-trace-v1` span line under this id —
+//! see [`crate::obs::trace`]).
+//!
+//! `metrics` dumps the process-wide [`crate::obs::metrics`] registry
+//! (counters, gauges, log-bucketed histograms) as a `hsdag-metrics-v1`
+//! document wrapped in the usual `ok`/`op` envelope.
 //!
 //! `ctrl: reload` hot-swaps the served checkpoint with zero downtime
 //! (`checkpoint` optional — it defaults to the path the daemon was
@@ -58,6 +66,8 @@ use crate::util::json::Json;
 pub enum Request {
     Place(PlaceRequest),
     Stats,
+    /// Dump the process-wide metrics registry.
+    Metrics,
     Shutdown,
     /// Hot-reload the served checkpoint (optional explicit path; `None`
     /// re-reads the path the daemon was started with).
@@ -87,6 +97,10 @@ pub struct PlaceRequest {
     pub fast_math: bool,
     /// Caller label for the per-tenant request counters in `stats`.
     pub tenant: Option<String>,
+    /// Request-trace id (client- or router-minted), echoed in the
+    /// response and stamped onto `hsdag-trace-v1` span lines. Purely
+    /// observational: it never influences placement or caching.
+    pub trace: Option<String>,
 }
 
 /// Parse one request line.
@@ -95,9 +109,10 @@ pub fn parse_request(line: &str) -> Result<Request> {
     let op = doc
         .get("op")
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("missing string \"op\" (place | stats | ctrl)"))?;
+        .ok_or_else(|| anyhow!("missing string \"op\" (place | stats | metrics | ctrl)"))?;
     match op {
         "stats" => Ok(Request::Stats),
+        "metrics" => Ok(Request::Metrics),
         "ctrl" => match doc.get("action").and_then(Json::as_str) {
             Some("shutdown") => Ok(Request::Shutdown),
             Some("reload") => {
@@ -162,6 +177,14 @@ pub fn parse_request(line: &str) -> Result<Request> {
                         .to_string(),
                 ),
             };
+            let trace = match doc.get("trace") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .ok_or_else(|| anyhow!("\"trace\" must be a string id"))?
+                        .to_string(),
+                ),
+            };
             Ok(Request::Place(PlaceRequest {
                 source,
                 id: doc.get("id").cloned(),
@@ -170,9 +193,10 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 no_cache,
                 fast_math,
                 tenant,
+                trace,
             }))
         }
-        other => bail!("unknown op '{other}' (known: place | stats | ctrl)"),
+        other => bail!("unknown op '{other}' (known: place | stats | metrics | ctrl)"),
     }
 }
 
@@ -235,8 +259,28 @@ pub fn render_place_request_for(
     Json::Obj(fields).to_string_compact()
 }
 
+/// Return `line` with its `trace` field set to `id` (replacing any
+/// existing one). The router uses this to mint-and-propagate trace ids
+/// without re-rendering the request from its parsed form — every other
+/// field passes through byte-for-byte.
+pub fn with_trace_id(line: &str, id: &str) -> Result<String> {
+    match Json::parse(line.trim()).map_err(|e| anyhow!("invalid request JSON: {e}"))? {
+        Json::Obj(mut fields) => {
+            fields.retain(|(k, _)| k != "trace");
+            fields.push(("trace".to_string(), Json::Str(id.to_string())));
+            Ok(Json::Obj(fields).to_string_compact())
+        }
+        _ => bail!("request line is not a JSON object"),
+    }
+}
+
 pub fn render_stats_request() -> String {
     Json::Obj(vec![("op".to_string(), Json::Str("stats".to_string()))]).to_string_compact()
+}
+
+/// Render a `metrics` request line (dump the registry).
+pub fn render_metrics_request() -> String {
+    Json::Obj(vec![("op".to_string(), Json::Str("metrics".to_string()))]).to_string_compact()
 }
 
 pub fn render_shutdown_request() -> String {
@@ -319,14 +363,24 @@ impl PlaceOutcome {
     }
 }
 
-/// Render a `place` response line.
-pub fn render_place_response(id: Option<&Json>, o: &PlaceOutcome, service_ms: f64) -> String {
+/// Render a `place` response line. `trace` echoes the request's trace
+/// id (present exactly when the request was traced) so callers can
+/// correlate responses with `hsdag-trace-v1` span lines.
+pub fn render_place_response(
+    id: Option<&Json>,
+    o: &PlaceOutcome,
+    service_ms: f64,
+    trace: Option<&str>,
+) -> String {
     let mut fields = vec![
         ("ok".to_string(), Json::Bool(true)),
         ("op".to_string(), Json::Str("place".to_string())),
     ];
     if let Some(v) = id {
         fields.push(("id".to_string(), v.clone()));
+    }
+    if let Some(t) = trace {
+        fields.push(("trace".to_string(), Json::Str(t.to_string())));
     }
     fields.extend([
         ("fingerprint".to_string(), Json::Str(o.fingerprint.clone())),
@@ -365,8 +419,17 @@ pub struct StatsView {
     pub cache_capacity: usize,
     pub qps: f64,
     pub cache_hit_rate: f64,
+    /// Service-time quantiles, estimated from the log-bucketed
+    /// histogram (microsecond buckets — no sample window is kept or
+    /// sorted; see `obs::metrics::LogHist`).
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// The service-time histogram itself: non-empty `(lo_us, hi_us,
+    /// count)` buckets, inclusive bounds.
+    pub service_hist: Vec<(u64, u64, u64)>,
+    /// Per-stage latency breakdown of the place pipeline (queue wait,
+    /// cache lookup, policy rollouts, trivial simulation, selection).
+    pub stages: Vec<StageStat>,
     /// Testbed id the shard serves (routers and sharded clients discover
     /// it here so their fingerprints agree with the shard's).
     pub testbed: String,
@@ -386,6 +449,28 @@ pub struct StatsView {
     pub tenants: Vec<(String, u64)>,
 }
 
+/// One pipeline stage's latency aggregate in a `stats` response.
+#[derive(Debug, Clone)]
+pub struct StageStat {
+    pub name: &'static str,
+    pub count: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Render the `metrics` response: the whole `hsdag-metrics-v1` registry
+/// dump wrapped in the protocol's `ok`/`op` envelope.
+pub fn render_metrics_response() -> String {
+    let mut fields = vec![
+        ("ok".to_string(), Json::Bool(true)),
+        ("op".to_string(), Json::Str("metrics".to_string())),
+    ];
+    if let Json::Obj(body) = crate::obs::metrics::registry_json() {
+        fields.extend(body);
+    }
+    Json::Obj(fields).to_string_compact()
+}
+
 pub fn render_stats_response(s: &StatsView) -> String {
     Json::Obj(vec![
         ("ok".to_string(), Json::Bool(true)),
@@ -403,6 +488,39 @@ pub fn render_stats_response(s: &StatsView) -> String {
         ("cache_hit_rate".to_string(), Json::Num(s.cache_hit_rate)),
         ("p50_ms".to_string(), Json::Num(s.p50_ms)),
         ("p99_ms".to_string(), Json::Num(s.p99_ms)),
+        (
+            "service_us_hist".to_string(),
+            Json::Arr(
+                s.service_hist
+                    .iter()
+                    .map(|&(lo, hi, c)| {
+                        Json::Arr(vec![
+                            Json::Num(lo as f64),
+                            Json::Num(hi.min(1 << 62) as f64),
+                            Json::Num(c as f64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "stages".to_string(),
+            Json::Obj(
+                s.stages
+                    .iter()
+                    .map(|st| {
+                        (
+                            st.name.to_string(),
+                            Json::Obj(vec![
+                                ("count".to_string(), Json::Num(st.count as f64)),
+                                ("p50_ms".to_string(), Json::Num(st.p50_ms)),
+                                ("p99_ms".to_string(), Json::Num(st.p99_ms)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
         ("testbed".to_string(), Json::Str(s.testbed.clone())),
         (
             "checkpoint_generation".to_string(),
@@ -555,6 +673,53 @@ mod tests {
     fn stats_and_shutdown_roundtrip() {
         assert!(matches!(parse_request(&render_stats_request()).unwrap(), Request::Stats));
         assert!(matches!(parse_request(&render_shutdown_request()).unwrap(), Request::Shutdown));
+        assert!(matches!(parse_request(&render_metrics_request()).unwrap(), Request::Metrics));
+    }
+
+    #[test]
+    fn trace_id_parses_and_injects() {
+        // A trace id parses out of a place request...
+        let line = r#"{"op": "place", "workload": "seq:8", "trace": "abc123"}"#;
+        match parse_request(line).unwrap() {
+            Request::Place(p) => assert_eq!(p.trace.as_deref(), Some("abc123")),
+            _ => panic!("wrong op"),
+        }
+        // ...defaults to None...
+        let plain = render_place_request(Some("seq:8"), None, None, None, None, false);
+        match parse_request(&plain).unwrap() {
+            Request::Place(p) => assert!(p.trace.is_none()),
+            _ => panic!("wrong op"),
+        }
+        // ...and a non-string id is a parse error.
+        let err = parse_request(r#"{"op": "place", "workload": "a", "trace": 7}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("trace"), "{err:#}");
+        // Injection adds the field without disturbing the others, and
+        // replaces an existing id rather than duplicating the key.
+        let traced = with_trace_id(&plain, "deadbeef01234567").unwrap();
+        match parse_request(&traced).unwrap() {
+            Request::Place(p) => {
+                assert_eq!(p.trace.as_deref(), Some("deadbeef01234567"));
+                assert!(matches!(p.source, PlaceSource::Spec(ref s) if s == "seq:8"));
+            }
+            _ => panic!("wrong op"),
+        }
+        let retraced = with_trace_id(&traced, "ffff").unwrap();
+        match parse_request(&retraced).unwrap() {
+            Request::Place(p) => assert_eq!(p.trace.as_deref(), Some("ffff")),
+            _ => panic!("wrong op"),
+        }
+        assert!(with_trace_id("[1,2]", "x").is_err());
+    }
+
+    #[test]
+    fn metrics_response_is_valid_document() {
+        crate::obs::metrics::counter("test.protocol.metric").inc();
+        let line = render_metrics_response();
+        let doc = parse_response(&line).unwrap();
+        assert_eq!(doc.get("op").and_then(Json::as_str), Some("metrics"));
+        assert_eq!(doc.get("format").and_then(Json::as_str), Some("hsdag-metrics-v1"));
+        assert!(matches!(doc.get("counters"), Some(Json::Obj(_))));
+        assert!(matches!(doc.get("histograms"), Some(Json::Obj(_))));
     }
 
     #[test]
@@ -636,10 +801,15 @@ mod tests {
             provenance: Provenance::Cache,
         };
         let id = Json::Str("req-1".to_string());
-        let line = render_place_response(Some(&id), &o, 1.5);
+        let line = render_place_response(Some(&id), &o, 1.5, None);
         let doc = parse_response(&line).unwrap();
         assert_eq!(doc.get("provenance").unwrap().as_str(), Some("cache"));
         assert_eq!(doc.get("id").unwrap().as_str(), Some("req-1"));
+        assert!(doc.get("trace").is_none());
+        // A traced request's id is echoed back.
+        let traced = render_place_response(None, &o, 1.5, Some("abc123"));
+        let doc = parse_response(&traced).unwrap();
+        assert_eq!(doc.get("trace").unwrap().as_str(), Some("abc123"));
         assert_eq!(doc.get("latency_s").unwrap().as_f64(), Some(0.01));
         assert!((doc.get("speedup_pct").unwrap().as_f64().unwrap() - 75.0).abs() < 1e-9);
         assert_eq!(doc.get("placement").unwrap().as_arr().unwrap().len(), 3);

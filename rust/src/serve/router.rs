@@ -41,16 +41,18 @@
 //! scatter is lock-safe and a fleet `stats` costs the *slowest* shard's
 //! round-trip instead of the sum of all of them.
 
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::client::{roundtrip, Connection};
 use super::fingerprint::fingerprint;
-use super::protocol::{self, PlaceSource, Request};
-use super::server::LineHandler;
+use super::protocol::{self, PlaceRequest, PlaceSource, Request};
+use super::server::{LineHandler, RequestCtx};
 use crate::models::Workload;
+use crate::obs::metrics;
+use crate::obs::trace::{self, Trace, TraceSink};
 use crate::util::json::Json;
 use crate::util::pool;
 
@@ -157,6 +159,26 @@ struct RouterInner {
     busy_rejects: u64,
 }
 
+/// Interned registry handles for the routing hot path (see
+/// `obs::metrics`; resolved once at router construction).
+struct RouterMetrics {
+    requests: &'static metrics::Counter,
+    errors: &'static metrics::Counter,
+    shard_busy: &'static metrics::Counter,
+    forward_us: &'static metrics::Histogram,
+}
+
+impl RouterMetrics {
+    fn intern() -> RouterMetrics {
+        RouterMetrics {
+            requests: metrics::counter("router.requests"),
+            errors: metrics::counter("router.errors"),
+            shard_busy: metrics::counter("router.shard_busy"),
+            forward_us: metrics::histogram("router.forward_us"),
+        }
+    }
+}
+
 /// A routing front end over a fixed shard list. See the module docs for
 /// the semantics of each op.
 pub struct Router {
@@ -167,6 +189,12 @@ pub struct Router {
     /// steady-state routing costs no TCP handshakes.
     pools: Vec<Mutex<Vec<Connection>>>,
     stats: Mutex<RouterInner>,
+    metrics: RouterMetrics,
+    /// When set (`--trace-log` on the router), each routed `place`
+    /// request gets a trace id minted here (unless the client sent one),
+    /// propagated to the owning shard on the wire, and a router-side
+    /// `hsdag-trace-v1` line (fingerprint + forward spans) appended.
+    trace_sink: Option<Arc<TraceSink>>,
 }
 
 impl Router {
@@ -181,7 +209,21 @@ impl Router {
         let testbed = discover_testbed(&shards, timeout)?;
         let pools = shards.iter().map(|_| Mutex::new(Vec::new())).collect();
         let stats = Mutex::new(RouterInner { routed: vec![0; shards.len()], ..Default::default() });
-        Ok(Router { shards, testbed, timeout, pools, stats })
+        Ok(Router {
+            shards,
+            testbed,
+            timeout,
+            pools,
+            stats,
+            metrics: RouterMetrics::intern(),
+            trace_sink: None,
+        })
+    }
+
+    /// Attach a `hsdag-trace-v1` JSONL sink; call before the router is
+    /// shared. Also turns on trace-id minting for routed requests.
+    pub fn set_trace_sink(&mut self, sink: Arc<TraceSink>) {
+        self.trace_sink = Some(sink);
     }
 
     /// The testbed id discovered from the fleet.
@@ -233,11 +275,18 @@ impl Router {
     }
 
     /// Route a `place` request: fingerprint the graph the same way the
-    /// owning shard will, pick the owner, forward the *original* line
-    /// verbatim (the shard re-parses it; the router never rewrites
-    /// requests), and pass the shard's response through verbatim.
-    fn route_place(&self, line: &str, source: &PlaceSource) -> Result<String> {
-        let fp = match source {
+    /// owning shard will, pick the owner, forward the line, and pass the
+    /// shard's response through verbatim. Without a trace sink the
+    /// *original* line is forwarded byte-for-byte (the shard re-parses
+    /// it; the router never rewrites requests); with one, the single
+    /// rewrite the router is allowed is injecting the trace id it
+    /// minted, so the shard's trace line and the router's share an id.
+    fn route_place(&self, line: &str, req: &PlaceRequest) -> Result<String> {
+        let mut rtrace: Option<Trace> = self.trace_sink.as_ref().map(|_| {
+            Trace::new(req.trace.clone().unwrap_or_else(trace::mint_id), "route")
+        });
+        let t_fp = Instant::now();
+        let fp = match &req.source {
             PlaceSource::Spec(s) => {
                 let w = Workload::resolve(s)?;
                 fingerprint(&w.graph, &self.testbed)
@@ -245,13 +294,80 @@ impl Router {
             PlaceSource::Inline(g) => fingerprint(g, &self.testbed),
         };
         let shard = shard_for(fp, &self.shards);
-        let resp = self.forward(shard, line)?;
+        if let Some(t) = &mut rtrace {
+            t.end("fingerprint", t_fp);
+        }
+        // Propagate the minted id on the wire; a malformed-but-parsed
+        // line (impossible today) falls back to verbatim forwarding
+        // rather than failing the request over telemetry. Untraced
+        // requests forward the original `line` with no rewrite and no
+        // allocation.
+        let injected: Option<String> = match (&rtrace, &req.trace) {
+            (Some(t), None) => protocol::with_trace_id(line, t.id()).ok(),
+            _ => None,
+        };
+        let t_fwd = Instant::now();
+        let fwd = self.forward(shard, injected.as_deref().unwrap_or(line));
+        if let Some(t) = &mut rtrace {
+            t.end("forward", t_fwd);
+            t.field("shard", Json::Num(shard as f64));
+            t.field("addr", Json::Str(self.shards[shard].clone()));
+        }
+        self.metrics.forward_us.record(t_fwd.elapsed().as_micros() as u64);
+        let resp = match fwd {
+            Ok(r) => r,
+            Err(e) => {
+                if let (Some(t), Some(sink)) = (&mut rtrace, &self.trace_sink) {
+                    t.field("error", Json::Str(format!("{e:#}")));
+                    sink.write(t);
+                }
+                return Err(e);
+            }
+        };
+        if let (Some(t), Some(sink)) = (&mut rtrace, &self.trace_sink) {
+            sink.write(t);
+        }
         let mut s = self.stats.lock().unwrap();
         s.routed[shard] += 1;
         if protocol::is_busy_response(&resp) {
             s.shard_busy += 1;
+            self.metrics.shard_busy.inc();
         }
         Ok(resp)
+    }
+
+    /// The aggregated `metrics` response: the router's own registry dump
+    /// plus each shard's (or the error that replaced it), mirroring the
+    /// fleet `stats` shape.
+    fn render_fleet_metrics(&self) -> String {
+        let per_shard = self.fan_out(&protocol::render_metrics_request());
+        let shards_json: Vec<Json> = per_shard
+            .iter()
+            .zip(&self.shards)
+            .map(|(resp, addr)| {
+                let body = match resp {
+                    Ok(l) => Json::parse(l).unwrap_or(Json::Null),
+                    Err(e) => Json::Obj(vec![
+                        ("ok".to_string(), Json::Bool(false)),
+                        ("error".to_string(), Json::Str(format!("{e:#}"))),
+                    ]),
+                };
+                Json::Obj(vec![
+                    ("addr".to_string(), Json::Str(addr.clone())),
+                    ("metrics".to_string(), body),
+                ])
+            })
+            .collect();
+        let mut doc = match Json::parse(&protocol::render_metrics_response()) {
+            Ok(Json::Obj(fields)) => fields,
+            _ => vec![
+                ("ok".to_string(), Json::Bool(true)),
+                ("op".to_string(), Json::Str("metrics".to_string())),
+            ],
+        };
+        doc.push(("router".to_string(), Json::Bool(true)));
+        doc.push(("shards".to_string(), Json::Arr(shards_json)));
+        Json::Obj(doc).to_string_compact()
     }
 
     /// The aggregated `stats` response: the router's own counters plus
@@ -354,16 +470,23 @@ impl Router {
 
 impl LineHandler for Router {
     fn handle_line(&self, line: &str) -> (String, bool) {
+        self.handle_line_ctx(line, &RequestCtx::default())
+    }
+
+    fn handle_line_ctx(&self, line: &str, _ctx: &RequestCtx) -> (String, bool) {
         self.stats.lock().unwrap().requests += 1;
+        self.metrics.requests.inc();
         match protocol::parse_request(line) {
             Err(e) => {
                 self.stats.lock().unwrap().errors += 1;
+                self.metrics.errors.inc();
                 (protocol::render_error_response(None, &format!("{e:#}")), false)
             }
-            Ok(Request::Place(req)) => match self.route_place(line, &req.source) {
+            Ok(Request::Place(req)) => match self.route_place(line, &req) {
                 Ok(resp) => (resp, false),
                 Err(e) => {
                     self.stats.lock().unwrap().errors += 1;
+                    self.metrics.errors.inc();
                     (
                         protocol::render_error_response(req.id.as_ref(), &format!("{e:#}")),
                         false,
@@ -371,6 +494,7 @@ impl LineHandler for Router {
                 }
             },
             Ok(Request::Stats) => (self.render_fleet_stats(), false),
+            Ok(Request::Metrics) => (self.render_fleet_metrics(), false),
             Ok(Request::Reload(_)) => (self.render_fleet_ctrl("reload", line), false),
             Ok(Request::ClearCache) => (self.render_fleet_ctrl("clear-cache", line), false),
             // Shutdown stops the router only: shards are independent

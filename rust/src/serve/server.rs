@@ -33,10 +33,28 @@
 //!    `"fallback:single:<device>"`).
 //!
 //! A `stats` request reports live metrics (qps, cache hit rate, p50/p99
-//! service time over a sliding window, per-tenant request counts, the
-//! live checkpoint generation); a `ctrl: shutdown` message acknowledges,
-//! stops the accept loop, drains the workers and joins them — a clean
-//! exit, suitable for CI.
+//! service time, the service-time histogram buckets, a per-stage
+//! latency breakdown, per-tenant request counts, the live checkpoint
+//! generation); a `metrics` request dumps the process-wide
+//! [`obs::metrics`](crate::obs::metrics) registry; a `ctrl: shutdown`
+//! message acknowledges, stops the accept loop, drains the workers and
+//! joins them — a clean exit, suitable for CI.
+//!
+//! ## Observability
+//!
+//! Service and stage timings land in log₂-bucketed histograms
+//! ([`LogHist`]) under the stats mutex — O(1) per record, O(buckets)
+//! per quantile, so a `stats` call never clones or sorts a sample
+//! window while holding the lock. The same events increment the global
+//! metrics registry (sharded relaxed atomics, no lock at all). With a
+//! [`TraceSink`] attached (`--trace-log`), each `place` request emits
+//! one `hsdag-trace-v1` JSONL line with per-stage spans ([`STAGES`]:
+//! queue wait, workload/env preparation, cache lookup + single-flight,
+//! policy rollouts, trivial-candidate simulation, final selection),
+//! keyed by the request's trace id (client/router-supplied via the
+//! wire `trace` field, else minted here). All of it is strictly
+//! observational: `tests/obs.rs` pins that placements are bit-identical
+//! with telemetry on or off.
 //!
 //! ## Hot reload
 //!
@@ -90,13 +108,12 @@ use super::protocol::{
 use crate::baselines;
 use crate::config::Config;
 use crate::models::Workload;
+use crate::obs::metrics::{self, LogHist};
+use crate::obs::trace::{self, Trace, TraceSink};
 use crate::rl::{Env, HsdagAgent, NativeBackend};
 use crate::runtime::ParamStore;
 use crate::sim::Placement;
-use crate::util::stats;
-
-/// Service-time sliding window for the p50/p99 metrics.
-const SERVICE_TIME_WINDOW: usize = 4096;
+use crate::util::json::Json;
 
 /// Stochastic rollouts per batched policy pass when a latency budget is
 /// set (between chunks the deadline is re-checked; unbounded requests
@@ -106,6 +123,46 @@ const ROLLOUT_CHUNK: usize = 2;
 /// Default admission-control high-water mark (pending connections).
 pub const DEFAULT_QUEUE_DEPTH: usize = 64;
 
+/// Instrumented stages of the `place` pipeline, in pipeline order:
+/// admission-queue wait, workload/env preparation, cache lookup (incl.
+/// single-flight wait), policy rollout batches, trivial-candidate
+/// simulation, and fastest-feasible selection. These are the trace span
+/// names and the keys of the `stats` per-stage breakdown.
+pub const STAGES: [&str; N_STAGES] = ["queue", "prepare", "cache", "rollout", "simulate", "select"];
+pub const N_STAGES: usize = 6;
+const S_QUEUE: usize = 0;
+const S_PREPARE: usize = 1;
+const S_CACHE: usize = 2;
+const S_ROLLOUT: usize = 3;
+const S_SIMULATE: usize = 4;
+const S_SELECT: usize = 5;
+
+/// Close one instrumented stage: accumulate its duration into the
+/// per-request stage table and append a span to the trace (if one is
+/// being collected). Purely observational — never branches the request.
+fn note_stage(
+    stage_us: &mut [u64; N_STAGES],
+    trace: &mut Option<Trace>,
+    idx: usize,
+    started: Instant,
+) {
+    stage_us[idx] += started.elapsed().as_micros() as u64;
+    if let Some(t) = trace {
+        t.end(STAGES[idx], started);
+    }
+}
+
+/// Front-end context handed to [`LineHandler::handle_line_ctx`] —
+/// what only the transport layer can know about a request.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RequestCtx {
+    /// Microseconds the connection waited in the admission queue before
+    /// a worker picked it up. Applies to the connection's first line
+    /// (pipelined followers were never queue-blocked); 0 when the
+    /// handler is driven in-process.
+    pub queue_us: u64,
+}
+
 /// Anything that answers protocol lines — the TCP [`Server`] front end
 /// is generic over this, so one accept-loop/worker-pool/admission
 /// implementation fronts both a [`PlacementService`] shard and a
@@ -114,6 +171,14 @@ pub trait LineHandler: Send + Sync {
     /// Handle one protocol line; returns the response line and whether
     /// the handler's own shutdown was requested.
     fn handle_line(&self, line: &str) -> (String, bool);
+
+    /// [`LineHandler::handle_line`] plus front-end context (queue
+    /// wait). The TCP front end calls this; the default ignores the
+    /// context, so simple handlers only implement `handle_line`.
+    fn handle_line_ctx(&self, line: &str, ctx: &RequestCtx) -> (String, bool) {
+        let _ = ctx;
+        self.handle_line(line)
+    }
 
     /// Called by the front end when it sheds a connection past the
     /// admission high-water mark (stats hooks).
@@ -170,7 +235,6 @@ struct CacheEntry {
     trivial: Option<Arc<Vec<TrivialCandidate>>>,
 }
 
-#[derive(Default)]
 struct StatsInner {
     requests: u64,
     placements: u64,
@@ -187,8 +251,58 @@ struct StatsInner {
     busy_rejects: u64,
     /// Place requests per self-reported tenant label.
     tenants: HashMap<String, u64>,
-    service_ms: Vec<f64>,
-    ring_idx: usize,
+    /// Service-time histogram: O(1) record, O(buckets) quantile, so a
+    /// `stats` call never sorts a sample window under this mutex.
+    service_hist: LogHist,
+    /// Per-stage latency histograms, indexed like [`STAGES`].
+    stage_hists: [LogHist; N_STAGES],
+}
+
+impl Default for StatsInner {
+    fn default() -> Self {
+        StatsInner {
+            requests: 0,
+            placements: 0,
+            cache_hits: 0,
+            fallbacks: 0,
+            errors: 0,
+            trivial_evals: 0,
+            reloads: 0,
+            busy_rejects: 0,
+            tenants: HashMap::new(),
+            service_hist: LogHist::new(),
+            stage_hists: std::array::from_fn(|_| LogHist::new()),
+        }
+    }
+}
+
+/// Interned registry handles for the serve hot path: resolved once at
+/// service construction, each event afterwards is a single relaxed
+/// atomic increment (no name lookup, no lock).
+struct ServeMetrics {
+    requests: &'static metrics::Counter,
+    placements: &'static metrics::Counter,
+    cache_hits: &'static metrics::Counter,
+    fallbacks: &'static metrics::Counter,
+    errors: &'static metrics::Counter,
+    busy_rejects: &'static metrics::Counter,
+    service_us: &'static metrics::Histogram,
+    queue_us: &'static metrics::Histogram,
+}
+
+impl ServeMetrics {
+    fn intern() -> ServeMetrics {
+        ServeMetrics {
+            requests: metrics::counter("serve.requests"),
+            placements: metrics::counter("serve.placements"),
+            cache_hits: metrics::counter("serve.cache_hits"),
+            fallbacks: metrics::counter("serve.fallbacks"),
+            errors: metrics::counter("serve.errors"),
+            busy_rejects: metrics::counter("serve.busy_rejects"),
+            service_us: metrics::histogram("serve.service_us"),
+            queue_us: metrics::histogram("serve.queue_us"),
+        }
+    }
 }
 
 /// One immutable generation of the policy: the parameters plus the
@@ -225,6 +339,10 @@ pub struct PlacementService {
     inflight: Mutex<HashSet<u64>>,
     inflight_cv: Condvar,
     stats: Mutex<StatsInner>,
+    metrics: ServeMetrics,
+    /// When set (`--trace-log`), every `place` request appends one
+    /// `hsdag-trace-v1` JSONL line here.
+    trace_sink: Option<Arc<TraceSink>>,
     started: Instant,
 }
 
@@ -271,6 +389,8 @@ impl PlacementService {
             inflight: Mutex::new(HashSet::new()),
             inflight_cv: Condvar::new(),
             stats: Mutex::new(StatsInner::default()),
+            metrics: ServeMetrics::intern(),
+            trace_sink: None,
             started: Instant::now(),
             cfg,
             opts,
@@ -300,6 +420,14 @@ impl PlacementService {
     /// atomically-replace-then-reload runbook needs no argument.
     pub fn set_default_checkpoint(&self, path: &Path) {
         *self.default_ckpt.lock().unwrap() = Some(path.to_path_buf());
+    }
+
+    /// Attach a `hsdag-trace-v1` JSONL sink (`--trace-log`); call before
+    /// the service is shared. With no sink, a request still gets spans
+    /// collected (and its trace id echoed) when it carries a `trace`
+    /// field — they are just not written anywhere.
+    pub fn set_trace_sink(&mut self, sink: Arc<TraceSink>) {
+        self.trace_sink = Some(sink);
     }
 
     /// Load, validate, pre-flight and atomically swap in a new
@@ -361,6 +489,9 @@ impl PlacementService {
             self.clear_cache();
         }
         self.stats.lock().unwrap().reloads += 1;
+        crate::log_debug!(
+            "reload: generation {generation}, cache_kept {cache_kept}, trained_on {trained_on}"
+        );
         Ok((generation, cache_kept, trained_on))
     }
 
@@ -423,6 +554,20 @@ impl PlacementService {
 
     /// Serve one placement request (the cache-or-infer-or-fallback core).
     pub fn handle_place(&self, req: &PlaceRequest) -> Result<PlaceOutcome> {
+        self.place_traced(req, &mut [0; N_STAGES], &mut None)
+    }
+
+    /// [`PlacementService::handle_place`] with stage instrumentation:
+    /// accumulates per-stage microseconds into `stage_us` and appends
+    /// spans to `trace` when one is being collected. The instrumentation
+    /// is strictly observational — identical placements with or without
+    /// it (pinned by `tests/obs.rs`).
+    fn place_traced(
+        &self,
+        req: &PlaceRequest,
+        stage_us: &mut [u64; N_STAGES],
+        trace: &mut Option<Trace>,
+    ) -> Result<PlaceOutcome> {
         let t0 = Instant::now();
         // RCU read side: one lock + Arc clone, then this request runs to
         // completion on `snap` no matter how many reloads land meanwhile.
@@ -433,12 +578,14 @@ impl PlacementService {
             .map(|ms| t0 + Duration::from_secs_f64(ms / 1e3));
         let over = |d: &Option<Instant>| d.map(|d| Instant::now() >= d).unwrap_or(false);
 
+        let t_prep = Instant::now();
         let workload = match &req.source {
             PlaceSource::Spec(s) => Workload::resolve(s)?,
             PlaceSource::Inline(g) => Workload::from_graph(g.clone(), None),
         };
         let fp = fingerprint(&workload.graph, &snap.cfg.testbed);
         let fp_hex = format!("{fp:016x}");
+        note_stage(stage_us, trace, S_PREPARE, t_prep);
 
         // A request with server-default knobs: its answer may be cached,
         // so concurrent duplicates can single-flight behind one leader.
@@ -458,11 +605,16 @@ impl PlacementService {
         let mut cached_trivial: Option<Arc<Vec<TrivialCandidate>>> = None;
         let mut _flight: Option<FlightGuard<'_>> = None;
         if !req.no_cache {
+            // The cache stage covers the probe(s) AND any single-flight
+            // wait behind a leader — exactly the time a duplicate
+            // request spends not computing.
+            let t_cache = Instant::now();
             loop {
                 let (answer, trivial) = self.cache_lookup(fp, &fp_hex);
                 cached_trivial = trivial;
                 if let Some(hit) = answer {
                     if !req.fast_math {
+                        note_stage(stage_us, trace, S_CACHE, t_cache);
                         return Ok(hit);
                     }
                 }
@@ -480,6 +632,7 @@ impl PlacementService {
                     let (answer, trivial) = self.cache_lookup(fp, &fp_hex);
                     cached_trivial = trivial;
                     if let Some(hit) = answer {
+                        note_stage(stage_us, trace, S_CACHE, t_cache);
                         return Ok(hit);
                     }
                     break;
@@ -489,15 +642,19 @@ impl PlacementService {
                 // answer lands there) instead of duplicating the work.
                 let _woken = self.inflight_cv.wait(infl).unwrap();
             }
+            note_stage(stage_us, trace, S_CACHE, t_cache);
         }
 
+        let t_env = Instant::now();
         let env = Env::for_workload(workload, &snap.cfg)?;
+        note_stage(stage_us, trace, S_PREPARE, t_env);
 
         // Candidates, policy first (ties between a policy rollout and an
         // identical baseline placement resolve toward the policy).
         let mut candidates: Vec<(f64, bool, Placement, Provenance)> = Vec::new();
         let mut policy_complete = false;
         if !over(&deadline) {
+            let t_roll = Instant::now();
             let mut backend = NativeBackend::from_snapshot(&env, &snap.cfg, &snap.params)?;
             if req.fast_math {
                 // Per-request opt-in: the lane kernels run for this
@@ -544,6 +701,7 @@ impl PlacementService {
                     break;
                 }
             }
+            note_stage(stage_us, trace, S_ROLLOUT, t_roll);
         }
         // The trivial candidates: the service never returns a placement
         // worse than these, and they are the whole answer when the budget
@@ -553,7 +711,9 @@ impl PlacementService {
         let trivial: Arc<Vec<TrivialCandidate>> = match cached_trivial {
             Some(t) => t,
             None => {
+                let t_sim = Instant::now();
                 let t = Arc::new(Self::eval_trivial(&env));
+                note_stage(stage_us, trace, S_SIMULATE, t_sim);
                 self.stats.lock().unwrap().trivial_evals += 1;
                 if !req.no_cache {
                     let mut cache = self.cache.lock().unwrap();
@@ -576,6 +736,7 @@ impl PlacementService {
         // Fastest feasible candidate (fastest overall when nothing is
         // feasible — the response's `feasible: false` says so); strictly
         // better wins, so earlier (policy) candidates take exact ties.
+        let t_sel = Instant::now();
         let any_feasible = candidates.iter().any(|c| c.1);
         let mut best: Option<&(f64, bool, Placement, Provenance)> = None;
         for c in &candidates {
@@ -588,6 +749,7 @@ impl PlacementService {
         }
         let (latency_s, feasible, placement, provenance) =
             best.ok_or_else(|| anyhow!("no placement candidate produced"))?;
+        note_stage(stage_us, trace, S_SELECT, t_sel);
 
         let outcome = PlaceOutcome {
             fingerprint: fp_hex,
@@ -633,24 +795,42 @@ impl PlacementService {
     /// Handle one protocol line; returns the response line and whether a
     /// shutdown was requested.
     pub fn handle_line(&self, line: &str) -> (String, bool) {
+        self.handle_line_ctx(line, &RequestCtx::default())
+    }
+
+    /// [`PlacementService::handle_line`] with front-end context: the
+    /// admission-queue wait becomes the request's `queue` stage.
+    pub fn handle_line_ctx(&self, line: &str, ctx: &RequestCtx) -> (String, bool) {
         let t0 = Instant::now();
         match protocol::parse_request(line) {
             Err(e) => {
-                let mut s = self.stats.lock().unwrap();
-                s.requests += 1;
-                s.errors += 1;
+                {
+                    let mut s = self.stats.lock().unwrap();
+                    s.requests += 1;
+                    s.errors += 1;
+                }
+                self.metrics.requests.inc();
+                self.metrics.errors.inc();
                 (protocol::render_error_response(None, &format!("{e:#}")), false)
             }
             Ok(Request::Stats) => {
                 self.stats.lock().unwrap().requests += 1;
+                self.metrics.requests.inc();
                 (protocol::render_stats_response(&self.stats_view()), false)
+            }
+            Ok(Request::Metrics) => {
+                self.stats.lock().unwrap().requests += 1;
+                self.metrics.requests.inc();
+                (protocol::render_metrics_response(), false)
             }
             Ok(Request::Shutdown) => {
                 self.stats.lock().unwrap().requests += 1;
+                self.metrics.requests.inc();
                 (protocol::render_ctrl_response("shutdown"), true)
             }
             Ok(Request::Reload(path)) => {
                 self.stats.lock().unwrap().requests += 1;
+                self.metrics.requests.inc();
                 match self.reload(path.as_deref().map(Path::new)) {
                     Ok((generation, cache_kept, trained_on)) => (
                         protocol::render_reload_response(generation, cache_kept, &trained_on),
@@ -660,18 +840,45 @@ impl PlacementService {
                         // The old checkpoint keeps serving; the caller
                         // learns why the swap did not happen.
                         self.stats.lock().unwrap().errors += 1;
+                        self.metrics.errors.inc();
                         (protocol::render_error_response(None, &format!("{e:#}")), false)
                     }
                 }
             }
             Ok(Request::ClearCache) => {
                 self.stats.lock().unwrap().requests += 1;
+                self.metrics.requests.inc();
                 self.clear_cache();
                 (protocol::render_ctrl_response("clear-cache"), false)
             }
             Ok(Request::Place(req)) => {
-                let result = self.handle_place(&req);
+                // A trace is collected when a sink is attached or the
+                // request carries its own id (a router minted one);
+                // otherwise the instrumentation costs only the stage
+                // Instant reads.
+                let mut trace: Option<Trace> =
+                    if self.trace_sink.is_some() || req.trace.is_some() {
+                        let id =
+                            req.trace.clone().unwrap_or_else(trace::mint_id);
+                        Some(Trace::new(id, "place"))
+                    } else {
+                        None
+                    };
+                let mut stage_us = [0u64; N_STAGES];
+                stage_us[S_QUEUE] = ctx.queue_us;
+                if ctx.queue_us > 0 {
+                    if let Some(t) = &mut trace {
+                        t.span_before_start(STAGES[S_QUEUE], ctx.queue_us);
+                    }
+                }
+                let result = self.place_traced(&req, &mut stage_us, &mut trace);
                 let service_ms = t0.elapsed().as_secs_f64() * 1e3;
+                self.metrics.requests.inc();
+                self.metrics.service_us.record((service_ms * 1e3) as u64);
+                if ctx.queue_us > 0 {
+                    self.metrics.queue_us.record(ctx.queue_us);
+                }
+                let trace_id = trace.as_ref().map(|t| t.id().to_string());
                 let mut s = self.stats.lock().unwrap();
                 s.requests += 1;
                 if let Some(tenant) = &req.tenant {
@@ -680,25 +887,52 @@ impl PlacementService {
                 match result {
                     Ok(outcome) => {
                         s.placements += 1;
+                        self.metrics.placements.inc();
                         match outcome.provenance {
-                            Provenance::Cache => s.cache_hits += 1,
-                            Provenance::Fallback(_) => s.fallbacks += 1,
+                            Provenance::Cache => {
+                                s.cache_hits += 1;
+                                self.metrics.cache_hits.inc();
+                            }
+                            Provenance::Fallback(_) => {
+                                s.fallbacks += 1;
+                                self.metrics.fallbacks.inc();
+                            }
                             Provenance::Policy => {}
                         }
-                        if s.service_ms.len() < SERVICE_TIME_WINDOW {
-                            s.service_ms.push(service_ms);
-                        } else {
-                            let i = s.ring_idx;
-                            s.service_ms[i] = service_ms;
-                            s.ring_idx = (i + 1) % SERVICE_TIME_WINDOW;
+                        s.service_hist.record_ms(service_ms);
+                        for (i, &us) in stage_us.iter().enumerate() {
+                            if us > 0 {
+                                s.stage_hists[i].record_us(us);
+                            }
+                        }
+                        drop(s);
+                        if let Some(t) = &mut trace {
+                            t.field("fingerprint", Json::Str(outcome.fingerprint.clone()));
+                            t.field("provenance", Json::Str(outcome.provenance.label()));
+                            if let Some(sink) = &self.trace_sink {
+                                sink.write(t);
+                            }
                         }
                         (
-                            protocol::render_place_response(req.id.as_ref(), &outcome, service_ms),
+                            protocol::render_place_response(
+                                req.id.as_ref(),
+                                &outcome,
+                                service_ms,
+                                trace_id.as_deref(),
+                            ),
                             false,
                         )
                     }
                     Err(e) => {
                         s.errors += 1;
+                        self.metrics.errors.inc();
+                        drop(s);
+                        if let Some(t) = &mut trace {
+                            t.field("error", Json::Str(format!("{e:#}")));
+                            if let Some(sink) = &self.trace_sink {
+                                sink.write(t);
+                            }
+                        }
                         (
                             protocol::render_error_response(req.id.as_ref(), &format!("{e:#}")),
                             false,
@@ -740,8 +974,22 @@ impl PlacementService {
             cache_capacity,
             qps: s.requests as f64 / uptime_s.max(1e-9),
             cache_hit_rate: s.cache_hits as f64 / (s.placements.max(1)) as f64,
-            p50_ms: stats::percentile(&s.service_ms, 50.0),
-            p99_ms: stats::percentile(&s.service_ms, 99.0),
+            // Quantiles come straight off the log₂ histogram: no clone,
+            // no sort, O(buckets) while holding the stats mutex.
+            p50_ms: s.service_hist.quantile_ms(50.0),
+            p99_ms: s.service_hist.quantile_ms(99.0),
+            service_hist: s.service_hist.snapshot().nonzero(),
+            stages: STAGES
+                .iter()
+                .zip(s.stage_hists.iter())
+                .filter(|(_, h)| h.count() > 0)
+                .map(|(&name, h)| protocol::StageStat {
+                    name,
+                    count: h.count(),
+                    p50_ms: h.quantile_ms(50.0),
+                    p99_ms: h.quantile_ms(99.0),
+                })
+                .collect(),
             testbed: self.cfg.testbed.clone(),
             checkpoint_generation,
             trained_on,
@@ -762,8 +1010,13 @@ impl LineHandler for PlacementService {
         PlacementService::handle_line(self, line)
     }
 
+    fn handle_line_ctx(&self, line: &str, ctx: &RequestCtx) -> (String, bool) {
+        PlacementService::handle_line_ctx(self, line, ctx)
+    }
+
     fn note_busy(&self) {
         self.stats.lock().unwrap().busy_rejects += 1;
+        self.metrics.busy_rejects.inc();
     }
 }
 
@@ -827,8 +1080,10 @@ impl Server {
         // parks the connection within the high-water mark (or straight
         // into an idle worker's `recv`) or fails fast, in which case the
         // client gets an explicit `busy` line instead of silently
-        // joining an unbounded backlog.
-        let (tx, rx) = mpsc::sync_channel::<TcpStream>(self.queue_depth);
+        // joining an unbounded backlog. The enqueue Instant rides along
+        // so the worker can report the queue wait as the request's
+        // `queue` stage.
+        let (tx, rx) = mpsc::sync_channel::<(Instant, TcpStream)>(self.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let mut pool = Vec::with_capacity(workers.max(1));
         for i in 0..workers.max(1) {
@@ -847,9 +1102,9 @@ impl Server {
                 break;
             }
             match self.listener.accept() {
-                Ok((stream, _peer)) => match tx.try_send(stream) {
+                Ok((stream, _peer)) => match tx.try_send((Instant::now(), stream)) {
                     Ok(()) => {}
-                    Err(TrySendError::Full(stream)) => {
+                    Err(TrySendError::Full((_, stream))) => {
                         shed_busy(stream, self.queue_depth);
                         self.handler.note_busy();
                     }
@@ -905,7 +1160,7 @@ fn shed_busy(mut stream: TcpStream, queue_depth: usize) {
 /// One pool worker: pull connections off the shared queue until the
 /// channel closes (all senders dropped at shutdown).
 fn worker_loop(
-    rx: &Mutex<mpsc::Receiver<TcpStream>>,
+    rx: &Mutex<mpsc::Receiver<(Instant, TcpStream)>>,
     handler: &dyn LineHandler,
     shutdown: &AtomicBool,
 ) {
@@ -913,18 +1168,26 @@ fn worker_loop(
         // Holding the lock while blocked in recv is fine: connection
         // *handling* happens after the guard drops, so the pool still
         // serves concurrently; dispatch itself is serial and cheap.
-        let stream = match rx.lock().unwrap().recv() {
+        let (enqueued, stream) = match rx.lock().unwrap().recv() {
             Ok(s) => s,
             Err(_) => return,
         };
-        handle_conn(stream, handler, shutdown);
+        let queue_us = enqueued.elapsed().as_micros() as u64;
+        handle_conn(stream, handler, shutdown, queue_us);
     }
 }
 
 /// Serve one connection: line in, line out, until EOF / shutdown. The
 /// short read timeout keeps the worker responsive to a shutdown raised
-/// elsewhere while this client idles.
-fn handle_conn(stream: TcpStream, handler: &dyn LineHandler, shutdown: &AtomicBool) {
+/// elsewhere while this client idles. `queue_us` is the admission-queue
+/// wait, attributed to the connection's first request only (later
+/// pipelined lines were never queue-blocked).
+fn handle_conn(
+    stream: TcpStream,
+    handler: &dyn LineHandler,
+    shutdown: &AtomicBool,
+    queue_us: u64,
+) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
     let mut writer = match stream.try_clone() {
@@ -933,6 +1196,7 @@ fn handle_conn(stream: TcpStream, handler: &dyn LineHandler, shutdown: &AtomicBo
     };
     let mut reader = BufReader::new(stream);
     let mut buf: Vec<u8> = Vec::new();
+    let mut first_line = true;
     loop {
         if shutdown.load(Ordering::Relaxed) {
             return;
@@ -946,7 +1210,9 @@ fn handle_conn(stream: TcpStream, handler: &dyn LineHandler, shutdown: &AtomicBo
                 let line = String::from_utf8_lossy(&buf).trim().to_string();
                 buf.clear();
                 if !line.is_empty() {
-                    let (response, shut) = handler.handle_line(&line);
+                    let ctx = RequestCtx { queue_us: if first_line { queue_us } else { 0 } };
+                    first_line = false;
+                    let (response, shut) = handler.handle_line_ctx(&line, &ctx);
                     if writer
                         .write_all(response.as_bytes())
                         .and_then(|_| writer.write_all(b"\n"))

@@ -13,6 +13,26 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::obs::metrics;
+
+/// Opt-in pool profiling counters (`--profile`): items/bands executed and
+/// accumulated per-worker busy nanoseconds. Utilization over a window is
+/// `pool.busy_ns / (wall_ns * workers)`. Interned once; when profiling is
+/// off the pool pays a single relaxed load per batched call.
+struct PoolStats {
+    tasks: &'static metrics::Counter,
+    busy_ns: &'static metrics::Counter,
+}
+
+fn pool_stats() -> &'static PoolStats {
+    static S: OnceLock<PoolStats> = OnceLock::new();
+    S.get_or_init(|| PoolStats {
+        tasks: metrics::counter("pool.tasks"),
+        busy_ns: metrics::counter("pool.busy_ns"),
+    })
+}
 
 /// Process-global worker count (`--workers`), 0 = one per core. Set once
 /// at CLI startup; every call site that passes `workers = 0` resolves
@@ -66,12 +86,14 @@ where
     if workers == 1 {
         return (0..n).map(f).collect();
     }
+    let prof = metrics::profiling();
     let next = AtomicUsize::new(0);
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(|| {
+                    let t0 = prof.then(Instant::now);
                     let mut out = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
@@ -79,6 +101,11 @@ where
                             break;
                         }
                         out.push((i, f(i)));
+                    }
+                    if let Some(t0) = t0 {
+                        let st = pool_stats();
+                        st.tasks.add(out.len() as u64);
+                        st.busy_ns.add(t0.elapsed().as_nanos() as u64);
                     }
                     out
                 })
@@ -111,11 +138,20 @@ where
         f(0, out);
         return;
     }
+    let prof = metrics::profiling();
     let band = rows.div_ceil(workers);
     std::thread::scope(|s| {
         for (b, chunk) in out.chunks_mut(band * row_stride).enumerate() {
             let f = &f;
-            s.spawn(move || f(b * band, chunk));
+            s.spawn(move || {
+                let t0 = prof.then(Instant::now);
+                f(b * band, chunk);
+                if let Some(t0) = t0 {
+                    let st = pool_stats();
+                    st.tasks.inc();
+                    st.busy_ns.add(t0.elapsed().as_nanos() as u64);
+                }
+            });
         }
     });
 }
@@ -175,6 +211,25 @@ mod tests {
             i
         });
         assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn profiling_counts_pool_tasks() {
+        // Opt-in tier: off by default, and when on it only ever *adds*
+        // counter values — results stay identical (other tests running
+        // in this process may also record, hence >=).
+        let _g = metrics::lock_test_guard();
+        let tasks = metrics::counter("pool.tasks");
+        let busy = metrics::counter("pool.busy_ns");
+        let t0 = tasks.get();
+        map_indexed(10, 4, |i| i); // profiling off: no counts
+        assert_eq!(tasks.get(), t0);
+        metrics::set_profiling(true);
+        let serial: Vec<usize> = (0..10).map(|i| i * 2).collect();
+        assert_eq!(map_indexed(10, 4, |i| i * 2), serial);
+        metrics::set_profiling(false);
+        assert!(tasks.get() >= t0 + 10, "{} -> {}", t0, tasks.get());
+        let _ = busy.get(); // busy time may legitimately round to 0ns
     }
 
     #[test]

@@ -1,0 +1,391 @@
+//! Observability integration tests: the strictly-observational contract.
+//!
+//! - the metrics registry conserves counts under concurrent writers;
+//! - a traced multi-stage served request emits a schema-valid
+//!   `hsdag-trace-v1` line whose spans cover the pipeline stages in
+//!   order, and the trace id round-trips client → service → response;
+//! - the determinism pins: a served request and a short training run are
+//!   bit-identical with telemetry (metrics, profiling, tracing) enabled
+//!   or disabled — telemetry observes, never steers;
+//! - the `metrics` wire command and `stats` stage/histogram fields are
+//!   valid documents;
+//! - end-to-end through the binary: `train --run-log` emits
+//!   `hsdag-run-v1` JSONL without changing the console output, and
+//!   `hsdag trace summarize` renders the per-stage table.
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::{Arc, Mutex};
+
+use hsdag::config::Config;
+use hsdag::features::FeatureConfig;
+use hsdag::models::Workload;
+use hsdag::obs::metrics;
+use hsdag::obs::trace::{self, TraceSink, TRACE_FORMAT};
+use hsdag::rl::{Env, HsdagAgent};
+use hsdag::serve::{protocol, Checkpoint, CheckpointMeta, PlacementService, ServeOptions};
+use hsdag::util::json::Json;
+
+/// Serializes tests that toggle the process-global telemetry switches or
+/// assert exact counter deltas (integration tests share one process).
+static GLOBAL: Mutex<()> = Mutex::new(());
+
+fn lock_global() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hsdag_obs_test_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Train a small native policy and wrap it as a checkpoint (same recipe
+/// as the serve suite; deterministic per seed).
+fn tiny_checkpoint(train_spec: &str, episodes: usize) -> (Checkpoint, Config) {
+    let cfg = Config {
+        backend: "native".to_string(),
+        hidden: 16,
+        update_timestep: 4,
+        seed: 5,
+        ..Default::default()
+    };
+    let env = Env::for_workload(Workload::resolve(train_spec).unwrap(), &cfg).unwrap();
+    let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+    agent.search(&env, episodes).unwrap();
+    let ckpt = Checkpoint::new(
+        agent.export_params(),
+        CheckpointMeta {
+            hidden: cfg.hidden,
+            feature_dim: FeatureConfig::dim(),
+            actions: env.n_actions(),
+            testbed: env.testbed.id.clone(),
+            workload: train_spec.to_string(),
+            best_latency: None,
+        },
+    );
+    (ckpt, cfg)
+}
+
+#[test]
+fn counters_conserve_under_concurrent_writers() {
+    let _g = lock_global();
+    let c = metrics::counter("test.obs.conservation");
+    let before = c.get();
+    let threads = 8;
+    let per_thread = 10_000u64;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                for _ in 0..per_thread {
+                    c.inc();
+                }
+            });
+        }
+    });
+    assert_eq!(c.get(), before + threads * per_thread, "every increment accounted for");
+
+    // Histograms conserve their record count the same way.
+    let h = metrics::histogram("test.obs.hist_conservation");
+    let base = h.snapshot().count();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            s.spawn(move || {
+                for i in 0..1000u64 {
+                    h.record(t * 1000 + i);
+                }
+            });
+        }
+    });
+    assert_eq!(h.snapshot().count(), base + threads * 1000);
+}
+
+#[test]
+fn traced_request_emits_ordered_schema_valid_spans() {
+    let (ckpt, cfg) = tiny_checkpoint("layered:4x3:2", 2);
+    let log_path = tmp_dir("trace").join("trace.jsonl");
+    let _ = std::fs::remove_file(&log_path);
+    let mut service = PlacementService::new(
+        ckpt,
+        &cfg,
+        ServeOptions { cache_capacity: 8, ..Default::default() },
+    )
+    .unwrap();
+    service.set_trace_sink(Arc::new(TraceSink::open(log_path.to_str().unwrap()).unwrap()));
+
+    // Cold request with a client-supplied trace id, then the cached
+    // repeat: two traced requests with very different stage profiles.
+    let line = protocol::render_place_request(Some("layered:4x3:2"), None, None, None, None, false);
+    let line = protocol::with_trace_id(&line, "00c0ffee00c0ffee").unwrap();
+    let (resp, _) = service.handle_line(&line);
+    let d1 = Json::parse(&resp).unwrap();
+    assert_eq!(d1.get("ok").unwrap().as_bool(), Some(true));
+    // The trace id echoes into the response.
+    assert_eq!(d1.get("trace").and_then(|t| t.as_str()), Some("00c0ffee00c0ffee"));
+    let (resp2, _) = service.handle_line(&line);
+    let d2 = Json::parse(&resp2).unwrap();
+    assert_eq!(d2.get("provenance").unwrap().as_str(), Some("cache"));
+
+    let text = std::fs::read_to_string(&log_path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2, "one trace line per request: {text}");
+
+    for raw in &lines {
+        let doc = Json::parse(raw).unwrap();
+        assert_eq!(doc.get("format").and_then(|f| f.as_str()), Some(TRACE_FORMAT));
+        assert_eq!(doc.get("op").and_then(|o| o.as_str()), Some("place"));
+        assert_eq!(doc.get("trace").and_then(|t| t.as_str()), Some("00c0ffee00c0ffee"));
+        assert!(doc.get("fingerprint").and_then(|f| f.as_str()).is_some());
+        let total = doc.get("total_us").and_then(|t| t.as_f64()).unwrap();
+        let spans = doc.get("spans").and_then(|s| s.as_arr()).unwrap();
+        assert!(!spans.is_empty());
+        // Spans are appended in completion order; the serving pipeline is
+        // sequential, so start offsets are non-decreasing and inside the
+        // request window.
+        let mut prev = 0.0;
+        for sp in spans {
+            let start = sp.get("start_us").and_then(|v| v.as_f64()).unwrap();
+            assert!(sp.get("dur_us").and_then(|v| v.as_f64()).is_some());
+            assert!(sp.get("stage").and_then(|v| v.as_str()).is_some());
+            assert!(start >= prev, "span starts went backwards: {raw}");
+            assert!(start <= total, "span starts past the request total: {raw}");
+            prev = start;
+        }
+    }
+
+    let stage_names = |raw: &str| -> Vec<String> {
+        Json::parse(raw)
+            .unwrap()
+            .get("spans")
+            .and_then(|s| s.as_arr().map(|a| a.to_vec()))
+            .unwrap()
+            .iter()
+            .map(|sp| sp.get("stage").unwrap().as_str().unwrap().to_string())
+            .collect()
+    };
+    // Cold: the full pipeline ran. Cached repeat: cache, but no rollout.
+    let cold = stage_names(lines[0]);
+    for want in ["prepare", "cache", "rollout", "select"] {
+        assert!(cold.contains(&want.to_string()), "cold trace missing {want}: {cold:?}");
+    }
+    let cached = stage_names(lines[1]);
+    assert!(cached.contains(&"cache".to_string()), "{cached:?}");
+    assert!(!cached.contains(&"rollout".to_string()), "{cached:?}");
+    assert_eq!(
+        Json::parse(lines[1]).unwrap().get("provenance").and_then(|p| p.as_str()),
+        Some("cache")
+    );
+}
+
+#[test]
+fn metrics_wire_command_and_stats_stage_fields_are_valid() {
+    let _g = lock_global();
+    let (ckpt, cfg) = tiny_checkpoint("layered:3x3:1", 2);
+    let service = PlacementService::new(ckpt, &cfg, ServeOptions::default()).unwrap();
+    let line = protocol::render_place_request(Some("layered:3x3:1"), None, None, None, None, false);
+    service.handle_line(&line);
+    service.handle_line(&line);
+
+    // `metrics` dumps the registry as a valid hsdag-metrics-v1 document
+    // with the serve counters interned by this service.
+    let (resp, shut) = service.handle_line(&protocol::render_metrics_request());
+    assert!(!shut);
+    let doc = Json::parse(&resp).unwrap();
+    assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(doc.get("format").and_then(|f| f.as_str()), Some("hsdag-metrics-v1"));
+    let counters = match doc.get("counters") {
+        Some(Json::Obj(kv)) => kv.iter().map(|(k, _)| k.clone()).collect::<Vec<_>>(),
+        other => panic!("counters object, got {other:?}"),
+    };
+    for want in ["serve.requests", "serve.placements", "serve.cache_hits"] {
+        assert!(counters.iter().any(|k| k == want), "missing {want}: {counters:?}");
+    }
+    assert!(doc.get("histograms").is_some());
+
+    // `stats` carries the histogram buckets and per-stage breakdown.
+    let (resp, _) = service.handle_line(&protocol::render_stats_request());
+    let st = Json::parse(&resp).unwrap();
+    let hist = st.get("service_us_hist").and_then(|h| h.as_arr().map(|a| a.len())).unwrap();
+    assert!(hist > 0, "service histogram has nonempty buckets");
+    // Stages render as an object keyed by stage name; only stages that
+    // actually ran appear (in-process requests never queue).
+    let stages = match st.get("stages") {
+        Some(Json::Obj(kv)) => kv.clone(),
+        other => panic!("stages object, got {other:?}"),
+    };
+    assert!(!stages.is_empty());
+    let names: Vec<&str> = stages.iter().map(|(k, _)| k.as_str()).collect();
+    for want in ["prepare", "select"] {
+        assert!(names.contains(&want), "missing stage {want}: {names:?}");
+    }
+    assert!(!names.contains(&"queue"), "in-process requests never queue: {names:?}");
+    for (name, sg) in &stages {
+        let p50 = sg.get("p50_ms").and_then(|v| v.as_f64()).unwrap();
+        let p99 = sg.get("p99_ms").and_then(|v| v.as_f64()).unwrap();
+        assert!(p99 >= p50, "{name}: p50 {p50} p99 {p99}");
+        assert!(sg.get("count").and_then(|v| v.as_f64()).unwrap() >= 1.0, "{name}");
+    }
+}
+
+/// The tentpole invariant: telemetry is strictly observational. The same
+/// request served with metrics + profiling + tracing all on must produce
+/// the same answer (modulo the wall-clock `service_ms` field) as with
+/// everything off.
+#[test]
+fn served_request_identical_with_telemetry_on_and_off() {
+    let _g = lock_global();
+    let (ckpt, cfg) = tiny_checkpoint("random:24:4", 2);
+    let strip_wall = |doc: Json| -> Vec<(String, Json)> {
+        match doc {
+            Json::Obj(kv) => kv.into_iter().filter(|(k, _)| k != "service_ms").collect(),
+            _ => panic!("object response"),
+        }
+    };
+    // Both requests carry the same client trace id so the traced
+    // response's `trace` echo matches field-for-field.
+    let line = protocol::render_place_request(Some("random:24:4"), None, None, None, None, false);
+    let line = protocol::with_trace_id(&line, "feedfacefeedface").unwrap();
+
+    metrics::set_enabled(true);
+    metrics::set_profiling(true);
+    let log_path = tmp_dir("pin").join("trace.jsonl");
+    let mut on = PlacementService::new(
+        ckpt.clone(),
+        &cfg,
+        ServeOptions { cache_capacity: 8, ..Default::default() },
+    )
+    .unwrap();
+    on.set_trace_sink(Arc::new(TraceSink::open(log_path.to_str().unwrap()).unwrap()));
+    let resp_on = strip_wall(Json::parse(&on.handle_line(&line).0).unwrap());
+
+    metrics::set_enabled(false);
+    metrics::set_profiling(false);
+    let off = PlacementService::new(
+        ckpt,
+        &cfg,
+        ServeOptions { cache_capacity: 8, ..Default::default() },
+    )
+    .unwrap();
+    let resp_off = strip_wall(Json::parse(&off.handle_line(&line).0).unwrap());
+    metrics::set_enabled(true);
+
+    assert_eq!(resp_on, resp_off, "telemetry changed a served answer");
+}
+
+/// Same pin for training: the search trajectory (placements, rewards,
+/// losses, entropy) is a pure function of the seed, with or without the
+/// metrics registry and kernel profiling recording alongside.
+#[test]
+fn training_identical_with_telemetry_on_and_off() {
+    let _g = lock_global();
+    let cfg = Config {
+        backend: "native".to_string(),
+        hidden: 16,
+        update_timestep: 4,
+        seed: 11,
+        ..Default::default()
+    };
+    let env = Env::for_workload(Workload::resolve("layered:3x3:1").unwrap(), &cfg).unwrap();
+
+    metrics::set_enabled(true);
+    metrics::set_profiling(true);
+    let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+    let res_on = agent.search(&env, 3).unwrap();
+
+    metrics::set_enabled(false);
+    metrics::set_profiling(false);
+    let mut agent = HsdagAgent::new(&env, &cfg).unwrap();
+    let res_off = agent.search(&env, 3).unwrap();
+    metrics::set_enabled(true);
+
+    assert_eq!(res_on.best_actions, res_off.best_actions);
+    assert_eq!(res_on.best_latency.to_bits(), res_off.best_latency.to_bits());
+    assert_eq!(res_on.curve.len(), res_off.curve.len());
+    for (a, b) in res_on.curve.iter().zip(&res_off.curve) {
+        assert_eq!(a.mean_reward.to_bits(), b.mean_reward.to_bits(), "episode {}", a.episode);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "episode {}", a.episode);
+        assert_eq!(a.entropy.to_bits(), b.entropy.to_bits(), "episode {}", a.episode);
+        assert_eq!(a.param_norm.to_bits(), b.param_norm.to_bits(), "episode {}", a.episode);
+    }
+    // The telemetry itself is live: entropy and param norm were recorded.
+    assert!(res_on.curve.iter().any(|p| p.entropy.is_finite()));
+    assert!(res_on.curve.iter().any(|p| p.param_norm.is_finite()));
+}
+
+#[test]
+fn train_run_log_is_schema_valid_and_console_invariant() {
+    let bin = env!("CARGO_BIN_EXE_hsdag");
+    let dir = tmp_dir("runlog");
+    let log = dir.join("run.jsonl");
+    let _ = std::fs::remove_file(&log);
+    let base_args =
+        ["train", "--backend", "native", "--workload", "seq:12", "--episodes", "2", "--seed", "3"];
+
+    let plain = Command::new(bin).args(base_args).output().unwrap();
+    assert!(plain.status.success(), "{}", String::from_utf8_lossy(&plain.stderr));
+    let logged = Command::new(bin)
+        .args(base_args)
+        .args(["--run-log", log.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(logged.status.success(), "{}", String::from_utf8_lossy(&logged.stderr));
+
+    // Console learning-curve lines are byte-identical with or without
+    // the run log (wall-clock lines excluded).
+    let curve_lines = |out: &[u8]| -> Vec<String> {
+        String::from_utf8_lossy(out)
+            .lines()
+            .filter(|l| l.starts_with("  episode"))
+            .map(|l| l.to_string())
+            .collect()
+    };
+    let (a, b) = (curve_lines(&plain.stdout), curve_lines(&logged.stdout));
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "--run-log changed the console output");
+
+    // The log: one hsdag-run-v1 record per curve point, schema-complete.
+    let text = std::fs::read_to_string(&log).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), a.len(), "one record per episode line");
+    for (i, raw) in lines.iter().enumerate() {
+        let doc = Json::parse(raw).unwrap();
+        assert_eq!(doc.get("format").and_then(|f| f.as_str()), Some("hsdag-run-v1"));
+        assert_eq!(doc.get("episode").and_then(|e| e.as_usize()), Some(i));
+        for key in ["best_latency", "mean_reward", "loss", "entropy", "param_norm"] {
+            let v = doc.get(key).unwrap_or_else(|| panic!("missing {key}: {raw}"));
+            assert!(matches!(v, Json::Num(_) | Json::Null), "{key} not num/null: {raw}");
+        }
+        assert!(doc.get("mean_reward").unwrap().as_f64().is_some());
+    }
+}
+
+#[test]
+fn trace_summarize_cli_renders_stage_table() {
+    let bin = env!("CARGO_BIN_EXE_hsdag");
+    let dir = tmp_dir("summarize");
+    let log = dir.join("trace.jsonl");
+    // Synthesize a small log through the real Trace renderer.
+    let sink = TraceSink::open(log.to_str().unwrap()).unwrap();
+    for dur in [100u64, 200, 400] {
+        let mut t = trace::Trace::new(trace::mint_id(), "place");
+        t.span_before_start("queue", dur);
+        let s = t.begin();
+        t.end("rollout", s);
+        sink.write(&t);
+    }
+    let out =
+        Command::new(bin).args(["trace", "summarize", log.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("stage"), "{text}");
+    assert!(text.contains("queue"), "{text}");
+    assert!(text.contains("rollout"), "{text}");
+    assert!(text.contains("total"), "{text}");
+    assert!(text.contains("3 request(s)"), "{text}");
+
+    // Missing file: a located error, nonzero exit.
+    let bad =
+        Command::new(bin).args(["trace", "summarize", "/nonexistent.jsonl"]).output().unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("nonexistent"), "named the path");
+}
